@@ -1,0 +1,64 @@
+//! Quickstart: reverse-engineer the Hadamard transform (paper §IV-C).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the dense 32×32 Hadamard matrix, hierarchically factorizes it
+//! into 5 sparse butterflies, verifies exactness, and shows the
+//! storage/compute gains of the resulting FAμST.
+
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::rng::Rng;
+use faust::transforms::{hadamard, hadamard_faust};
+
+fn main() {
+    let n = 32;
+    println!("=== FAuST quickstart: the {n}x{n} Hadamard transform ===\n");
+
+    // 1. The dense operator: n² = 1024 non-zeros, O(n²) to apply.
+    let a = hadamard(n);
+    println!("dense operator: {} non-zeros", a.nnz());
+
+    // 2. Hierarchically factorize (paper Fig. 5 with the §IV-C setting).
+    let cfg = HierarchicalConfig::hadamard(n);
+    let fst = factorize(&a, &cfg);
+    println!(
+        "FAuST: {} factors, s_tot = {}, RC = {:.3}, RCG = {:.1}",
+        fst.n_factors(),
+        fst.s_tot(),
+        fst.rc(),
+        fst.rcg()
+    );
+
+    // 3. It is exact (the paper's Fig. 6 headline result)...
+    let rel = fst.relative_error_fro(&a);
+    println!("relative error vs dense: {rel:.2e}");
+    assert!(rel < 1e-6, "factorization should be exact");
+
+    // ...and matches the hand-built butterfly reference of Fig. 1.
+    let reference = hadamard_faust(n);
+    println!(
+        "reference butterfly: s_tot = {}, RCG = {:.1}",
+        reference.s_tot(),
+        reference.rcg()
+    );
+    assert_eq!(fst.s_tot(), reference.s_tot());
+
+    // 4. Apply it: O(s_tot) instead of O(n²).
+    let mut rng = Rng::new(42);
+    let x = rng.gauss_vec(n);
+    let y_fast = fst.apply(&x);
+    let y_dense = a.matvec(&x);
+    let max_err = y_fast
+        .iter()
+        .zip(&y_dense)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0_f64, f64::max);
+    println!(
+        "apply: {} flops (dense: {}), max |Δ| = {max_err:.2e}",
+        fst.flops_per_matvec(),
+        2 * n * n
+    );
+    println!("\nquickstart OK");
+}

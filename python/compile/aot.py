@@ -1,0 +1,68 @@
+"""AOT: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT lowered.compile()/serialize()) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """(name, lowered) pairs for every artifact we ship."""
+    n = 32
+    arts = []
+    # One palm4MSA sweep for the Hadamard-32 2-factor split.
+    lowered = jax.jit(
+        lambda a, s, t, lam: model.palm4msa_iteration_had32(a, s, t, lam)
+    ).lower(spec(n, n), spec(n, n), spec(n, n), spec())
+    arts.append(("palm_grad_step", lowered))
+    # FAuST apply for the 5-factor Hadamard-32 chain, batch of 8 vectors.
+    lowered = jax.jit(model.faust_apply_had32).lower(
+        spec(n, 8), spec(n, n), spec(n, n), spec(n, n), spec(n, n), spec(n, n)
+    )
+    arts.append(("faust_apply_had32", lowered))
+    # Dense matvec twin (same shapes) for PJRT-side dense-vs-faust parity.
+    lowered = jax.jit(lambda m, x: (m @ x,)).lower(spec(n, n), spec(n, 8))
+    arts.append(("dense_apply_32", lowered))
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lowered in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by ../aot.py)."""
+
+from .palm_grad import faust_apply, palm_grad_step  # noqa: F401
+from .ref import faust_apply_ref, palm_grad_step_ref, proj_sp_ref  # noqa: F401

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: tiled PALM projected-gradient core.
+
+Computes  S' = S - (lam / c) * L^T @ (lam * L @ S @ R - A) @ R^T  for one
+factor S of a palm4MSA iteration — the flop hot-spot of the whole paper
+(two GEMM chains per factor per iteration).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+S' (p×q) into MXU-aligned blocks; for each block the kernel streams the
+required L-columns / R-rows through VMEM and accumulates the two
+contractions in f32. `interpret=True` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is both the
+correctness path and what `aot.py` lowers into the HLO artifact.
+
+Because Pallas block shapes must divide the array shapes, the public entry
+point pads every operand up to the block multiple and slices the result
+back; the pads are zero so the contractions are unaffected.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grad_tile_kernel(a_ref, l_ref, s_ref, r_ref, scal_ref, out_ref):
+    """One (bi, bj) tile of S' = S - (lam/c) L^T (lam L S R - A) R^T.
+
+    Refs (VMEM blocks):
+      a_ref: (m, n)  — A   (full rows/cols; m, n are the small dims here)
+      l_ref: (m, bp) — the L-columns feeding this tile's rows
+      s_ref: (p, q)  — full S (needed for L S R; small)
+      r_ref: (bq, n) — the R-rows feeding this tile's cols... (full here)
+      scal_ref: (2,) — [lam, inv_c]
+      out_ref: (bp, bq)
+    """
+    lam = scal_ref[0]
+    inv_c = scal_ref[1]
+    # E = lam * L @ S @ R - A  (uses the full small operands in VMEM).
+    ls = jnp.dot(l_ref[...], s_ref[...], preferred_element_type=jnp.float32)
+    e = lam * jnp.dot(ls, r_ref[...], preferred_element_type=jnp.float32) - a_ref[...]
+    # G-tile = lam * L^T E R^T restricted to this block's rows/cols.
+    lt_e = jnp.dot(l_ref[...].T, e, preferred_element_type=jnp.float32)
+    g = lam * jnp.dot(lt_e, r_ref[...].T, preferred_element_type=jnp.float32)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bp, bq = out_ref.shape
+    s_tile = jax.lax.dynamic_slice(s_ref[...], (i * bp, j * bq), (bp, bq))
+    g_tile = jax.lax.dynamic_slice(g, (i * bp, j * bq), (bp, bq))
+    out_ref[...] = s_tile - inv_c * g_tile
+
+
+def _pad_to(x, rows, cols):
+    pr = rows - x.shape[0]
+    pc = cols - x.shape[1]
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def palm_grad_step(a, l, s, r, lam, c, block=32):
+    """Pallas-tiled PALM gradient step (see module docstring).
+
+    a: (m, n), l: (m, p), s: (p, q), r: (q, n); lam, c scalars.
+    Returns S' with shape (p, q).
+    """
+    m, n = a.shape
+    p, q = s.shape
+    bp = min(block, _ceil_mult(p, 8))
+    bq = min(block, _ceil_mult(q, 8))
+    pp = _ceil_mult(p, bp)
+    qq = _ceil_mult(q, bq)
+    a_p = a
+    l_p = _pad_to(l, m, pp)
+    s_p = _pad_to(s, pp, qq)
+    r_p = _pad_to(r, qq, n)
+    scal = jnp.stack([lam.astype(jnp.float32), (1.0 / c).astype(jnp.float32)])
+    grid = (pp // bp, qq // bq)
+    out = pl.pallas_call(
+        _grad_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, pp), lambda i, j: (0, 0)),
+            pl.BlockSpec((pp, qq), lambda i, j: (0, 0)),
+            pl.BlockSpec((qq, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pp, qq), jnp.float32),
+        interpret=True,
+    )(a_p, l_p, s_p, r_p, scal)
+    return out[:p, :q]
+
+
+def _ceil_mult(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def _spmv_chain_kernel(x_ref, out_ref, *factor_refs):
+    """Apply a chain of (dense-stored) factors to a batch of vectors."""
+    y = x_ref[...]
+    for f in factor_refs:
+        y = jnp.dot(f[...], y, preferred_element_type=jnp.float32)
+    out_ref[...] = y
+
+
+def faust_apply(x, factors, lam):
+    """Pallas kernel applying a factor chain to a column batch.
+
+    x: (n, b); factors rightmost-first, each (a_{j+1}, a_j) dense arrays
+    (zeros where sparse — the AOT artifact bakes the *structure*, XLA's
+    sparsity is not exploited at interpret level; the rust L3 path owns the
+    truly-sparse apply).
+    """
+    n, b = x.shape
+    m = factors[-1].shape[0]
+
+    def kernel(x_ref, *rest):
+        out_ref = rest[-1]
+        refs = rest[:-1]
+        _spmv_chain_kernel(x_ref, out_ref, *refs)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, b), lambda i: (0, 0))]
+        + [pl.BlockSpec(f.shape, lambda i: (0, 0)) for f in factors],
+        out_specs=pl.BlockSpec((m, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.float32),
+        interpret=True,
+    )(x, *factors)
+    return lam * out

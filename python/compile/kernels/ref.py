@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Pallas kernels (build-time correctness only).
+
+The L1 hot-spot of a palm4MSA iteration is the projected-gradient core for
+one factor S (paper Fig. 4 lines 5-6):
+
+    E    = lam * L @ S @ R - A          (residual)
+    G    = lam * L.T @ E @ R.T          (gradient)
+    S'   = S - G / c                    (gradient step)
+
+The projection (top-k + normalize) stays at L2 (jax.lax.top_k); the two
+GEMM chains above dominate the flops and are what the Pallas kernel tiles.
+"""
+
+import jax.numpy as jnp
+
+
+def palm_grad_step_ref(a, l, s, r, lam, c):
+    """Reference PALM gradient step: S - (1/c) * lam * L^T (lam L S R - A) R^T."""
+    e = lam * (l @ s @ r) - a
+    g = lam * (l.T @ e @ r.T)
+    return s - g / c
+
+
+def faust_apply_ref(x, factors, lam):
+    """Reference FAuST apply: lam * S_J ... S_1 @ x (factors rightmost first)."""
+    y = x
+    for f in factors:
+        y = f @ y
+    return lam * y
+
+
+def proj_sp_ref(u, k):
+    """Global top-k projection with unit-Frobenius normalization (Prop A.1)."""
+    flat = u.reshape(-1)
+    absu = jnp.abs(flat)
+    # threshold = k-th largest magnitude
+    thresh = jnp.sort(absu)[-k]
+    mask = absu >= thresh
+    kept = jnp.where(mask, flat, 0.0)
+    norm = jnp.linalg.norm(kept)
+    return jnp.where(norm > 0, kept / norm, kept).reshape(u.shape)

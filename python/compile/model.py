@@ -1,0 +1,111 @@
+"""L2: the palm4MSA computation graph in JAX (build-time only).
+
+Two AOT entry points, both for *fixed shapes* (one compiled executable per
+model variant, loaded by rust/src/runtime):
+
+- ``palm4msa_iteration``: one full palm4MSA sweep for a 2-factor split
+  (the hierarchical algorithm's inner loop) — factor gradient steps via the
+  L1 Pallas kernel, top-k projection + normalization, closed-form lambda.
+- ``faust_apply_had32``: apply the 5-factor Hadamard-32 FAuST to a vector
+  batch (the serving-path artifact the coordinator can execute via PJRT).
+
+Python never runs at serving time: these functions exist to be lowered
+once by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.palm_grad import faust_apply, palm_grad_step
+
+
+def proj_sp(u, k):
+    """Top-k (global) projection + unit-Frobenius normalization (Prop A.1).
+
+    argsort-based (stable, ties by index — matches the rust projection and
+    lowers to plain HLO `sort`; `lax.top_k` emits a `topk` op that the
+    xla_extension 0.5.1 text parser rejects).
+    """
+    flat = u.reshape(-1)
+    idx = jnp.argsort(-jnp.abs(flat), stable=True)[:k]
+    kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    norm = jnp.linalg.norm(kept)
+    kept = jnp.where(norm > 0, kept / norm, kept)
+    return kept.reshape(u.shape)
+
+
+def _topk_mask_rows(u, k):
+    """Boolean mask keeping the k largest |entries| of each row (stable
+    index tie-break, argsort-based for old-HLO compatibility)."""
+    idx = jnp.argsort(-jnp.abs(u), axis=1, stable=True)[:, :k]
+    mask = jnp.zeros(u.shape, dtype=bool)
+    rows = jnp.arange(u.shape[0])[:, None]
+    return mask.at[rows, idx].set(True)
+
+
+def proj_splincol(u, k):
+    """FAuST-toolbox 'splincol': union of top-k-per-row and top-k-per-col
+    supports, then unit-Frobenius normalization. The constraint the
+    Hadamard reverse-engineering needs (global top-k is degenerate under
+    the transform's all-equal magnitudes)."""
+    mask = _topk_mask_rows(u, k) | _topk_mask_rows(u.T, k).T
+    kept = jnp.where(mask, u, 0.0)
+    norm = jnp.linalg.norm(kept)
+    return jnp.where(norm > 0, kept / norm, kept)
+
+
+def _spectral_norm_sq(m, iters=20):
+    """Power iteration estimate of ||m||_2^2 (fixed iteration count so the
+    lowered HLO is a static loop)."""
+    v = jnp.ones((m.shape[1],), dtype=m.dtype) / jnp.sqrt(m.shape[1])
+
+    def body(_, v):
+        w = m @ v
+        u = m.T @ w
+        return u / (jnp.linalg.norm(u) + 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.linalg.norm(m @ v) ** 2 / (jnp.linalg.norm(v) ** 2 + 1e-30)
+
+
+def palm4msa_iteration(a, s, t, lam, proj_s, proj_t, alpha=1e-3):
+    """One palm4MSA sweep for the 2-factor split A ~ lam * T @ S.
+
+    s: (p, n) sparse factor, t: (m, p) residual; `proj_s`/`proj_t` are the
+    projection operators onto their constraint sets. Returns (s', t', lam').
+    """
+    m, n = a.shape
+    eye_n = jnp.eye(n, dtype=a.dtype)
+    eye_m = jnp.eye(m, dtype=a.dtype)
+    # --- update S: L = T, R = Id.
+    c_s = (1.0 + alpha) * lam * lam * _spectral_norm_sq(t) + 1e-30
+    s_stepped = palm_grad_step(a, t, s, eye_n, lam, c_s)
+    s_new = proj_s(s_stepped)
+    # --- update T: L = Id, R = S'.
+    c_t = (1.0 + alpha) * lam * lam * _spectral_norm_sq(s_new) + 1e-30
+    t_stepped = palm_grad_step(a, eye_m, t, s_new, lam, c_t)
+    t_new = proj_t(t_stepped)
+    # --- lambda: <A, T'S'> / ||T'S'||^2.
+    a_hat = t_new @ s_new
+    lam_new = jnp.sum(a * a_hat) / (jnp.sum(a_hat * a_hat) + 1e-30)
+    return s_new, t_new, lam_new
+
+
+def palm4msa_iteration_had32(a, s, t, lam):
+    """Fixed-shape specialization for the Hadamard-32 split: splincol(2)
+    on the butterfly factor, splincol(n/2) on the residual — the AOT
+    artifact `palm_grad_step`."""
+    n = 32
+    return palm4msa_iteration(
+        a,
+        s,
+        t,
+        lam,
+        proj_s=lambda u: proj_splincol(u, 2),
+        proj_t=lambda u: proj_splincol(u, n // 2),
+    )
+
+
+def faust_apply_had32(x, f1, f2, f3, f4, f5):
+    """Apply the 5-factor Hadamard-32 FAuST to x (32, b) via the L1 kernel."""
+    return faust_apply(x, [f1, f2, f3, f4, f5], jnp.float32(1.0))

@@ -1,0 +1,106 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; assert_allclose against ref.py is THE
+core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.palm_grad import faust_apply, palm_grad_step
+from compile.kernels.ref import faust_apply_ref, palm_grad_step_ref, proj_sp_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    n=st.integers(2, 24),
+    p=st.integers(2, 24),
+    q=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_palm_grad_step_matches_ref(m, n, p, q, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, n)
+    l = _rand(rng, m, p)
+    s = _rand(rng, p, q)
+    r = _rand(rng, q, n)
+    lam = jnp.float32(rng.uniform(0.1, 3.0))
+    c = jnp.float32(rng.uniform(0.5, 10.0))
+    got = palm_grad_step(a, l, s, r, lam, c)
+    want = palm_grad_step_ref(a, l, s, r, lam, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_palm_grad_step_block_invariance(block, seed):
+    """The tile size must not change the numerics."""
+    rng = np.random.default_rng(seed)
+    a, l, s, r = (_rand(rng, 12, 20), _rand(rng, 12, 16), _rand(rng, 16, 20), jnp.eye(20))
+    lam, c = jnp.float32(1.3), jnp.float32(2.0)
+    got = palm_grad_step(a, l, s, r, lam, c, block=block)
+    want = palm_grad_step_ref(a, l, s, r, lam, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    b=st.integers(1, 8),
+    j=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_faust_apply_matches_ref(n, b, j, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, b)
+    factors = []
+    dim = n
+    for _ in range(j):
+        nxt = int(rng.integers(2, 16))
+        factors.append(_rand(rng, nxt, dim))
+        dim = nxt
+    lam = jnp.float32(rng.uniform(0.2, 2.0))
+    got = faust_apply(x, factors, lam)
+    want = faust_apply_ref(x, factors, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_grad_step_identity_sides_is_plain_residual_descent():
+    """With L = R = Id and lam = c = 1: S' = S - (S - A) = A."""
+    rng = np.random.default_rng(0)
+    a = _rand(rng, 8, 8)
+    s = _rand(rng, 8, 8)
+    eye = jnp.eye(8)
+    got = palm_grad_step(a, eye, s, eye, jnp.float32(1.0), jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a), rtol=1e-5, atol=1e-5)
+
+
+def test_proj_sp_ref_properties():
+    rng = np.random.default_rng(1)
+    u = _rand(rng, 6, 7)
+    p = proj_sp_ref(u, 5)
+    assert int((np.asarray(p) != 0).sum()) <= 5
+    np.testing.assert_allclose(float(jnp.linalg.norm(p)), 1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtype_is_preserved(dtype):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.standard_normal((6, 6)), dtype=dtype)
+    s = jnp.asarray(rng.standard_normal((6, 6)), dtype=dtype)
+    eye = jnp.eye(6, dtype=dtype)
+    out = palm_grad_step(a, eye, s, eye, jnp.asarray(1.0, dtype), jnp.asarray(1.0, dtype))
+    assert out.dtype == dtype

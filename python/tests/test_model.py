@@ -1,0 +1,88 @@
+"""L2 correctness: the palm4MSA iteration graph behaves like the algorithm.
+
+Checks the descent property, constraint feasibility after projection, and
+that the fixed-shape AOT entry points lower to HLO text cleanly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.aot import build_artifacts, to_hlo_text
+
+
+def _hadamard(n):
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return jnp.asarray(h / np.sqrt(n), dtype=jnp.float32)
+
+
+def _objective(a, s, t, lam):
+    return 0.5 * float(jnp.sum((a - lam * (t @ s)) ** 2))
+
+
+def test_palm_iteration_descends_on_hadamard():
+    n = 32
+    a = _hadamard(n)
+    # Toolbox split init: sparse factor = Id, residual = 0, lam = 1.
+    s = jnp.eye(n, dtype=jnp.float32)
+    t = jnp.zeros((n, n), dtype=jnp.float32)
+    lam = jnp.float32(1.0)
+    objs = []
+    for _ in range(15):
+        s, t, lam = model.palm4msa_iteration_had32(a, s, t, lam)
+        objs.append(_objective(a, s, t, float(lam)))
+    # Overall descent to (near-)exactness. Strict per-iteration
+    # monotonicity is not asserted: the L2 graph uses a fixed-iteration
+    # power method for the Lipschitz step, which can transiently
+    # under-estimate ||L||_2 and produce a small wiggle early on; the
+    # rust-native path (adaptive power iteration) is the monotone
+    # reference. See rust/tests/e2e_runtime.rs for the same check via PJRT.
+    assert objs[-1] < 1e-4 * objs[0], objs
+    assert objs[len(objs) // 2] < objs[0], objs
+    # The tail, once converged, must be non-increasing.
+    for before, after in zip(objs[8:], objs[9:]):
+        assert after <= before * (1 + 1e-3) + 1e-8, (before, after)
+
+
+def test_palm_iteration_respects_sparsity():
+    n = 32
+    a = _hadamard(n)
+    s = jnp.eye(n, dtype=jnp.float32)
+    t = jnp.zeros((n, n), dtype=jnp.float32)
+    lam = jnp.float32(1.0)
+    for _ in range(3):
+        s, t, lam = model.palm4msa_iteration_had32(a, s, t, lam)
+    # splincol(2): union of 2-per-row and 2-per-column supports.
+    assert int((np.asarray(s) != 0).sum()) <= 2 * (n + n)
+    assert int((np.asarray(t) != 0).sum()) <= (n // 2) * (n + n)
+    np.testing.assert_allclose(float(jnp.linalg.norm(s)), 1.0, rtol=1e-5)
+
+
+def test_proj_sp_matches_ref_shape_and_norm():
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.standard_normal((10, 10)), dtype=jnp.float32)
+    p = model.proj_sp(u, 17)
+    assert int((np.asarray(p) != 0).sum()) <= 17
+    np.testing.assert_allclose(float(jnp.linalg.norm(p)), 1.0, rtol=1e-6)
+
+
+def test_artifacts_lower_to_hlo_text():
+    for name, lowered in build_artifacts():
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert len(text) > 200, name
+
+
+def test_faust_apply_had32_shape():
+    n, b = 32, 8
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((n, b)), dtype=jnp.float32)
+    fs = [jnp.asarray(rng.standard_normal((n, n)), dtype=jnp.float32) for _ in range(5)]
+    y = model.faust_apply_had32(x, *fs)
+    assert y.shape == (n, b)
+    # Chain-of-matmuls reference.
+    want = fs[4] @ fs[3] @ fs[2] @ fs[1] @ fs[0] @ x
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-3, atol=2e-3)

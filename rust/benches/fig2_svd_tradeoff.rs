@@ -1,0 +1,63 @@
+//! Paper Fig. 2: FAμST vs truncated SVD on the complexity/error plane.
+//!
+//! The paper plots relative spectral error ‖A − Â‖₂/‖A‖₂ against RCG for
+//! the 204×8193 MEG matrix: the truncated-SVD curve is dominated by the
+//! FAμST points. We reproduce the *shape* on the synthetic MEG operator
+//! (scaled by default; FAUST_BENCH_FULL=1 runs the paper's 204×8193).
+
+use faust::bench_util::{fmt, Table};
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::linalg::{spectral_norm_iter, svd_randomized};
+use faust::meg::meg_model;
+use faust::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("FAUST_BENCH_FULL").is_ok();
+    let (m, n) = if full { (204, 8193) } else { (128, 2048) };
+    println!("# Fig. 2 — FAuST vs truncated SVD ({m}x{n} synthetic MEG gain)");
+    println!("# paper shape: FAuSTs reach much lower error at equal RCG\n");
+    let model = meg_model(m, n, 42);
+    let mut rng = Rng::new(1);
+    let a_norm = spectral_norm_iter(&model.gain, &mut rng, 200, 1e-10);
+
+    let mut table = Table::new(&["method", "config", "RCG", "RE (spectral)", "time_s"]);
+
+    // --- Truncated SVD curve: RCG of rank-r storage = mn / (r(m+n+1)).
+    for r in [2usize, 5, 10, 20, 40, 80] {
+        if r >= m {
+            continue;
+        }
+        let t0 = Instant::now();
+        let svd = svd_randomized(&model.gain, r, 8, 2, &mut rng);
+        let dt = t0.elapsed().as_secs_f64();
+        let err = spectral_norm_iter(&model.gain.sub(&svd.reconstruct()), &mut rng, 120, 1e-9)
+            / a_norm;
+        let rcg = (m * n) as f64 / (r * (m + n + 1)) as f64;
+        table.row(&[
+            "truncSVD".into(),
+            format!("rank {r}"),
+            fmt(rcg),
+            fmt(err),
+            fmt(dt),
+        ]);
+    }
+
+    // --- FAuST points: four configurations as in the paper's Fig. 2.
+    let configs: &[(usize, usize)] = &[(4, 5), (4, 10), (5, 15), (4, 25)];
+    for &(j, k) in configs {
+        let cfg = HierarchicalConfig::meg(m, n, j, k, 2 * m, 0.8, 1.4 * (m * m) as f64);
+        let t0 = Instant::now();
+        let fst = factorize(&model.gain, &cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        let err = fst.relative_error_spectral(&model.gain, &mut rng);
+        table.row(&[
+            "FAuST".into(),
+            format!("J={j} k={k}"),
+            fmt(fst.rcg()),
+            fmt(err),
+            fmt(dt),
+        ]);
+    }
+    table.print();
+}

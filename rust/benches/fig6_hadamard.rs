@@ -1,0 +1,45 @@
+//! Paper Fig. 6 / §IV-C: hierarchical factorization of the Hadamard
+//! matrix is exact, with butterfly complexity, across sizes.
+//!
+//! Paper series: n = 32 (Fig. 6), behaviour identical up to n = 1024 with
+//! O(n²)-ish running time. We sweep n and report exactness, s_tot vs the
+//! 2n·log2(n) reference, RCG, and wall time.
+
+use faust::bench_util::{fmt, Table};
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::transforms::{hadamard, hadamard_faust};
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("FAUST_BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full { &[16, 32, 64, 128, 256, 512] } else { &[16, 32, 64, 128] };
+    println!("# Fig. 6 — reverse-engineering the Hadamard transform");
+    println!("# paper: exact factorization, s_tot = 2n·log2(n), runtime O(n²)\n");
+    let mut table = Table::new(&[
+        "n",
+        "rel_err",
+        "s_tot",
+        "s_tot_ref",
+        "RCG",
+        "RCG_ref",
+        "time_s",
+    ]);
+    for &n in sizes {
+        let a = hadamard(n);
+        let cfg = HierarchicalConfig::hadamard(n);
+        let t0 = Instant::now();
+        let fst = factorize(&a, &cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        let reference = hadamard_faust(n);
+        table.row(&[
+            n.to_string(),
+            format!("{:.1e}", fst.relative_error_fro(&a)),
+            fst.s_tot().to_string(),
+            reference.s_tot().to_string(),
+            fmt(fst.rcg()),
+            fmt(reference.rcg()),
+            fmt(dt),
+        ]);
+    }
+    table.print();
+}

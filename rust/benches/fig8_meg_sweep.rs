@@ -1,0 +1,69 @@
+//! Paper Fig. 8: the factorization compromise on the MEG operator.
+//!
+//! Sweep of (J, k, s) producing the RCG-vs-RE scatter: paper settings are
+//! J∈{2..10}, k∈{5,10,15,20,25,30}, s∈{2m,4m,8m}, ρ=0.8, P=1.4m² on the
+//! 204×8193 gain (127 configs, (J−1)×10 min each in Matlab). Default here
+//! is a reduced grid on a scaled operator; FAUST_BENCH_FULL=1 widens it.
+//!
+//! Expected shape (paper §V-A): k controls overall RCG; larger J lowers
+//! RCG but too-large J raises RE; J=2 never the best trade-off.
+
+use faust::bench_util::{fmt, Table};
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::meg::meg_model;
+use faust::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("FAUST_BENCH_FULL").is_ok();
+    let (m, n) = if full { (204, 8193) } else { (128, 2048) };
+    let js: &[usize] = if full { &[2, 3, 4, 5, 6, 8, 10] } else { &[2, 3, 4, 6] };
+    let ks: &[usize] = if full { &[5, 10, 15, 20, 25, 30] } else { &[5, 10, 20, 30] };
+    let ss: &[usize] = if full { &[2, 4, 8] } else { &[2, 8] };
+    println!("# Fig. 8 — factorization compromise ({m}x{n} synthetic MEG gain)");
+    println!("# paper shape: k drives RCG; J trades error vs complexity; J=2 never best\n");
+    let model = meg_model(m, n, 42);
+    let mut rng = Rng::new(9);
+    let mut table = Table::new(&["J", "k", "s/m", "RCG", "RE (spectral)", "time_s"]);
+    let mut best_per_k: std::collections::HashMap<usize, (f64, usize, f64)> =
+        std::collections::HashMap::new();
+    for &k in ks {
+        for &j in js {
+            for &s_m in ss {
+                let cfg = HierarchicalConfig::meg(
+                    m,
+                    n,
+                    j,
+                    k,
+                    s_m * m,
+                    0.8,
+                    1.4 * (m * m) as f64,
+                );
+                let t0 = Instant::now();
+                let fst = factorize(&model.gain, &cfg);
+                let dt = t0.elapsed().as_secs_f64();
+                let re = fst.relative_error_spectral(&model.gain, &mut rng);
+                table.row(&[
+                    j.to_string(),
+                    k.to_string(),
+                    s_m.to_string(),
+                    fmt(fst.rcg()),
+                    fmt(re),
+                    fmt(dt),
+                ]);
+                let e = best_per_k.entry(k).or_insert((f64::INFINITY, 0, 0.0));
+                if re < e.0 {
+                    *e = (re, j, fst.rcg());
+                }
+            }
+        }
+    }
+    table.print();
+    println!("\n# lowest-RE configuration per k (the paper's highlighted M^ points):");
+    let mut ks_sorted: Vec<_> = best_per_k.keys().copied().collect();
+    ks_sorted.sort_unstable();
+    for k in ks_sorted {
+        let (re, j, rcg) = best_per_k[&k];
+        println!("#   k={k:<3} -> J={j}, RCG={rcg:.1}, RE={re:.4}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Algorithm-cost bench: palm4MSA per-iteration cost scaling, and the
+//! hierarchical overhead factor (§IV-B3: "roughly J−1 times the basic
+//! palm4MSA").
+
+use faust::bench_util::{fmt, time_auto, Table};
+use faust::linalg::Mat;
+use faust::palm::{palm4msa, FactorState, PalmConfig};
+use faust::prox::Constraint;
+use faust::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    println!("# palm4MSA per-iteration cost vs problem size (2-factor split)\n");
+    let mut table = Table::new(&["n", "iter_us", "its/s"]);
+    for n in [32usize, 64, 128, 256] {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(n, n, &mut rng);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpRowCol(2), Constraint::SpRowCol(n / 2)],
+            1,
+        );
+        // Time exactly one iteration from a warm state.
+        let warm = {
+            let c10 = PalmConfig::new(cfg.constraints.clone(), 10);
+            palm4msa(&a, FactorState::default_init(&[(n, n), (n, n)]), &c10).state
+        };
+        let t = time_auto(100.0, || {
+            black_box(palm4msa(&a, warm.clone(), &cfg));
+        });
+        table.row(&[
+            n.to_string(),
+            fmt(t.median_us()),
+            fmt(1e9 / t.median_ns),
+        ]);
+    }
+    table.print();
+
+    println!("\n# hierarchical total cost vs direct palm4MSA (J factors, n=64)");
+    let n = 64usize;
+    let a = faust::transforms::hadamard(n);
+    let hcfg = faust::hierarchical::HierarchicalConfig::hadamard(n);
+    let t_h = time_auto(500.0, || {
+        black_box(faust::hierarchical::factorize(&a, &hcfg));
+    });
+    let j = hcfg.n_factors();
+    let direct_cfg = PalmConfig::new(
+        (0..j)
+            .map(|i| {
+                if i == j - 1 {
+                    Constraint::SpRowCol(2)
+                } else {
+                    Constraint::SpRowCol(2)
+                }
+            })
+            .collect(),
+        hcfg.n_iter_split,
+    );
+    let dims: Vec<(usize, usize)> = vec![(n, n); j];
+    let t_d = time_auto(500.0, || {
+        black_box(palm4msa(&a, FactorState::default_init(&dims), &direct_cfg));
+    });
+    println!(
+        "hierarchical: {:.1} ms   direct palm4MSA (same split iters): {:.1} ms   ratio: {:.1} (paper predicts ~J-1 = {})",
+        t_h.median_ms(),
+        t_d.median_ms(),
+        t_h.median_ns / t_d.median_ns,
+        j - 1
+    );
+}

@@ -1,0 +1,166 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set): warmup + timed iterations with robust statistics, plus an aligned
+//! table printer used by every `cargo bench` target to emit the paper's
+//! figure series as text.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `iters` measured runs.
+pub fn time_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p).round() as usize];
+    Timing {
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        iters: samples.len(),
+    }
+}
+
+/// Adaptive timing: run for at least `min_total_ms` total, at least 3 iters.
+pub fn time_auto<T>(min_total_ms: f64, mut f: impl FnMut() -> T) -> Timing {
+    // Calibrate with one run.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((min_total_ms / one.max(1e-6)).ceil() as usize).clamp(3, 10_000);
+    time_fn(1, iters, f)
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$}  ", cell, width = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float compactly for tables.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.001 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders_sensible() {
+        let t = time_fn(2, 20, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(t.p10_ns <= t.median_ns && t.median_ns <= t.p90_ns);
+        assert_eq!(t.iters, 20);
+        assert!(t.median_ns > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "metric"]);
+        t.row(&["x".into(), "1.0".into()]);
+        t.row(&["longer".into(), "2.5".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a"));
+        assert!(lines[2].starts_with("x"));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert!(fmt(1234.5).contains('e'));
+        assert!(fmt(0.25).starts_with("0.25"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

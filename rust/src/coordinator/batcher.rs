@@ -1,0 +1,147 @@
+//! Dynamic batching policy: collect requests per operator until the batch
+//! is full or the oldest request's deadline expires (vLLM-style continuous
+//! batching, simplified to the matvec setting).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// When to flush a partial batch.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+/// Accumulates requests per key; generic so it is unit-testable without
+/// spinning up the full coordinator.
+pub struct Batcher<R> {
+    policy: BatchPolicy,
+    pending: HashMap<String, (Vec<R>, Instant)>,
+}
+
+impl<R> Batcher<R> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: HashMap::new() }
+    }
+
+    /// Add a request under `key`; returns a full batch if the size
+    /// threshold was reached.
+    pub fn add(&mut self, key: String, r: R) -> Option<(String, Vec<R>)> {
+        let entry = self
+            .pending
+            .entry(key.clone())
+            .or_insert_with(|| (Vec::new(), Instant::now()));
+        entry.0.push(r);
+        if entry.0.len() >= self.policy.max_batch {
+            let (reqs, _) = self.pending.remove(&key).unwrap();
+            Some((key, reqs))
+        } else {
+            None
+        }
+    }
+
+    /// Time until the earliest pending batch expires (None if idle).
+    pub fn next_deadline_in(&self) -> Option<Duration> {
+        self.pending
+            .values()
+            .map(|(_, t0)| {
+                let elapsed = t0.elapsed();
+                self.policy.timeout.saturating_sub(elapsed)
+            })
+            .min()
+    }
+
+    /// Remove and return every batch older than the timeout.
+    pub fn take_expired(&mut self) -> Vec<(String, Vec<R>)> {
+        let timeout = self.policy.timeout;
+        let expired: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, (_, t0))| t0.elapsed() >= timeout)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|k| {
+                let (reqs, _) = self.pending.remove(&k).unwrap();
+                (k, reqs)
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn drain(&mut self) -> Vec<(String, Vec<R>)> {
+        self.pending
+            .drain()
+            .map(|(k, (reqs, _))| (k, reqs))
+            .collect()
+    }
+
+    /// Number of pending (unflushed) requests.
+    pub fn pending_len(&self) -> usize {
+        self.pending.values().map(|(v, _)| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch: max, timeout: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b: Batcher<u32> = Batcher::new(policy(3, 1000));
+        assert!(b.add("a".into(), 1).is_none());
+        assert!(b.add("a".into(), 2).is_none());
+        let (k, reqs) = b.add("a".into(), 3).expect("should flush at max");
+        assert_eq!(k, "a");
+        assert_eq!(reqs, vec![1, 2, 3]);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn keys_are_batched_separately() {
+        let mut b: Batcher<u32> = Batcher::new(policy(2, 1000));
+        assert!(b.add("a".into(), 1).is_none());
+        assert!(b.add("b".into(), 2).is_none());
+        assert_eq!(b.pending_len(), 2);
+        let (k, reqs) = b.add("a".into(), 3).unwrap();
+        assert_eq!(k, "a");
+        assert_eq!(reqs, vec![1, 3]);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn expiry_flushes_partial_batches() {
+        let mut b: Batcher<u32> = Batcher::new(policy(100, 5));
+        b.add("a".into(), 1);
+        assert!(b.take_expired().is_empty());
+        std::thread::sleep(Duration::from_millis(8));
+        let expired = b.take_expired();
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].1, vec![1]);
+    }
+
+    #[test]
+    fn deadline_reporting() {
+        let mut b: Batcher<u32> = Batcher::new(policy(10, 50));
+        assert!(b.next_deadline_in().is_none());
+        b.add("a".into(), 1);
+        let d = b.next_deadline_in().unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let mut b: Batcher<u32> = Batcher::new(policy(10, 1000));
+        b.add("a".into(), 1);
+        b.add("b".into(), 2);
+        let mut all = b.drain();
+        all.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_len(), 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Lock-free serving metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic counters updated on the hot path.
+pub struct Metrics {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    max_batch_size: AtomicU64,
+    exec_ns_total: AtomicU64,
+    latency_ns_total: AtomicU64,
+    latency_ns_max: AtomicU64,
+    flops_total: AtomicU64,
+}
+
+/// Point-in-time copy of the metrics.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub max_batch_size: u64,
+    pub exec_ns_total: u64,
+    pub latency_ns_total: u64,
+    pub latency_ns_max: u64,
+    pub flops_total: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean batch size actually executed.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean end-to-end latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_ns_total as f64 / self.completed as f64 / 1e3
+        }
+    }
+
+    /// Effective GFLOP/s over executor time.
+    pub fn gflops(&self) -> f64 {
+        if self.exec_ns_total == 0 {
+            0.0
+        } else {
+            self.flops_total as f64 / self.exec_ns_total as f64
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            max_batch_size: AtomicU64::new(0),
+            exec_ns_total: AtomicU64::new(0),
+            latency_ns_total: AtomicU64::new(0),
+            latency_ns_max: AtomicU64::new(0),
+            flops_total: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.max_batch_size.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_exec(&self, _batch: usize, exec_ns: u64, flops: u64) {
+        self.exec_ns_total.fetch_add(exec_ns, Ordering::Relaxed);
+        self.flops_total.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    pub fn record_completed(&self, latency_ns: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency_ns_total.fetch_add(latency_ns, Ordering::Relaxed);
+        self.latency_ns_max.fetch_max(latency_ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            max_batch_size: self.max_batch_size.load(Ordering::Relaxed),
+            exec_ns_total: self.exec_ns_total.load(Ordering::Relaxed),
+            latency_ns_total: self.latency_ns_total.load(Ordering::Relaxed),
+            latency_ns_max: self.latency_ns_max.load(Ordering::Relaxed),
+            flops_total: self.flops_total.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_submitted();
+        m.record_batch(2);
+        m.record_exec(2, 1000, 400);
+        m.record_completed(500);
+        m.record_completed(1500);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_size(), 2.0);
+        assert_eq!(s.latency_ns_max, 1500);
+        assert!((s.mean_latency_us() - 1.0).abs() < 1e-12);
+        assert!((s.gflops() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_batch_size(), 0.0);
+        assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.gflops(), 0.0);
+    }
+}

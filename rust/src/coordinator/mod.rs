@@ -1,0 +1,524 @@
+//! Operator-serving coordinator: the L3 runtime that turns a FAμST into a
+//! *service*.
+//!
+//! The paper's motivating workload (§V) is an iterative solver issuing many
+//! matvec requests against a fixed operator. This module provides the
+//! deployment shape for that: an operator **registry**, a **router** thread
+//! that groups incoming requests per operator into dynamic **batches**
+//! (size- or deadline-triggered), and a **worker pool** executing batches
+//! as a single `spmm` — which is both cache-friendlier and, for the PJRT
+//! backend, amortizes executable dispatch. Bounded queues give
+//! backpressure; metrics are lock-free atomics.
+//!
+//! tokio is not available offline; a compute-bound matvec service needs
+//! threads, not async IO, so the pool is `std::thread` + channels.
+
+mod batcher;
+mod metrics;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use crate::faust::Faust;
+use crate::linalg::Mat;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A batched linear operator servable by the coordinator.
+pub trait BatchOp: Send + Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// Apply to a column-batch `X ∈ R^{cols×b}` → `Y ∈ R^{rows×b}`.
+    fn apply_batch(&self, x: &Mat) -> Mat;
+    /// Flops per single matvec (for metrics / RCG reporting).
+    fn flops_per_matvec(&self) -> usize;
+}
+
+impl BatchOp for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+    fn apply_batch(&self, x: &Mat) -> Mat {
+        self.matmul(x)
+    }
+    fn flops_per_matvec(&self) -> usize {
+        2 * Mat::rows(self) * Mat::cols(self)
+    }
+}
+
+impl BatchOp for Faust {
+    fn rows(&self) -> usize {
+        Faust::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Faust::cols(self)
+    }
+    fn apply_batch(&self, x: &Mat) -> Mat {
+        self.apply_mat(x)
+    }
+    fn flops_per_matvec(&self) -> usize {
+        self.flops_per_matvec()
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Maximum vectors per batch.
+    pub max_batch: usize,
+    /// Deadline before a partial batch is flushed.
+    pub batch_timeout: Duration,
+    /// Worker threads.
+    pub n_workers: usize,
+    /// Bounded request-queue capacity (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 32,
+            batch_timeout: Duration::from_micros(200),
+            n_workers: 2,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// One in-flight request.
+struct Request {
+    op: String,
+    x: Vec<f64>,
+    enqueued: Instant,
+    resp: SyncSender<Result<Vec<f64>, ServeError>>,
+}
+
+/// A batch ready for execution.
+struct Job {
+    op: Arc<dyn BatchOp>,
+    reqs: Vec<Request>,
+}
+
+/// Serving errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    UnknownOperator(String),
+    WrongDimension { expected: usize, got: usize },
+    QueueFull,
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownOperator(n) => write!(f, "unknown operator '{n}'"),
+            ServeError::WrongDimension { expected, got } => {
+                write!(f, "wrong input dimension: expected {expected}, got {got}")
+            }
+            ServeError::QueueFull => write!(f, "request queue full"),
+            ServeError::ShuttingDown => write!(f, "coordinator shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Shared worker queue (Mutex + Condvar; mpsc receivers are not cloneable).
+struct JobQueue {
+    q: Mutex<Vec<Job>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        JobQueue { q: Mutex::new(Vec::new()), cv: Condvar::new(), closed: AtomicBool::new(false) }
+    }
+
+    fn push(&self, job: Job) {
+        self.q.lock().unwrap().push(job);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(j) = g.pop() {
+                return Some(j);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle for submitting requests; cloneable and thread-safe.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+    registry: Arc<HashMap<String, Arc<dyn BatchOp>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Client {
+    /// Blocking single matvec through the service.
+    pub fn apply(&self, op: &str, x: Vec<f64>) -> Result<Vec<f64>, ServeError> {
+        let rx = self.submit(op, x)?;
+        rx.recv().map_err(|_| ServeError::ShuttingDown)?
+    }
+
+    /// Submit without blocking on the result; returns the response channel.
+    pub fn submit(
+        &self,
+        op: &str,
+        x: Vec<f64>,
+    ) -> Result<Receiver<Result<Vec<f64>, ServeError>>, ServeError> {
+        let handle = self
+            .registry
+            .get(op)
+            .ok_or_else(|| ServeError::UnknownOperator(op.to_string()))?;
+        if x.len() != handle.cols() {
+            return Err(ServeError::WrongDimension { expected: handle.cols(), got: x.len() });
+        }
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { op: op.to_string(), x, enqueued: Instant::now(), resp: rtx };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.record_submitted();
+                Ok(rrx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(ServeError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Snapshot of serving metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// The running coordinator: router + workers.
+pub struct Coordinator {
+    client: Client,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    jobs: Arc<JobQueue>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start serving the given named operators.
+    pub fn start(ops: Vec<(String, Arc<dyn BatchOp>)>, cfg: CoordinatorConfig) -> Self {
+        let registry: Arc<HashMap<String, Arc<dyn BatchOp>>> =
+            Arc::new(ops.into_iter().collect());
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+        let jobs = Arc::new(JobQueue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Router thread: drain the request channel, batch per op.
+        let r_registry = registry.clone();
+        let r_jobs = jobs.clone();
+        let r_metrics = metrics.clone();
+        let r_stop = stop.clone();
+        let policy = BatchPolicy { max_batch: cfg.max_batch, timeout: cfg.batch_timeout };
+        let router = std::thread::Builder::new()
+            .name("faust-router".into())
+            .spawn(move || router_loop(rx, r_registry, r_jobs, r_metrics, policy, r_stop))
+            .expect("spawn router");
+
+        // Worker pool.
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for w in 0..cfg.n_workers.max(1) {
+            let w_jobs = jobs.clone();
+            let w_metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("faust-worker-{w}"))
+                    .spawn(move || worker_loop(w_jobs, w_metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let client = Client { tx, registry, metrics };
+        Coordinator { client, router: Some(router), workers, jobs, stop }
+    }
+
+    /// Get a submission handle.
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight work, join.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.stop.store(true, Ordering::Release);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.client.metrics()
+    }
+}
+
+fn router_loop(
+    rx: Receiver<Request>,
+    registry: Arc<HashMap<String, Arc<dyn BatchOp>>>,
+    jobs: Arc<JobQueue>,
+    metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+    stop: Arc<AtomicBool>,
+) {
+    let mut batcher: Batcher<Request> = Batcher::new(policy.clone());
+    loop {
+        let timeout = batcher
+            .next_deadline_in()
+            .unwrap_or(Duration::from_millis(5));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                let key = req.op.clone();
+                if let Some((op_name, reqs)) = batcher.add(key, req) {
+                    flush(&registry, &jobs, &metrics, op_name, reqs);
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        for (op_name, reqs) in batcher.take_expired() {
+            flush(&registry, &jobs, &metrics, op_name, reqs);
+        }
+        if stop.load(Ordering::Acquire) {
+            // Drain anything still in the channel, then stop.
+            while let Ok(req) = rx.try_recv() {
+                let key = req.op.clone();
+                if let Some((op_name, reqs)) = batcher.add(key, req) {
+                    flush(&registry, &jobs, &metrics, op_name, reqs);
+                }
+            }
+            break;
+        }
+    }
+    // Drain remaining partial batches on shutdown.
+    for (op_name, reqs) in batcher.drain() {
+        flush(&registry, &jobs, &metrics, op_name, reqs);
+    }
+}
+
+fn flush(
+    registry: &Arc<HashMap<String, Arc<dyn BatchOp>>>,
+    jobs: &Arc<JobQueue>,
+    metrics: &Arc<Metrics>,
+    op_name: String,
+    reqs: Vec<Request>,
+) {
+    match registry.get(&op_name) {
+        Some(op) => {
+            metrics.record_batch(reqs.len());
+            jobs.push(Job { op: op.clone(), reqs });
+        }
+        None => {
+            for r in reqs {
+                let _ = r
+                    .resp
+                    .send(Err(ServeError::UnknownOperator(op_name.clone())));
+            }
+        }
+    }
+}
+
+fn worker_loop(jobs: Arc<JobQueue>, metrics: Arc<Metrics>) {
+    while let Some(job) = jobs.pop() {
+        let b = job.reqs.len();
+        let n = job.op.cols();
+        // Assemble the column batch.
+        let mut x = Mat::zeros(n, b);
+        for (c, r) in job.reqs.iter().enumerate() {
+            for i in 0..n {
+                x.set(i, c, r.x[i]);
+            }
+        }
+        let t0 = Instant::now();
+        let y = job.op.apply_batch(&x);
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        metrics.record_exec(b, exec_ns, job.op.flops_per_matvec() as u64 * b as u64);
+        for (c, r) in job.reqs.into_iter().enumerate() {
+            let latency = r.enqueued.elapsed().as_nanos() as u64;
+            metrics.record_completed(latency);
+            let _ = r.resp.send(Ok(y.col(c)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn dense_op(m: usize, n: usize, seed: u64) -> (Arc<Mat>, Mat) {
+        let mut rng = Rng::new(seed);
+        let a = Mat::randn(m, n, &mut rng);
+        (Arc::new(a.clone()), a)
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let (op, a) = dense_op(6, 9, 161);
+        let coord = Coordinator::start(
+            vec![("m".to_string(), op as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let client = coord.client();
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let x = rng.gauss_vec(9);
+            let y = client.apply("m", x.clone()).unwrap();
+            let want = a.matvec(&x);
+            for i in 0..6 {
+                assert!((y[i] - want[i]).abs() < 1e-12);
+            }
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 20);
+    }
+
+    #[test]
+    fn unknown_operator_and_bad_dims_rejected() {
+        let (op, _) = dense_op(4, 4, 162);
+        let coord = Coordinator::start(
+            vec![("a".to_string(), op as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let client = coord.client();
+        assert!(matches!(
+            client.apply("nope", vec![0.0; 4]),
+            Err(ServeError::UnknownOperator(_))
+        ));
+        assert!(matches!(
+            client.apply("a", vec![0.0; 3]),
+            Err(ServeError::WrongDimension { expected: 4, got: 3 })
+        ));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_batch_and_complete() {
+        let (op, a) = dense_op(8, 8, 163);
+        let mut cfg = CoordinatorConfig::default();
+        cfg.max_batch = 16;
+        cfg.batch_timeout = Duration::from_millis(2);
+        let coord = Coordinator::start(vec![("m".to_string(), op as Arc<dyn BatchOp>)], cfg);
+        let client = coord.client();
+        let nthreads = 4;
+        let per = 25;
+        let mut handles = vec![];
+        for t in 0..nthreads {
+            let c = client.clone();
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(200 + t as u64);
+                for _ in 0..per {
+                    let x = rng.gauss_vec(8);
+                    let y = c.apply("m", x.clone()).unwrap();
+                    let want = a.matvec(&x);
+                    for i in 0..8 {
+                        assert!((y[i] - want[i]).abs() < 1e-12);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, (nthreads * per) as u64);
+        // With concurrency + a 2ms window we expect at least one batch > 1.
+        assert!(snap.max_batch_size >= 1);
+    }
+
+    #[test]
+    fn faust_and_dense_agree_through_service() {
+        let h = crate::transforms::hadamard(32);
+        let hf = crate::transforms::hadamard_faust(32);
+        let coord = Coordinator::start(
+            vec![
+                ("dense".to_string(), Arc::new(h.clone()) as Arc<dyn BatchOp>),
+                ("faust".to_string(), Arc::new(hf) as Arc<dyn BatchOp>),
+            ],
+            CoordinatorConfig::default(),
+        );
+        let client = coord.client();
+        let mut rng = Rng::new(3);
+        let x = rng.gauss_vec(32);
+        let yd = client.apply("dense", x.clone()).unwrap();
+        let yf = client.apply("faust", x).unwrap();
+        for i in 0..32 {
+            assert!((yd[i] - yf[i]).abs() < 1e-10);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_queue_full() {
+        // Tiny queue + a blocking operator to keep it busy.
+        struct Slow;
+        impl BatchOp for Slow {
+            fn rows(&self) -> usize {
+                1
+            }
+            fn cols(&self) -> usize {
+                1
+            }
+            fn apply_batch(&self, x: &Mat) -> Mat {
+                std::thread::sleep(Duration::from_millis(30));
+                x.clone()
+            }
+            fn flops_per_matvec(&self) -> usize {
+                1
+            }
+        }
+        let mut cfg = CoordinatorConfig::default();
+        cfg.queue_capacity = 1;
+        cfg.max_batch = 1;
+        cfg.n_workers = 1;
+        let coord = Coordinator::start(
+            vec![("s".to_string(), Arc::new(Slow) as Arc<dyn BatchOp>)],
+            cfg,
+        );
+        let client = coord.client();
+        // Flood; at least one submission must be rejected with QueueFull.
+        let mut rejected = 0;
+        let mut pending = vec![];
+        for _ in 0..50 {
+            match client.submit("s", vec![1.0]) {
+                Ok(rx) => pending.push(rx),
+                Err(ServeError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        assert!(rejected > 0, "backpressure never engaged");
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,421 @@
+//! The FAμST operator type: `A ≈ λ · S_J ⋯ S_1`.
+//!
+//! Factors are stored sparse (CSR) right-to-left as in the paper
+//! (`factors[0] = S_1` applies first to the input). Apply and transpose
+//! apply cost `O(s_tot)`; [`Faust::rc`]/[`Faust::rcg`] implement the
+//! paper's Definition II.1.
+
+use crate::linalg::{spectral_norm_iter, Mat};
+use crate::rng::Rng;
+use crate::sparse::{Coo, Csr};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Multi-layer sparse operator `λ · S_J ⋯ S_1 ∈ R^{m×n}`.
+#[derive(Clone, Debug)]
+pub struct Faust {
+    /// Sparse factors, rightmost first: `factors[0] = S_1 (a_2×a_1)`,
+    /// `factors[J-1] = S_J (m×a_J)`.
+    factors: Vec<Csr>,
+    /// Global scale λ.
+    lambda: f64,
+}
+
+impl Faust {
+    /// Build from rightmost-first sparse factors and a scale.
+    pub fn new(factors: Vec<Csr>, lambda: f64) -> Self {
+        assert!(!factors.is_empty(), "FAuST needs at least one factor");
+        for w in factors.windows(2) {
+            assert_eq!(
+                w[1].cols(),
+                w[0].rows(),
+                "factor chain dimension mismatch"
+            );
+        }
+        Faust { factors, lambda }
+    }
+
+    /// Build from dense factors, sparsifying exact zeros.
+    pub fn from_dense_factors(factors: &[Mat], lambda: f64) -> Self {
+        Self::new(
+            factors.iter().map(|m| Csr::from_dense(m, 0.0)).collect(),
+            lambda,
+        )
+    }
+
+    /// Trivial single-factor FAμST wrapping a dense matrix (RC = density).
+    pub fn from_dense(a: &Mat) -> Self {
+        Self::new(vec![Csr::from_dense(a, 0.0)], 1.0)
+    }
+
+    /// Number of factors `J`.
+    pub fn n_factors(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// The factors, rightmost (applied first) first.
+    pub fn factors(&self) -> &[Csr] {
+        &self.factors
+    }
+
+    /// Scale λ.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Output dimension `m`.
+    pub fn rows(&self) -> usize {
+        self.factors.last().unwrap().rows()
+    }
+
+    /// Input dimension `n`.
+    pub fn cols(&self) -> usize {
+        self.factors[0].cols()
+    }
+
+    /// Total non-zeros `s_tot` across factors.
+    pub fn s_tot(&self) -> usize {
+        self.factors.iter().map(|f| f.nnz()).sum()
+    }
+
+    /// Relative Complexity (Definition II.1): `s_tot / (m·n)` — the paper
+    /// normalizes by `‖A‖₀` of the dense operator, i.e. `m·n` for generic
+    /// dense `A`.
+    pub fn rc(&self) -> f64 {
+        self.s_tot() as f64 / (self.rows() * self.cols()) as f64
+    }
+
+    /// Relative Complexity Gain `RCG = 1 / RC`.
+    pub fn rcg(&self) -> f64 {
+        1.0 / self.rc()
+    }
+
+    /// Flops for one matvec (2 per stored non-zero).
+    pub fn flops_per_matvec(&self) -> usize {
+        self.factors.iter().map(|f| f.flops_per_matvec()).sum()
+    }
+
+    /// COO storage bytes across all factors (§II-B1).
+    pub fn storage_bytes(&self) -> usize {
+        self.factors
+            .iter()
+            .map(|f| f.to_coo().storage_bytes())
+            .sum::<usize>()
+            + 8 // λ
+            + 4 * (self.n_factors() + 1) // the a_1..a_{J+1} sizes
+    }
+
+    /// Largest intermediate dimension along the chain (scratch sizing).
+    fn max_dim(&self) -> usize {
+        self.factors
+            .iter()
+            .map(|f| f.rows().max(f.cols()))
+            .max()
+            .unwrap()
+    }
+
+    /// Apply: `y = λ S_J ⋯ S_1 x` in `O(s_tot)`.
+    ///
+    /// Allocation-light hot path: two ping-pong scratch buffers instead of
+    /// one allocation per factor (§Perf).
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols(), "faust apply dim mismatch");
+        let cap = self.max_dim();
+        let mut a = vec![0.0; cap];
+        let mut b = vec![0.0; cap];
+        let f0 = &self.factors[0];
+        f0.spmv_into(x, &mut a[..f0.rows()]);
+        let mut cur_len = f0.rows();
+        let mut cur_is_a = true;
+        for f in &self.factors[1..] {
+            let (src, dst) = if cur_is_a {
+                (&a[..cur_len], &mut b[..f.rows()])
+            } else {
+                (&b[..cur_len], &mut a[..f.rows()])
+            };
+            f.spmv_into(src, dst);
+            cur_len = f.rows();
+            cur_is_a = !cur_is_a;
+        }
+        let mut out = if cur_is_a { a } else { b };
+        out.truncate(cur_len);
+        for v in &mut out {
+            *v *= self.lambda;
+        }
+        out
+    }
+
+    /// Transpose apply: `y = λ S_1ᵀ ⋯ S_Jᵀ x`.
+    pub fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows(), "faust apply_t dim mismatch");
+        let cap = self.max_dim();
+        let mut a = vec![0.0; cap];
+        let mut b = vec![0.0; cap];
+        let flast = self.factors.last().unwrap();
+        flast.spmv_t_into(x, &mut a[..flast.cols()]);
+        let mut cur_len = flast.cols();
+        let mut cur_is_a = true;
+        for f in self.factors[..self.factors.len() - 1].iter().rev() {
+            let (src, dst) = if cur_is_a {
+                (&a[..cur_len], &mut b[..f.cols()])
+            } else {
+                (&b[..cur_len], &mut a[..f.cols()])
+            };
+            f.spmv_t_into(src, dst);
+            cur_len = f.cols();
+            cur_is_a = !cur_is_a;
+        }
+        let mut out = if cur_is_a { a } else { b };
+        out.truncate(cur_len);
+        for v in &mut out {
+            *v *= self.lambda;
+        }
+        out
+    }
+
+    /// Batched apply: `Y = λ S_J ⋯ S_1 X` with `X ∈ R^{n×b}` column-batch.
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.cols());
+        let mut cur = self.factors[0].spmm(x);
+        for f in &self.factors[1..] {
+            cur = f.spmm(&cur);
+        }
+        cur.scale(self.lambda);
+        cur
+    }
+
+    /// Batched transpose apply.
+    pub fn apply_t_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.rows());
+        let mut cur = self.factors.last().unwrap().spmm_t(x);
+        for f in self.factors[..self.factors.len() - 1].iter().rev() {
+            cur = f.spmm_t(&cur);
+        }
+        cur.scale(self.lambda);
+        cur
+    }
+
+    /// Densify: `λ S_J ⋯ S_1` as a dense matrix.
+    pub fn to_dense(&self) -> Mat {
+        let mut acc = self.factors[0].to_dense();
+        for f in &self.factors[1..] {
+            acc = f.spmm(&acc);
+        }
+        acc.scale(self.lambda);
+        acc
+    }
+
+    /// Relative Frobenius approximation error vs a reference operator.
+    pub fn relative_error_fro(&self, a: &Mat) -> f64 {
+        self.to_dense().rel_fro_err(a)
+    }
+
+    /// Relative spectral-norm error `‖A − Â‖₂ / ‖A‖₂` (the paper's RE, (6)),
+    /// estimated by power iteration.
+    pub fn relative_error_spectral(&self, a: &Mat, rng: &mut Rng) -> f64 {
+        let diff = a.sub(&self.to_dense());
+        let num = spectral_norm_iter(&diff, rng, 120, 1e-9);
+        let den = spectral_norm_iter(a, rng, 120, 1e-9);
+        num / den.max(1e-300)
+    }
+
+    /// Column `j` of the (scaled) dense operator, in `O(s_tot)` — used by
+    /// OMP to fetch atoms lazily without densifying.
+    pub fn column(&self, j: usize) -> Vec<f64> {
+        let mut e = vec![0.0; self.cols()];
+        e[j] = 1.0;
+        self.apply(&e)
+    }
+
+    /// Serialize to a simple line-oriented text format.
+    ///
+    /// Format: header `FAUST v1 <J> <lambda>`, then per factor a line
+    /// `FACTOR <rows> <cols> <nnz>` followed by `nnz` lines `i j v`.
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "FAUST v1 {} {:.17e}", self.n_factors(), self.lambda)?;
+        for fac in &self.factors {
+            let coo = fac.to_coo();
+            writeln!(w, "FACTOR {} {} {}", fac.rows(), fac.cols(), coo.nnz())?;
+            for k in 0..coo.nnz() {
+                writeln!(
+                    w,
+                    "{} {} {:.17e}",
+                    coo.row_idx[k], coo.col_idx[k], coo.vals[k]
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the [`Faust::save`] format.
+    pub fn load(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let mut lines = BufReader::new(f).lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| bad("empty file"))??;
+        let hp: Vec<&str> = header.split_whitespace().collect();
+        if hp.len() != 4 || hp[0] != "FAUST" || hp[1] != "v1" {
+            return Err(bad("bad header"));
+        }
+        let nfac: usize = hp[2].parse().map_err(|_| bad("bad J"))?;
+        let lambda: f64 = hp[3].parse().map_err(|_| bad("bad lambda"))?;
+        let mut factors = Vec::with_capacity(nfac);
+        for _ in 0..nfac {
+            let fl = lines.next().ok_or_else(|| bad("missing factor"))??;
+            let fp: Vec<&str> = fl.split_whitespace().collect();
+            if fp.len() != 4 || fp[0] != "FACTOR" {
+                return Err(bad("bad factor header"));
+            }
+            let rows: usize = fp[1].parse().map_err(|_| bad("rows"))?;
+            let cols: usize = fp[2].parse().map_err(|_| bad("cols"))?;
+            let nnz: usize = fp[3].parse().map_err(|_| bad("nnz"))?;
+            let mut coo = Coo::new(rows, cols);
+            for _ in 0..nnz {
+                let el = lines.next().ok_or_else(|| bad("missing entry"))??;
+                let ep: Vec<&str> = el.split_whitespace().collect();
+                if ep.len() != 3 {
+                    return Err(bad("bad entry"));
+                }
+                coo.push(
+                    ep[0].parse().map_err(|_| bad("i"))?,
+                    ep[1].parse().map_err(|_| bad("j"))?,
+                    ep[2].parse().map_err(|_| bad("v"))?,
+                );
+            }
+            factors.push(Csr::from_coo(&coo));
+        }
+        Ok(Faust::new(factors, lambda))
+    }
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, format!("faust load: {msg}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_faust(rng: &mut Rng) -> (Faust, Mat) {
+        // 3-factor chain 6×8 = (6×4)(4×4)(4×8) with sparse-ish factors.
+        let mk = |r: usize, c: usize, nnz: usize, rng: &mut Rng| {
+            let mut m = Mat::zeros(r, c);
+            for i in rng.sample_indices(r * c, nnz) {
+                m.data_mut()[i] = rng.gauss();
+            }
+            m
+        };
+        let s1 = mk(4, 8, 12, rng);
+        let s2 = mk(4, 4, 8, rng);
+        let s3 = mk(6, 4, 10, rng);
+        let lambda = 1.7;
+        let dense = s3.matmul(&s2).matmul(&s1).scaled(lambda);
+        (Faust::from_dense_factors(&[s1, s2, s3], lambda), dense)
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Rng::new(81);
+        let (f, dense) = small_faust(&mut rng);
+        assert_eq!(f.rows(), 6);
+        assert_eq!(f.cols(), 8);
+        let x = rng.gauss_vec(8);
+        let y1 = f.apply(&x);
+        let y2 = dense.matvec(&x);
+        for i in 0..6 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apply_t_matches_dense_transpose() {
+        let mut rng = Rng::new(82);
+        let (f, dense) = small_faust(&mut rng);
+        let x = rng.gauss_vec(6);
+        let y1 = f.apply_t(&x);
+        let y2 = dense.matvec_t(&x);
+        for i in 0..8 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batched_apply_matches_vector_apply() {
+        let mut rng = Rng::new(83);
+        let (f, _) = small_faust(&mut rng);
+        let x = Mat::randn(8, 5, &mut rng);
+        let y = f.apply_mat(&x);
+        for j in 0..5 {
+            let xv = x.col(j);
+            let yv = f.apply(&xv);
+            for i in 0..6 {
+                assert!((y.at(i, j) - yv[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn to_dense_matches_chain() {
+        let mut rng = Rng::new(84);
+        let (f, dense) = small_faust(&mut rng);
+        assert!(f.to_dense().rel_fro_err(&dense) < 1e-13);
+        assert!(f.relative_error_fro(&dense) < 1e-13);
+    }
+
+    #[test]
+    fn rc_accounting() {
+        let mut rng = Rng::new(85);
+        let (f, _) = small_faust(&mut rng);
+        assert_eq!(f.s_tot(), 30);
+        let rc = 30.0 / 48.0;
+        assert!((f.rc() - rc).abs() < 1e-15);
+        assert!((f.rcg() - 1.0 / rc).abs() < 1e-12);
+        assert_eq!(f.flops_per_matvec(), 60);
+    }
+
+    #[test]
+    fn column_extraction() {
+        let mut rng = Rng::new(86);
+        let (f, dense) = small_faust(&mut rng);
+        for j in [0usize, 3, 7] {
+            let c = f.column(j);
+            for i in 0..6 {
+                assert!((c[i] - dense.at(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(87);
+        let (f, dense) = small_faust(&mut rng);
+        let dir = std::env::temp_dir().join("faust_test_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("op.faust");
+        f.save(&path).unwrap();
+        let g = Faust::load(&path).unwrap();
+        assert_eq!(g.n_factors(), f.n_factors());
+        assert!((g.lambda() - f.lambda()).abs() < 1e-15);
+        assert!(g.to_dense().rel_fro_err(&dense) < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spectral_error_zero_for_exact() {
+        let mut rng = Rng::new(88);
+        let (f, dense) = small_faust(&mut rng);
+        let re = f.relative_error_spectral(&dense, &mut rng);
+        assert!(re < 1e-7, "re={re}");
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn mismatched_chain_panics() {
+        let a = Csr::from_dense(&Mat::eye(3, 4), 0.0);
+        let b = Csr::from_dense(&Mat::eye(5, 5), 0.0);
+        let _ = Faust::new(vec![a, b], 1.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! Graph signal processing substrate (paper §I motivation + §VII future
+//! work): graph Laplacians, the graph Fourier transform (GFT), and FAμST
+//! approximations of it.
+//!
+//! The paper argues that graph Fourier/wavelet operators "have no known
+//! general sparse forms, and consequently no associated fast algorithms",
+//! making them prime FAμST targets. This module builds the operators the
+//! follow-up literature (Le Magoarou et al., "Approximate fast graph
+//! Fourier transforms via multi-layer sparse approximations", 2018)
+//! factorizes: Laplacians of ring / grid / random-geometric / Erdős–Rényi
+//! graphs and their eigenbases via a symmetric Jacobi eigensolver.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Undirected weighted graph as an adjacency matrix (symmetric, zero
+/// diagonal).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub adjacency: Mat,
+}
+
+impl Graph {
+    /// Ring graph on `n` vertices (circulant Laplacian — its GFT is the
+    /// DFT, which *does* have a fast algorithm; useful as a sanity case).
+    pub fn ring(n: usize) -> Self {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            let j = (i + 1) % n;
+            a.set(i, j, 1.0);
+            a.set(j, i, 1.0);
+        }
+        Graph { adjacency: a }
+    }
+
+    /// `rows × cols` 4-neighbour grid graph.
+    pub fn grid(rows: usize, cols: usize) -> Self {
+        let n = rows * cols;
+        let mut a = Mat::zeros(n, n);
+        let idx = |r: usize, c: usize| r * cols + c;
+        for r in 0..rows {
+            for c in 0..cols {
+                if r + 1 < rows {
+                    a.set(idx(r, c), idx(r + 1, c), 1.0);
+                    a.set(idx(r + 1, c), idx(r, c), 1.0);
+                }
+                if c + 1 < cols {
+                    a.set(idx(r, c), idx(r, c + 1), 1.0);
+                    a.set(idx(r, c + 1), idx(r, c), 1.0);
+                }
+            }
+        }
+        Graph { adjacency: a }
+    }
+
+    /// Random geometric graph: `n` uniform points in the unit square,
+    /// edges between pairs closer than `radius` (the "sensor network"
+    /// graph of the GSP literature — irregular, no fast transform known).
+    pub fn random_geometric(n: usize, radius: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = pts[i].0 - pts[j].0;
+                let dy = pts[i].1 - pts[j].1;
+                if (dx * dx + dy * dy).sqrt() < radius {
+                    a.set(i, j, 1.0);
+                    a.set(j, i, 1.0);
+                }
+            }
+        }
+        Graph { adjacency: a }
+    }
+
+    /// Erdős–Rényi graph with edge probability `p`.
+    pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.uniform() < p {
+                    a.set(i, j, 1.0);
+                    a.set(j, i, 1.0);
+                }
+            }
+        }
+        Graph { adjacency: a }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.adjacency.rows()
+    }
+
+    /// Number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.adjacency.nnz() / 2
+    }
+
+    /// Combinatorial Laplacian `L = D − A`.
+    pub fn laplacian(&self) -> Mat {
+        let n = self.n();
+        let mut l = self.adjacency.scaled(-1.0);
+        for i in 0..n {
+            let deg: f64 = self.adjacency.row(i).iter().sum();
+            l.set(i, i, deg);
+        }
+        l
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix by cyclic Jacobi rotations.
+/// Returns `(eigenvalues ascending, eigenvectors as columns)` with
+/// `M = V diag(w) Vᵀ`.
+pub fn eig_sym(m: &Mat) -> (Vec<f64>, Mat) {
+    let n = m.rows();
+    assert_eq!(m.cols(), n, "eig_sym needs a square matrix");
+    let mut a = m.clone();
+    let mut v = Mat::eye(n, n);
+    for _sweep in 0..100 {
+        let mut off = 0.0_f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off = off.max(a.at(p, q).abs());
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.at(p, q);
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = a.at(p, p);
+                let aqq = a.at(q, q);
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // A ← JᵀAJ on rows/cols p, q.
+                for k in 0..n {
+                    let akp = a.at(k, p);
+                    let akq = a.at(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.at(p, k);
+                    let aqk = a.at(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    // Sort ascending by eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| a.at(i, i).partial_cmp(&a.at(j, j)).unwrap());
+    let w: Vec<f64> = order.iter().map(|&i| a.at(i, i)).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (new, &old) in order.iter().enumerate() {
+        for k in 0..n {
+            vs.set(k, new, v.at(k, old));
+        }
+    }
+    (w, vs)
+}
+
+/// Graph Fourier transform: the analysis operator `Uᵀ` (rows = Laplacian
+/// eigenvectors, frequencies ascending). `x̂ = gft * x`.
+pub fn gft(g: &Graph) -> Mat {
+    let (_, u) = eig_sym(&g.laplacian());
+    u.t()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchical::{factorize, HierarchicalConfig};
+    use crate::prox::Constraint;
+
+    #[test]
+    fn graph_constructors_shapes() {
+        let r = Graph::ring(8);
+        assert_eq!(r.n(), 8);
+        assert_eq!(r.n_edges(), 8);
+        let g = Graph::grid(3, 4);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.n_edges(), 3 * 3 + 2 * 4); // 17 grid edges
+        let e = Graph::erdos_renyi(20, 0.3, 1);
+        assert!(e.n_edges() > 0);
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero_and_psd() {
+        let g = Graph::random_geometric(24, 0.35, 2);
+        let l = g.laplacian();
+        for i in 0..g.n() {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+        let (w, _) = eig_sym(&l);
+        assert!(w[0] > -1e-9, "Laplacian not PSD: {}", w[0]);
+        // Connected-ish graph: constant vector is the 0-eigenvector.
+        assert!(w[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn eig_sym_reconstructs() {
+        let g = Graph::grid(4, 4);
+        let l = g.laplacian();
+        let (w, v) = eig_sym(&l);
+        // V diag(w) Vᵀ == L
+        let mut vd = v.clone();
+        for i in 0..vd.rows() {
+            for j in 0..vd.cols() {
+                let x = vd.at(i, j) * w[j];
+                vd.set(i, j, x);
+            }
+        }
+        assert!(vd.matmul_nt(&v).rel_fro_err(&l) < 1e-9);
+        // Orthonormal eigenbasis.
+        assert!(v.matmul_tn(&v).rel_fro_err(&Mat::eye(16, 16)) < 1e-9);
+    }
+
+    #[test]
+    fn gft_is_orthonormal_and_diagonalizes() {
+        let g = Graph::ring(16);
+        let f = gft(&g);
+        assert!(f.matmul_nt(&f).rel_fro_err(&Mat::eye(16, 16)) < 1e-9);
+        // F L Fᵀ diagonal.
+        let fl = f.matmul(&g.laplacian()).matmul_nt(&f);
+        let mut offdiag = 0.0_f64;
+        for i in 0..16 {
+            for j in 0..16 {
+                if i != j {
+                    offdiag = offdiag.max(fl.at(i, j).abs());
+                }
+            }
+        }
+        assert!(offdiag < 1e-8, "not diagonalized: {offdiag}");
+    }
+
+    #[test]
+    fn gft_of_irregular_graph_admits_faust_approximation() {
+        // The paper's §VII pitch: approximate the (dense, no-fast-form)
+        // GFT of an irregular graph by a FAμST with RCG > 1 at moderate
+        // error.
+        let g = Graph::random_geometric(32, 0.3, 3);
+        let f = gft(&g);
+        let mut cfg = HierarchicalConfig::hadamard(32); // same shape family
+        for lev in cfg.levels.iter_mut() {
+            lev.factor = Constraint::SpRowCol(4);
+        }
+        cfg.levels.truncate(3); // J = 4 factors
+        cfg.residual_dims.truncate(3);
+        let fst = factorize(&f, &cfg);
+        let rel = fst.relative_error_fro(&f);
+        assert!(fst.rcg() > 1.0, "rcg={}", fst.rcg());
+        assert!(rel < 0.8, "rel={rel}");
+    }
+}

@@ -1,0 +1,511 @@
+//! Hierarchical factorization (paper Fig. 5) and its dictionary-learning
+//! variant (paper Fig. 11).
+//!
+//! The residual `T_{ℓ-1}` is repeatedly split in two by palm4MSA — one
+//! sparse factor `S_ℓ` (constraint `E_ℓ`) and one less-sparse residual
+//! `T_ℓ` (constraint `Ẽ_ℓ`) — followed by a *global* palm4MSA refit of all
+//! factors introduced so far. The analogy with greedy layer-wise
+//! pre-training + fine-tuning of deep networks is the paper's §IV-A.
+
+use crate::faust::Faust;
+use crate::linalg::Mat;
+use crate::palm::{palm4msa, FactorState, PalmConfig};
+use crate::prox::Constraint;
+use crate::rng::Rng;
+
+/// Constraints for one hierarchical level ℓ.
+#[derive(Clone, Debug)]
+pub struct LevelConstraints {
+    /// `Ẽ_ℓ` — the residual (left factor `T_ℓ`).
+    pub residual: Constraint,
+    /// `E_ℓ` — the sparse right factor `S_ℓ`.
+    pub factor: Constraint,
+}
+
+/// Full configuration of the hierarchical algorithm.
+#[derive(Clone, Debug)]
+pub struct HierarchicalConfig {
+    /// Per-level constraints, `levels.len() = J - 1`.
+    pub levels: Vec<LevelConstraints>,
+    /// Residual shapes: `residual_dims[ℓ-1]` = shape of `T_ℓ`
+    /// (the right factor's shape is inferred from the chain).
+    pub residual_dims: Vec<(usize, usize)>,
+    /// palm4MSA iterations for each 2-factor split (paper uses e.g. 50).
+    pub n_iter_split: usize,
+    /// palm4MSA iterations for each global refit.
+    pub n_iter_global: usize,
+    /// Skip the global refit (ablation of Fig. 5 line 5).
+    pub skip_global: bool,
+    /// Leave the residual unconstrained (normalization only) during the
+    /// 2-factor *split* and enforce `Ẽ_ℓ` at the global refit instead.
+    ///
+    /// Empirically this is required for the paper's exactness results: a
+    /// binding residual sparsity constraint during the split traps PALM in
+    /// poor stationary points (see DESIGN.md §Deviations), while at the
+    /// refit the warm start makes `Ẽ_ℓ` non-binding whenever the split
+    /// found the right structure. Ignored when `skip_global` is set (the
+    /// split then must enforce the budget itself).
+    pub dense_split_residual: bool,
+    /// Scale of the random init of the split's sparse factor. The paper's
+    /// all-zeros default init is degenerate on operators with massive
+    /// magnitude ties (Hadamard: every |entry| equal) — the first
+    /// projection then picks an arbitrary support that PALM cannot escape.
+    /// A tiny random init breaks the ties; 0 restores the paper's default.
+    pub split_init_scale: f64,
+    /// Step-size margin α (§III-C3).
+    pub alpha: f64,
+    /// RNG seed (split inits + spectral-norm power iterations).
+    pub seed: u64,
+}
+
+impl HierarchicalConfig {
+    /// Paper §IV-C Hadamard setting for `n = 2^N`:
+    /// `J = N` factors, `Ẽ_ℓ = {‖T‖₀ ≤ n²/2^ℓ}`, `E_ℓ` butterfly-sparse
+    /// (2 non-zeros per row and column — the FAμST toolbox's `splincol(2)`,
+    /// whose total budget matches the paper's `‖S‖₀ ≤ 2n`).
+    pub fn hadamard(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 2, "Hadamard needs n = 2^N ≥ 2");
+        let j = n.trailing_zeros() as usize;
+        let levels = (1..j)
+            .map(|l| LevelConstraints {
+                residual: Constraint::SpRowCol(n >> l),
+                factor: Constraint::SpRowCol(2),
+            })
+            .collect();
+        HierarchicalConfig {
+            levels,
+            residual_dims: vec![(n, n); j - 1],
+            n_iter_split: 60,
+            n_iter_global: 30,
+            skip_global: false,
+            dense_split_residual: false,
+            split_init_scale: 0.0,
+            alpha: 1e-3,
+            seed: 0xFA57,
+        }
+    }
+
+    /// Paper §V-A MEG setting for an `m×n` operator:
+    /// rightmost factor `S_1` is `m×n` with `k`-sparse columns; factors
+    /// `S_2..S_J` are `m×m` with global sparsity `s`; residuals `T_ℓ` are
+    /// `m×m` with geometrically decreasing sparsity `P ρ^{ℓ-1}`.
+    pub fn meg(
+        m: usize,
+        n: usize,
+        j: usize,
+        k: usize,
+        s: usize,
+        rho: f64,
+        p_cap: f64,
+    ) -> Self {
+        assert!(j >= 2);
+        let _ = n;
+        let levels = (1..j)
+            .map(|l| {
+                let resid_budget = ((p_cap * rho.powi(l as i32 - 1)).round() as usize)
+                    .min(m * m)
+                    .max(1);
+                LevelConstraints {
+                    residual: Constraint::SpGlobal(resid_budget),
+                    factor: if l == 1 {
+                        Constraint::SpCol(k)
+                    } else {
+                        Constraint::SpGlobal(s)
+                    },
+                }
+            })
+            .collect();
+        HierarchicalConfig {
+            levels,
+            residual_dims: vec![(m, m); j - 1],
+            n_iter_split: 50,
+            n_iter_global: 50,
+            skip_global: false,
+            dense_split_residual: false,
+            split_init_scale: 0.0,
+            alpha: 1e-3,
+            seed: 0xFA57,
+        }
+    }
+
+    /// §V-A remark variant: global sparsity `k·n` on the rightmost factor
+    /// instead of per-column (slightly better RE, but allows null columns).
+    pub fn meg_global_rightmost(
+        m: usize,
+        n: usize,
+        j: usize,
+        k: usize,
+        s: usize,
+        rho: f64,
+        p_cap: f64,
+    ) -> Self {
+        let mut cfg = Self::meg(m, n, j, k, s, rho, p_cap);
+        cfg.levels[0].factor = Constraint::SpGlobal(k * n);
+        cfg
+    }
+
+    /// Paper §VI-C dictionary setting: dictionary `D ∈ R^{m×n}`,
+    /// `J` factors with `S_J..S_2 ∈ R^{m×m}`, `S_1 ∈ R^{m×n}`;
+    /// `k`-sparse columns on `S_1`, global sparsity `s` elsewhere,
+    /// residual budgets `P ρ^{ℓ-1}`.
+    pub fn dictionary(
+        m: usize,
+        n: usize,
+        j: usize,
+        k: usize,
+        s: usize,
+        rho: f64,
+        p_cap: f64,
+    ) -> Self {
+        Self::meg(m, n, j, k, s, rho, p_cap)
+    }
+
+    /// Total number of factors J.
+    pub fn n_factors(&self) -> usize {
+        self.levels.len() + 1
+    }
+
+    fn split_cfg(&self, level: usize, resid_shape: (usize, usize)) -> PalmConfig {
+        // Residual constraint during the split: dense-normalized by
+        // default (see `dense_split_residual`), or the configured `Ẽ_ℓ`
+        // when the global refit is skipped.
+        let resid = if self.dense_split_residual && !self.skip_global {
+            Constraint::SpGlobal(resid_shape.0 * resid_shape.1)
+        } else {
+            self.levels[level].residual.clone()
+        };
+        let mut c = PalmConfig::new(
+            vec![self.levels[level].factor.clone(), resid],
+            self.n_iter_split,
+        );
+        c.alpha = self.alpha;
+        c.seed = self.seed ^ (level as u64);
+        c
+    }
+
+    /// Split initialization: **residual = 0, sparse factor = Id** (the
+    /// FAμST toolbox convention — their factor indexing is left-to-right,
+    /// so the paper's "S₁⁰ = 0" zero-initializes the *residual* side of
+    /// each 2-factor split). The opposite assignment (zeroing the sparse
+    /// factor) traps PALM in poor stationary points on tie-heavy operators
+    /// like Hadamard — see DESIGN.md §Deviations and `bench ablations`.
+    ///
+    /// `split_init_scale > 0` adds a tiny random perturbation to the
+    /// sparse factor (extra tie-breaking; off by default).
+    fn split_init(&self, level: usize, dims: &[(usize, usize)]) -> FactorState {
+        let (sr, sc) = dims[0];
+        let (tr, tc) = dims[1];
+        let mut s = Mat::eye(sr, sc);
+        if self.split_init_scale > 0.0 {
+            let mut rng = Rng::new(self.seed ^ (0xA11CE + level as u64));
+            let pert = Mat::randn(sr, sc, &mut rng);
+            s.axpy(self.split_init_scale, &pert);
+        }
+        FactorState { mats: vec![s, Mat::zeros(tr, tc)], lambda: 1.0 }
+    }
+}
+
+/// Hierarchical factorization of `a` (paper Fig. 5). Returns the FAμST
+/// `λ · T_{J-1} S_{J-1} ⋯ S_1` with `S_J := T_{J-1}`.
+pub fn factorize(a: &Mat, cfg: &HierarchicalConfig) -> Faust {
+    factorize_traced(a, cfg).0
+}
+
+/// Like [`factorize`] but also returns the relative Frobenius error after
+/// each level's global refit (used by the benches).
+pub fn factorize_traced(a: &Mat, cfg: &HierarchicalConfig) -> (Faust, Vec<f64>) {
+    let jm1 = cfg.levels.len();
+    assert!(jm1 >= 1, "need at least one split level");
+    let a_fro = a.fro().max(1e-300);
+
+    // Current factorization state: S factors rightmost-first, residual T,
+    // global λ.
+    let mut s_factors: Vec<Mat> = Vec::with_capacity(jm1);
+    let mut residual = a.clone();
+    let mut lambda = 1.0;
+    let mut errs = Vec::with_capacity(jm1);
+
+    for l in 0..jm1 {
+        // --- Split: T_{ℓ-1} ≈ λ' T_ℓ S_ℓ (palm4MSA, default init).
+        let (rt_rows, _rt_cols) = cfg.residual_dims[l];
+        let s_shape = (rt_rows.min(residual.rows()), residual.cols());
+        // Chain: residual (r×c) ≈ T_ℓ (r × s_rows) * S_ℓ (s_rows × c).
+        let s_rows = s_shape.0;
+        let dims = vec![(s_rows, residual.cols()), (residual.rows(), s_rows)];
+        let split_init = cfg.split_init(l, &dims);
+        let split = palm4msa(
+            &residual,
+            split_init,
+            &cfg.split_cfg(l, (residual.rows(), s_rows)),
+        );
+        let f1 = split.state.mats[0].clone(); // S_ℓ
+        let mut f2 = split.state.mats[1].clone(); // T_ℓ
+        f2.scale(split.state.lambda); // T_ℓ ← λ' F_2  (Fig. 5 line 4)
+        s_factors.push(f1);
+        residual = f2;
+
+        if !cfg.skip_global {
+            // --- Global refit of {T_ℓ, S_ℓ..S_1} against A (Fig. 5 line 5),
+            // init = current values.
+            let mut mats = s_factors.clone();
+            mats.push(residual.clone());
+            let mut constraints: Vec<Constraint> = (0..=l)
+                .map(|i| cfg.levels[i].factor.clone())
+                .collect();
+            constraints.push(cfg.levels[l].residual.clone());
+            // Normalize factors into their constraint sets for a feasible
+            // warm start (the split already returns feasible S/T, but the
+            // λ' folding above denormalizes the residual).
+            let rf = residual.fro();
+            let mut init = FactorState { mats, lambda: lambda * rf.max(1e-300) };
+            let last = init.mats.len() - 1;
+            if rf > 0.0 {
+                init.mats[last].scale(1.0 / rf);
+            }
+            init.lambda = {
+                // optimal λ for the warm start
+                let p = init.product();
+                let d = p.fro2();
+                if d > 0.0 {
+                    a.dot(&p) / d
+                } else {
+                    1.0
+                }
+            };
+            let mut gcfg = PalmConfig::new(constraints, cfg.n_iter_global);
+            gcfg.alpha = cfg.alpha;
+            gcfg.seed = cfg.seed ^ (0x1000 + l as u64);
+            let refit = palm4msa(a, init, &gcfg);
+            lambda = refit.state.lambda;
+            let nm = refit.state.mats.len();
+            s_factors = refit.state.mats[..nm - 1].to_vec();
+            residual = refit.state.mats[nm - 1].clone();
+        }
+
+        // Track the current overall error ‖A − λ T Π S‖ / ‖A‖.
+        let mut prod = s_factors[0].clone();
+        for m in &s_factors[1..] {
+            prod = m.matmul(&prod);
+        }
+        prod = residual.matmul(&prod);
+        prod.scale(if cfg.skip_global { 1.0 } else { lambda });
+        errs.push(prod.sub(a).fro() / a_fro);
+    }
+
+    // S_J ← T_{J-1}.
+    let mut mats = s_factors;
+    mats.push(residual);
+    let final_lambda = if cfg.skip_global {
+        // Never refit: λ stayed folded into the residual.
+        1.0
+    } else {
+        lambda
+    };
+    (Faust::from_dense_factors(&mats, final_lambda), errs)
+}
+
+/// Sparse-coding callback used by the dictionary variant: given the data
+/// `Y` and the current dictionary (dense, `m×n`), return coefficients
+/// `Γ ∈ R^{n×L}`.
+pub type SparseCoder<'a> = dyn Fn(&Mat, &Mat) -> Mat + 'a;
+
+/// Hierarchical factorization for dictionary learning (paper Fig. 11).
+///
+/// Factorizes the initial dictionary `d0` while keeping it adapted to the
+/// data `y`: each level does (i) a 2-factor split of the residual, (ii) a
+/// global palm4MSA refit **against Y** with the coefficient matrix Γ frozen
+/// as the rightmost factor, (iii) a coefficient update
+/// `Γ ← sparse_coder(Y, D)`.
+pub fn factorize_dict(
+    y: &Mat,
+    d0: &Mat,
+    gamma0: &Mat,
+    cfg: &HierarchicalConfig,
+    sparse_coder: &SparseCoder,
+) -> (Faust, Mat) {
+    let jm1 = cfg.levels.len();
+    assert_eq!(d0.cols(), gamma0.rows(), "D/Γ shape mismatch");
+    assert_eq!(d0.rows(), y.rows());
+    assert_eq!(gamma0.cols(), y.cols());
+
+    let mut s_factors: Vec<Mat> = Vec::with_capacity(jm1);
+    let mut residual = d0.clone();
+    let mut gamma = gamma0.clone();
+    let mut lambda = 1.0;
+
+    for l in 0..jm1 {
+        // (i) split the residual (same as Fig. 5 line 3).
+        let s_rows = cfg.residual_dims[l].0.min(residual.rows());
+        let dims = vec![(s_rows, residual.cols()), (residual.rows(), s_rows)];
+        let split = palm4msa(
+            &residual,
+            cfg.split_init(l, &dims),
+            &cfg.split_cfg(l, (residual.rows(), s_rows)),
+        );
+        let f1 = split.state.mats[0].clone();
+        let mut f2 = split.state.mats[1].clone();
+        f2.scale(split.state.lambda);
+        s_factors.push(f1);
+        residual = f2;
+
+        // (ii) global refit against Y with Γ frozen (Fig. 11 line 4):
+        // Y ≈ λ T_ℓ S_ℓ ⋯ S_1 Γ.
+        let mut mats = vec![gamma.clone()];
+        mats.extend(s_factors.iter().cloned());
+        // Normalize residual into its set for the warm start.
+        let rf = residual.fro().max(1e-300);
+        let mut resid_n = residual.clone();
+        resid_n.scale(1.0 / rf);
+        mats.push(resid_n);
+        let mut constraints = vec![Constraint::Frozen];
+        constraints.extend((0..=l).map(|i| cfg.levels[i].factor.clone()));
+        constraints.push(cfg.levels[l].residual.clone());
+        let mut init = FactorState { mats, lambda: lambda * rf };
+        init.lambda = {
+            let p = init.product();
+            let d = p.fro2();
+            if d > 0.0 {
+                y.dot(&p) / d
+            } else {
+                1.0
+            }
+        };
+        let mut gcfg = PalmConfig::new(constraints, cfg.n_iter_global);
+        gcfg.alpha = cfg.alpha;
+        gcfg.seed = cfg.seed ^ (0x2000 + l as u64);
+        let refit = palm4msa(y, init, &gcfg);
+        lambda = refit.state.lambda;
+        let nm = refit.state.mats.len();
+        s_factors = refit.state.mats[1..nm - 1].to_vec();
+        residual = refit.state.mats[nm - 1].clone();
+
+        // (iii) coefficient update (Fig. 11 line 5): Γ = sparseCoding(Y, D).
+        let mut dict = s_factors[0].clone();
+        for m in &s_factors[1..] {
+            dict = m.matmul(&dict);
+        }
+        dict = residual.matmul(&dict);
+        dict.scale(lambda);
+        gamma = sparse_coder(y, &dict);
+    }
+
+    let mut mats = s_factors;
+    mats.push(residual);
+    (Faust::from_dense_factors(&mats, lambda), gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::transforms::hadamard;
+
+    #[test]
+    fn hadamard_16_is_reverse_engineered_exactly() {
+        let n = 16;
+        let a = hadamard(n);
+        let cfg = HierarchicalConfig::hadamard(n);
+        let (fst, errs) = factorize_traced(&a, &cfg);
+        assert_eq!(fst.n_factors(), 4);
+        let rel = fst.relative_error_fro(&a);
+        assert!(rel < 1e-6, "Hadamard-16 not exact: rel={rel}, trace={errs:?}");
+        // Complexity matches the butterfly: each factor ≤ 2n nnz.
+        for f in fst.factors() {
+            assert!(f.nnz() <= 2 * n);
+        }
+        assert!(fst.rcg() >= n as f64 / (2.0 * (n as f64).log2()) * 0.99);
+    }
+
+    #[test]
+    fn config_constructors_have_expected_budgets() {
+        let cfg = HierarchicalConfig::hadamard(32);
+        assert_eq!(cfg.n_factors(), 5);
+        assert_eq!(cfg.levels[0].residual, Constraint::SpRowCol(16));
+        assert_eq!(cfg.levels[0].factor, Constraint::SpRowCol(2));
+        // Residual row-budgets halve per level (n/2^ℓ).
+        assert_eq!(cfg.levels[3].residual, Constraint::SpRowCol(2));
+
+        let mcfg = HierarchicalConfig::meg(204, 8193, 4, 10, 408, 0.8, 0.7 * 204.0 * 204.0);
+        assert_eq!(mcfg.n_factors(), 4);
+        assert_eq!(mcfg.levels[0].factor, Constraint::SpCol(10));
+        assert_eq!(mcfg.levels[1].factor, Constraint::SpGlobal(408));
+        // Residual budgets decrease geometrically (P below the m² cap).
+        let b = |c: &Constraint| match c {
+            Constraint::SpGlobal(s) => *s,
+            _ => panic!(),
+        };
+        assert!(b(&mcfg.levels[1].residual) < b(&mcfg.levels[0].residual));
+    }
+
+    #[test]
+    fn error_trace_is_reported_per_level() {
+        let a = hadamard(8);
+        let cfg = HierarchicalConfig::hadamard(8);
+        let (_, errs) = factorize_traced(&a, &cfg);
+        assert_eq!(errs.len(), cfg.levels.len());
+        assert!(errs.last().unwrap() < &1e-6);
+    }
+
+    #[test]
+    fn random_matrix_factorization_controls_error() {
+        // Dense random 16x16 with generous budgets: error should be small
+        // but nonzero; RCG > 1.
+        let mut rng = Rng::new(101);
+        let a = Mat::randn(16, 16, &mut rng);
+        // Budgets must sum below 16² = 256 for RCG > 1:
+        // S₁ ≤ 6·16 = 96, S₂ ≤ 48, T₂ ≤ 80·0.8 = 64 → ≤ 208.
+        let cfg = HierarchicalConfig::meg(16, 16, 3, 6, 48, 0.8, 80.0);
+        let fst = factorize(&a, &cfg);
+        let rel = fst.relative_error_fro(&a);
+        assert!(rel < 0.95, "rel={rel}");
+        assert!(fst.rcg() > 1.0, "rcg={} s_tot={}", fst.rcg(), fst.s_tot());
+    }
+
+    #[test]
+    fn skip_global_ablation_is_worse_or_equal() {
+        let a = hadamard(16);
+        let mut cfg = HierarchicalConfig::hadamard(16);
+        cfg.seed = 7;
+        let with_global = factorize(&a, &cfg).relative_error_fro(&a);
+        cfg.skip_global = true;
+        let without = factorize(&a, &cfg).relative_error_fro(&a);
+        assert!(
+            with_global <= without + 1e-9,
+            "global refit hurt: with={with_global} without={without}"
+        );
+    }
+
+    #[test]
+    fn dictionary_variant_runs_and_fits() {
+        let mut rng = Rng::new(103);
+        // Tiny synthetic dictionary-learning problem.
+        let m = 8;
+        let natoms = 12;
+        let nsamples = 40;
+        let d0 = {
+            let mut d = Mat::randn(m, natoms, &mut rng);
+            d.normalize_cols();
+            d
+        };
+        // 2-sparse codes.
+        let mut gamma0 = Mat::zeros(natoms, nsamples);
+        for j in 0..nsamples {
+            for i in rng.sample_indices(natoms, 2) {
+                gamma0.set(i, j, rng.gauss());
+            }
+        }
+        let y = d0.matmul(&gamma0);
+        let cfg = HierarchicalConfig::dictionary(m, natoms, 3, 4, 2 * m * 2, 0.7, (m * m) as f64);
+        let coder = |y: &Mat, d: &Mat| -> Mat {
+            crate::solvers::omp_batch(d, y, 2)
+        };
+        let (fst, gamma) = factorize_dict(&y, &d0, &gamma0, &cfg, &coder);
+        assert_eq!(fst.rows(), m);
+        assert_eq!(fst.cols(), natoms);
+        assert_eq!(gamma.shape(), (natoms, nsamples));
+        // The factorized dictionary with refreshed codes should still
+        // explain a decent part of Y.
+        let resid = fst.to_dense().matmul(&gamma).sub(&y).fro() / y.fro();
+        assert!(resid < 0.9, "resid={resid}");
+    }
+}

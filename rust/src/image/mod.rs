@@ -1,0 +1,396 @@
+//! Image-processing substrate for the denoising experiment (paper §VI-C).
+//!
+//! The paper uses 12 standard 512×512 grey images ([49]); those files are
+//! not redistributable, so [`corpus`] generates 12 procedural images
+//! spanning the same regimes — piecewise-smooth "cartoon" content, heavy
+//! texture ("mandrill-like"), and smooth portrait-like gradients — which is
+//! what drives the σ-dependent FAμST-vs-DDL trade-off of Fig. 12 (see
+//! DESIGN.md §6). Grayscale images are `Mat`s with values in `[0, 255]`.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::solvers::{omp, LinOp};
+use std::io::Write;
+use std::path::Path;
+
+/// Peak signal-to-noise ratio in dB (peak = 255).
+pub fn psnr(img: &Mat, reference: &Mat) -> f64 {
+    assert_eq!(img.shape(), reference.shape());
+    let n = (img.rows() * img.cols()) as f64;
+    let mse = img.sub(reference).fro2() / n;
+    10.0 * (255.0 * 255.0 / mse.max(1e-300)).log10()
+}
+
+/// Add iid Gaussian noise of standard deviation `sigma`.
+pub fn add_noise(img: &Mat, sigma: f64, rng: &mut Rng) -> Mat {
+    let mut out = img.clone();
+    for v in out.data_mut() {
+        *v += sigma * rng.gauss();
+    }
+    out
+}
+
+/// Clamp pixel values into `[0, 255]`.
+pub fn clamp_pixels(img: &mut Mat) {
+    for v in img.data_mut() {
+        *v = v.clamp(0.0, 255.0);
+    }
+}
+
+// ---------------------------------------------------------------- corpus
+
+/// Kinds of procedural test images.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImageKind {
+    /// Piecewise-constant polygons + circles (cartoon; like "Peppers").
+    Cartoon,
+    /// High-frequency band-pass texture (like "Mandrill").
+    Texture,
+    /// Smooth large-scale gradients + a few edges (like "WomanDarkHair").
+    Smooth,
+    /// Mixed: smooth background with textured regions (like "Pirate").
+    Mixed,
+}
+
+/// Generate one procedural image of the given kind and size.
+pub fn make_image(kind: ImageKind, size: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let s = size as f64;
+    match kind {
+        ImageKind::Cartoon => {
+            // Background gradient + random constant disks and half-planes.
+            let mut img = Mat::from_fn(size, size, |i, j| {
+                60.0 + 60.0 * (i as f64 / s) + 20.0 * (j as f64 / s)
+            });
+            for _ in 0..10 {
+                let cx = rng.range(0.0, s);
+                let cy = rng.range(0.0, s);
+                let r = rng.range(s * 0.05, s * 0.25);
+                let level = rng.range(20.0, 235.0);
+                for i in 0..size {
+                    for j in 0..size {
+                        let dx = i as f64 - cx;
+                        let dy = j as f64 - cy;
+                        if dx * dx + dy * dy < r * r {
+                            img.set(i, j, level);
+                        }
+                    }
+                }
+            }
+            img
+        }
+        ImageKind::Texture => {
+            // Sum of oriented sinusoids + granular noise → dense texture.
+            let mut freqs = Vec::new();
+            for _ in 0..8 {
+                freqs.push((
+                    rng.range(0.1, 0.9),
+                    rng.range(0.1, 0.9),
+                    rng.range(0.0, std::f64::consts::TAU),
+                    rng.range(10.0, 30.0),
+                ));
+            }
+            let mut img = Mat::from_fn(size, size, |i, j| {
+                let mut v = 128.0;
+                for &(fx, fy, ph, amp) in &freqs {
+                    v += amp * (fx * i as f64 + fy * j as f64 + ph).sin();
+                }
+                v
+            });
+            for v in img.data_mut() {
+                *v += rng.gauss() * 12.0;
+            }
+            clamp_pixels(&mut img);
+            img
+        }
+        ImageKind::Smooth => {
+            // Sum of a few broad Gaussian bumps (portrait-like lighting).
+            let mut bumps = Vec::new();
+            for _ in 0..5 {
+                bumps.push((
+                    rng.range(0.0, s),
+                    rng.range(0.0, s),
+                    rng.range(s * 0.2, s * 0.6),
+                    rng.range(-80.0, 110.0),
+                ));
+            }
+            let mut img = Mat::from_fn(size, size, |i, j| {
+                let mut v = 110.0;
+                for &(cx, cy, w, amp) in &bumps {
+                    let dx = i as f64 - cx;
+                    let dy = j as f64 - cy;
+                    v += amp * (-(dx * dx + dy * dy) / (2.0 * w * w)).exp();
+                }
+                v
+            });
+            clamp_pixels(&mut img);
+            img
+        }
+        ImageKind::Mixed => {
+            // Smooth base, textured band, one strong edge.
+            let base = make_image(ImageKind::Smooth, size, seed ^ 0xABCD);
+            let tex = make_image(ImageKind::Texture, size, seed ^ 0x1234);
+            let split = size / 2 + (rng.below(size / 4)) as usize;
+            Mat::from_fn(size, size, |i, j| {
+                if j > split {
+                    0.35 * base.at(i, j) + 0.65 * tex.at(i, j)
+                } else {
+                    base.at(i, j)
+                }
+            })
+        }
+    }
+}
+
+/// The 12-image corpus standing in for the paper's standard database:
+/// 4 kinds × 3 seeds, named for reporting.
+pub fn corpus(size: usize) -> Vec<(String, Mat)> {
+    let kinds = [
+        (ImageKind::Cartoon, "cartoon"),
+        (ImageKind::Texture, "texture"),
+        (ImageKind::Smooth, "smooth"),
+        (ImageKind::Mixed, "mixed"),
+    ];
+    let mut out = Vec::with_capacity(12);
+    for (kind, name) in kinds {
+        for v in 0..3u64 {
+            out.push((format!("{name}_{v}"), make_image(kind, size, 1000 + v * 17)));
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------- PGM IO
+
+/// Write a grayscale image as binary PGM (P5).
+pub fn write_pgm(img: &Mat, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{} {}\n255\n", img.cols(), img.rows())?;
+    let bytes: Vec<u8> = img
+        .data()
+        .iter()
+        .map(|&v| v.clamp(0.0, 255.0).round() as u8)
+        .collect();
+    f.write_all(&bytes)
+}
+
+/// Read a binary PGM (P5) image.
+pub fn read_pgm(path: impl AsRef<Path>) -> std::io::Result<Mat> {
+    let buf = std::fs::read(path)?;
+    // Parse header tokens: P5, width, height, maxval.
+    let mut pos = 0usize;
+    let mut tokens = Vec::new();
+    while tokens.len() < 4 && pos < buf.len() {
+        // skip whitespace + comments
+        while pos < buf.len() && (buf[pos] as char).is_whitespace() {
+            pos += 1;
+        }
+        if pos < buf.len() && buf[pos] == b'#' {
+            while pos < buf.len() && buf[pos] != b'\n' {
+                pos += 1;
+            }
+            continue;
+        }
+        let start = pos;
+        while pos < buf.len() && !(buf[pos] as char).is_whitespace() {
+            pos += 1;
+        }
+        tokens.push(String::from_utf8_lossy(&buf[start..pos]).to_string());
+    }
+    if tokens.len() < 4 || tokens[0] != "P5" {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "not a P5 PGM",
+        ));
+    }
+    let w: usize = tokens[1].parse().unwrap_or(0);
+    let h: usize = tokens[2].parse().unwrap_or(0);
+    pos += 1; // single whitespace after maxval
+    let data = &buf[pos..];
+    if data.len() < w * h {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "truncated PGM",
+        ));
+    }
+    Ok(Mat::from_fn(h, w, |i, j| data[i * w + j] as f64))
+}
+
+// --------------------------------------------------------------- patches
+
+/// Extract `count` random `p×p` patches as columns of a `p² × count`
+/// matrix (the dictionary-learning training set; paper uses 10 000).
+pub fn random_patches(img: &Mat, p: usize, count: usize, rng: &mut Rng) -> Mat {
+    assert!(img.rows() >= p && img.cols() >= p);
+    let mut out = Mat::zeros(p * p, count);
+    for c in 0..count {
+        let i0 = rng.below(img.rows() - p + 1);
+        let j0 = rng.below(img.cols() - p + 1);
+        for di in 0..p {
+            for dj in 0..p {
+                out.set(di * p + dj, c, img.at(i0 + di, j0 + dj));
+            }
+        }
+    }
+    out
+}
+
+/// Patch-based denoising: sparse-code every `p×p` patch (stride
+/// `stride`) in the dictionary with `k` atoms, reconstruct, and average
+/// overlaps. Per-patch DC (mean) is removed before coding and restored
+/// after, as in standard K-SVD denoising pipelines.
+pub fn denoise(img: &Mat, dict: &dyn LinOp, p: usize, k: usize, stride: usize) -> Mat {
+    let (h, w) = img.shape();
+    assert!(h >= p && w >= p);
+    let mut acc = Mat::zeros(h, w);
+    let mut weight = Mat::zeros(h, w);
+    let mut patch = vec![0.0; p * p];
+    // Pre-compute dictionary column norms once for correlation scaling.
+    let norms: Vec<f64> = (0..dict.cols())
+        .map(|j| {
+            let c = dict.column(j);
+            c.iter().map(|x| x * x).sum::<f64>().sqrt()
+        })
+        .collect();
+    let mut rows: Vec<usize> = (0..=(h - p)).step_by(stride).collect();
+    if *rows.last().unwrap() != h - p {
+        rows.push(h - p);
+    }
+    let mut cols: Vec<usize> = (0..=(w - p)).step_by(stride).collect();
+    if *cols.last().unwrap() != w - p {
+        cols.push(w - p);
+    }
+    for &i0 in &rows {
+        for &j0 in &cols {
+            // Extract + de-mean.
+            let mut mean = 0.0;
+            for di in 0..p {
+                for dj in 0..p {
+                    let v = img.at(i0 + di, j0 + dj);
+                    patch[di * p + dj] = v;
+                    mean += v;
+                }
+            }
+            mean /= (p * p) as f64;
+            for v in patch.iter_mut() {
+                *v -= mean;
+            }
+            // Sparse code with k atoms.
+            let code = omp(dict, &patch, k, Some(&norms));
+            // Reconstruct.
+            let mut recon = vec![mean; p * p];
+            for (&j, &c) in code.support.iter().zip(&code.coefs) {
+                let atom = dict.column(j);
+                for (r, &a) in recon.iter_mut().zip(&atom) {
+                    *r += c * a;
+                }
+            }
+            for di in 0..p {
+                for dj in 0..p {
+                    let v = acc.at(i0 + di, j0 + dj) + recon[di * p + dj];
+                    acc.set(i0 + di, j0 + dj, v);
+                    let wv = weight.at(i0 + di, j0 + dj) + 1.0;
+                    weight.set(i0 + di, j0 + dj, wv);
+                }
+            }
+        }
+    }
+    let mut out = Mat::from_fn(h, w, |i, j| {
+        let wv = weight.at(i, j);
+        if wv > 0.0 {
+            acc.at(i, j) / wv
+        } else {
+            img.at(i, j)
+        }
+    });
+    clamp_pixels(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psnr_identical_is_huge_and_noise_reduces_it() {
+        let img = make_image(ImageKind::Smooth, 64, 1);
+        assert!(psnr(&img, &img) > 100.0);
+        let mut rng = Rng::new(2);
+        let noisy = add_noise(&img, 20.0, &mut rng);
+        let p = psnr(&noisy, &img);
+        // PSNR of σ=20 noise ≈ 20·log10(255/20) ≈ 22.1 dB.
+        assert!((p - 22.1).abs() < 1.0, "psnr={p}");
+    }
+
+    #[test]
+    fn corpus_has_12_images_with_valid_range() {
+        let c = corpus(32);
+        assert_eq!(c.len(), 12);
+        for (name, img) in &c {
+            assert_eq!(img.shape(), (32, 32), "{name}");
+            for &v in img.data() {
+                assert!((-1.0..=256.0).contains(&v), "{name}: pixel {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn image_kinds_have_different_roughness() {
+        // Texture should have much higher high-frequency energy than Smooth.
+        let rough = |img: &Mat| {
+            let mut e = 0.0;
+            for i in 0..img.rows() - 1 {
+                for j in 0..img.cols() - 1 {
+                    let dx = img.at(i + 1, j) - img.at(i, j);
+                    let dy = img.at(i, j + 1) - img.at(i, j);
+                    e += dx * dx + dy * dy;
+                }
+            }
+            e
+        };
+        let t = make_image(ImageKind::Texture, 64, 3);
+        let s = make_image(ImageKind::Smooth, 64, 3);
+        assert!(rough(&t) > 10.0 * rough(&s));
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let img = make_image(ImageKind::Cartoon, 40, 4);
+        let dir = std::env::temp_dir().join("faust_img_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        write_pgm(&img, &path).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert_eq!(back.shape(), img.shape());
+        // Quantization to u8: max error 0.5.
+        assert!(img.sub(&back).max_abs() <= 0.5 + 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn random_patches_shape_and_content() {
+        let img = make_image(ImageKind::Mixed, 48, 5);
+        let mut rng = Rng::new(6);
+        let p = random_patches(&img, 8, 50, &mut rng);
+        assert_eq!(p.shape(), (64, 50));
+        // Every patch value exists in the image range.
+        for &v in p.data() {
+            assert!((0.0..=255.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn denoising_with_dct_improves_psnr() {
+        let img = make_image(ImageKind::Smooth, 48, 7);
+        let mut rng = Rng::new(8);
+        let noisy = add_noise(&img, 25.0, &mut rng);
+        let d = crate::transforms::overcomplete_dct(8, 64);
+        let den = denoise(&noisy, &d, 8, 4, 4);
+        let before = psnr(&noisy, &img);
+        let after = psnr(&den, &img);
+        assert!(
+            after > before + 2.0,
+            "denoising didn't help: {before:.2} -> {after:.2} dB"
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! # FAuST — Flexible Approximate Multi-layer Sparse Transforms
+//!
+//! A Rust + JAX + Pallas reproduction of Le Magoarou & Gribonval,
+//! *"Flexible Multi-layer Sparse Approximations of Matrices and
+//! Applications"*, IEEE JSTSP 2016 (DOI 10.1109/JSTSP.2016.2543461).
+//!
+//! The library approximates a dense operator `A ∈ R^{m×n}` by a product of
+//! `J` sparse factors `A ≈ λ · S_J ⋯ S_1` (a **FAμST**), so matrix–vector
+//! products cost `O(s_tot)` instead of `O(mn)`.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L3 (this crate)**: the factorization algorithms ([`palm`],
+//!   [`hierarchical`]), projection operators ([`prox`]), the [`faust`]
+//!   operator type, solvers, dictionary learning, MEG / image application
+//!   substrates, and a threaded operator-serving [`coordinator`].
+//! - **L2/L1 (python/, build-time only)**: JAX palm4MSA step + Pallas
+//!   gradient kernel, AOT-lowered to HLO text loaded by [`runtime`].
+//!
+//! ## Quickstart
+//! ```
+//! use faust::transforms::hadamard;
+//! use faust::hierarchical::{factorize, HierarchicalConfig};
+//!
+//! let a = hadamard(32);
+//! let cfg = HierarchicalConfig::hadamard(32);
+//! let fst = factorize(&a, &cfg);
+//! assert!(fst.relative_error_fro(&a) < 1e-6); // exact re-factorization
+//! assert!(fst.rcg() > 3.0);                   // and it is actually faster
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod dictlearn;
+pub mod faust;
+pub mod graph;
+pub mod hierarchical;
+pub mod image;
+pub mod linalg;
+pub mod meg;
+pub mod palm;
+pub mod prox;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+pub mod sparse;
+pub mod testutil;
+pub mod transforms;

@@ -1,0 +1,499 @@
+//! Dense row-major `f64` matrix with the operations the FAuST stack needs.
+//!
+//! This is deliberately a small, dependency-free dense kernel set: GEMM in
+//! the four transpose variants (blocked, written so the inner loops are
+//! auto-vectorizable), axpy-style updates, norms, and slicing. The heavy
+//! lifting in the library (palm4MSA gradients, K-SVD, OMP Gram updates)
+//! bottoms out here.
+
+use crate::rng::Rng;
+use std::fmt;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self.at(i, j))?;
+            }
+            writeln!(f, "{}", if cmax < self.cols { "…" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Rectangular identity: ones on the main diagonal, zeros elsewhere
+    /// (the paper's default initialization for factors `j >= 2`).
+    pub fn eye(rows: usize, cols: usize) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a closure over `(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// iid standard-Gaussian matrix.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat { rows, cols, data: rng.gauss_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for (i, &x) in v.iter().enumerate() {
+            self.set(i, j, x);
+        }
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big operators.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>()
+    }
+
+    /// Number of non-zero entries (`‖·‖₀`).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|x| **x != 0.0).count()
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scaled(&self, s: f64) -> Mat {
+        let mut m = self.clone();
+        m.scale(s);
+        m
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += s * other`.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Frobenius inner product `<self, other>`.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Matrix–vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Transposed matrix–vector product `selfᵀ * x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (yj, &a) in y.iter_mut().zip(row) {
+                *yj += xi * a;
+            }
+        }
+        y
+    }
+
+    /// `self * other` — blocked ikj GEMM (auto-vectorizable inner loop).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without forming the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn dim mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * otherᵀ` without forming the transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for (a, b) in arow.iter().zip(brow) {
+                    acc += a * b;
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// Trace of `selfᵀ * other` computed without the product (Frobenius dot).
+    pub fn trace_tn(&self, other: &Mat) -> f64 {
+        self.dot(other)
+    }
+
+    /// Extract the sub-matrix of the given rows/cols ranges.
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        Mat::from_fn(r1 - r0, c1 - c0, |i, j| self.at(r0 + i, c0 + j))
+    }
+
+    /// Gather the given columns into a new matrix (OMP support extraction).
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        Mat::from_fn(self.rows, idx.len(), |i, j| self.at(i, idx[j]))
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+    }
+
+    /// Normalize each column to unit l2 norm; returns the original norms.
+    /// Zero columns are left untouched (norm reported as 0).
+    pub fn normalize_cols(&mut self) -> Vec<f64> {
+        let mut norms = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.at(i, j);
+                norms[j] += v * v;
+            }
+        }
+        for n in &mut norms {
+            *n = n.sqrt();
+        }
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if norms[j] > 0.0 {
+                    let v = self.at(i, j) / norms[j];
+                    self.set(i, j, v);
+                }
+            }
+        }
+        norms
+    }
+
+    /// Relative Frobenius distance `‖self − other‖_F / ‖other‖_F`.
+    pub fn rel_fro_err(&self, reference: &Mat) -> f64 {
+        self.sub(reference).fro() / reference.fro().max(1e-300)
+    }
+}
+
+/// Product of a chain of matrices `ms[0] * ms[1] * … * ms[k-1]`.
+/// Returns identity of size `fallback` if the chain is empty.
+pub fn chain_product(ms: &[&Mat], fallback: usize) -> Mat {
+    match ms.split_first() {
+        None => Mat::eye(fallback, fallback),
+        Some((first, rest)) => {
+            let mut acc = (*first).clone();
+            for m in rest {
+                acc = acc.matmul(m);
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn eye_matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        let i5 = Mat::eye(5, 5);
+        let i7 = Mat::eye(7, 7);
+        assert!(i5.matmul(&a).rel_fro_err(&a) < 1e-15);
+        assert!(a.matmul(&i7).rel_fro_err(&a) < 1e-15);
+    }
+
+    #[test]
+    fn matmul_against_naive() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(13, 9, &mut rng);
+        let b = Mat::randn(9, 11, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..13 {
+            for j in 0..11 {
+                let mut acc = 0.0;
+                for k in 0..9 {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                assert!(approx(c.at(i, j), acc, 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_variants_consistent() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(8, 6, &mut rng);
+        let b = Mat::randn(8, 5, &mut rng);
+        let c = Mat::randn(4, 6, &mut rng);
+        // AᵀB
+        assert!(a.matmul_tn(&b).rel_fro_err(&a.t().matmul(&b)) < 1e-13);
+        // ACᵀ
+        assert!(a.matmul_nt(&c).rel_fro_err(&a.matmul(&c.t())) < 1e-13);
+        // (Aᵀ)ᵀ = A
+        assert!(a.t().t().rel_fro_err(&a) < 1e-15);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(10, 7, &mut rng);
+        let x = rng.gauss_vec(7);
+        let xm = Mat::from_vec(7, 1, x.clone());
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..10 {
+            assert!(approx(y[i], ym.at(i, 0), 1e-13));
+        }
+        // transpose path
+        let z = rng.gauss_vec(10);
+        let yt = a.matvec_t(&z);
+        let zt = a.t().matvec(&z);
+        for j in 0..7 {
+            assert!(approx(yt[j], zt[j], 1e-13));
+        }
+    }
+
+    #[test]
+    fn norms_and_nnz() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!(approx(m.fro(), 5.0, 1e-15));
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn normalize_cols_unit_norm() {
+        let mut rng = Rng::new(5);
+        let mut a = Mat::randn(6, 4, &mut rng);
+        let norms = a.normalize_cols();
+        for j in 0..4 {
+            let c = a.col(j);
+            let n: f64 = c.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(approx(n, 1.0, 1e-12));
+            assert!(norms[j] > 0.0);
+        }
+    }
+
+    #[test]
+    fn chain_product_empty_and_order() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let id = chain_product(&[], 3);
+        assert!(id.rel_fro_err(&Mat::eye(3, 3)) < 1e-15);
+        let ab = chain_product(&[&a, &b], 0);
+        assert!(ab.rel_fro_err(&a.matmul(&b)) < 1e-15);
+    }
+
+    #[test]
+    fn select_cols_and_submatrix() {
+        let a = Mat::from_fn(4, 5, |i, j| (i * 5 + j) as f64);
+        let s = a.select_cols(&[4, 0]);
+        assert_eq!(s.shape(), (4, 2));
+        assert_eq!(s.at(2, 0), a.at(2, 4));
+        assert_eq!(s.at(3, 1), a.at(3, 0));
+        let sub = a.submatrix(1, 3, 2, 5);
+        assert_eq!(sub.shape(), (2, 3));
+        assert_eq!(sub.at(0, 0), a.at(1, 2));
+    }
+}

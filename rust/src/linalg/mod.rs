@@ -1,0 +1,12 @@
+//! Dense linear-algebra substrate: matrices, QR, SVD, spectral norms.
+
+mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use mat::{chain_product, Mat};
+pub use qr::{lstsq, qr_thin, solve_upper};
+pub use svd::{
+    rank1_approx, spectral_norm, spectral_norm_iter, spectral_norm_warm, svd_jacobi,
+    svd_randomized, Svd,
+};

@@ -1,0 +1,160 @@
+//! Householder QR decomposition.
+//!
+//! Used by the randomized range finder in [`crate::linalg::svd`] and by the
+//! least-squares solves inside OMP. Thin QR only (`m >= n` produces
+//! `Q ∈ R^{m×n}`, `R ∈ R^{n×n}`).
+
+use super::mat::Mat;
+
+/// Thin Householder QR: `a = q * r` with orthonormal columns in `q`.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors stored per reflection.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // Build the Householder vector for column j below the diagonal.
+        let mut v = vec![0.0; m - j];
+        let mut norm2 = 0.0;
+        for i in j..m {
+            let x = r.at(i, j);
+            v[i - j] = x;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            vs.push(v); // zero column: identity reflection
+            continue;
+        }
+        let alpha = if v[0] >= 0.0 { -norm } else { norm };
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        // Apply reflection H = I - 2 v vᵀ / (vᵀv) to R[j.., j..].
+        for c in j..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * r.at(i, c);
+            }
+            let s = 2.0 * dot / vnorm2;
+            for i in j..m {
+                let val = r.at(i, c) - s * v[i - j];
+                r.set(i, c, val);
+            }
+        }
+        vs.push(v);
+    }
+    // Accumulate Q by applying reflections (in reverse) to the thin identity.
+    let mut q = Mat::eye(m, k);
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q.at(i, c);
+            }
+            let s = 2.0 * dot / vnorm2;
+            for i in j..m {
+                let val = q.at(i, c) - s * v[i - j];
+                q.set(i, c, val);
+            }
+        }
+    }
+    // R is the top k×n block, upper triangular.
+    let rt = r.submatrix(0, k, 0, n);
+    (q, rt)
+}
+
+/// Solve the upper-triangular system `r x = b` by back substitution.
+pub fn solve_upper(r: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = r.cols();
+    assert_eq!(r.rows(), n, "solve_upper expects square R");
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for j in (i + 1)..n {
+            acc -= r.at(i, j) * x[j];
+        }
+        let d = r.at(i, i);
+        x[i] = if d.abs() > 1e-300 { acc / d } else { 0.0 };
+    }
+    x
+}
+
+/// Least squares `min ‖a x − b‖₂` via thin QR (for m ≥ n, full column rank).
+pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let (q, r) = qr_thin(a);
+    let qtb = q.matvec_t(b);
+    solve_upper(&r, &qtb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(8usize, 5usize), (10, 10), (6, 3), (12, 7)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert_eq!(q.shape(), (m, m.min(n)));
+            let qr = q.matmul(&r);
+            assert!(qr.rel_fro_err(&a) < 1e-12, "m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(22);
+        let a = Mat::randn(20, 8, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.matmul_tn(&q);
+        assert!(qtq.rel_fro_err(&Mat::eye(8, 8)) < 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(9, 6, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..r.rows() {
+            for j in 0..i.min(r.cols()) {
+                assert!(r.at(i, j).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_solution() {
+        let mut rng = Rng::new(24);
+        let a = Mat::randn(15, 6, &mut rng);
+        let x_true = rng.gauss_vec(6);
+        let b = a.matvec(&x_true);
+        let x = lstsq(&a, &b);
+        for i in 0..6 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency_gracefully() {
+        // Two identical columns; QR should still reconstruct A.
+        let mut rng = Rng::new(25);
+        let mut a = Mat::randn(7, 4, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).rel_fro_err(&a) < 1e-12);
+    }
+}

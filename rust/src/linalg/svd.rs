@@ -1,0 +1,314 @@
+//! Singular value decompositions.
+//!
+//! Two engines, both dependency-free:
+//! - [`svd_jacobi`]: one-sided Jacobi SVD — slow but very robust; used for
+//!   small blocks (K-SVD atom updates, SVD-in-randomized-SVD).
+//! - [`svd_randomized`]: Halko–Martinsson–Tropp randomized range finder +
+//!   Jacobi on the small projected matrix — used for the truncated-SVD
+//!   baseline on the 204×8193 MEG operator (paper Fig. 2).
+
+use super::mat::Mat;
+use super::qr::qr_thin;
+use crate::rng::Rng;
+
+/// Result of a (possibly truncated) SVD: `a ≈ u * diag(s) * vᵀ`.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct the (truncated) matrix `u diag(s) vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let k = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..k {
+                let v = us.at(i, j) * self.s[j];
+                us.set(i, j, v);
+            }
+        }
+        us.matmul_nt(&self.v)
+    }
+
+    /// Keep only the top `k` singular triplets.
+    pub fn truncate(&self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        Svd {
+            u: self.u.submatrix(0, self.u.rows(), 0, k),
+            s: self.s[..k].to_vec(),
+            v: self.v.submatrix(0, self.v.rows(), 0, k),
+        }
+    }
+}
+
+/// One-sided Jacobi SVD of `a` (m×n, any shape). Returns full rank-min(m,n)
+/// decomposition with singular values sorted descending.
+pub fn svd_jacobi(a: &Mat) -> Svd {
+    // Work on the transpose when m < n so the rotated side is the long one.
+    if a.rows() < a.cols() {
+        let s = svd_jacobi(&a.t());
+        return Svd { u: s.v, s: s.s, v: s.u };
+    }
+    let (m, n) = a.shape();
+    let mut u = a.clone(); // columns will converge to u_i * s_i
+    let mut v = Mat::eye(n, n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0_f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram block for columns p, q.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let x = u.at(i, p);
+                    let y = u.at(i, q);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the off-diagonal.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = u.at(i, p);
+                    let y = u.at(i, q);
+                    u.set(i, p, c * x - s * y);
+                    u.set(i, q, s * x + c * y);
+                }
+                for i in 0..n {
+                    let x = v.at(i, p);
+                    let y = v.at(i, q);
+                    v.set(i, p, c * x - s * y);
+                    v.set(i, q, s * x + c * y);
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Extract singular values = column norms of u; normalize u's columns.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let nrm: f64 = (0..m).map(|i| u.at(i, j) * u.at(i, j)).sum::<f64>().sqrt();
+            (nrm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u_out = Mat::zeros(m, n);
+    let mut v_out = Mat::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (rank, &(nrm, j)) in sv.iter().enumerate() {
+        s_out.push(nrm);
+        if nrm > 1e-300 {
+            for i in 0..m {
+                u_out.set(i, rank, u.at(i, j) / nrm);
+            }
+        }
+        for i in 0..n {
+            v_out.set(i, rank, v.at(i, j));
+        }
+    }
+    Svd { u: u_out, s: s_out, v: v_out }
+}
+
+/// Randomized truncated SVD of rank `k` with `p` oversampling columns and
+/// `q` power iterations (Halko et al. 2011).
+pub fn svd_randomized(a: &Mat, k: usize, p: usize, q: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = a.shape();
+    let l = (k + p).min(m.min(n));
+    // Range finder on the shorter side.
+    let omega = Mat::randn(n, l, rng);
+    let mut y = a.matmul(&omega); // m×l
+    let (mut qmat, _) = qr_thin(&y);
+    for _ in 0..q {
+        // Power iteration with re-orthonormalization for accuracy.
+        let z = a.matmul_tn(&qmat); // n×l
+        let (qz, _) = qr_thin(&z);
+        y = a.matmul(&qz);
+        let (qy, _) = qr_thin(&y);
+        qmat = qy;
+    }
+    // Project: B = Qᵀ A  (l×n), small SVD on B.
+    let b = qmat.matmul_tn(a);
+    let sb = svd_jacobi(&b);
+    let u = qmat.matmul(&sb.u);
+    Svd { u, s: sb.s, v: sb.v }.truncate(k)
+}
+
+/// Spectral norm `‖a‖₂` via power iteration on `aᵀa`.
+pub fn spectral_norm(a: &Mat, rng: &mut Rng) -> f64 {
+    spectral_norm_iter(a, rng, 60, 1e-10)
+}
+
+/// Spectral norm with explicit iteration/tolerance control.
+pub fn spectral_norm_iter(a: &Mat, rng: &mut Rng, max_iter: usize, tol: f64) -> f64 {
+    let mut x = rng.gauss_vec(a.cols());
+    spectral_norm_warm(a, &mut x, max_iter, tol)
+}
+
+/// Power iteration with a caller-owned starting vector, updated in place.
+///
+/// Re-using the converged vector across closely-related matrices (e.g. a
+/// PALM factor between consecutive outer iterations) makes the iteration
+/// converge in O(1) steps instead of tens — the warm-start cache in
+/// `palm4msa` relies on this. A vector of the wrong length (or all-zero)
+/// is re-seeded deterministically.
+pub fn spectral_norm_warm(a: &Mat, x: &mut Vec<f64>, max_iter: usize, tol: f64) -> f64 {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    let fresh = x.len() != n || x.iter().all(|&v| v == 0.0);
+    if fresh {
+        let mut rng = Rng::new(0x5EC);
+        *x = rng.gauss_vec(n);
+    }
+    let mut norm_prev = 0.0;
+    for _ in 0..max_iter {
+        let y = a.matvec(x);
+        let z = a.matvec_t(&y);
+        let nz: f64 = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if nz < 1e-300 {
+            return 0.0;
+        }
+        for (xi, zi) in x.iter_mut().zip(&z) {
+            *xi = zi / nz;
+        }
+        let norm = nz.sqrt(); // ‖AᵀA x‖ → σ² so σ = sqrt
+        if (norm - norm_prev).abs() <= tol * norm.max(1e-300) {
+            return norm;
+        }
+        norm_prev = norm;
+    }
+    norm_prev
+}
+
+/// Best rank-1 approximation `(u, sigma, v)` via power iteration
+/// (the work-horse of the K-SVD atom update).
+pub fn rank1_approx(a: &Mat, rng: &mut Rng, max_iter: usize) -> (Vec<f64>, f64, Vec<f64>) {
+    let (m, n) = a.shape();
+    let mut v = rng.gauss_vec(n);
+    let nv: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    for x in &mut v {
+        *x /= nv.max(1e-300);
+    }
+    let mut u = vec![0.0; m];
+    let mut sigma = 0.0;
+    for _ in 0..max_iter {
+        u = a.matvec(&v);
+        let nu: f64 = u.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nu < 1e-300 {
+            return (vec![0.0; m], 0.0, v);
+        }
+        for x in &mut u {
+            *x /= nu;
+        }
+        v = a.matvec_t(&u);
+        let nvv: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nvv < 1e-300 {
+            return (u, 0.0, vec![0.0; n]);
+        }
+        for x in &mut v {
+            *x /= nvv;
+        }
+        if (nvv - sigma).abs() <= 1e-12 * nvv {
+            sigma = nvv;
+            break;
+        }
+        sigma = nvv;
+    }
+    (u, sigma, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_reconstructs_random() {
+        let mut rng = Rng::new(31);
+        for &(m, n) in &[(6usize, 6usize), (10, 4), (4, 10)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let s = svd_jacobi(&a);
+            assert!(s.reconstruct().rel_fro_err(&a) < 1e-10, "shape {m}x{n}");
+            // Singular values descending and non-negative.
+            for w in s.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(s.s.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn jacobi_orthonormal_factors() {
+        let mut rng = Rng::new(32);
+        let a = Mat::randn(8, 5, &mut rng);
+        let s = svd_jacobi(&a);
+        let utu = s.u.matmul_tn(&s.u);
+        let vtv = s.v.matmul_tn(&s.v);
+        assert!(utu.rel_fro_err(&Mat::eye(5, 5)) < 1e-10);
+        assert!(vtv.rel_fro_err(&Mat::eye(5, 5)) < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_known_diagonal() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let s = svd_jacobi(&a);
+        assert!((s.s[0] - 3.0).abs() < 1e-12);
+        assert!((s.s[1] - 2.0).abs() < 1e-12);
+        assert!((s.s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn randomized_matches_jacobi_on_low_rank() {
+        let mut rng = Rng::new(33);
+        // Exactly rank-3 matrix.
+        let u = Mat::randn(30, 3, &mut rng);
+        let v = Mat::randn(3, 40, &mut rng);
+        let a = u.matmul(&v);
+        let s = svd_randomized(&a, 3, 5, 2, &mut rng);
+        assert!(s.reconstruct().rel_fro_err(&a) < 1e-8);
+    }
+
+    #[test]
+    fn truncation_error_matches_tail() {
+        let mut rng = Rng::new(34);
+        let a = Mat::randn(12, 12, &mut rng);
+        let s = svd_jacobi(&a);
+        let k = 5;
+        let tk = s.truncate(k);
+        let err = tk.reconstruct().sub(&a).fro();
+        let tail: f64 = s.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err - tail).abs() < 1e-8, "err={err} tail={tail}");
+    }
+
+    #[test]
+    fn spectral_norm_matches_top_singular_value() {
+        let mut rng = Rng::new(35);
+        let a = Mat::randn(15, 9, &mut rng);
+        let s = svd_jacobi(&a);
+        let sn = spectral_norm(&a, &mut rng);
+        assert!((sn - s.s[0]).abs() < 1e-6 * s.s[0], "sn={sn} s0={}", s.s[0]);
+    }
+
+    #[test]
+    fn rank1_dominant_direction() {
+        let mut rng = Rng::new(36);
+        let a = Mat::randn(10, 8, &mut rng);
+        let s = svd_jacobi(&a);
+        let (_, sigma, _) = rank1_approx(&a, &mut rng, 200);
+        assert!((sigma - s.s[0]).abs() < 1e-6 * s.s[0]);
+    }
+}

@@ -1,0 +1,309 @@
+//! `faust` CLI — drive every subsystem of the reproduction from one binary.
+
+use anyhow::{bail, Result};
+use faust::bench_util::{fmt, Table};
+use faust::cli::{Args, USAGE};
+use faust::coordinator::{BatchOp, Coordinator, CoordinatorConfig};
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::image::{add_noise, corpus, denoise, psnr, random_patches};
+use faust::meg::{localization_experiment, meg_model};
+use faust::rng::Rng;
+use faust::transforms::{hadamard, hadamard_faust, overcomplete_dct};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("hadamard") => cmd_hadamard(&args),
+        Some("factorize") => cmd_factorize(&args),
+        Some("localize") => cmd_localize(&args),
+        Some("denoise") => cmd_denoise(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// §IV-C: reverse-engineer the Hadamard transform.
+fn cmd_hadamard(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 32);
+    if !n.is_power_of_two() || n < 4 {
+        bail!("--n must be a power of two ≥ 4");
+    }
+    let a = hadamard(n);
+    let cfg = HierarchicalConfig::hadamard(n);
+    println!("factorizing the {n}x{n} Hadamard matrix into {} factors...", cfg.n_factors());
+    let t0 = Instant::now();
+    let fst = factorize(&a, &cfg);
+    let dt = t0.elapsed();
+    let rel = fst.relative_error_fro(&a);
+    let reference = hadamard_faust(n);
+    println!("  time              : {:.2?}", dt);
+    println!("  relative error    : {rel:.3e}");
+    println!("  s_tot             : {} (reference butterfly: {})", fst.s_tot(), reference.s_tot());
+    println!("  RCG               : {:.2} (reference: {:.2})", fst.rcg(), reference.rcg());
+    if let Some(path) = args.get_str("save") {
+        fst.save(path)?;
+        println!("  saved to {path}");
+    }
+    Ok(())
+}
+
+/// Hierarchical factorization of a synthetic MEG-like operator.
+fn cmd_factorize(args: &Args) -> Result<()> {
+    let rows: usize = args.get("rows", 128);
+    let cols: usize = args.get("cols", 1024);
+    let j: usize = args.get("j", 4);
+    let k: usize = args.get("k", 10);
+    let s: usize = args.get("s", 2 * rows);
+    let rho: f64 = args.get("rho", 0.8);
+    let seed: u64 = args.get("seed", 0);
+    let model = meg_model(rows, cols, seed);
+    let cfg = HierarchicalConfig::meg(rows, cols, j, k, s, rho, 1.4 * (rows * rows) as f64);
+    println!("factorizing {rows}x{cols} synthetic MEG gain (J={j}, k={k}, s={s}, rho={rho})...");
+    let t0 = Instant::now();
+    let fst = factorize(&model.gain, &cfg);
+    let mut rng = Rng::new(seed ^ 1);
+    let re = fst.relative_error_spectral(&model.gain, &mut rng);
+    println!("  time           : {:.2?}", t0.elapsed());
+    println!("  RE (spectral)  : {re:.4}");
+    println!("  RCG            : {:.2}", fst.rcg());
+    println!("  s_tot          : {}", fst.s_tot());
+    if let Some(path) = args.get_str("save") {
+        fst.save(path)?;
+        println!("  saved to {path}");
+    }
+    Ok(())
+}
+
+/// Paper Fig. 9 (scaled): source localization with M vs FAuST M̂.
+fn cmd_localize(args: &Args) -> Result<()> {
+    let sensors: usize = args.get("sensors", 128);
+    let sources: usize = args.get("sources", 2048);
+    let trials: usize = args.get("trials", 100);
+    let j: usize = args.get("j", 4);
+    let k: usize = args.get("k", 10);
+    let seed: u64 = args.get("seed", 0);
+    println!("building synthetic MEG model {sensors}x{sources}...");
+    let model = meg_model(sensors, sources, seed);
+    let cfg = HierarchicalConfig::meg(
+        sensors,
+        sources,
+        j,
+        k,
+        2 * sensors,
+        0.8,
+        1.4 * (sensors * sensors) as f64,
+    );
+    println!("factorizing (J={j}, k={k})...");
+    let fst = factorize(&model.gain, &cfg);
+    let mut rng = Rng::new(seed ^ 2);
+    println!(
+        "  FAuST: RCG={:.1}, RE={:.4}",
+        fst.rcg(),
+        fst.relative_error_spectral(&model.gain, &mut rng)
+    );
+    let mut table = Table::new(&["separation", "matrix", "median(cm)", "q3(cm)", "exact%"]);
+    for (dmin, dmax, label) in [(1.0, 5.0, "1-5cm"), (5.0, 8.0, "5-8cm"), (8.0, 100.0, ">8cm")] {
+        for (name, op) in [("M (dense)", &model.gain as &dyn faust::solvers::LinOp), ("M^ (faust)", &fst)] {
+            let stats = localization_experiment(&model, op, trials, dmin, dmax, seed ^ 3);
+            table.row(&[
+                label.to_string(),
+                name.to_string(),
+                fmt(stats.median()),
+                fmt(stats.quantile(0.75)),
+                format!("{:.0}", stats.exact_rate() * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+/// Paper Fig. 12 (scaled): denoising with FAuST vs K-SVD vs DCT dictionaries.
+fn cmd_denoise(args: &Args) -> Result<()> {
+    let size: usize = args.get("size", 128);
+    let sigma: f64 = args.get("sigma", 30.0);
+    let atoms: usize = args.get("atoms", 128);
+    let stride: usize = args.get("stride", 2);
+    let seed: u64 = args.get("seed", 0);
+    let p = 8usize;
+    let imgs = corpus(size);
+    let (name, img) = &imgs[args.get("image", 9usize).min(imgs.len() - 1)];
+    println!("image '{name}' ({size}x{size}), sigma={sigma}");
+    let mut rng = Rng::new(seed);
+    let noisy = add_noise(img, sigma, &mut rng);
+    println!("  noisy PSNR         : {:.2} dB", psnr(&noisy, img));
+    let patches = random_patches(&noisy, p, 2000, &mut rng);
+
+    // K-SVD (DDL baseline).
+    let kcfg = faust::dictlearn::KsvdConfig { n_atoms: atoms, sparsity: 5, n_iter: 10, seed };
+    let t0 = Instant::now();
+    let ddl = faust::dictlearn::ksvd(&patches, &kcfg);
+    let ddl_den = denoise(&noisy, &ddl.dict, p, 5, stride);
+    println!(
+        "  DDL (K-SVD)        : {:.2} dB   [{:.1?}]",
+        psnr(&ddl_den, img),
+        t0.elapsed()
+    );
+
+    // FAuST dictionary.
+    let hcfg = HierarchicalConfig::dictionary(p * p, atoms, 4, 4, 2 * p * p * 2, 0.5, (p * p * p * p) as f64);
+    let t0 = Instant::now();
+    let (fst, _) = faust::dictlearn::faust_dictionary_learning(&patches, &kcfg, &hcfg);
+    let fden = denoise(&noisy, &fst, p, 5, stride);
+    println!(
+        "  FAuST (s_tot={})  : {:.2} dB   [{:.1?}]  RCG={:.1}",
+        fst.s_tot(),
+        psnr(&fden, img),
+        t0.elapsed(),
+        fst.rcg()
+    );
+
+    // Overcomplete DCT.
+    let side = (atoms as f64).sqrt().ceil() as usize;
+    let dct = overcomplete_dct(p, side * side);
+    let dct_den = denoise(&noisy, &dct, p, 5, stride);
+    println!("  DCT ({} atoms)   : {:.2} dB", side * side, psnr(&dct_den, img));
+    Ok(())
+}
+
+/// Serve a Hadamard FAuST + dense twin through the coordinator.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 64);
+    let requests: usize = args.get("requests", 10_000);
+    let batch: usize = args.get("batch", 32);
+    let workers: usize = args.get("workers", 2);
+    let h = hadamard(n);
+    let hf = hadamard_faust(n);
+    println!("serving {n}x{n} operator: dense + FAuST (RCG={:.1})", hf.rcg());
+    let cfg = CoordinatorConfig {
+        max_batch: batch,
+        batch_timeout: Duration::from_micros(200),
+        n_workers: workers,
+        queue_capacity: 4096,
+    };
+    let coord = Coordinator::start(
+        vec![
+            ("dense".to_string(), Arc::new(h) as Arc<dyn BatchOp>),
+            ("faust".to_string(), Arc::new(hf) as Arc<dyn BatchOp>),
+        ],
+        cfg,
+    );
+    let client = coord.client();
+    let mut table = Table::new(&["operator", "throughput(req/s)", "mean latency(us)", "mean batch"]);
+    for op in ["dense", "faust"] {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(7);
+        let mut pending = Vec::with_capacity(256);
+        let mut done = 0usize;
+        while done < requests {
+            match client.submit(op, rng.gauss_vec(n)) {
+                Ok(rx) => pending.push(rx),
+                Err(_) => {
+                    // backpressure: drain some
+                    for rx in pending.drain(..) {
+                        let _ = rx.recv();
+                        done += 1;
+                    }
+                }
+            }
+            if pending.len() >= 256 {
+                for rx in pending.drain(..) {
+                    let _ = rx.recv();
+                    done += 1;
+                }
+            }
+        }
+        for rx in pending.drain(..) {
+            let _ = rx.recv();
+            done += 1;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let snap = client.metrics();
+        table.row(&[
+            op.to_string(),
+            fmt(done as f64 / dt),
+            fmt(snap.mean_latency_us()),
+            fmt(snap.mean_batch_size()),
+        ]);
+    }
+    table.print();
+    coord.shutdown();
+    Ok(())
+}
+
+/// Check the PJRT runtime: load artifacts, execute, compare vs rust-native.
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts").unwrap_or("artifacts");
+    let mut engine = faust::runtime::Engine::cpu(dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    for name in ["faust_apply_had32", "palm_grad_step"] {
+        if !engine.available(name) {
+            println!("  {name}: artifact missing (run `make artifacts`)");
+            continue;
+        }
+        let t0 = Instant::now();
+        engine.load(name)?;
+        println!("  {name}: loaded+compiled in {:.2?}", t0.elapsed());
+    }
+    // Numerical check of the faust apply artifact vs rust-native.
+    if engine.available("faust_apply_had32") {
+        let n = 32;
+        let b = 8;
+        let hf = hadamard_faust(n);
+        let mut rng = Rng::new(9);
+        // Batch input (column-major batch: shape (n, b) row-major f32).
+        let xcols: Vec<Vec<f64>> = (0..b).map(|_| rng.gauss_vec(n)).collect();
+        let mut x = vec![0f32; n * b];
+        for (c, col) in xcols.iter().enumerate() {
+            for i in 0..n {
+                x[i * b + c] = col[i] as f32;
+            }
+        }
+        // Factors rightmost-first as dense f32.
+        let facs: Vec<Vec<f32>> = hf
+            .factors()
+            .iter()
+            .map(|f| f.to_dense().data().iter().map(|&v| v as f32).collect())
+            .collect();
+        let xdims = [n, b];
+        let fdims = [n, n];
+        let mut inputs: Vec<(&[f32], &[usize])> = vec![(&x, &xdims[..])];
+        for f in &facs {
+            inputs.push((f, &fdims[..]));
+        }
+        let out = engine.run_f32("faust_apply_had32", &inputs)?;
+        let y_pjrt = &out[0].0;
+        let mut max_err = 0.0_f64;
+        for (c, col) in xcols.iter().enumerate() {
+            let y_native = hf.apply(col);
+            for i in 0..n {
+                max_err = max_err.max((y_pjrt[i * b + c] as f64 - y_native[i]).abs());
+            }
+        }
+        println!("  faust_apply_had32 vs rust-native: max |Δ| = {max_err:.3e}");
+        if max_err > 1e-4 {
+            bail!("PJRT/native mismatch: {max_err}");
+        }
+    }
+    Ok(())
+}

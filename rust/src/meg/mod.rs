@@ -1,0 +1,322 @@
+//! Synthetic MEG forward-model substrate (paper §V substitution).
+//!
+//! The paper factorizes a real 204×8193 MEG gain matrix computed by MNE's
+//! boundary-element method. That matrix is not redistributable, so this
+//! module builds the closest synthetic equivalent exercising the same code
+//! paths (see DESIGN.md §6): a quasi-spherical head with 204
+//! tangential-gradiometer-like sensors on an upper cap and 8193 cortical
+//! current dipoles at *irregular* (non-grid) positions, with the magnetic
+//! dipole kernel `B(r) ∝ q × (r − r_s) / ‖r − r_s‖³`. What matters to the
+//! experiments is preserved: strong correlation between nearby source
+//! columns, smooth low-rank-ish structure that a truncated SVD cannot fully
+//! capture, no spatial grid (so analytic compression à la FMM/wavelets does
+//! not apply — the paper's own argument for data-driven factorization).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::solvers::{omp, LinOp};
+
+/// 3-vector helpers.
+type V3 = [f64; 3];
+
+fn sub3(a: V3, b: V3) -> V3 {
+    [a[0] - b[0], a[1] - b[1], a[2] - b[2]]
+}
+
+fn cross3(a: V3, b: V3) -> V3 {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+fn dot3(a: V3, b: V3) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+fn norm3(a: V3) -> f64 {
+    dot3(a, a).sqrt()
+}
+
+fn normalize3(a: V3) -> V3 {
+    let n = norm3(a).max(1e-300);
+    [a[0] / n, a[1] / n, a[2] / n]
+}
+
+/// A synthetic MEG head model: sensor geometry + source space + gain.
+pub struct MegModel {
+    /// Gain (lead-field) matrix, `n_sensors × n_sources`.
+    pub gain: Mat,
+    /// Sensor positions on the helmet (metres).
+    pub sensor_pos: Vec<V3>,
+    /// Source (dipole) positions in the head (metres).
+    pub source_pos: Vec<V3>,
+}
+
+/// Build the synthetic model. Defaults mirroring the paper: `n_sensors =
+/// 204`, `n_sources = 8193`. Head radius 0.10 m, sensor helmet 0.115 m,
+/// cortical shell 0.070–0.085 m.
+pub fn meg_model(n_sensors: usize, n_sources: usize, seed: u64) -> MegModel {
+    let mut rng = Rng::new(seed);
+    // --- Sensors: Fibonacci spiral on the upper cap (z > 0.25·R).
+    let helmet_r = 0.115;
+    let golden = std::f64::consts::PI * (3.0 - 5f64.sqrt());
+    let mut sensor_pos = Vec::with_capacity(n_sensors);
+    let mut sensor_ori = Vec::with_capacity(n_sensors);
+    for i in 0..n_sensors {
+        // z in [0.25, 0.98] of the sphere — an EEG/MEG cap.
+        let frac = (i as f64 + 0.5) / n_sensors as f64;
+        let z = 0.25 + 0.73 * frac;
+        let r_xy = (1.0 - z * z).max(0.0).sqrt();
+        let th = golden * i as f64;
+        let p = [
+            helmet_r * r_xy * th.cos(),
+            helmet_r * r_xy * th.sin(),
+            helmet_r * z,
+        ];
+        sensor_pos.push(p);
+        // Gradiometer-like tangential orientation (alternating the two
+        // tangent directions, as paired planar gradiometers do).
+        let radial = normalize3(p);
+        let up = if radial[2].abs() < 0.9 { [0.0, 0.0, 1.0] } else { [1.0, 0.0, 0.0] };
+        let t1 = normalize3(cross3(radial, up));
+        let t2 = normalize3(cross3(radial, t1));
+        sensor_ori.push(if i % 2 == 0 { t1 } else { t2 });
+    }
+    // --- Sources: irregular shell 0.070–0.085 m, random directions
+    // (approximately cortex: no grid!), with tangential-ish dipole moments.
+    let mut source_pos = Vec::with_capacity(n_sources);
+    let mut source_ori = Vec::with_capacity(n_sources);
+    for _ in 0..n_sources {
+        // Random point on the sphere via Gaussian normalization.
+        let g = [rng.gauss(), rng.gauss(), rng.gauss()];
+        let dir = normalize3(g);
+        let radius = rng.range(0.070, 0.085);
+        // Bias towards the upper hemisphere (cortex under the cap).
+        let dir = if dir[2] < -0.3 { [dir[0], dir[1], -dir[2]] } else { dir };
+        source_pos.push([dir[0] * radius, dir[1] * radius, dir[2] * radius]);
+        // Dipole orientation: random unit vector (free orientation).
+        let o = normalize3([rng.gauss(), rng.gauss(), rng.gauss()]);
+        source_ori.push(o);
+    }
+    // --- Lead field: magnetic dipole in free space, projected on sensor
+    // orientation. B(r) = k · q × (r − r_s) / ‖r − r_s‖³.
+    let mut gain = Mat::zeros(n_sensors, n_sources);
+    for s in 0..n_sources {
+        let q = source_ori[s];
+        let rs = source_pos[s];
+        for c in 0..n_sensors {
+            let d = sub3(sensor_pos[c], rs);
+            let dist = norm3(d).max(1e-6);
+            let b = cross3(q, d);
+            let val = dot3(b, sensor_ori[c]) / (dist * dist * dist);
+            gain.set(c, s, val);
+        }
+    }
+    // Scale to unit Frobenius norm per column average (keeps conditioning
+    // comparable across runs; absolute units are irrelevant here).
+    let f = gain.fro();
+    if f > 0.0 {
+        gain.scale((n_sensors as f64).sqrt() / f * (n_sources as f64).sqrt() / 10.0);
+    }
+    MegModel { gain, sensor_pos, source_pos }
+}
+
+impl MegModel {
+    /// Distance between two sources in centimetres.
+    pub fn source_distance_cm(&self, i: usize, j: usize) -> f64 {
+        norm3(sub3(self.source_pos[i], self.source_pos[j])) * 100.0
+    }
+
+    /// Sample a source pair whose separation lies in `[dmin_cm, dmax_cm)`.
+    pub fn sample_source_pair(&self, rng: &mut Rng, dmin_cm: f64, dmax_cm: f64) -> (usize, usize) {
+        let n = self.source_pos.len();
+        for _ in 0..100_000 {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            if i == j {
+                continue;
+            }
+            let d = self.source_distance_cm(i, j);
+            if d >= dmin_cm && d < dmax_cm {
+                return (i, j);
+            }
+        }
+        panic!("no source pair found in [{dmin_cm}, {dmax_cm}) cm");
+    }
+}
+
+/// Statistics of localization errors (distances in cm).
+#[derive(Clone, Debug, Default)]
+pub struct LocStats {
+    /// One entry per (trial, true source): distance to closest retrieved.
+    pub distances_cm: Vec<f64>,
+}
+
+impl LocStats {
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.distances_cm.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.distances_cm.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.distances_cm.iter().sum::<f64>() / self.distances_cm.len().max(1) as f64
+    }
+
+    /// Fraction of sources retrieved exactly (distance == 0).
+    pub fn exact_rate(&self) -> f64 {
+        let exact = self.distances_cm.iter().filter(|&&d| d < 1e-9).count();
+        exact as f64 / self.distances_cm.len().max(1) as f64
+    }
+}
+
+/// Paper Fig. 9: source-localization experiment.
+///
+/// For `n_trials` random 2-sparse source configurations with separation in
+/// `[dmin_cm, dmax_cm)`, generate `y = M γ` with the **true** gain, run OMP
+/// (2 atoms) with the given recovery operator (the true gain or a FAμST
+/// approximation), and record the distance from each true source to the
+/// closest retrieved source.
+pub fn localization_experiment(
+    model: &MegModel,
+    recovery_op: &dyn LinOp,
+    n_trials: usize,
+    dmin_cm: f64,
+    dmax_cm: f64,
+    seed: u64,
+) -> LocStats {
+    assert_eq!(recovery_op.cols(), model.gain.cols());
+    let mut rng = Rng::new(seed);
+    let mut stats = LocStats::default();
+    for _ in 0..n_trials {
+        let (i, j) = model.sample_source_pair(&mut rng, dmin_cm, dmax_cm);
+        // Gaussian random source amplitudes (paper: "gaussian random
+        // weights").
+        let wi = rng.gauss();
+        let wj = rng.gauss();
+        // y = M γ with the true gain.
+        let ci = model.gain.col(i);
+        let cj = model.gain.col(j);
+        let y: Vec<f64> = ci
+            .iter()
+            .zip(&cj)
+            .map(|(a, b)| wi * a + wj * b)
+            .collect();
+        let res = omp(recovery_op, &y, 2, None);
+        for &true_src in &[i, j] {
+            let best = res
+                .support
+                .iter()
+                .map(|&got| model.source_distance_cm(true_src, got))
+                .fold(f64::INFINITY, f64::min);
+            stats
+                .distances_cm
+                .push(if best.is_finite() { best } else { f64::NAN });
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_dimensions_and_determinism() {
+        let m1 = meg_model(24, 100, 7);
+        let m2 = meg_model(24, 100, 7);
+        assert_eq!(m1.gain.shape(), (24, 100));
+        assert!(m1.gain.rel_fro_err(&m2.gain) < 1e-15, "not deterministic");
+        assert_eq!(m1.sensor_pos.len(), 24);
+        assert_eq!(m1.source_pos.len(), 100);
+    }
+
+    #[test]
+    fn sensors_on_upper_cap() {
+        let m = meg_model(32, 10, 1);
+        for p in &m.sensor_pos {
+            let r = norm3(*p);
+            assert!((r - 0.115).abs() < 1e-9);
+            assert!(p[2] > 0.0, "sensor below equator");
+        }
+    }
+
+    #[test]
+    fn sources_in_cortical_shell() {
+        let m = meg_model(8, 200, 2);
+        for p in &m.source_pos {
+            let r = norm3(*p);
+            assert!((0.070..=0.085).contains(&r), "r={r}");
+        }
+    }
+
+    #[test]
+    fn nearby_sources_have_correlated_columns() {
+        let m = meg_model(64, 400, 3);
+        // Find the closest and a far pair; compare column correlations.
+        let mut best = (0, 1, f64::INFINITY);
+        let mut worst = (0, 1, 0.0);
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                let d = m.source_distance_cm(i, j);
+                if d < best.2 {
+                    best = (i, j, d);
+                }
+                if d > worst.2 {
+                    worst = (i, j, d);
+                }
+            }
+        }
+        let corr = |i: usize, j: usize| {
+            let a = m.gain.col(i);
+            let b = m.gain.col(j);
+            let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+            (a.iter().zip(&b).map(|(x, y)| x * y).sum::<f64>() / (na * nb)).abs()
+        };
+        assert!(
+            corr(best.0, best.1) > corr(worst.0, worst.1),
+            "near-pair correlation {} should exceed far-pair {}",
+            corr(best.0, best.1),
+            corr(worst.0, worst.1)
+        );
+    }
+
+    #[test]
+    fn localization_with_true_gain_is_good() {
+        let m = meg_model(48, 300, 5);
+        let stats = localization_experiment(&m, &m.gain, 30, 6.0, 100.0, 11);
+        assert_eq!(stats.distances_cm.len(), 60);
+        // Well-separated sources with the exact matrix: mostly retrieved
+        // at or very near the true location. (This small 48-sensor test
+        // model is much harder than the 204-sensor benchmark scale; the
+        // bench fig9 harness reproduces the paper's >75% exact regime.)
+        assert!(
+            stats.exact_rate() > 0.25,
+            "exact rate too low: {}",
+            stats.exact_rate()
+        );
+        assert!(stats.median() < 3.0, "median {}", stats.median());
+    }
+
+    #[test]
+    fn pair_sampling_respects_bins() {
+        let m = meg_model(8, 200, 6);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let (i, j) = m.sample_source_pair(&mut rng, 3.0, 6.0);
+            let d = m.source_distance_cm(i, j);
+            assert!((3.0..6.0).contains(&d));
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Proposition A.1 — projections onto partition-wise sparse, unit-norm sets.
+//!
+//! `P_E(U) = U_I / ‖U_I‖_F` where `I` keeps, within each partition block
+//! `H_i`, the `s_i` entries of largest magnitude. Global sparsity, per-row,
+//! per-column, and fixed-support projections are all instances.
+
+use crate::linalg::Mat;
+
+/// Indices of the `k` largest-|value| entries of `v` — O(n) via
+/// `select_nth_unstable` (no full sort; this sits in the PALM hot loop).
+pub fn top_k_indices(v: &[f64], k: usize) -> Vec<usize> {
+    let n = v.len();
+    if k == 0 {
+        return vec![];
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    // Ties broken by index (ascending) → deterministic, Matlab-stable-sort
+    // compatible, which matters on operators with massive magnitude ties
+    // (every |entry| of a Hadamard matrix is equal).
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        v[b].abs()
+            .partial_cmp(&v[a].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Normalize to unit Frobenius norm in place (no-op on the zero matrix).
+fn normalize(m: &mut Mat) {
+    let f = m.fro();
+    if f > 0.0 {
+        m.scale(1.0 / f);
+    }
+}
+
+/// Global sparsity projection: keep the `s` largest-magnitude entries and
+/// normalize (Prop. A.1 with the trivial partition).
+pub fn proj_sp(u: &Mat, s: usize) -> Mat {
+    let mut out = Mat::zeros(u.rows(), u.cols());
+    for i in top_k_indices(u.data(), s) {
+        out.data_mut()[i] = u.data()[i];
+    }
+    normalize(&mut out);
+    out
+}
+
+/// Per-column sparsity: keep the `k` largest entries of **each** column,
+/// then normalize the whole matrix (Prop. A.1, partition = columns).
+pub fn proj_spcol(u: &Mat, k: usize) -> Mat {
+    let mut out = Mat::zeros(u.rows(), u.cols());
+    for j in 0..u.cols() {
+        let col = u.col(j);
+        for i in top_k_indices(&col, k) {
+            out.set(i, j, col[i]);
+        }
+    }
+    normalize(&mut out);
+    out
+}
+
+/// Per-row sparsity: keep the `k` largest entries of each row, normalize.
+pub fn proj_sprow(u: &Mat, k: usize) -> Mat {
+    let mut out = Mat::zeros(u.rows(), u.cols());
+    for i in 0..u.rows() {
+        let row = u.row(i);
+        for j in top_k_indices(row, k) {
+            out.set(i, j, row[j]);
+        }
+    }
+    normalize(&mut out);
+    out
+}
+
+/// "splincol" (FAμST toolbox): keep the union of the top-`k`-per-row and
+/// top-`k`-per-column supports, normalize. Breaks the magnitude-tie
+/// degeneracy of global top-`k` on butterfly-structured operators by
+/// forcing every row and column to stay populated.
+pub fn proj_splincol(u: &Mat, k: usize) -> Mat {
+    let mut keep = vec![false; u.rows() * u.cols()];
+    for i in 0..u.rows() {
+        let row = u.row(i);
+        for j in top_k_indices(row, k) {
+            keep[i * u.cols() + j] = true;
+        }
+    }
+    for j in 0..u.cols() {
+        let col = u.col(j);
+        for i in top_k_indices(&col, k) {
+            keep[i * u.cols() + j] = true;
+        }
+    }
+    let mut out = Mat::zeros(u.rows(), u.cols());
+    for (e, &kf) in keep.iter().enumerate() {
+        if kf {
+            out.data_mut()[e] = u.data()[e];
+        }
+    }
+    normalize(&mut out);
+    out
+}
+
+/// Fixed-support projection: zero outside `mask`, normalize.
+pub fn proj_support(u: &Mat, mask: &[bool]) -> Mat {
+    assert_eq!(mask.len(), u.rows() * u.cols(), "support mask shape mismatch");
+    let mut out = u.clone();
+    for (v, &keep) in out.data_mut().iter_mut().zip(mask) {
+        if !keep {
+            *v = 0.0;
+        }
+    }
+    normalize(&mut out);
+    out
+}
+
+/// General Prop. A.1: partition the index set into blocks (`groups[e]` is
+/// the block id of flat entry `e`), keep the `s_i` largest per block,
+/// normalize globally.
+pub fn proj_sp_partition(u: &Mat, groups: &[usize], s_per_group: &[usize]) -> Mat {
+    assert_eq!(groups.len(), u.rows() * u.cols());
+    let ngroups = s_per_group.len();
+    // Gather entries per group.
+    let mut members: Vec<Vec<usize>> = vec![vec![]; ngroups];
+    for (e, &g) in groups.iter().enumerate() {
+        assert!(g < ngroups, "group id out of range");
+        members[g].push(e);
+    }
+    let mut out = Mat::zeros(u.rows(), u.cols());
+    for (g, ms) in members.iter().enumerate() {
+        let vals: Vec<f64> = ms.iter().map(|&e| u.data()[e]).collect();
+        for local in top_k_indices(&vals, s_per_group[g]) {
+            out.data_mut()[ms[local]] = vals[local];
+        }
+    }
+    normalize(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn top_k_selects_largest() {
+        let v = [1.0, -5.0, 3.0, 0.5, -2.0];
+        let mut idx = top_k_indices(&v, 2);
+        idx.sort_unstable();
+        assert_eq!(idx, vec![1, 2]);
+        assert_eq!(top_k_indices(&v, 0).len(), 0);
+        assert_eq!(top_k_indices(&v, 9).len(), 5);
+    }
+
+    #[test]
+    fn proj_sp_keeps_top_entries_and_normalizes() {
+        let u = Mat::from_vec(2, 3, vec![3.0, -1.0, 0.2, -4.0, 0.1, 0.05]);
+        let p = proj_sp(&u, 2);
+        assert_eq!(p.nnz(), 2);
+        assert!((p.fro() - 1.0).abs() < 1e-12);
+        // The two largest are -4 and 3.
+        assert!(p.at(1, 0) != 0.0 && p.at(0, 0) != 0.0);
+        // Direction preserved: ratio matches.
+        assert!((p.at(1, 0) / p.at(0, 0) - (-4.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proj_spcol_col_budget() {
+        let mut rng = Rng::new(61);
+        let u = Mat::randn(10, 4, &mut rng);
+        let p = proj_spcol(&u, 3);
+        for j in 0..4 {
+            let nz = p.col(j).iter().filter(|x| **x != 0.0).count();
+            assert_eq!(nz, 3);
+        }
+        assert!((p.fro() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proj_sprow_row_budget() {
+        let mut rng = Rng::new(62);
+        let u = Mat::randn(5, 9, &mut rng);
+        let p = proj_sprow(&u, 2);
+        for i in 0..5 {
+            let nz = p.row(i).iter().filter(|x| **x != 0.0).count();
+            assert_eq!(nz, 2);
+        }
+    }
+
+    #[test]
+    fn proj_support_zeroes_complement() {
+        let mut rng = Rng::new(63);
+        let u = Mat::randn(3, 3, &mut rng);
+        let mask: Vec<bool> = (0..9).map(|i| i % 2 == 0).collect();
+        let p = proj_support(&u, &mask);
+        for (i, &keep) in mask.iter().enumerate() {
+            if !keep {
+                assert_eq!(p.data()[i], 0.0);
+            }
+        }
+        assert!((p.fro() - 1.0).abs() < 1e-12);
+    }
+
+    /// Optimality check (Prop. A.1): the projection is at least as close to
+    /// U as any random feasible point.
+    #[test]
+    fn proj_sp_is_optimal_vs_random_feasible() {
+        let mut rng = Rng::new(64);
+        for trial in 0..20 {
+            let u = Mat::randn(4, 5, &mut rng);
+            let s = 1 + (trial % 6);
+            let p = proj_sp(&u, s);
+            let d_star = p.sub(&u).fro();
+            for _ in 0..50 {
+                // Random s-sparse unit-norm matrix.
+                let mut cand = Mat::zeros(4, 5);
+                for i in rng.sample_indices(20, s) {
+                    cand.data_mut()[i] = rng.gauss();
+                }
+                let f = cand.fro();
+                if f == 0.0 {
+                    continue;
+                }
+                cand.scale(1.0 / f);
+                let d = cand.sub(&u).fro();
+                assert!(
+                    d_star <= d + 1e-10,
+                    "projection suboptimal: {d_star} > {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_projection_generalizes_global() {
+        let mut rng = Rng::new(65);
+        let u = Mat::randn(6, 6, &mut rng);
+        // One group covering everything == proj_sp.
+        let groups = vec![0usize; 36];
+        let p1 = proj_sp_partition(&u, &groups, &[7]);
+        let p2 = proj_sp(&u, 7);
+        assert!(p1.rel_fro_err(&p2) < 1e-12);
+        // Column groups == proj_spcol.
+        let col_groups: Vec<usize> = (0..36).map(|e| e % 6).collect();
+        let p3 = proj_sp_partition(&u, &col_groups, &[2; 6]);
+        let p4 = proj_spcol(&u, 2);
+        assert!(p3.rel_fro_err(&p4) < 1e-12);
+    }
+}

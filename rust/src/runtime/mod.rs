@@ -1,0 +1,94 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). Artifacts are HLO *text*
+//! produced by `python/compile/aot.py` (see repo README for why text, not
+//! serialized protos). One compiled executable per model variant, cached.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A lazily-compiled registry of HLO artifacts on a single PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl Engine {
+    /// Create an engine backed by the PJRT CPU client, loading artifacts
+    /// from `artifact_dir` on demand.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, exes: HashMap::new(), artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Name of the PJRT platform backing this engine (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifact_dir>/<name>.hlo.txt` if not already cached.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// True if the artifact file exists on disk (whether or not loaded).
+    pub fn available(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Execute a loaded artifact on f32 buffers.
+    ///
+    /// Each input is `(data, dims)`; the computation was lowered with
+    /// `return_tuple=True`, so outputs come back as a tuple of literals,
+    /// flattened here into `Vec<(Vec<f32>, Vec<usize>)>`.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+            lits.push(lit);
+        }
+        let mut result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let tuple = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let vals = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            out.push((vals, dims));
+        }
+        Ok(out)
+    }
+}

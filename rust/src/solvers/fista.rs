@@ -1,0 +1,124 @@
+//! FISTA (Beck & Teboulle) — the `l1`-regularized least-squares solver
+//! standing in for the paper's `l1ls` baseline (§V-B).
+
+use super::LinOp;
+
+/// Soft-thresholding operator `sign(x)·max(|x|−t, 0)`.
+pub fn soft_threshold(x: f64, t: f64) -> f64 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+/// Result of a FISTA run.
+#[derive(Clone, Debug)]
+pub struct FistaResult {
+    pub x: Vec<f64>,
+    /// Objective `½‖Ax−y‖² + λ‖x‖₁` per iteration.
+    pub objective_trace: Vec<f64>,
+}
+
+/// FISTA for `min ½‖Ax − y‖₂² + lambda ‖x‖₁`.
+pub fn fista(a: &dyn LinOp, y: &[f64], lambda: f64, n_iter: usize, seed: u64) -> FistaResult {
+    assert_eq!(y.len(), a.rows());
+    let n = a.cols();
+    let lip = a.gram_norm_estimate(seed).max(1e-300);
+    let step = 1.0 / lip;
+    let mut x = vec![0.0; n];
+    let mut z = x.clone();
+    let mut t = 1.0_f64;
+    let mut trace = Vec::with_capacity(n_iter);
+    for _ in 0..n_iter {
+        let az = a.apply(&z);
+        let r: Vec<f64> = az.iter().zip(y).map(|(ai, yi)| ai - yi).collect();
+        let g = a.apply_t(&r);
+        let x_new: Vec<f64> = z
+            .iter()
+            .zip(&g)
+            .map(|(zi, gi)| soft_threshold(zi - step * gi, step * lambda))
+            .collect();
+        let t_new = (1.0 + (1.0 + 4.0 * t * t).sqrt()) / 2.0;
+        let beta = (t - 1.0) / t_new;
+        z = x_new
+            .iter()
+            .zip(&x)
+            .map(|(xn, xo)| xn + beta * (xn - xo))
+            .collect();
+        x = x_new;
+        t = t_new;
+        // objective
+        let ax = a.apply(&x);
+        let fit: f64 = ax
+            .iter()
+            .zip(y)
+            .map(|(ai, yi)| (ai - yi) * (ai - yi))
+            .sum::<f64>()
+            * 0.5;
+        let l1: f64 = x.iter().map(|v| v.abs()).sum();
+        trace.push(fit + lambda * l1);
+    }
+    FistaResult { x, objective_trace: trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn objective_decreases_overall() {
+        let mut rng = Rng::new(141);
+        let a = Mat::randn(20, 50, &mut rng);
+        let y = rng.gauss_vec(20);
+        let r = fista(&a, &y, 0.1, 150, 1);
+        let first = r.objective_trace.first().unwrap();
+        let last = r.objective_trace.last().unwrap();
+        assert!(last < first, "objective did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn large_lambda_gives_zero_solution() {
+        let mut rng = Rng::new(142);
+        let a = Mat::randn(10, 20, &mut rng);
+        let y = rng.gauss_vec(10);
+        // λ above ‖Aᵀy‖_∞ forces x = 0.
+        let aty = a.matvec_t(&y);
+        let lam = 1.1 * aty.iter().fold(0.0_f64, |m, v| m.max(v.abs()));
+        let r = fista(&a, &y, lam, 100, 2);
+        assert!(r.x.iter().all(|v| v.abs() < 1e-10));
+    }
+
+    #[test]
+    fn recovers_sparse_support_with_small_lambda() {
+        let mut rng = Rng::new(143);
+        let a = Mat::randn(40, 60, &mut rng);
+        let supp = rng.sample_indices(60, 2);
+        let mut x0 = vec![0.0; 60];
+        for &j in &supp {
+            x0[j] = 5.0;
+        }
+        let y = a.matvec(&x0);
+        let r = fista(&a, &y, 0.05, 400, 3);
+        // The two largest coefficients should be the planted support.
+        let mut idx: Vec<usize> = (0..60).collect();
+        idx.sort_by(|&i, &j| r.x[j].abs().partial_cmp(&r.x[i].abs()).unwrap());
+        let mut got = idx[..2].to_vec();
+        got.sort_unstable();
+        let mut want = supp;
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,135 @@
+//! Sparse-recovery solvers over abstract linear operators.
+//!
+//! The paper's §V use-case: iterative solvers whose cost is dominated by
+//! products with the measurement matrix `M` and `Mᵀ` — replacing `M` by a
+//! FAμST accelerates them by ≈ RCG. Everything here is written against the
+//! [`LinOp`] trait so dense matrices, FAμSTs, and PJRT-compiled operators
+//! are interchangeable.
+
+mod fista;
+mod iht;
+mod omp;
+mod omp_gram;
+
+pub use fista::{fista, soft_threshold, FistaResult};
+pub use iht::{iht, IhtResult};
+pub use omp::{omp, omp_batch, OmpResult};
+pub use omp_gram::omp_batch_gram;
+
+use crate::faust::Faust;
+use crate::linalg::Mat;
+
+/// Abstract linear operator `R^n -> R^m` with transpose access.
+pub trait LinOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// `y = A x`.
+    fn apply(&self, x: &[f64]) -> Vec<f64>;
+    /// `y = Aᵀ x`.
+    fn apply_t(&self, x: &[f64]) -> Vec<f64>;
+    /// Column `j` (default: apply to a canonical basis vector).
+    fn column(&self, j: usize) -> Vec<f64> {
+        let mut e = vec![0.0; self.cols()];
+        e[j] = 1.0;
+        self.apply(&e)
+    }
+    /// Flops for one apply (2mn for dense; 2·s_tot for a FAμST).
+    fn flops_per_apply(&self) -> usize;
+    /// Rough spectral-norm-squared upper bound for step sizes.
+    fn gram_norm_estimate(&self, seed: u64) -> f64 {
+        // Power iteration on AᵀA through the trait.
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut x = rng.gauss_vec(self.cols());
+        let mut est = 0.0;
+        for _ in 0..30 {
+            let y = self.apply(&x);
+            let z = self.apply_t(&y);
+            let nz: f64 = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nz < 1e-300 {
+                return 0.0;
+            }
+            for (xi, zi) in x.iter_mut().zip(&z) {
+                *xi = zi / nz;
+            }
+            est = nz;
+        }
+        est
+    }
+}
+
+impl LinOp for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_t(x)
+    }
+    fn column(&self, j: usize) -> Vec<f64> {
+        Mat::col(self, j)
+    }
+    fn flops_per_apply(&self) -> usize {
+        2 * Mat::rows(self) * Mat::cols(self)
+    }
+}
+
+impl LinOp for Faust {
+    fn rows(&self) -> usize {
+        Faust::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Faust::cols(self)
+    }
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        Faust::apply(self, x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        Faust::apply_t(self, x)
+    }
+    fn column(&self, j: usize) -> Vec<f64> {
+        Faust::column(self, j)
+    }
+    fn flops_per_apply(&self) -> usize {
+        self.flops_per_matvec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn linop_dense_and_faust_agree() {
+        let mut rng = Rng::new(111);
+        let a = Mat::randn(6, 10, &mut rng);
+        let f = Faust::from_dense(&a);
+        let x = rng.gauss_vec(10);
+        let ya = LinOp::apply(&a, &x);
+        let yf = LinOp::apply(&f, &x);
+        for i in 0..6 {
+            assert!((ya[i] - yf[i]).abs() < 1e-12);
+        }
+        let z = rng.gauss_vec(6);
+        let ta = LinOp::apply_t(&a, &z);
+        let tf = LinOp::apply_t(&f, &z);
+        for j in 0..10 {
+            assert!((ta[j] - tf[j]).abs() < 1e-12);
+        }
+        assert_eq!(LinOp::flops_per_apply(&a), 120);
+    }
+
+    #[test]
+    fn gram_norm_estimate_close_to_spectral() {
+        let mut rng = Rng::new(112);
+        let a = Mat::randn(12, 8, &mut rng);
+        let est = LinOp::gram_norm_estimate(&a, 1).sqrt();
+        let truth = crate::linalg::spectral_norm(&a, &mut rng);
+        assert!((est - truth).abs() < 0.05 * truth, "est={est} truth={truth}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Orthogonal Matching Pursuit (Tropp & Gilbert) over a [`LinOp`].
+//!
+//! Greedy: pick the atom most correlated with the residual, re-fit by least
+//! squares on the selected support, repeat `k` times. The cost is dominated
+//! by `Aᵀ r` per iteration — exactly the product the paper accelerates with
+//! FAμSTs (§V-B: "the computational cost of OMP is dominated by products
+//! with Mᵀ").
+//!
+//! Note the paper's §VI-C remark: when the dictionary is a FAμST, columns
+//! are not unit-norm and plain correlation yields a "weighted OMP"; we
+//! reproduce that behaviour by default and expose optional column-norm
+//! compensation.
+
+use super::LinOp;
+use crate::linalg::{lstsq, Mat};
+
+/// Result of one OMP solve.
+#[derive(Clone, Debug)]
+pub struct OmpResult {
+    /// Selected atom indices, in selection order.
+    pub support: Vec<usize>,
+    /// Coefficients aligned with `support`.
+    pub coefs: Vec<f64>,
+    /// Final residual l2 norm.
+    pub residual_norm: f64,
+}
+
+impl OmpResult {
+    /// Densify the sparse code into a length-`n` vector.
+    pub fn dense_code(&self, n: usize) -> Vec<f64> {
+        let mut x = vec![0.0; n];
+        for (&j, &c) in self.support.iter().zip(&self.coefs) {
+            x[j] = c;
+        }
+        x
+    }
+}
+
+/// Run OMP: approximate `y ≈ A x` with `‖x‖₀ ≤ k`.
+///
+/// `col_norms`: pass `Some(norms)` to normalize the correlation step by
+/// per-column norms (classical OMP on non-normalized dictionaries); `None`
+/// reproduces the paper's plain/"weighted" variant.
+pub fn omp(a: &dyn LinOp, y: &[f64], k: usize, col_norms: Option<&[f64]>) -> OmpResult {
+    assert_eq!(y.len(), a.rows(), "omp: y dim mismatch");
+    let n = a.cols();
+    let k = k.min(n);
+    let mut support: Vec<usize> = Vec::with_capacity(k);
+    let mut selected = vec![false; n];
+    let mut residual = y.to_vec();
+    let mut atoms = Mat::zeros(a.rows(), 0); // selected atoms, grown by column
+    let mut coefs: Vec<f64> = vec![];
+    for _ in 0..k {
+        // Correlation step: c = Aᵀ r  (the hot product).
+        let corr = a.apply_t(&residual);
+        let mut best = None;
+        let mut best_val = 0.0;
+        for j in 0..n {
+            if selected[j] {
+                continue;
+            }
+            let mut v = corr[j].abs();
+            if let Some(norms) = col_norms {
+                if norms[j] > 1e-300 {
+                    v /= norms[j];
+                } else {
+                    continue;
+                }
+            }
+            if v > best_val {
+                best_val = v;
+                best = Some(j);
+            }
+        }
+        let Some(j) = best else { break };
+        if best_val <= 1e-300 {
+            break; // residual orthogonal to every remaining atom
+        }
+        selected[j] = true;
+        support.push(j);
+        // Grow the atom matrix.
+        let col = a.column(j);
+        let mut grown = Mat::zeros(a.rows(), support.len());
+        for c in 0..support.len() - 1 {
+            for i in 0..a.rows() {
+                grown.set(i, c, atoms.at(i, c));
+            }
+        }
+        for i in 0..a.rows() {
+            grown.set(i, support.len() - 1, col[i]);
+        }
+        atoms = grown;
+        // Least-squares re-fit on the support.
+        coefs = lstsq(&atoms, y);
+        // Residual r = y − A_S x_S.
+        let yhat = atoms.matvec(&coefs);
+        for i in 0..y.len() {
+            residual[i] = y[i] - yhat[i];
+        }
+    }
+    let residual_norm = residual.iter().map(|v| v * v).sum::<f64>().sqrt();
+    OmpResult { support, coefs, residual_norm }
+}
+
+/// Batch-code every column of `y` against dictionary `d` with `k` atoms
+/// each; returns the coefficient matrix `Γ` (`d.cols() × y.cols()`).
+pub fn omp_batch(d: &Mat, y: &Mat, k: usize) -> Mat {
+    let mut gamma = Mat::zeros(d.cols(), y.cols());
+    // Precompute column norms once (classic batch OMP behaviour).
+    let norms: Vec<f64> = (0..d.cols())
+        .map(|j| d.col(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    for c in 0..y.cols() {
+        let yc = y.col(c);
+        let r = omp(d, &yc, k, Some(&norms));
+        for (&j, &v) in r.support.iter().zip(&r.coefs) {
+            gamma.set(j, c, v);
+        }
+    }
+    gamma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_recovery_on_orthogonal_dictionary() {
+        // With an orthogonal dictionary OMP recovers any k-sparse signal
+        // exactly in k steps.
+        let h = crate::transforms::hadamard(16);
+        let mut rng = Rng::new(121);
+        for _ in 0..10 {
+            let supp = rng.sample_indices(16, 3);
+            let mut x = vec![0.0; 16];
+            for &j in &supp {
+                x[j] = rng.gauss() + 2.0; // bounded away from 0
+            }
+            let y = h.matvec(&x);
+            let r = omp(&h, &y, 3, None);
+            assert!(r.residual_norm < 1e-10);
+            let mut got = r.support.clone();
+            got.sort_unstable();
+            let mut want = supp.clone();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn recovery_via_faust_matches_dense() {
+        // Same dictionary as dense Mat and as exact FAμST: identical picks.
+        let h = crate::transforms::hadamard(32);
+        let hf = crate::transforms::hadamard_faust(32);
+        let mut rng = Rng::new(122);
+        let supp = rng.sample_indices(32, 2);
+        let mut x = vec![0.0; 32];
+        for &j in &supp {
+            x[j] = 1.0 + rng.uniform();
+        }
+        let y = h.matvec(&x);
+        let rd = omp(&h, &y, 2, None);
+        let rf = omp(&hf, &y, 2, None);
+        let mut sd = rd.support.clone();
+        let mut sf = rf.support.clone();
+        sd.sort_unstable();
+        sf.sort_unstable();
+        assert_eq!(sd, sf);
+        assert!(rf.residual_norm < 1e-9);
+    }
+
+    #[test]
+    fn residual_norm_decreases_with_k() {
+        let mut rng = Rng::new(123);
+        let a = Mat::randn(20, 40, &mut rng);
+        let y = rng.gauss_vec(20);
+        let mut prev = f64::INFINITY;
+        for k in 1..=6 {
+            let r = omp(&a, &y, k, None);
+            assert!(r.residual_norm <= prev + 1e-12);
+            prev = r.residual_norm;
+        }
+    }
+
+    #[test]
+    fn dense_code_roundtrip() {
+        let mut rng = Rng::new(124);
+        let a = Mat::randn(10, 15, &mut rng);
+        let y = rng.gauss_vec(10);
+        let r = omp(&a, &y, 4, None);
+        let x = r.dense_code(15);
+        assert_eq!(x.iter().filter(|v| **v != 0.0).count(), r.support.len());
+    }
+
+    #[test]
+    fn omp_batch_shapes_and_sparsity() {
+        let mut rng = Rng::new(125);
+        let d = Mat::randn(8, 20, &mut rng);
+        let y = Mat::randn(8, 5, &mut rng);
+        let g = omp_batch(&d, &y, 3);
+        assert_eq!(g.shape(), (20, 5));
+        for c in 0..5 {
+            let nnz = g.col(c).iter().filter(|v| **v != 0.0).count();
+            assert!(nnz <= 3);
+        }
+    }
+
+    #[test]
+    fn zero_signal_gives_empty_support() {
+        let mut rng = Rng::new(126);
+        let a = Mat::randn(6, 9, &mut rng);
+        let r = omp(&a, &[0.0; 6], 3, None);
+        assert!(r.support.is_empty());
+        assert_eq!(r.residual_norm, 0.0);
+    }
+}

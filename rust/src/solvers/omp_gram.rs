@@ -1,0 +1,195 @@
+//! Batch OMP with precomputed Gram matrix (Rubinstein–Zibulevsky–Elad,
+//! "Efficient Implementation of the K-SVD Algorithm using Batch
+//! Orthogonal Matching Pursuit" — the paper's reference [47], used for
+//! its DDL baseline).
+//!
+//! For `L` signals coded against the same dictionary, precomputing
+//! `G = DᵀD` once turns each OMP iteration's correlation update into a
+//! Gram-column accumulation (`O(n·k)` instead of a fresh `Dᵀr` product),
+//! and the coefficients come from a progressively-updated Cholesky
+//! factor. This is the coding engine K-SVD spends most of its time in.
+
+use crate::linalg::Mat;
+
+/// Progressive Cholesky state for one signal's support.
+struct Chol {
+    /// Lower-triangular factor, row-major, `k×k` packed into `k_max` rows.
+    l: Vec<Vec<f64>>,
+}
+
+impl Chol {
+    fn new() -> Self {
+        Chol { l: vec![] }
+    }
+
+    /// Grow the factor with a new atom whose Gram column (restricted to
+    /// the current support, in order) is `g_col` and self-inner-product
+    /// `g_jj`. Returns false when the new atom is numerically dependent.
+    fn push(&mut self, g_col: &[f64], g_jj: f64) -> bool {
+        let k = self.l.len();
+        debug_assert_eq!(g_col.len(), k);
+        // Solve L w = g_col.
+        let mut w = vec![0.0; k];
+        for i in 0..k {
+            let mut acc = g_col[i];
+            for j in 0..i {
+                acc -= self.l[i][j] * w[j];
+            }
+            w[i] = acc / self.l[i][i];
+        }
+        let d2 = g_jj - w.iter().map(|x| x * x).sum::<f64>();
+        if d2 <= 1e-12 {
+            return false;
+        }
+        let mut row = w;
+        row.push(d2.sqrt());
+        self.l.push(row);
+        true
+    }
+
+    /// Solve `(L Lᵀ) x = b`.
+    fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let k = self.l.len();
+        debug_assert_eq!(b.len(), k);
+        let mut y = vec![0.0; k];
+        for i in 0..k {
+            let mut acc = b[i];
+            for j in 0..i {
+                acc -= self.l[i][j] * y[j];
+            }
+            y[i] = acc / self.l[i][i];
+        }
+        let mut x = vec![0.0; k];
+        for i in (0..k).rev() {
+            let mut acc = y[i];
+            for j in (i + 1)..k {
+                acc -= self.l[j][i] * x[j];
+            }
+            x[i] = acc / self.l[i][i];
+        }
+        x
+    }
+}
+
+/// Batch OMP: code every column of `y` with `k` atoms against dictionary
+/// `d` (columns assumed ~unit norm, as K-SVD maintains), using one shared
+/// precomputed Gram matrix. Returns `Γ` (`d.cols() × y.cols()`).
+pub fn omp_batch_gram(d: &Mat, y: &Mat, k: usize) -> Mat {
+    let n = d.cols();
+    let k = k.min(n);
+    let gram = d.matmul_tn(d); // G = DᵀD, n×n, once per batch
+    let dty = d.matmul_tn(y); // initial correlations for every signal
+    let mut gamma = Mat::zeros(n, y.cols());
+    for c in 0..y.cols() {
+        let alpha0: Vec<f64> = (0..n).map(|i| dty.at(i, c)).collect();
+        let mut alpha = alpha0.clone(); // current correlations Dᵀr
+        let mut support: Vec<usize> = Vec::with_capacity(k);
+        let mut selected = vec![false; n];
+        let mut chol = Chol::new();
+        for _ in 0..k {
+            // argmax |alpha| over unselected atoms.
+            let mut best = None;
+            let mut best_v = 1e-300;
+            for j in 0..n {
+                if !selected[j] && alpha[j].abs() > best_v {
+                    best_v = alpha[j].abs();
+                    best = Some(j);
+                }
+            }
+            let Some(j) = best else { break };
+            // Gram column of j restricted to the current support.
+            let g_col: Vec<f64> = support.iter().map(|&s| gram.at(s, j)).collect();
+            if !chol.push(&g_col, gram.at(j, j)) {
+                break; // dependent atom — stop early
+            }
+            selected[j] = true;
+            support.push(j);
+            // coefficients x = (G_SS)^{-1} alpha0_S via the Cholesky.
+            let b: Vec<f64> = support.iter().map(|&s| alpha0[s]).collect();
+            let x = chol.solve(&b);
+            // alpha = alpha0 − G_S x (correlation maintenance — no D·r!).
+            alpha.copy_from_slice(&alpha0);
+            for (si, &s) in support.iter().enumerate() {
+                let xs = x[si];
+                if xs == 0.0 {
+                    continue;
+                }
+                for t in 0..n {
+                    alpha[t] -= gram.at(t, s) * xs;
+                }
+            }
+            if support.len() == k {
+                for (si, &s) in support.iter().enumerate() {
+                    gamma.set(s, c, x[si]);
+                }
+            }
+        }
+        // If we stopped early, write the last solved coefficients.
+        if support.len() < k && !support.is_empty() {
+            let b: Vec<f64> = support.iter().map(|&s| alpha0[s]).collect();
+            let x = chol.solve(&b);
+            for (si, &s) in support.iter().enumerate() {
+                gamma.set(s, c, x[si]);
+            }
+        }
+    }
+    gamma
+}
+
+#[cfg(test)]
+mod gram_tests {
+    use super::super::omp_batch;
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn gram_batch_matches_plain_batch_omp() {
+        let mut rng = Rng::new(171);
+        let mut d = Mat::randn(12, 24, &mut rng);
+        d.normalize_cols();
+        let y = Mat::randn(12, 10, &mut rng);
+        let g1 = omp_batch(&d, &y, 3);
+        let g2 = omp_batch_gram(&d, &y, 3);
+        // Same supports and near-identical coefficients.
+        for c in 0..10 {
+            for i in 0..24 {
+                let a = g1.at(i, c);
+                let b = g2.at(i, c);
+                assert!(
+                    (a == 0.0) == (b == 0.0),
+                    "support mismatch at ({i},{c}): {a} vs {b}"
+                );
+                assert!((a - b).abs() < 1e-8, "coef mismatch: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_batch_exact_on_orthogonal_dictionary() {
+        let d = crate::transforms::hadamard(16);
+        let mut rng = Rng::new(172);
+        let mut gamma0 = Mat::zeros(16, 6);
+        for c in 0..6 {
+            for i in rng.sample_indices(16, 2) {
+                gamma0.set(i, c, 1.0 + rng.uniform());
+            }
+        }
+        let y = d.matmul(&gamma0);
+        let g = omp_batch_gram(&d, &y, 2);
+        assert!(g.rel_fro_err(&gamma0) < 1e-9);
+    }
+
+    #[test]
+    fn gram_batch_handles_duplicate_atoms() {
+        // Dictionary with a duplicated column: Cholesky must refuse the
+        // dependent atom instead of dividing by ~0.
+        let mut rng = Rng::new(173);
+        let mut d = Mat::randn(8, 10, &mut rng);
+        let c0 = d.col(0);
+        d.set_col(5, &c0);
+        d.normalize_cols();
+        let y = Mat::randn(8, 4, &mut rng);
+        let g = omp_batch_gram(&d, &y, 4);
+        assert!(g.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,82 @@
+//! Coordinate-list sparse format (§II-B storage analysis).
+
+use crate::linalg::Mat;
+
+/// COO sparse matrix: parallel `(row, col, val)` triplets.
+#[derive(Clone, Debug)]
+pub struct Coo {
+    rows: usize,
+    cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, row_idx: vec![], col_idx: vec![], vals: vec![] }
+    }
+
+    /// Extract non-zeros (|x| > `threshold`) from a dense matrix.
+    pub fn from_dense(m: &Mat, threshold: f64) -> Self {
+        let mut c = Coo::new(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                let v = m.at(i, j);
+                if v.abs() > threshold {
+                    c.push(i, j, v);
+                }
+            }
+        }
+        c
+    }
+
+    /// Append one entry (caller keeps entries unique).
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.row_idx.push(i as u32);
+        self.col_idx.push(j as u32);
+        self.vals.push(v);
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for k in 0..self.nnz() {
+            m.set(self.row_idx[k] as usize, self.col_idx[k] as usize, self.vals[k]);
+        }
+        m
+    }
+
+    /// Floats stored (paper §II-B1: `s_tot`).
+    pub fn storage_floats(&self) -> usize {
+        self.nnz()
+    }
+
+    /// Integers stored (paper §II-B1: `3 s_tot` — factor + row + col index).
+    pub fn storage_ints(&self) -> usize {
+        3 * self.nnz()
+    }
+
+    /// Total storage in bytes (f64 values, u32 indices — the "floats and
+    /// integers" of §II-B made concrete).
+    pub fn storage_bytes(&self) -> usize {
+        self.nnz() * (8 + 3 * 4)
+    }
+}

@@ -1,0 +1,292 @@
+//! Compressed sparse row format — the FAμST apply hot path.
+
+use super::coo::Coo;
+use crate::linalg::Mat;
+
+/// CSR sparse matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, length `rows + 1`.
+    pub indptr: Vec<u32>,
+    /// Column indices, length `nnz`.
+    pub indices: Vec<u32>,
+    /// Values, length `nnz`.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO (entries need not be sorted; duplicates are summed).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let rows = coo.rows();
+        let cols = coo.cols();
+        let nnz = coo.nnz();
+        // Counting sort by row.
+        let mut counts = vec![0u32; rows + 1];
+        for &r in &coo.row_idx {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut next = counts;
+        let mut indices = vec![0u32; nnz];
+        let mut vals = vec![0.0; nnz];
+        for k in 0..nnz {
+            let r = coo.row_idx[k] as usize;
+            let pos = next[r] as usize;
+            indices[pos] = coo.col_idx[k];
+            vals[pos] = coo.vals[k];
+            next[r] += 1;
+        }
+        // Sort each row by column index (insertion sort; rows are short).
+        let mut out = Csr { rows, cols, indptr, indices, vals };
+        out.sort_rows();
+        out.sum_duplicates();
+        out
+    }
+
+    /// Extract non-zeros (|x| > `threshold`) from a dense matrix.
+    pub fn from_dense(m: &Mat, threshold: f64) -> Self {
+        let rows = m.rows();
+        let cols = m.cols();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        indptr.push(0u32);
+        for i in 0..rows {
+            for j in 0..cols {
+                let v = m.at(i, j);
+                if v.abs() > threshold {
+                    indices.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr { rows, cols, indptr, indices, vals }
+    }
+
+    fn sort_rows(&mut self) {
+        for i in 0..self.rows {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            // Simple index-zip sort.
+            let mut pairs: Vec<(u32, f64)> = (lo..hi)
+                .map(|k| (self.indices[k], self.vals[k]))
+                .collect();
+            pairs.sort_by_key(|p| p.0);
+            for (off, (c, v)) in pairs.into_iter().enumerate() {
+                self.indices[lo + off] = c;
+                self.vals[lo + off] = v;
+            }
+        }
+    }
+
+    fn sum_duplicates(&mut self) {
+        let mut new_indptr = vec![0u32; self.rows + 1];
+        let mut new_indices = Vec::with_capacity(self.indices.len());
+        let mut new_vals = Vec::with_capacity(self.vals.len());
+        for i in 0..self.rows {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            let mut k = lo;
+            while k < hi {
+                let c = self.indices[k];
+                let mut v = self.vals[k];
+                let mut k2 = k + 1;
+                while k2 < hi && self.indices[k2] == c {
+                    v += self.vals[k2];
+                    k2 += 1;
+                }
+                new_indices.push(c);
+                new_vals.push(v);
+                k = k2;
+            }
+            new_indptr[i + 1] = new_indices.len() as u32;
+        }
+        self.indptr = new_indptr;
+        self.indices = new_indices;
+        self.vals = new_vals;
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                m.set(i, self.indices[k] as usize, self.vals[k]);
+            }
+        }
+        m
+    }
+
+    /// Convert to COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                coo.push(i, self.indices[k] as usize, self.vals[k]);
+            }
+        }
+        coo
+    }
+
+    /// Sparse transpose (CSR → CSR of the transpose; counting sort, O(nnz)).
+    pub fn transpose(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut counts = vec![0u32; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut next = counts;
+        let mut indices = vec![0u32; nnz];
+        let mut vals = vec![0.0; nnz];
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                let c = self.indices[k] as usize;
+                let pos = next[c] as usize;
+                indices[pos] = i as u32;
+                vals[pos] = self.vals[k];
+                next[c] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, vals }
+    }
+
+    /// Sparse matrix × dense vector: `y = A x` — O(nnz).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "spmv dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    /// `spmv` into a caller-provided buffer (allocation-free hot path).
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += self.vals[k] * x[self.indices[k] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Transposed spmv: `y = Aᵀ x` without materializing the transpose.
+    pub fn spmv_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "spmv_t dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        self.spmv_t_into(x, &mut y);
+        y
+    }
+
+    /// `spmv_t` into a caller-provided buffer.
+    pub fn spmv_t_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        for v in y.iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                y[self.indices[k] as usize] += xi * self.vals[k];
+            }
+        }
+    }
+
+    /// Sparse × dense: `A B` — O(nnz · B.cols).
+    pub fn spmm(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, b.cols());
+        self.spmm_into(b, &mut out);
+        out
+    }
+
+    /// `spmm` into a caller-provided buffer.
+    pub fn spmm_into(&self, b: &Mat, out: &mut Mat) {
+        assert_eq!(b.rows(), self.cols, "spmm dim mismatch");
+        assert_eq!(out.shape(), (self.rows, b.cols()));
+        let n = b.cols();
+        for v in out.data_mut().iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..self.rows {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            // Split borrow: out row i is disjoint from b.
+            let orow_ptr = &mut out.data_mut()[i * n..(i + 1) * n];
+            for k in lo..hi {
+                let a = self.vals[k];
+                let brow = b.row(self.indices[k] as usize);
+                for (o, &bv) in orow_ptr.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+    }
+
+    /// Transposed sparse × dense: `Aᵀ B`.
+    pub fn spmm_t(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows(), self.rows, "spmm_t dim mismatch");
+        let n = b.cols();
+        let mut out = Mat::zeros(self.cols, n);
+        for i in 0..self.rows {
+            let brow = b.row(i).to_vec();
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                let a = self.vals[k];
+                let r = self.indices[k] as usize;
+                let orow = out.row_mut(r);
+                for (o, &bv) in orow.iter_mut().zip(&brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.vals {
+            *v *= s;
+        }
+    }
+
+    /// Flops for one `spmv` (one multiply + one add per stored entry).
+    pub fn flops_per_matvec(&self) -> usize {
+        2 * self.nnz()
+    }
+}

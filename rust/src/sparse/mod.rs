@@ -1,0 +1,133 @@
+//! Sparse matrix substrates: COO and CSR.
+//!
+//! The paper's §II-B storage analysis uses COO (one float + three integers
+//! per non-zero across the whole factorization); the hot apply path uses
+//! CSR whose `spmv`/`spmm` make the `O(s_tot)` multiplication cost of a
+//! FAμST concrete.
+
+mod coo;
+mod csr;
+
+pub use coo::Coo;
+pub use csr::Csr;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    /// Random sparse dense-matrix with `nnz` non-zeros.
+    pub(crate) fn random_sparse(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        let idx = rng.sample_indices(rows * cols, nnz.min(rows * cols));
+        for i in idx {
+            m.data_mut()[i] = rng.gauss();
+        }
+        m
+    }
+
+    #[test]
+    fn coo_csr_dense_roundtrip() {
+        let mut rng = Rng::new(41);
+        let d = random_sparse(9, 13, 30, &mut rng);
+        let coo = Coo::from_dense(&d, 0.0);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(coo.nnz(), d.nnz());
+        assert_eq!(csr.nnz(), d.nnz());
+        assert!(csr.to_dense().rel_fro_err(&d) < 1e-15);
+        assert!(coo.to_dense().rel_fro_err(&d) < 1e-15);
+        // And back through COO again.
+        let coo2 = csr.to_coo();
+        assert!(coo2.to_dense().rel_fro_err(&d) < 1e-15);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Rng::new(42);
+        for &(m, n, z) in &[(5usize, 8usize, 12usize), (20, 20, 50), (1, 7, 3), (7, 1, 4)] {
+            let d = random_sparse(m, n, z, &mut rng);
+            let s = Csr::from_dense(&d, 0.0);
+            let x = rng.gauss_vec(n);
+            let yd = d.matvec(&x);
+            let ys = s.spmv(&x);
+            for i in 0..m {
+                assert!((yd[i] - ys[i]).abs() < 1e-12);
+            }
+            let z_in = rng.gauss_vec(m);
+            let td = d.matvec_t(&z_in);
+            let ts = s.spmv_t(&z_in);
+            for j in 0..n {
+                assert!((td[j] - ts[j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(43);
+        let d = random_sparse(6, 9, 20, &mut rng);
+        let s = Csr::from_dense(&d, 0.0);
+        let b = Mat::randn(9, 4, &mut rng);
+        let yd = d.matmul(&b);
+        let ys = s.spmm(&b);
+        assert!(ys.rel_fro_err(&yd) < 1e-13);
+        let c = Mat::randn(6, 5, &mut rng);
+        let td = d.t().matmul(&c);
+        let ts = s.spmm_t(&c);
+        assert!(ts.rel_fro_err(&td) < 1e-13);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(44);
+        let d = random_sparse(7, 11, 25, &mut rng);
+        let s = Csr::from_dense(&d, 0.0);
+        let stt = s.transpose().transpose();
+        assert!(stt.to_dense().rel_fro_err(&d) < 1e-15);
+        assert!(s.transpose().to_dense().rel_fro_err(&d.t()) < 1e-15);
+    }
+
+    #[test]
+    fn empty_and_full_matrices() {
+        let z = Mat::zeros(4, 5);
+        let s = Csr::from_dense(&z, 0.0);
+        assert_eq!(s.nnz(), 0);
+        let y = s.spmv(&[1.0; 5]);
+        assert!(y.iter().all(|&v| v == 0.0));
+
+        let mut rng = Rng::new(45);
+        let f = Mat::randn(4, 5, &mut rng);
+        let sf = Csr::from_dense(&f, 0.0);
+        assert_eq!(sf.nnz(), 20);
+        assert!(sf.to_dense().rel_fro_err(&f) < 1e-15);
+    }
+
+    #[test]
+    fn threshold_drops_small_entries() {
+        let d = Mat::from_vec(2, 2, vec![0.5, 1e-12, -2.0, 0.0]);
+        let s = Csr::from_dense(&d, 1e-9);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn storage_accounting_matches_paper() {
+        // §II-B: COO storage = nnz floats + 3·nnz integers.
+        let mut rng = Rng::new(46);
+        let d = random_sparse(10, 10, 17, &mut rng);
+        let coo = Coo::from_dense(&d, 0.0);
+        assert_eq!(coo.storage_floats(), 17);
+        assert_eq!(coo.storage_ints(), 3 * 17);
+    }
+
+    #[test]
+    fn csr_spmm_into_reuses_buffer() {
+        let mut rng = Rng::new(47);
+        let d = random_sparse(6, 7, 15, &mut rng);
+        let s = Csr::from_dense(&d, 0.0);
+        let b = Mat::randn(7, 3, &mut rng);
+        let mut out = Mat::zeros(6, 3);
+        s.spmm_into(&b, &mut out);
+        assert!(out.rel_fro_err(&d.matmul(&b)) < 1e-13);
+    }
+}

@@ -1,0 +1,111 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set). Seeded generators + a runner that reports the failing case's seed
+//! so any counterexample is reproducible.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, base_seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` on `cfg.cases` independently-seeded RNGs; panics with the
+/// offending case seed on the first failure (returned `Err(reason)`).
+pub fn check(name: &str, cfg: &PropConfig, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {reason}");
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use super::*;
+
+    /// Matrix with dims drawn from `[1, max_dim]`.
+    pub fn mat(rng: &mut Rng, max_dim: usize) -> Mat {
+        let r = 1 + rng.below(max_dim);
+        let c = 1 + rng.below(max_dim);
+        Mat::randn(r, c, rng)
+    }
+
+    /// Matrix of exactly the given shape.
+    pub fn mat_shaped(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::randn(rows, cols, rng)
+    }
+
+    /// Sparse matrix with `nnz` random non-zeros.
+    pub fn sparse_mat(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in rng.sample_indices(rows * cols, nnz.min(rows * cols)) {
+            m.data_mut()[i] = rng.gauss();
+        }
+        m
+    }
+
+    /// k-sparse vector of length n with entries bounded away from zero.
+    pub fn sparse_vec(rng: &mut Rng, n: usize, k: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        for i in rng.sample_indices(n, k) {
+            v[i] = rng.gauss() + 1.5 * rng.gauss().signum();
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", &PropConfig::default(), |rng| {
+            let u = rng.uniform();
+            ensure((0.0..1.0).contains(&u), format!("u out of range: {u}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure_with_seed() {
+        check(
+            "fails",
+            &PropConfig { cases: 5, base_seed: 1 },
+            |_| Err("always".into()),
+        );
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let m = gen::mat(&mut rng, 10);
+            assert!(m.rows() >= 1 && m.rows() <= 10);
+            let s = gen::sparse_mat(&mut rng, 6, 6, 10);
+            assert!(s.nnz() <= 10);
+            let v = gen::sparse_vec(&mut rng, 12, 3);
+            assert_eq!(v.iter().filter(|x| **x != 0.0).count(), 3);
+        }
+    }
+}

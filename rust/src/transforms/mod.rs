@@ -1,0 +1,194 @@
+//! Analytic transforms: Hadamard, DCT, Haar — dense forms, reference
+//! butterfly factorizations, and the overcomplete-DCT dictionary baseline.
+//!
+//! These are the paper's motivating examples (§I Fig. 1): operators that
+//! *already* admit exact multi-layer sparse forms — the ground truth the
+//! hierarchical algorithm must reverse-engineer (§IV-C) and the analytic
+//! dictionary baseline of the denoising experiment (§VI-C).
+
+use crate::faust::Faust;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+
+/// Dense Walsh–Hadamard matrix of size `n = 2^N`, normalized so that
+/// `H Hᵀ = Id` (entries `±1/√n`).
+pub fn hadamard(n: usize) -> Mat {
+    assert!(n.is_power_of_two() && n >= 1);
+    let scale = 1.0 / (n as f64).sqrt();
+    Mat::from_fn(n, n, |i, j| {
+        // (-1)^{popcount(i & j)}
+        if (i & j).count_ones() % 2 == 0 {
+            scale
+        } else {
+            -scale
+        }
+    })
+}
+
+/// Exact butterfly factorization of the normalized Hadamard matrix:
+/// `H = B_N ⋯ B_1` with each `B` having `2n` non-zeros (paper Fig. 1).
+///
+/// Each stage is the block butterfly `B = P · (Id_{n/2} ⊗ [[1,1],[1,-1]])`
+/// realized directly on index pairs differing in one bit.
+pub fn hadamard_faust(n: usize) -> Faust {
+    assert!(n.is_power_of_two() && n >= 2);
+    let nbits = n.trailing_zeros() as usize;
+    let scale = 1.0 / 2f64.sqrt(); // each stage normalized; product = 1/√n
+    let mut factors = Vec::with_capacity(nbits);
+    for b in 0..nbits {
+        let mut m = Mat::zeros(n, n);
+        let bit = 1usize << b;
+        for i in 0..n {
+            let partner = i ^ bit;
+            // Row i combines inputs i and partner.
+            if i & bit == 0 {
+                m.set(i, i, scale);
+                m.set(i, partner, scale);
+            } else {
+                m.set(i, partner, scale);
+                m.set(i, i, -scale);
+            }
+        }
+        factors.push(Csr::from_dense(&m, 0.0));
+    }
+    Faust::new(factors, 1.0)
+}
+
+/// Dense orthonormal DCT-II matrix (`n×n`).
+pub fn dct2(n: usize) -> Mat {
+    let mut m = Mat::from_fn(n, n, |k, i| {
+        ((std::f64::consts::PI / n as f64) * (i as f64 + 0.5) * k as f64).cos()
+    });
+    // Orthonormalize: row 0 scaled by sqrt(1/n), others sqrt(2/n).
+    let s0 = (1.0 / n as f64).sqrt();
+    let s = (2.0 / n as f64).sqrt();
+    for k in 0..n {
+        let f = if k == 0 { s0 } else { s };
+        for i in 0..n {
+            let v = m.at(k, i) * f;
+            m.set(k, i, v);
+        }
+    }
+    m
+}
+
+/// Overcomplete 2-D DCT dictionary for `p×p` patches with `natoms` atoms
+/// (the classical K-SVD baseline dictionary; §VI-C "overcomplete DCT").
+///
+/// Atoms are outer products of 1-D sampled-cosine atoms; `natoms` must be a
+/// perfect square ≥ `p²` for the standard construction.
+pub fn overcomplete_dct(p: usize, natoms: usize) -> Mat {
+    let side = (natoms as f64).sqrt().round() as usize;
+    assert_eq!(side * side, natoms, "natoms must be a perfect square");
+    assert!(side >= p, "need natoms >= p^2");
+    // 1-D overcomplete DCT p×side.
+    let mut d1 = Mat::from_fn(p, side, |i, k| {
+        ((std::f64::consts::PI / side as f64) * (i as f64 + 0.5) * k as f64).cos()
+    });
+    // Remove mean from non-DC atoms, then l2-normalize columns.
+    for k in 1..side {
+        let mean: f64 = (0..p).map(|i| d1.at(i, k)).sum::<f64>() / p as f64;
+        for i in 0..p {
+            let v = d1.at(i, k) - mean;
+            d1.set(i, k, v);
+        }
+    }
+    d1.normalize_cols();
+    // 2-D: atom (k1,k2) = outer(d1[:,k1], d1[:,k2]) flattened row-major.
+    let mut d = Mat::zeros(p * p, natoms);
+    for k1 in 0..side {
+        for k2 in 0..side {
+            let a = k1 * side + k2;
+            for i in 0..p {
+                for j in 0..p {
+                    d.set(i * p + j, a, d1.at(i, k1) * d1.at(j, k2));
+                }
+            }
+        }
+    }
+    d.normalize_cols();
+    d
+}
+
+/// Dense orthonormal Haar wavelet transform matrix (`n = 2^N`).
+pub fn haar(n: usize) -> Mat {
+    assert!(n.is_power_of_two() && n >= 2);
+    // Build recursively: H_1 = [1]; H_{2n} rows = scaled [H_n ⊗ (1,1);
+    // Id_n ⊗ (1,-1)].
+    let mut h = Mat::from_vec(1, 1, vec![1.0]);
+    let mut size = 1;
+    while size < n {
+        let mut next = Mat::zeros(2 * size, 2 * size);
+        let s = 1.0 / 2f64.sqrt();
+        for r in 0..size {
+            for c in 0..size {
+                let v = h.at(r, c) * s;
+                if v != 0.0 {
+                    next.set(r, 2 * c, v);
+                    next.set(r, 2 * c + 1, v);
+                }
+            }
+            next.set(size + r, 2 * r, s);
+            next.set(size + r, 2 * r + 1, -s);
+        }
+        h = next;
+        size *= 2;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadamard_is_orthonormal() {
+        for n in [2usize, 4, 8, 32] {
+            let h = hadamard(n);
+            let hht = h.matmul_nt(&h);
+            assert!(hht.rel_fro_err(&Mat::eye(n, n)) < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hadamard_faust_matches_dense() {
+        for n in [2usize, 8, 32, 64] {
+            let h = hadamard(n);
+            let f = hadamard_faust(n);
+            assert!(f.to_dense().rel_fro_err(&h) < 1e-12, "n={n}");
+            // Butterfly sparsity: exactly 2n nnz per factor (paper Fig. 1).
+            for fac in f.factors() {
+                assert_eq!(fac.nnz(), 2 * n);
+            }
+            // RCG = n / (2 log2 n).
+            let expected = n as f64 / (2.0 * (n as f64).log2());
+            assert!((f.rcg() - expected).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dct2_is_orthonormal() {
+        for n in [4usize, 8, 16] {
+            let d = dct2(n);
+            assert!(d.matmul_nt(&d).rel_fro_err(&Mat::eye(n, n)) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn overcomplete_dct_shape_and_norms() {
+        let d = overcomplete_dct(8, 256);
+        assert_eq!(d.shape(), (64, 256));
+        for j in 0..256 {
+            let n: f64 = d.col(j).iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-10, "atom {j} norm {n}");
+        }
+    }
+
+    #[test]
+    fn haar_is_orthonormal() {
+        for n in [2usize, 4, 16] {
+            let h = haar(n);
+            assert!(h.matmul_nt(&h).rel_fro_err(&Mat::eye(n, n)) < 1e-12, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! PJRT runtime end-to-end: AOT artifacts (L1 Pallas kernel lowered
+//! through the L2 JAX model) execute on the rust PJRT client and match
+//! the rust-native implementations.
+//!
+//! Skips gracefully (with a message) when `artifacts/` has not been built
+//! — run `make artifacts` first for full coverage.
+
+use faust::rng::Rng;
+use faust::runtime::Engine;
+use faust::transforms::hadamard_faust;
+
+fn engine_or_skip() -> Option<Engine> {
+    let eng = match Engine::cpu("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping e2e_runtime: no PJRT client: {e}");
+            return None;
+        }
+    };
+    if !eng.available("faust_apply_had32") {
+        eprintln!("skipping e2e_runtime: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(eng)
+}
+
+#[test]
+fn pjrt_faust_apply_matches_native() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    eng.load("faust_apply_had32").expect("compile artifact");
+    let n = 32;
+    let b = 8;
+    let hf = hadamard_faust(n);
+    let facs: Vec<Vec<f32>> = hf
+        .factors()
+        .iter()
+        .map(|f| f.to_dense().data().iter().map(|&v| v as f32).collect())
+        .collect();
+    let mut rng = Rng::new(77);
+    let cols: Vec<Vec<f64>> = (0..b).map(|_| rng.gauss_vec(n)).collect();
+    let mut x = vec![0f32; n * b];
+    for (c, col) in cols.iter().enumerate() {
+        for i in 0..n {
+            x[i * b + c] = col[i] as f32;
+        }
+    }
+    let xdims = [n, b];
+    let fdims = [n, n];
+    let mut inputs: Vec<(&[f32], &[usize])> = vec![(&x, &xdims[..])];
+    for f in &facs {
+        inputs.push((f, &fdims[..]));
+    }
+    let out = eng.run_f32("faust_apply_had32", &inputs).expect("execute");
+    assert_eq!(out[0].1, vec![n, b]);
+    for (c, col) in cols.iter().enumerate() {
+        let y = hf.apply(col);
+        for i in 0..n {
+            let d = (out[0].0[i * b + c] as f64 - y[i]).abs();
+            assert!(d < 1e-4, "mismatch at ({i},{c}): {d}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_palm_step_descends_like_native() {
+    // Run the AOT palm4MSA iteration on the Hadamard-32 split and verify
+    // the objective decreases across PJRT-executed iterations.
+    let Some(mut eng) = engine_or_skip() else { return };
+    if !eng.available("palm_grad_step") {
+        eprintln!("skipping: palm_grad_step artifact missing");
+        return;
+    }
+    eng.load("palm_grad_step").expect("compile artifact");
+    let n = 32usize;
+    let h = faust::transforms::hadamard(n);
+    let a: Vec<f32> = h.data().iter().map(|&v| v as f32).collect();
+    // Toolbox split init: S = Id, T = 0, lam = 1.
+    let mut s: Vec<f32> = faust::linalg::Mat::eye(n, n)
+        .data()
+        .iter()
+        .map(|&v| v as f32)
+        .collect();
+    let mut t = vec![0f32; n * n];
+    let mut lam = 1f32;
+    let dims = [n, n];
+    let scalar_dims: [usize; 0] = [];
+    let objective = |s: &[f32], t: &[f32], lam: f32| -> f64 {
+        // ½‖A − λ·T·S‖²  (row-major f32 buffers).
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let mut ts = 0.0f64;
+                for k in 0..n {
+                    ts += t[i * n + k] as f64 * s[k * n + j] as f64;
+                }
+                let d = h.at(i, j) - lam as f64 * ts;
+                acc += d * d;
+            }
+        }
+        0.5 * acc
+    };
+    let mut objs = vec![objective(&s, &t, lam)];
+    for _ in 0..6 {
+        let lam_arr = [lam];
+        let inputs: Vec<(&[f32], &[usize])> = vec![
+            (&a, &dims[..]),
+            (&s, &dims[..]),
+            (&t, &dims[..]),
+            (&lam_arr, &scalar_dims[..]),
+        ];
+        let out = eng.run_f32("palm_grad_step", &inputs).expect("execute");
+        s = out[0].0.clone();
+        t = out[1].0.clone();
+        lam = out[2].0[0];
+        objs.push(objective(&s, &t, lam));
+    }
+    // Overall descent to (near-)exactness. Strict per-iteration
+    // monotonicity is not asserted: the L2 graph estimates the Lipschitz
+    // step with a fixed-iteration power method, which can transiently
+    // under-estimate ‖L‖₂ and produce a small wiggle — the native rust
+    // path (adaptive power iteration) is the monotone reference.
+    assert!(
+        *objs.last().unwrap() < 1e-4 * objs[0],
+        "PJRT palm iterations did not converge: {objs:?}"
+    );
+    let mid = objs[objs.len() / 2];
+    assert!(mid < objs[0], "no early progress: {objs:?}");
+}

@@ -1,0 +1,146 @@
+//! Cross-module integration tests: factorize → serve → solve pipelines.
+
+use faust::coordinator::{BatchOp, Coordinator, CoordinatorConfig};
+use faust::dictlearn::{faust_dictionary_learning, KsvdConfig};
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::image::{add_noise, denoise, make_image, psnr, random_patches, ImageKind};
+use faust::meg::{localization_experiment, meg_model};
+use faust::rng::Rng;
+use faust::solvers::{fista, iht, omp, LinOp};
+use faust::transforms::{hadamard, hadamard_faust};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn factorize_then_solve_inverse_problem() {
+    // Full §V pipeline at test scale: synthetic gain → FAμST → OMP
+    // localization quality close to the dense matrix.
+    let (m, n) = (64, 512);
+    let model = meg_model(m, n, 21);
+    let cfg = HierarchicalConfig::meg(m, n, 3, 8, 2 * m, 0.8, 1.4 * (m * m) as f64);
+    let fst = factorize(&model.gain, &cfg);
+    assert!(fst.rcg() > 2.0, "rcg = {}", fst.rcg());
+
+    let dense_stats = localization_experiment(&model, &model.gain, 40, 6.0, 100.0, 5);
+    let faust_stats = localization_experiment(&model, &fst, 40, 6.0, 100.0, 5);
+    // The FAμST should not be wildly worse than the dense operator.
+    assert!(
+        faust_stats.median() <= dense_stats.median() + 3.0,
+        "faust median {} vs dense {}",
+        faust_stats.median(),
+        dense_stats.median()
+    );
+}
+
+#[test]
+fn factorize_then_serve_through_coordinator() {
+    // Hadamard FAμST behind the coordinator answers exactly like the
+    // dense operator applied locally.
+    let n = 64;
+    let a = hadamard(n);
+    let cfg = HierarchicalConfig::hadamard(n);
+    let fst = factorize(&a, &cfg);
+    assert!(fst.relative_error_fro(&a) < 1e-6);
+
+    let coord = Coordinator::start(
+        vec![("h".to_string(), Arc::new(fst) as Arc<dyn BatchOp>)],
+        CoordinatorConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_micros(100),
+            n_workers: 2,
+            queue_capacity: 256,
+        },
+    );
+    let client = coord.client();
+    let mut rng = Rng::new(3);
+    for _ in 0..32 {
+        let x = rng.gauss_vec(n);
+        let served = client.apply("h", x.clone()).unwrap();
+        let local = a.matvec(&x);
+        for i in 0..n {
+            assert!((served[i] - local[i]).abs() < 1e-8);
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 32);
+}
+
+#[test]
+fn all_solvers_work_with_faust_operators() {
+    // OMP, IHT and FISTA all accept a FAμST in place of a dense matrix.
+    let n = 32;
+    let h = hadamard(n);
+    let hf = hadamard_faust(n);
+    let mut rng = Rng::new(9);
+    let mut x0 = vec![0.0; n];
+    for i in rng.sample_indices(n, 3) {
+        x0[i] = 2.0 + rng.uniform();
+    }
+    let y = h.matvec(&x0);
+
+    let r_omp = omp(&hf, &y, 3, None);
+    assert!(r_omp.residual_norm < 1e-8);
+
+    let r_iht = iht(&hf, &y, 3, 300, 1);
+    assert!(r_iht.residual_norm < 1e-6, "iht resid {}", r_iht.residual_norm);
+
+    let r_fista = fista(&hf, &y, 0.01, 300, 2);
+    // FISTA is biased by the l1 penalty; check support only.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| r_fista.x[j].abs().partial_cmp(&r_fista.x[i].abs()).unwrap());
+    let mut got = idx[..3].to_vec();
+    got.sort_unstable();
+    let mut want: Vec<usize> = (0..n).filter(|&i| x0[i] != 0.0).collect();
+    want.sort_unstable();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn dictionary_learning_to_denoising_pipeline() {
+    // §VI end-to-end at test scale: noisy image → patches → FAμST
+    // dictionary → denoise → PSNR improves.
+    let img = make_image(ImageKind::Smooth, 64, 11);
+    let mut rng = Rng::new(12);
+    let noisy = add_noise(&img, 25.0, &mut rng);
+    let patches = random_patches(&noisy, 8, 400, &mut rng);
+    let kcfg = KsvdConfig { n_atoms: 96, sparsity: 4, n_iter: 3, seed: 1 };
+    let hcfg = HierarchicalConfig::dictionary(64, 96, 3, 4, 256, 0.5, 4096.0);
+    let (fst, _) = faust_dictionary_learning(&patches, &kcfg, &hcfg);
+    let den = denoise(&noisy, &fst, 8, 4, 4);
+    let before = psnr(&noisy, &img);
+    let after = psnr(&den, &img);
+    assert!(
+        after > before + 1.0,
+        "FAuST denoising didn't help: {before:.2} -> {after:.2}"
+    );
+}
+
+#[test]
+fn faust_save_load_preserves_serving_behaviour() {
+    let n = 32;
+    let fst = hadamard_faust(n);
+    let dir = std::env::temp_dir().join("faust_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("had32.faust");
+    fst.save(&path).unwrap();
+    let loaded = faust::faust::Faust::load(&path).unwrap();
+    let mut rng = Rng::new(4);
+    let x = rng.gauss_vec(n);
+    let y1 = fst.apply(&x);
+    let y2 = loaded.apply(&x);
+    for i in 0..n {
+        assert!((y1[i] - y2[i]).abs() < 1e-12);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn linop_flop_accounting_consistent_with_rcg() {
+    let n = 128;
+    let a = hadamard(n);
+    let f = hadamard_faust(n);
+    let flops_dense = LinOp::flops_per_apply(&a) as f64;
+    let flops_faust = LinOp::flops_per_apply(&f) as f64;
+    let gain = flops_dense / flops_faust;
+    assert!((gain - f.rcg()).abs() < 1e-9, "gain {gain} vs rcg {}", f.rcg());
+}

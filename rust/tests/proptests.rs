@@ -1,0 +1,227 @@
+//! Property-based test sweeps (seeded generators; failures report the
+//! case seed — see `faust::testutil`).
+
+use faust::faust::Faust;
+use faust::linalg::{lstsq, qr_thin, svd_jacobi, Mat};
+use faust::prox::{proj_sp, proj_spcol, proj_sprow, Constraint};
+use faust::palm::{palm4msa, FactorState, PalmConfig};
+use faust::sparse::{Coo, Csr};
+use faust::testutil::{check, ensure, gen, PropConfig};
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, base_seed: 0xBEEF }
+}
+
+#[test]
+fn prop_spmv_equals_dense_matvec() {
+    check("spmv == dense", &cfg(100), |rng| {
+        let r = 1 + rng.below(20);
+        let c = 1 + rng.below(20);
+        let nnz = rng.below(r * c + 1);
+        let d = gen::sparse_mat(rng, r, c, nnz);
+        let s = Csr::from_dense(&d, 0.0);
+        let x = rng.gauss_vec(c);
+        let yd = d.matvec(&x);
+        let ys = s.spmv(&x);
+        for i in 0..r {
+            ensure((yd[i] - ys[i]).abs() < 1e-10, format!("row {i}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coo_csr_roundtrip() {
+    check("coo<->csr roundtrip", &cfg(100), |rng| {
+        let r = 1 + rng.below(15);
+        let c = 1 + rng.below(15);
+        let nnz2 = rng.below(r * c + 1);
+        let d = gen::sparse_mat(rng, r, c, nnz2);
+        let coo = Coo::from_dense(&d, 0.0);
+        let csr = Csr::from_coo(&coo);
+        ensure(csr.to_dense().rel_fro_err(&d) < 1e-14, "roundtrip mismatch")?;
+        ensure(csr.nnz() == d.nnz(), "nnz mismatch")?;
+        ensure(
+            csr.transpose().to_dense().rel_fro_err(&d.t()) < 1e-14,
+            "transpose mismatch",
+        )
+    });
+}
+
+#[test]
+fn prop_projection_feasible_idempotent_and_contractive() {
+    check("projection properties", &cfg(60), |rng| {
+        let u = gen::mat(rng, 10);
+        let (r, c) = u.shape();
+        let k = 1 + rng.below(r * c);
+        let candidates = vec![
+            Constraint::SpGlobal(k),
+            Constraint::SpCol(1 + rng.below(r)),
+            Constraint::SpRow(1 + rng.below(c)),
+        ];
+        for cst in candidates {
+            let p = cst.project(&u);
+            ensure(cst.is_feasible(&p, 1e-9), format!("infeasible {cst:?}"))?;
+            let p2 = cst.project(&p);
+            ensure(p2.rel_fro_err(&p) < 1e-10, format!("not idempotent {cst:?}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_proj_sp_optimality() {
+    // Projection is closer to U than any random feasible point.
+    check("proj_sp optimal", &cfg(40), |rng| {
+        let u = gen::mat_shaped(rng, 5, 6);
+        let s = 1 + rng.below(12);
+        let p = proj_sp(&u, s);
+        let d_star = p.sub(&u).fro();
+        for _ in 0..30 {
+            let mut cand = gen::sparse_mat(rng, 5, 6, s);
+            let f = cand.fro();
+            if f == 0.0 {
+                continue;
+            }
+            cand.scale(1.0 / f);
+            ensure(
+                d_star <= cand.sub(&u).fro() + 1e-9,
+                "found closer feasible point",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rowcol_budgets_respected() {
+    check("row/col budgets", &cfg(60), |rng| {
+        let u = gen::mat(rng, 12);
+        let k = 1 + rng.below(4);
+        let pc = proj_spcol(&u, k);
+        for j in 0..pc.cols() {
+            let nz = pc.col(j).iter().filter(|v| **v != 0.0).count();
+            ensure(nz <= k, format!("col {j} has {nz} > {k}"))?;
+        }
+        let pr = proj_sprow(&u, k);
+        for i in 0..pr.rows() {
+            let nz = pr.row(i).iter().filter(|v| **v != 0.0).count();
+            ensure(nz <= k, format!("row {i} has {nz} > {k}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_palm_objective_monotone() {
+    check("palm monotone descent", &cfg(15), |rng| {
+        let n = 4 + rng.below(5);
+        let a = gen::mat_shaped(rng, n, n);
+        let budget = n + rng.below(n * n - n);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpGlobal(budget), Constraint::SpGlobal(budget)],
+            20,
+        );
+        let res = palm4msa(&a, FactorState::default_init(&[(n, n), (n, n)]), &cfg);
+        for w in res.objective_trace.windows(2) {
+            ensure(
+                w[1] <= w[0] * (1.0 + 1e-7) + 1e-10,
+                format!("ascent {} -> {}", w[0], w[1]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faust_apply_linear() {
+    // apply(ax + by) == a·apply(x) + b·apply(y).
+    check("faust linearity", &cfg(40), |rng| {
+        let depth = 1 + rng.below(4);
+        let mut dims = vec![1 + rng.below(10)];
+        for _ in 0..depth {
+            dims.push(1 + rng.below(10));
+        }
+        let mats: Vec<Mat> = (0..depth)
+            .map(|i| {
+                let nz = 1 + rng.below(dims[i + 1] * dims[i]);
+                gen::sparse_mat(rng, dims[i + 1], dims[i], nz)
+            })
+            .collect();
+        let f = Faust::from_dense_factors(&mats, rng.range(0.3, 2.0));
+        let x = rng.gauss_vec(f.cols());
+        let y = rng.gauss_vec(f.cols());
+        let (a, b) = (rng.gauss(), rng.gauss());
+        let mixed: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| a * xi + b * yi).collect();
+        let lhs = f.apply(&mixed);
+        let fx = f.apply(&x);
+        let fy = f.apply(&y);
+        for i in 0..f.rows() {
+            let rhs = a * fx[i] + b * fy[i];
+            ensure((lhs[i] - rhs).abs() < 1e-9 * (1.0 + rhs.abs()), "not linear")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faust_transpose_adjoint() {
+    // <Fx, y> == <x, Fᵀy> — the adjoint identity the solvers rely on.
+    check("adjoint identity", &cfg(40), |rng| {
+        let mats = vec![
+            gen::sparse_mat(rng, 6, 8, 20),
+            gen::sparse_mat(rng, 5, 6, 15),
+        ];
+        let f = Faust::from_dense_factors(&mats, 1.3);
+        let x = rng.gauss_vec(8);
+        let y = rng.gauss_vec(5);
+        let fx = f.apply(&x);
+        let fty = f.apply_t(&y);
+        let lhs: f64 = fx.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let rhs: f64 = x.iter().zip(&fty).map(|(a, b)| a * b).sum();
+        ensure((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), format!("{lhs} != {rhs}"))
+    });
+}
+
+#[test]
+fn prop_qr_and_svd_reconstruct() {
+    check("qr/svd reconstruct", &cfg(25), |rng| {
+        let m = 2 + rng.below(10);
+        let n = 2 + rng.below(10);
+        let a = gen::mat_shaped(rng, m, n);
+        let (q, r) = qr_thin(&a);
+        ensure(q.matmul(&r).rel_fro_err(&a) < 1e-10, "qr reconstruct")?;
+        let svd = svd_jacobi(&a);
+        ensure(svd.reconstruct().rel_fro_err(&a) < 1e-8, "svd reconstruct")?;
+        // Least squares residual is orthogonal to the column space
+        // (lstsq is defined for overdetermined systems: transpose if needed).
+        let a = if m >= n { a } else { a.t() };
+        let m = a.rows();
+        let b = rng.gauss_vec(m);
+        let x = lstsq(&a, &b);
+        let ax = a.matvec(&x);
+        let resid: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let back = a.matvec_t(&resid);
+        let bn: f64 = back.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let scale: f64 = 1.0 + b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        ensure(bn < 1e-7 * scale, format!("normal equations violated: {bn}"))
+    });
+}
+
+#[test]
+fn prop_rc_accounting_matches_counts() {
+    check("rc accounting", &cfg(40), |rng| {
+        let nz1 = 1 + rng.below(40);
+        let nz2 = 1 + rng.below(30);
+        let mats = vec![
+            gen::sparse_mat(rng, 7, 9, nz1),
+            gen::sparse_mat(rng, 6, 7, nz2),
+        ];
+        let nnz_total: usize = mats.iter().map(|m| m.nnz()).sum();
+        let f = Faust::from_dense_factors(&mats, 1.0);
+        ensure(f.s_tot() == nnz_total, "s_tot mismatch")?;
+        let rc = nnz_total as f64 / (6.0 * 9.0);
+        ensure((f.rc() - rc).abs() < 1e-12, "rc mismatch")?;
+        ensure(f.flops_per_matvec() == 2 * nnz_total, "flops mismatch")
+    });
+}
