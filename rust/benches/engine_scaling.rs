@@ -1,0 +1,109 @@
+//! Engine scaling: planned + pooled apply vs the seed's serial
+//! per-factor CSR chain, across Hadamard, MEG-like, and dictionary-like
+//! operators, single- vs multi-threaded, with arena-alloc accounting.
+//!
+//! Acceptance target (ISSUE 1): for a 1024×1024 operator with ≥4 factors
+//! at batch ≥ 32, planned multi-threaded apply ≥ 2× the naive serial
+//! chain, with zero steady-state allocations in the apply loop.
+
+use faust::bench_util::{fmt, time_auto, Table};
+use faust::engine::ApplyEngine;
+use faust::faust::Faust;
+use faust::linalg::Mat;
+use faust::rng::Rng;
+use faust::sparse::{Coo, Csr};
+use faust::transforms::hadamard_faust;
+use std::hint::black_box;
+
+/// Random rightmost-first chain with `nnz_per_row` entries per factor row.
+fn random_chain(dims: &[usize], nnz_per_row: usize, seed: u64) -> Faust {
+    let mut rng = Rng::new(seed);
+    let factors: Vec<Csr> = (0..dims.len() - 1)
+        .map(|i| {
+            let (r, c) = (dims[i + 1], dims[i]);
+            let mut coo = Coo::new(r, c);
+            for row in 0..r {
+                for col in rng.sample_indices(c, nnz_per_row.min(c)) {
+                    coo.push(row, col, rng.gauss());
+                }
+            }
+            Csr::from_coo(&coo)
+        })
+        .collect();
+    Faust::new(factors, 1.0)
+}
+
+fn main() {
+    let full = std::env::var("FAUST_BENCH_FULL").is_ok();
+    let ms = if full { 150.0 } else { 50.0 };
+    let ops: Vec<(&str, Faust)> = vec![
+        ("hadamard-1024 (10 factors)", hadamard_faust(1024)),
+        (
+            "meg-like 256x1024 (4 factors)",
+            random_chain(&[1024, 1024, 1024, 1024, 256], 8, 1),
+        ),
+        (
+            "dict-like 64x512 (3 factors)",
+            random_chain(&[512, 256, 128, 64], 6, 2),
+        ),
+    ];
+    println!("# engine scaling — planned/pooled apply vs naive serial per-factor CSR chain\n");
+    let mut table = Table::new(&[
+        "operator",
+        "batch",
+        "threads",
+        "naive_us",
+        "planned_us",
+        "speedup",
+        "arena_allocs",
+        "arena_reuses",
+    ]);
+    let mut acceptance: Option<(f64, u64)> = None;
+    for (name, fst) in &ops {
+        let mut rng = Rng::new(7);
+        for &batch in &[1usize, 32, 128] {
+            let x = Mat::randn(fst.cols(), batch, &mut rng);
+            let tn = time_auto(ms, || black_box(fst.apply_mat_naive(black_box(&x))));
+            for &threads in &[1usize, 2, 4] {
+                let engine = ApplyEngine::with_threads(threads);
+                let op = engine.op_batch_hint(fst, batch);
+                let mut out = Mat::zeros(fst.rows(), batch);
+                // Warm the arena, then measure the steady state.
+                op.apply_batch_into(&x, &mut out);
+                let warm = engine.metrics();
+                let tp = time_auto(ms, || {
+                    op.apply_batch_into(black_box(&x), &mut out);
+                });
+                let m = engine.metrics();
+                let steady_allocs = m.arena_allocs - warm.arena_allocs;
+                let steady_reuses = m.arena_reuses - warm.arena_reuses;
+                let speedup = tn.median_ns / tp.median_ns;
+                table.row(&[
+                    name.to_string(),
+                    batch.to_string(),
+                    threads.to_string(),
+                    fmt(tn.median_us()),
+                    fmt(tp.median_us()),
+                    fmt(speedup),
+                    steady_allocs.to_string(),
+                    steady_reuses.to_string(),
+                ]);
+                if *name == ops[0].0 && batch == 32 && threads == 4 {
+                    acceptance = Some((speedup, steady_allocs));
+                }
+            }
+        }
+    }
+    table.print();
+    if let Some((speedup, allocs)) = acceptance {
+        let speed_ok = speedup >= 2.0;
+        let alloc_ok = allocs == 0;
+        println!(
+            "\n# acceptance (1024x1024, 10 factors, batch=32, threads=4): \
+             speedup={speedup:.2}x [{}], steady-state arena allocs={allocs} [{}]",
+            if speed_ok { "PASS >=2x" } else { "FAIL <2x" },
+            if alloc_ok { "PASS zero-alloc" } else { "FAIL" },
+        );
+    }
+    println!("# naive = serial per-factor CSR spmm with per-layer allocation (seed apply path)");
+}

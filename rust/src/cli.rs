@@ -63,7 +63,8 @@ impl Args {
 
     /// Was a boolean flag present?
     pub fn flag(&self, key: &str) -> bool {
-        self.flags.iter().any(|f| f == key) || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+        self.flags.iter().any(|f| f == key)
+            || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
     }
 }
 
@@ -84,9 +85,16 @@ SUBCOMMANDS:
   denoise     --size 128 --sigma 30 --atoms 128 [--stride 2]
               FAuST vs K-SVD vs DCT image denoising (paper Fig. 12, scaled)
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
-              run the operator-serving coordinator on a Hadamard FAuST
+              [--threads 2]
+              run the operator-serving coordinator on a Hadamard FAuST,
+              planned + parallelized by the apply engine
+  engine      --n 1024 [--threads 4] [--batch 32] [--plan dump]
+              compile a cost-modeled execution plan, optionally dump it,
+              and time planned/pooled apply vs the naive factor chain
   runtime     [--artifacts artifacts]
               check PJRT artifacts load + execute, compare vs rust-native
+              (needs --features pjrt plus the vendored xla/anyhow deps
+              uncommented in rust/Cargo.toml)
   help        print this message
 ";
 

@@ -10,6 +10,10 @@
 //! backend, amortizes executable dispatch. Bounded queues give
 //! backpressure; metrics are lock-free atomics.
 //!
+//! Operators are best registered as [`EngineOp`]s (see [`engine_ops`]):
+//! the batch a worker executes then runs through the engine's cost-modeled
+//! plan, row-parallel pooled spmm, and zero-alloc arena.
+//!
 //! tokio is not available offline; a compute-bound matvec service needs
 //! threads, not async IO, so the pool is `std::thread` + channels.
 
@@ -19,6 +23,7 @@ mod metrics;
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsSnapshot};
 
+use crate::engine::{ApplyEngine, EngineOp};
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use std::collections::HashMap;
@@ -60,12 +65,47 @@ impl BatchOp for Faust {
     fn cols(&self) -> usize {
         Faust::cols(self)
     }
+    /// Routed through the cached engine plan (see [`crate::engine`]).
     fn apply_batch(&self, x: &Mat) -> Mat {
         self.apply_mat(x)
     }
     fn flops_per_matvec(&self) -> usize {
         self.flops_per_matvec()
     }
+}
+
+impl BatchOp for EngineOp {
+    fn rows(&self) -> usize {
+        EngineOp::rows(self)
+    }
+    fn cols(&self) -> usize {
+        EngineOp::cols(self)
+    }
+    /// Planned, pool-parallel, arena-backed batch apply.
+    fn apply_batch(&self, x: &Mat) -> Mat {
+        EngineOp::apply_batch(self, x)
+    }
+    fn flops_per_matvec(&self) -> usize {
+        EngineOp::flops_per_matvec(self)
+    }
+}
+
+/// Plan each FAμST on `engine` and box the resulting [`EngineOp`]s for
+/// registration — the standard way to stand up an engine-backed service.
+/// Arenas are pre-warmed for `batch_hint`-column batches.
+pub fn engine_ops(
+    engine: &ApplyEngine,
+    ops: Vec<(String, Faust)>,
+    batch_hint: usize,
+) -> Vec<(String, Arc<dyn BatchOp>)> {
+    ops.into_iter()
+        .map(|(name, f)| {
+            (
+                name,
+                Arc::new(engine.op_batch_hint(&f, batch_hint)) as Arc<dyn BatchOp>,
+            )
+        })
+        .collect()
 }
 
 /// Coordinator configuration.
@@ -475,6 +515,30 @@ mod tests {
             assert!((yd[i] - yf[i]).abs() < 1e-10);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn engine_backed_ops_serve_correctly() {
+        let n = 32;
+        let h = crate::transforms::hadamard(n);
+        let hf = crate::transforms::hadamard_faust(n);
+        let engine = crate::engine::ApplyEngine::with_threads(2);
+        let ops = engine_ops(&engine, vec![("f".to_string(), hf)], 8);
+        let coord = Coordinator::start(ops, CoordinatorConfig::default());
+        let client = coord.client();
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let x = rng.gauss_vec(n);
+            let y = client.apply("f", x.clone()).unwrap();
+            let want = h.matvec(&x);
+            for i in 0..n {
+                assert!((y[i] - want[i]).abs() < 1e-10);
+            }
+        }
+        coord.shutdown();
+        let m = engine.metrics();
+        assert!(m.applies >= 1, "engine never executed a batch");
+        assert_eq!(m.plans_compiled, 1);
     }
 
     #[test]

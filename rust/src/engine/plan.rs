@@ -1,0 +1,585 @@
+//! Cost-modeled execution plans for multi-layer apply.
+//!
+//! A [`ApplyPlan`] is compiled once per operator and reused for every
+//! apply. Compilation does three things the naive per-factor CSR chain
+//! cannot:
+//!
+//! 1. **Strategy selection** — a flop/byte cost model (`flops + β·bytes`)
+//!    scores each factor as CSR spmm vs dense GEMM; a factor runs dense
+//!    when it clears the density threshold *and* the model prices the
+//!    dense pass cheaper (regular access beats index-chasing once most
+//!    entries are filled — with the default β = 0.25 the crossover sits
+//!    near density 0.8, and raising β pushes it lower).
+//! 2. **Fusion** — adjacent *tiny* factors are multiplied out at plan time
+//!    (sparse `spgemm`) when the precomputed product strictly reduces
+//!    total apply flops; the classic case is a chain of small residual
+//!    factors left over from hierarchical factorization.
+//! 3. **Transpose-aware compilation** — on first transpose apply the
+//!    chain is materialized as transposed kernels (lazily, so
+//!    forward-only operators pay nothing), making `apply_t` the same
+//!    row-parallel, output-partitioned code path as `apply` instead of a
+//!    scatter.
+//!
+//! λ is folded into the last stage at compile time, removing the final
+//! scale pass from the hot loop.
+
+use super::arena::Arena;
+use super::pool::{par_gemm_into, par_spmm_into, ThreadPool};
+use crate::faust::Faust;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use std::sync::OnceLock;
+
+/// Tuning knobs for plan compilation.
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    /// Density floor below which a factor always stays CSR; at or above
+    /// it, the flop/byte cost model decides between CSR and dense GEMM.
+    pub dense_threshold: f64,
+    /// Attempt fusing adjacent factors when both sides are small enough.
+    pub fuse: bool,
+    /// Only factors with `nnz ≤ fuse_nnz_cap` are fusion candidates
+    /// (keeps plan-time spgemm cheap and skips hopeless large pairs).
+    pub fuse_nnz_cap: usize,
+    /// β in the stage cost `flops + β·bytes` — how expensive a byte of
+    /// memory traffic is relative to a flop on the target machine.
+    pub bytes_per_flop_weight: f64,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            dense_threshold: 0.25,
+            fuse: true,
+            fuse_nnz_cap: 8192,
+            bytes_per_flop_weight: 0.25,
+        }
+    }
+}
+
+/// Kernel variant chosen for one stage.
+#[derive(Clone, Debug)]
+pub enum StageKernel {
+    /// Row-parallel CSR spmm.
+    Sparse(Csr),
+    /// Row-parallel dense GEMM over the densified factor.
+    Dense(Mat),
+}
+
+/// One executable layer of the plan (possibly several fused factors).
+#[derive(Clone, Debug)]
+pub struct Stage {
+    kernel: StageKernel,
+    /// Half-open range of original factor indices covered (len > 1 ⇒
+    /// fused). Indices refer to the rightmost-first factor order.
+    factor_range: (usize, usize),
+}
+
+impl Stage {
+    pub fn rows(&self) -> usize {
+        match &self.kernel {
+            StageKernel::Sparse(s) => s.rows(),
+            StageKernel::Dense(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match &self.kernel {
+            StageKernel::Sparse(s) => s.cols(),
+            StageKernel::Dense(m) => m.cols(),
+        }
+    }
+
+    /// Stored non-zeros (dense stages count every entry).
+    pub fn nnz(&self) -> usize {
+        match &self.kernel {
+            StageKernel::Sparse(s) => s.nnz(),
+            StageKernel::Dense(m) => m.rows() * m.cols(),
+        }
+    }
+
+    /// Flops for one matvec through this stage.
+    pub fn flops(&self) -> usize {
+        2 * self.nnz()
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.kernel, StageKernel::Dense(_))
+    }
+
+    pub fn is_fused(&self) -> bool {
+        self.factor_range.1 - self.factor_range.0 > 1
+    }
+
+    pub fn factor_range(&self) -> (usize, usize) {
+        self.factor_range
+    }
+
+    /// Cost-model score: `flops + β·bytes`.
+    fn cost(&self, beta: f64) -> f64 {
+        match &self.kernel {
+            StageKernel::Sparse(s) => sparse_cost(s.nnz(), s.rows(), s.cols(), beta),
+            StageKernel::Dense(m) => dense_cost(m.rows(), m.cols(), beta),
+        }
+    }
+
+    /// Execute: `out = K · input` with `input ∈ R^{cols×bcols}` row-major.
+    fn run(&self, pool: &ThreadPool, input: &[f64], bcols: usize, out: &mut [f64]) {
+        match &self.kernel {
+            StageKernel::Sparse(s) => par_spmm_into(pool, s, input, bcols, out),
+            StageKernel::Dense(m) => par_gemm_into(pool, m, input, bcols, out),
+        }
+    }
+
+    /// Transposed copy of this stage (kernel materialized transposed).
+    fn transposed(&self) -> Stage {
+        let kernel = match &self.kernel {
+            StageKernel::Sparse(s) => StageKernel::Sparse(s.transpose()),
+            StageKernel::Dense(m) => StageKernel::Dense(m.t()),
+        };
+        Stage { kernel, factor_range: self.factor_range }
+    }
+
+    fn scale(&mut self, s: f64) {
+        match &mut self.kernel {
+            StageKernel::Sparse(c) => c.scale(s),
+            StageKernel::Dense(m) => m.scale(s),
+        }
+    }
+}
+
+/// Modeled cost of one CSR spmv: flops + β · bytes touched
+/// (vals f64 + col indices u32 per nnz, row pointers, in/out vectors).
+fn sparse_cost(nnz: usize, rows: usize, cols: usize, beta: f64) -> f64 {
+    let flops = 2 * nnz;
+    let bytes = 12 * nnz + 4 * (rows + 1) + 8 * (rows + cols);
+    flops as f64 + beta * bytes as f64
+}
+
+/// Modeled cost of one dense GEMV over the densified factor.
+fn dense_cost(rows: usize, cols: usize, beta: f64) -> f64 {
+    let flops = 2 * rows * cols;
+    let bytes = 8 * rows * cols + 8 * (rows + cols);
+    flops as f64 + beta * bytes as f64
+}
+
+/// Compiled execution plan for one FAμST operator.
+#[derive(Clone, Debug)]
+pub struct ApplyPlan {
+    /// Forward chain, applied first-to-last (`stages[0]` consumes x).
+    stages: Vec<Stage>,
+    /// Transpose chain, applied first-to-last (pre-transposed kernels),
+    /// built lazily on the first transpose apply.
+    t_stages: OnceLock<Vec<Stage>>,
+    rows: usize,
+    cols: usize,
+    /// Largest intermediate dimension (scratch sizing).
+    max_dim: usize,
+    lambda: f64,
+    n_factors: usize,
+    /// Flops of the naive per-factor CSR chain (2·s_tot).
+    naive_flops: usize,
+}
+
+impl ApplyPlan {
+    /// Compile a plan for `faust` under `cfg`.
+    pub fn compile(faust: &Faust, cfg: &PlanConfig) -> ApplyPlan {
+        let factors = faust.factors();
+        // 1. Fusion pass (greedy, rightmost-first): precompute products of
+        //    adjacent tiny factors when that strictly reduces apply flops.
+        let mut fused: Vec<(Csr, (usize, usize))> = Vec::with_capacity(factors.len());
+        let mut cur = factors[0].clone();
+        let mut range = (0usize, 1usize);
+        for (j, next) in factors.iter().enumerate().skip(1) {
+            let candidate = cfg.fuse
+                && cur.nnz() <= cfg.fuse_nnz_cap
+                && next.nnz() <= cfg.fuse_nnz_cap;
+            if candidate {
+                // Chain order: `next` applies after `cur` ⇒ product next·cur.
+                let product = next.spgemm(&cur);
+                if product.nnz() < cur.nnz() + next.nnz() {
+                    cur = product;
+                    range.1 = j + 1;
+                    continue;
+                }
+            }
+            fused.push((cur, range));
+            cur = next.clone();
+            range = (j, j + 1);
+        }
+        fused.push((cur, range));
+
+        // 2. Strategy selection: above the density floor, let the
+        //    flop/byte model price CSR spmm against dense GEMM.
+        let beta = cfg.bytes_per_flop_weight;
+        let mut stages: Vec<Stage> = fused
+            .into_iter()
+            .map(|(csr, factor_range)| {
+                let dense_wins = csr.density() >= cfg.dense_threshold
+                    && dense_cost(csr.rows(), csr.cols(), beta)
+                        <= sparse_cost(csr.nnz(), csr.rows(), csr.cols(), beta);
+                let kernel = if dense_wins {
+                    StageKernel::Dense(csr.to_dense())
+                } else {
+                    StageKernel::Sparse(csr)
+                };
+                Stage { kernel, factor_range }
+            })
+            .collect();
+
+        // 3. Fold λ into the last stage (drops the scale pass at apply).
+        let lambda = faust.lambda();
+        if lambda != 1.0 {
+            stages.last_mut().unwrap().scale(lambda);
+        }
+
+        let rows = faust.rows();
+        let cols = faust.cols();
+        let max_dim = stages
+            .iter()
+            .map(|s| s.rows().max(s.cols()))
+            .max()
+            .unwrap();
+        ApplyPlan {
+            stages,
+            t_stages: OnceLock::new(),
+            rows,
+            cols,
+            max_dim,
+            lambda,
+            n_factors: factors.len(),
+            naive_flops: 2 * faust.s_tot(),
+        }
+    }
+
+    /// The transpose chain, materialized on first use (forward-only
+    /// operators never pay for the transposed copies).
+    fn t_chain(&self) -> &[Stage] {
+        self.t_stages
+            .get_or_init(|| self.stages.iter().rev().map(Stage::transposed).collect())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Largest intermediate dimension along the chain.
+    pub fn max_dim(&self) -> usize {
+        self.max_dim
+    }
+
+    /// Flops of one planned matvec.
+    pub fn planned_flops(&self) -> usize {
+        self.stages.iter().map(Stage::flops).sum()
+    }
+
+    /// Flops of the naive per-factor CSR chain this plan replaces.
+    pub fn naive_flops(&self) -> usize {
+        self.naive_flops
+    }
+
+    /// Scratch elements needed for a batch of `bcols` columns.
+    pub fn scratch_len(&self, bcols: usize) -> usize {
+        self.max_dim * bcols.max(1)
+    }
+
+    /// Execute the forward chain on a row-major column-batch:
+    /// `out = λ·S_J⋯S_1 · x`, `x ∈ R^{cols×bcols}`, `out ∈ R^{rows×bcols}`.
+    /// Steady-state allocation-free: scratch comes from `arena`.
+    pub fn execute_batch_into(
+        &self,
+        pool: &ThreadPool,
+        arena: &mut Arena,
+        x: &[f64],
+        bcols: usize,
+        out: &mut [f64],
+    ) {
+        assert_eq!(x.len(), self.cols * bcols, "plan execute: x dim mismatch");
+        assert_eq!(out.len(), self.rows * bcols, "plan execute: out dim mismatch");
+        run_chain(&self.stages, pool, arena, self.scratch_len(bcols), x, bcols, out);
+    }
+
+    /// Execute the transpose chain: `out = λ·S_1ᵀ⋯S_Jᵀ · x`.
+    pub fn execute_t_batch_into(
+        &self,
+        pool: &ThreadPool,
+        arena: &mut Arena,
+        x: &[f64],
+        bcols: usize,
+        out: &mut [f64],
+    ) {
+        assert_eq!(x.len(), self.rows * bcols, "plan execute_t: x dim mismatch");
+        assert_eq!(out.len(), self.cols * bcols, "plan execute_t: out dim mismatch");
+        run_chain(self.t_chain(), pool, arena, self.scratch_len(bcols), x, bcols, out);
+    }
+
+    /// Single-vector forward apply (`bcols = 1`).
+    pub fn execute_into(&self, pool: &ThreadPool, arena: &mut Arena, x: &[f64], y: &mut [f64]) {
+        self.execute_batch_into(pool, arena, x, 1, y);
+    }
+
+    /// Single-vector transpose apply.
+    pub fn execute_t_into(&self, pool: &ThreadPool, arena: &mut Arena, x: &[f64], y: &mut [f64]) {
+        self.execute_t_batch_into(pool, arena, x, 1, y);
+    }
+
+    /// Human-readable plan dump (the CLI's `--plan dump`).
+    pub fn dump(&self, cfg: &PlanConfig) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "ApplyPlan {}x{}: {} factor(s) -> {} stage(s), lambda={:.6} (folded)\n",
+            self.rows,
+            self.cols,
+            self.n_factors,
+            self.stages.len(),
+            self.lambda,
+        ));
+        out.push_str(&format!(
+            "  flops/matvec: naive={} planned={} ({:.2}x)\n",
+            self.naive_flops,
+            self.planned_flops(),
+            self.naive_flops as f64 / self.planned_flops().max(1) as f64,
+        ));
+        out.push_str(&format!("  max intermediate dim: {}\n", self.max_dim));
+        for (i, s) in self.stages.iter().enumerate() {
+            let (f0, f1) = s.factor_range();
+            let kind = match (&s.kernel, s.is_fused()) {
+                (StageKernel::Sparse(_), false) => "sparse".to_string(),
+                (StageKernel::Dense(_), false) => "dense ".to_string(),
+                (StageKernel::Sparse(_), true) => format!("sparse fused[{f0}..{f1}]"),
+                (StageKernel::Dense(_), true) => format!("dense  fused[{f0}..{f1}]"),
+            };
+            out.push_str(&format!(
+                "  stage {i}: {kind} {}x{} nnz={} density={:.3} cost={:.0}\n",
+                s.rows(),
+                s.cols(),
+                s.nnz(),
+                s.nnz() as f64 / (s.rows() * s.cols()) as f64,
+                s.cost(cfg.bytes_per_flop_weight),
+            ));
+        }
+        out
+    }
+}
+
+/// Shared chain runner: ping-pong through arena scratch.
+fn run_chain(
+    stages: &[Stage],
+    pool: &ThreadPool,
+    arena: &mut Arena,
+    scratch_len: usize,
+    x: &[f64],
+    bcols: usize,
+    out: &mut [f64],
+) {
+    if stages.len() == 1 {
+        stages[0].run(pool, x, bcols, out);
+        return;
+    }
+    let (mut src, mut dst) = arena.acquire(scratch_len);
+    let first = &stages[0];
+    first.run(pool, x, bcols, &mut src[..first.rows() * bcols]);
+    let mut cur_rows = first.rows();
+    for st in &stages[1..stages.len() - 1] {
+        st.run(pool, &src[..cur_rows * bcols], bcols, &mut dst[..st.rows() * bcols]);
+        cur_rows = st.rows();
+        std::mem::swap(&mut src, &mut dst);
+    }
+    let last = stages.last().unwrap();
+    last.run(pool, &src[..cur_rows * bcols], bcols, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sparse_mat(rng: &mut Rng, r: usize, c: usize, nnz: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        for i in rng.sample_indices(r * c, nnz.min(r * c)) {
+            m.data_mut()[i] = rng.gauss();
+        }
+        m
+    }
+
+    fn chain(rng: &mut Rng, dims: &[usize], fill: f64, lambda: f64) -> (Faust, Mat) {
+        let mats: Vec<Mat> = (0..dims.len() - 1)
+            .map(|i| {
+                let (r, c) = (dims[i + 1], dims[i]);
+                let nnz = ((r * c) as f64 * fill).ceil() as usize;
+                sparse_mat(rng, r, c, nnz.max(1))
+            })
+            .collect();
+        let refs: Vec<&Mat> = mats.iter().rev().collect();
+        let dense = crate::linalg::chain_product(&refs, dims[0]).scaled(lambda);
+        (Faust::from_dense_factors(&mats, lambda), dense)
+    }
+
+    fn apply_via_plan(plan: &ApplyPlan, x: &[f64]) -> Vec<f64> {
+        let pool = ThreadPool::serial();
+        let mut arena = Arena::new();
+        let mut y = vec![0.0; plan.rows()];
+        plan.execute_into(&pool, &mut arena, x, &mut y);
+        y
+    }
+
+    #[test]
+    fn planned_apply_matches_dense_reference() {
+        let mut rng = Rng::new(501);
+        for fill in [0.05, 0.2, 0.6] {
+            let (f, dense) = chain(&mut rng, &[9, 7, 7, 5], fill, 1.4);
+            let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+            let x = rng.gauss_vec(9);
+            let got = apply_via_plan(&plan, &x);
+            let want = dense.matvec(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()), "fill={fill}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_transpose_matches_dense_reference() {
+        let mut rng = Rng::new(502);
+        let (f, dense) = chain(&mut rng, &[8, 6, 10, 4], 0.3, 0.7);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let pool = ThreadPool::serial();
+        let mut arena = Arena::new();
+        let x = rng.gauss_vec(4);
+        let mut y = vec![0.0; 8];
+        plan.execute_t_into(&pool, &mut arena, &x, &mut y);
+        let want = dense.matvec_t(&x);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn dense_threshold_selects_gemm() {
+        let mut rng = Rng::new(503);
+        let (f, _) = chain(&mut rng, &[12, 12], 0.9, 1.0);
+        let cfg = PlanConfig { fuse: false, ..PlanConfig::default() };
+        let plan = ApplyPlan::compile(&f, &cfg);
+        assert!(plan.stages()[0].is_dense());
+        let sparse_cfg = PlanConfig { dense_threshold: 0.95, fuse: false, ..PlanConfig::default() };
+        let plan2 = ApplyPlan::compile(&f, &sparse_cfg);
+        assert!(!plan2.stages()[0].is_dense());
+    }
+
+    #[test]
+    fn fusion_reduces_flops_and_preserves_results() {
+        let mut rng = Rng::new(504);
+        // Diagonal-ish tiny factors: products stay tiny, so fusing wins.
+        let d1 = Mat::from_fn(6, 6, |i, j| if i == j { 1.0 + 0.1 * i as f64 } else { 0.0 });
+        let d2 = Mat::from_fn(6, 6, |i, j| if i == j { 2.0 - 0.1 * i as f64 } else { 0.0 });
+        let d3 = sparse_mat(&mut rng, 5, 6, 10);
+        let f = Faust::from_dense_factors(&[d1.clone(), d2.clone(), d3.clone()], 1.0);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        assert!(plan.n_stages() < 3, "diagonal factors should fuse");
+        assert!(plan.planned_flops() < plan.naive_flops());
+        let x = rng.gauss_vec(6);
+        let want = d3.matmul(&d2.matmul(&d1)).matvec(&x);
+        let got = apply_via_plan(&plan, &x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn fusion_rejected_when_it_grows_flops() {
+        // Hadamard butterflies: fusing two 2-nnz/row stages yields
+        // 4 nnz/row — no flop reduction, so the plan must keep them apart.
+        let f = crate::transforms::hadamard_faust(32);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        assert_eq!(plan.n_stages(), f.n_factors());
+        assert_eq!(plan.planned_flops(), plan.naive_flops());
+    }
+
+    #[test]
+    fn lambda_folded_once() {
+        let mut rng = Rng::new(505);
+        let (f, dense) = chain(&mut rng, &[5, 5, 5], 0.4, 3.25);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let x = rng.gauss_vec(5);
+        let got = apply_via_plan(&plan, &x);
+        let want = dense.matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
+        }
+        // Transpose path sees λ exactly once too.
+        let pool = ThreadPool::serial();
+        let mut arena = Arena::new();
+        let mut yt = vec![0.0; 5];
+        plan.execute_t_into(&pool, &mut arena, &x, &mut yt);
+        let want_t = dense.matvec_t(&x);
+        for (g, w) in yt.iter().zip(&want_t) {
+            assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn single_factor_plan_runs_straight_through() {
+        let mut rng = Rng::new(506);
+        let (f, dense) = chain(&mut rng, &[7, 4], 0.5, 2.0);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        assert_eq!(plan.n_stages(), 1);
+        let mut arena = Arena::new();
+        let pool = ThreadPool::serial();
+        let x = rng.gauss_vec(7);
+        let mut y = vec![0.0; 4];
+        plan.execute_into(&pool, &mut arena, &x, &mut y);
+        // Single-stage chains never touch the arena.
+        assert_eq!(arena.allocs() + arena.reuses(), 0);
+        let want = dense.matvec(&x);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn batch_execution_matches_columnwise() {
+        let mut rng = Rng::new(507);
+        let (f, _) = chain(&mut rng, &[10, 8, 6], 0.3, 1.1);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let pool = ThreadPool::new(3);
+        let mut arena = Arena::new();
+        let b = 5;
+        let x = Mat::randn(10, b, &mut rng);
+        let mut out = vec![0.0; 6 * b];
+        plan.execute_batch_into(&pool, &mut arena, x.data(), b, &mut out);
+        for j in 0..b {
+            let xcol = x.col(j);
+            let ycol = apply_via_plan(&plan, &xcol);
+            for i in 0..6 {
+                assert!((out[i * b + j] - ycol[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dump_mentions_stages_and_flops() {
+        let f = crate::transforms::hadamard_faust(16);
+        let cfg = PlanConfig::default();
+        let plan = ApplyPlan::compile(&f, &cfg);
+        let d = plan.dump(&cfg);
+        assert!(d.contains("ApplyPlan 16x16"));
+        assert!(d.contains("stage 0"));
+        assert!(d.contains("flops/matvec"));
+    }
+}

@@ -1,0 +1,429 @@
+//! Chunked worker pool + row-partitioned parallel sparse/dense kernels.
+//!
+//! `std::thread` only (no rayon in the offline vendor set). The pool keeps
+//! `n_threads − 1` persistent workers; the calling thread executes the
+//! first chunk itself, so `ThreadPool::new(1)` degenerates to inline serial
+//! execution with zero dispatch overhead. Work items are contiguous row
+//! ranges of an output matrix, which makes every kernel here data-race-free
+//! by construction: each range owns a disjoint slice of the output.
+//!
+//! The parallel `spmv`/`spmm`/`gemm` entry points are shared by the
+//! [`crate::engine`] executor and the coordinator's batch workers.
+
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Target amount of work (flops) per dispatched chunk; below this,
+/// splitting costs more in wake-ups than it saves in compute.
+const PAR_GRAIN_FLOPS: usize = 16_384;
+
+/// One scheduled row range. The closure pointer is only dereferenced while
+/// the submitting call is blocked in [`Latch::wait`], which keeps the
+/// borrow alive — the scoped-pool invariant.
+struct Task {
+    f: *const (dyn Fn(usize, usize) + Sync),
+    start: usize,
+    end: usize,
+    latch: Arc<Latch>,
+}
+
+// SAFETY: the raw closure pointer is valid for the task's whole lifetime
+// because `par_ranges` does not return until the latch opens.
+unsafe impl Send for Task {}
+
+/// Countdown latch with panic propagation.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Shared injector queue (mpsc receivers are not cloneable).
+struct TaskQueue {
+    q: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl TaskQueue {
+    fn new() -> Self {
+        TaskQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, t: Task) {
+        self.q.lock().unwrap().push_back(t);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Task> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(t) = g.pop_front() {
+                return Some(t);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Persistent chunked worker pool for row-partitioned kernels.
+pub struct ThreadPool {
+    queue: Arc<TaskQueue>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool executing with `n_threads` total threads (the caller counts as
+    /// one; `n_threads − 1` workers are spawned). `0` is treated as `1`.
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let queue = Arc::new(TaskQueue::new());
+        let mut workers = Vec::with_capacity(n_threads - 1);
+        for w in 0..n_threads - 1 {
+            let q = queue.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("faust-engine-{w}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawn engine worker"),
+            );
+        }
+        ThreadPool { queue, workers, n_threads }
+    }
+
+    /// Inline-only pool (no workers, no dispatch overhead).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Total threads participating in a `par_ranges` call.
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run `f(start, end)` over a partition of `[0, n)` into contiguous
+    /// chunks of at least `min_chunk` items, parallel across the pool.
+    /// Blocks until every chunk has finished; panics in any chunk are
+    /// re-raised here after all chunks complete.
+    pub fn par_ranges(&self, n: usize, min_chunk: usize, f: impl Fn(usize, usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        let min_chunk = min_chunk.max(1);
+        let max_chunks = (n + min_chunk - 1) / min_chunk;
+        let nchunks = self.n_threads.min(max_chunks).max(1);
+        if self.workers.is_empty() || nchunks == 1 {
+            f(0, n);
+            return;
+        }
+        let chunk = (n + nchunks - 1) / nchunks;
+        let ranges: Vec<(usize, usize)> = (0..nchunks)
+            .map(|c| (c * chunk, ((c + 1) * chunk).min(n)))
+            .filter(|(s, e)| s < e)
+            .collect();
+        let latch = Arc::new(Latch::new(ranges.len() - 1));
+        let fref: &(dyn Fn(usize, usize) + Sync) = &f;
+        let fptr = fref as *const (dyn Fn(usize, usize) + Sync);
+        for &(s, e) in &ranges[1..] {
+            self.queue.push(Task { f: fptr, start: s, end: e, latch: latch.clone() });
+        }
+        // The caller works too — chunk 0 runs inline.
+        let inline_panic = catch_unwind(AssertUnwindSafe(|| f(ranges[0].0, ranges[0].1)));
+        latch.wait();
+        if inline_panic.is_err() || latch.panicked.load(Ordering::Acquire) {
+            panic!("engine pool task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<TaskQueue>) {
+    while let Some(task) = queue.pop() {
+        // SAFETY: the submitter blocks on the latch until we count down,
+        // so the closure behind the raw pointer is still alive.
+        let f = unsafe { &*task.f };
+        let result = catch_unwind(AssertUnwindSafe(|| f(task.start, task.end)));
+        if result.is_err() {
+            task.latch.panicked.store(true, Ordering::Release);
+        }
+        task.latch.count_down();
+    }
+}
+
+/// Raw output pointer that may cross thread boundaries; every user hands
+/// each thread a disjoint row range, so aliased writes cannot occur.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Serial CSR spmm over an output row range, slice layout (row-major,
+/// `bcols` columns). `out` holds exactly rows `[start, end)`.
+fn spmm_rows(a: &Csr, b: &[f64], bcols: usize, start: usize, end: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), (end - start) * bcols);
+    for i in start..end {
+        let orow = &mut out[(i - start) * bcols..(i - start + 1) * bcols];
+        orow.fill(0.0);
+        let lo = a.indptr[i] as usize;
+        let hi = a.indptr[i + 1] as usize;
+        for k in lo..hi {
+            let av = a.vals[k];
+            let brow = &b[a.indices[k] as usize * bcols..][..bcols];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Serial dense GEMM over an output row range, slice layout.
+fn gemm_rows(a: &Mat, b: &[f64], bcols: usize, start: usize, end: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), (end - start) * bcols);
+    let k = a.cols();
+    for i in start..end {
+        let orow = &mut out[(i - start) * bcols..(i - start + 1) * bcols];
+        orow.fill(0.0);
+        let arow = a.row(i);
+        for (kk, &av) in arow.iter().enumerate().take(k) {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * bcols..][..bcols];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Minimum rows per chunk so each dispatched chunk carries at least
+/// [`PAR_GRAIN_FLOPS`] of work.
+fn grain_rows(total_flops: usize, rows: usize) -> usize {
+    let per_row = total_flops / rows.max(1);
+    (PAR_GRAIN_FLOPS / per_row.max(1)).max(1)
+}
+
+/// Row-parallel sparse × dense (slice layout): `out = A · B`,
+/// `B ∈ R^{A.cols × bcols}`, `out ∈ R^{A.rows × bcols}`.
+pub fn par_spmm_into(pool: &ThreadPool, a: &Csr, b: &[f64], bcols: usize, out: &mut [f64]) {
+    assert_eq!(b.len(), a.cols() * bcols, "par_spmm b dim mismatch");
+    assert_eq!(out.len(), a.rows() * bcols, "par_spmm out dim mismatch");
+    let min_rows = grain_rows(2 * a.nnz() * bcols, a.rows());
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.par_ranges(a.rows(), min_rows, |s, e| {
+        // SAFETY: ranges are disjoint, so each chunk owns its out rows.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(optr.0.add(s * bcols), (e - s) * bcols) };
+        spmm_rows(a, b, bcols, s, e, chunk);
+    });
+}
+
+/// Row-parallel dense GEMM (slice layout): `out = A · B`.
+pub fn par_gemm_into(pool: &ThreadPool, a: &Mat, b: &[f64], bcols: usize, out: &mut [f64]) {
+    assert_eq!(b.len(), a.cols() * bcols, "par_gemm b dim mismatch");
+    assert_eq!(out.len(), a.rows() * bcols, "par_gemm out dim mismatch");
+    let min_rows = grain_rows(2 * a.rows() * a.cols() * bcols, a.rows());
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.par_ranges(a.rows(), min_rows, |s, e| {
+        // SAFETY: disjoint ranges (see par_spmm_into).
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(optr.0.add(s * bcols), (e - s) * bcols) };
+        gemm_rows(a, b, bcols, s, e, chunk);
+    });
+}
+
+/// Row-parallel sparse matvec: `y = A x` (the `bcols = 1` case).
+pub fn par_spmv_into(pool: &ThreadPool, a: &Csr, x: &[f64], y: &mut [f64]) {
+    par_spmm_into(pool, a, x, 1, y);
+}
+
+/// Row-parallel dense matvec: `y = A x`.
+pub fn par_gemv_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
+    par_gemm_into(pool, a, x, 1, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn par_ranges_covers_everything_once() {
+        let pool = ThreadPool::new(4);
+        let n = 1013;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_ranges(n, 1, |s, e| {
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ThreadPool::serial();
+        assert_eq!(pool.n_threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.par_ranges(100, 10, |s, e| {
+            sum.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.par_ranges(0, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "engine pool task panicked")]
+    fn worker_panic_propagates() {
+        let pool = ThreadPool::new(4);
+        pool.par_ranges(100, 1, |s, _| {
+            if s > 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_task_panic() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.par_ranges(100, 1, |_, _| panic!("boom"));
+        }));
+        assert!(r.is_err());
+        // Pool still usable afterwards.
+        let sum = AtomicUsize::new(0);
+        pool.par_ranges(64, 1, |s, e| {
+            sum.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn par_spmm_matches_serial_spmm() {
+        let mut rng = Rng::new(301);
+        let pool = ThreadPool::new(4);
+        let cases = [(37usize, 29usize, 200usize, 5usize), (64, 64, 64, 1), (5, 80, 111, 7)];
+        for &(m, n, nnz, b) in &cases {
+            let mut d = Mat::zeros(m, n);
+            for i in rng.sample_indices(m * n, nnz.min(m * n)) {
+                d.data_mut()[i] = rng.gauss();
+            }
+            let s = Csr::from_dense(&d, 0.0);
+            let bm = Mat::randn(n, b, &mut rng);
+            let want = s.spmm(&bm);
+            let mut got = vec![0.0; m * b];
+            par_spmm_into(&pool, &s, bm.data(), b, &mut got);
+            for (g, w) in got.iter().zip(want.data()) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn par_gemm_matches_matmul() {
+        let mut rng = Rng::new(302);
+        let pool = ThreadPool::new(3);
+        let a = Mat::randn(41, 23, &mut rng);
+        let b = Mat::randn(23, 9, &mut rng);
+        let want = a.matmul(&b);
+        let mut got = vec![0.0; 41 * 9];
+        par_gemm_into(&pool, &a, b.data(), 9, &mut got);
+        for (g, w) in got.iter().zip(want.data()) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn par_spmv_matches_spmv() {
+        let mut rng = Rng::new(303);
+        let pool = ThreadPool::new(4);
+        let d = Mat::randn(130, 70, &mut rng);
+        let s = Csr::from_dense(&d, 0.0);
+        let x = rng.gauss_vec(70);
+        let want = s.spmv(&x);
+        let mut got = vec![0.0; 130];
+        par_spmv_into(&pool, &s, &x, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_share_pool() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(400 + t);
+                let d = Mat::randn(60, 40, &mut rng);
+                let s = Csr::from_dense(&d, 0.0);
+                let x = rng.gauss_vec(40);
+                for _ in 0..50 {
+                    let want = s.spmv(&x);
+                    let mut got = vec![0.0; 60];
+                    par_spmv_into(&p, &s, &x, &mut got);
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!((g - w).abs() < 1e-12);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

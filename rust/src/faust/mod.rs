@@ -4,12 +4,21 @@
 //! (`factors[0] = S_1` applies first to the input). Apply and transpose
 //! apply cost `O(s_tot)`; [`Faust::rc`]/[`Faust::rcg`] implement the
 //! paper's Definition II.1.
+//!
+//! Every apply path routes through the [`crate::engine`] subsystem: a
+//! cost-modeled [`ApplyPlan`] is compiled lazily on first use and cached
+//! (factors are immutable after construction, so the cache never goes
+//! stale), kernels run on the process-wide engine pool, and scratch comes
+//! from a per-thread ping-pong [`Arena`] — steady-state applies allocate
+//! only their output buffer.
 
+use crate::engine::{self, ApplyPlan, PlanConfig};
 use crate::linalg::{spectral_norm_iter, Mat};
 use crate::rng::Rng;
 use crate::sparse::{Coo, Csr};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
 /// Multi-layer sparse operator `λ · S_J ⋯ S_1 ∈ R^{m×n}`.
 #[derive(Clone, Debug)]
@@ -19,6 +28,8 @@ pub struct Faust {
     factors: Vec<Csr>,
     /// Global scale λ.
     lambda: f64,
+    /// Lazily-compiled engine plan shared by all apply paths.
+    plan: OnceLock<Arc<ApplyPlan>>,
 }
 
 impl Faust {
@@ -32,7 +43,14 @@ impl Faust {
                 "factor chain dimension mismatch"
             );
         }
-        Faust { factors, lambda }
+        Faust { factors, lambda, plan: OnceLock::new() }
+    }
+
+    /// The compiled execution plan (built on first use, then cached).
+    pub fn plan(&self) -> Arc<ApplyPlan> {
+        self.plan
+            .get_or_init(|| Arc::new(ApplyPlan::compile(self, &PlanConfig::default())))
+            .clone()
     }
 
     /// Build from dense factors, sparsifying exact zeros.
@@ -105,91 +123,73 @@ impl Faust {
             + 4 * (self.n_factors() + 1) // the a_1..a_{J+1} sizes
     }
 
-    /// Largest intermediate dimension along the chain (scratch sizing).
-    fn max_dim(&self) -> usize {
-        self.factors
-            .iter()
-            .map(|f| f.rows().max(f.cols()))
-            .max()
-            .unwrap()
-    }
-
-    /// Apply: `y = λ S_J ⋯ S_1 x` in `O(s_tot)`.
-    ///
-    /// Allocation-light hot path: two ping-pong scratch buffers instead of
-    /// one allocation per factor (§Perf).
+    /// Apply: `y = λ S_J ⋯ S_1 x` in `O(s_tot)`, through the cached
+    /// engine plan (fusion + per-factor strategy) with per-thread
+    /// ping-pong scratch — only the output vector is allocated.
     pub fn apply(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols(), "faust apply dim mismatch");
-        let cap = self.max_dim();
-        let mut a = vec![0.0; cap];
-        let mut b = vec![0.0; cap];
-        let f0 = &self.factors[0];
-        f0.spmv_into(x, &mut a[..f0.rows()]);
-        let mut cur_len = f0.rows();
-        let mut cur_is_a = true;
-        for f in &self.factors[1..] {
-            let (src, dst) = if cur_is_a {
-                (&a[..cur_len], &mut b[..f.rows()])
-            } else {
-                (&b[..cur_len], &mut a[..f.rows()])
-            };
-            f.spmv_into(src, dst);
-            cur_len = f.rows();
-            cur_is_a = !cur_is_a;
-        }
-        let mut out = if cur_is_a { a } else { b };
-        out.truncate(cur_len);
-        for v in &mut out {
-            *v *= self.lambda;
-        }
-        out
+        let plan = self.plan();
+        let mut y = vec![0.0; self.rows()];
+        engine::with_thread_arena(|arena| {
+            plan.execute_into(engine::global().pool(), arena, x, &mut y);
+        });
+        y
     }
 
-    /// Transpose apply: `y = λ S_1ᵀ ⋯ S_Jᵀ x`.
+    /// Transpose apply: `y = λ S_1ᵀ ⋯ S_Jᵀ x` (pre-transposed plan chain).
     pub fn apply_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows(), "faust apply_t dim mismatch");
-        let cap = self.max_dim();
-        let mut a = vec![0.0; cap];
-        let mut b = vec![0.0; cap];
-        let flast = self.factors.last().unwrap();
-        flast.spmv_t_into(x, &mut a[..flast.cols()]);
-        let mut cur_len = flast.cols();
-        let mut cur_is_a = true;
-        for f in self.factors[..self.factors.len() - 1].iter().rev() {
-            let (src, dst) = if cur_is_a {
-                (&a[..cur_len], &mut b[..f.cols()])
-            } else {
-                (&b[..cur_len], &mut a[..f.cols()])
-            };
-            f.spmv_t_into(src, dst);
-            cur_len = f.cols();
-            cur_is_a = !cur_is_a;
-        }
-        let mut out = if cur_is_a { a } else { b };
-        out.truncate(cur_len);
-        for v in &mut out {
-            *v *= self.lambda;
-        }
-        out
+        let plan = self.plan();
+        let mut y = vec![0.0; self.cols()];
+        engine::with_thread_arena(|arena| {
+            plan.execute_t_into(engine::global().pool(), arena, x, &mut y);
+        });
+        y
     }
 
     /// Batched apply: `Y = λ S_J ⋯ S_1 X` with `X ∈ R^{n×b}` column-batch.
     pub fn apply_mat(&self, x: &Mat) -> Mat {
-        assert_eq!(x.rows(), self.cols());
-        let mut cur = self.factors[0].spmm(x);
-        for f in &self.factors[1..] {
-            cur = f.spmm(&cur);
-        }
-        cur.scale(self.lambda);
-        cur
+        assert_eq!(x.rows(), self.cols(), "faust apply_mat dim mismatch");
+        let plan = self.plan();
+        let mut out = Mat::zeros(self.rows(), x.cols());
+        engine::with_thread_arena(|arena| {
+            plan.execute_batch_into(
+                engine::global().pool(),
+                arena,
+                x.data(),
+                x.cols(),
+                out.data_mut(),
+            );
+        });
+        out
     }
 
     /// Batched transpose apply.
     pub fn apply_t_mat(&self, x: &Mat) -> Mat {
-        assert_eq!(x.rows(), self.rows());
-        let mut cur = self.factors.last().unwrap().spmm_t(x);
-        for f in self.factors[..self.factors.len() - 1].iter().rev() {
-            cur = f.spmm_t(&cur);
+        assert_eq!(x.rows(), self.rows(), "faust apply_t_mat dim mismatch");
+        let plan = self.plan();
+        let mut out = Mat::zeros(self.cols(), x.cols());
+        engine::with_thread_arena(|arena| {
+            plan.execute_t_batch_into(
+                engine::global().pool(),
+                arena,
+                x.data(),
+                x.cols(),
+                out.data_mut(),
+            );
+        });
+        out
+    }
+
+    /// Reference batched apply: one serial CSR spmm per factor with a
+    /// fresh allocation each layer — the seed's pre-engine hot path, kept
+    /// as the baseline the engine benches and `faust engine` measure
+    /// against (never compiles or consults a plan).
+    pub fn apply_mat_naive(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.cols(), "faust apply_mat_naive dim mismatch");
+        let mut cur = self.factors[0].spmm(x);
+        for f in &self.factors[1..] {
+            cur = f.spmm(&cur);
         }
         cur.scale(self.lambda);
         cur
@@ -409,6 +409,65 @@ mod tests {
         let (f, dense) = small_faust(&mut rng);
         let re = f.relative_error_spectral(&dense, &mut rng);
         assert!(re < 1e-7, "re={re}");
+    }
+
+    #[test]
+    fn naive_and_planned_batched_apply_agree() {
+        let mut rng = Rng::new(90);
+        let (f, dense) = small_faust(&mut rng);
+        let x = Mat::randn(8, 4, &mut rng);
+        let planned = f.apply_mat(&x);
+        let naive = f.apply_mat_naive(&x);
+        assert!(planned.rel_fro_err(&naive) < 1e-12);
+        assert!(naive.rel_fro_err(&dense.matmul(&x)) < 1e-12);
+    }
+
+    #[test]
+    fn plan_is_cached_and_shared() {
+        let mut rng = Rng::new(89);
+        let (f, dense) = small_faust(&mut rng);
+        let p1 = f.plan();
+        let p2 = f.plan();
+        assert!(Arc::ptr_eq(&p1, &p2), "plan must be compiled once");
+        // A clone keeps a working (possibly shared) plan.
+        let g = f.clone();
+        let x = rng.gauss_vec(8);
+        let y1 = g.apply(&x);
+        let y2 = dense.matvec(&x);
+        for i in 0..6 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn from_dense_factors_never_counts_zeros() {
+        // Regression: explicitly-stored zeros must not inflate nnz and
+        // thereby corrupt the RC/RCG metrics (Definition II.1).
+        let m = Mat::from_vec(2, 2, vec![1.0, 0.0, -0.0, 3.0]);
+        let f = Faust::from_dense_factors(std::slice::from_ref(&m), 2.0);
+        assert_eq!(f.s_tot(), 2);
+        assert!((f.rc() - 0.5).abs() < 1e-15);
+        assert!((f.rcg() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_drops_explicit_zero_entries() {
+        // A serialized operator carrying explicit `0.0` entries must not
+        // come back with inflated s_tot / deflated RCG.
+        let dir = std::env::temp_dir().join("faust_test_zero_load");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zeros.faust");
+        std::fs::write(
+            &path,
+            "FAUST v1 1 1.0\nFACTOR 2 2 3\n0 0 1.0\n0 1 0.0\n1 1 2.0\n",
+        )
+        .unwrap();
+        let f = Faust::load(&path).unwrap();
+        assert_eq!(f.s_tot(), 2, "explicit zero survived load");
+        let y = f.apply(&[1.0, 1.0]);
+        assert!((y[0] - 1.0).abs() < 1e-15);
+        assert!((y[1] - 2.0).abs() < 1e-15);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

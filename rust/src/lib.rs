@@ -11,10 +11,20 @@
 //! Layer map (see `DESIGN.md`):
 //! - **L3 (this crate)**: the factorization algorithms ([`palm`],
 //!   [`hierarchical`]), projection operators ([`prox`]), the [`faust`]
-//!   operator type, solvers, dictionary learning, MEG / image application
-//!   substrates, and a threaded operator-serving [`coordinator`].
+//!   operator type, solvers, dictionary learning, and the MEG / image
+//!   application substrates.
+//! - **L3-exec ([`engine`])**: the execution layer between [`faust`] and
+//!   the serving [`coordinator`] — cost-modeled [`engine::ApplyPlan`]s
+//!   (CSR-vs-dense strategy, factor fusion, transpose-aware kernels), a
+//!   `std::thread` chunked worker pool with row-partitioned parallel
+//!   spmv/spmm, and zero-alloc ping-pong buffer arenas. Every
+//!   `Faust::apply*` routes through it; the coordinator serves
+//!   [`engine::EngineOp`]s.
+//! - **L3-serve ([`coordinator`])**: operator registry + dynamic batcher
+//!   + worker pool turning planned operators into a matvec service.
 //! - **L2/L1 (python/, build-time only)**: JAX palm4MSA step + Pallas
-//!   gradient kernel, AOT-lowered to HLO text loaded by [`runtime`].
+//!   gradient kernel, AOT-lowered to HLO text loaded by the `runtime`
+//!   module (feature `pjrt`, off by default so the crate builds offline).
 //!
 //! ## Quickstart
 //! ```
@@ -28,10 +38,15 @@
 //! assert!(fst.rcg() > 3.0);                   // and it is actually faster
 //! ```
 
+// Numeric-kernel idiom: index-heavy loops mirror the paper's math and the
+// CSR layout; the lint's iterator rewrites obscure them.
+#![allow(clippy::needless_range_loop)]
+
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;
 pub mod dictlearn;
+pub mod engine;
 pub mod faust;
 pub mod graph;
 pub mod hierarchical;
@@ -41,6 +56,7 @@ pub mod meg;
 pub mod palm;
 pub mod prox;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod solvers;
 pub mod sparse;

@@ -1,9 +1,9 @@
 //! `faust` CLI — drive every subsystem of the reproduction from one binary.
 
-use anyhow::{bail, Result};
 use faust::bench_util::{fmt, Table};
 use faust::cli::{Args, USAGE};
-use faust::coordinator::{BatchOp, Coordinator, CoordinatorConfig};
+use faust::coordinator::{engine_ops, BatchOp, Coordinator, CoordinatorConfig};
+use faust::engine::{ApplyEngine, EngineConfig, PlanConfig};
 use faust::hierarchical::{factorize, HierarchicalConfig};
 use faust::image::{add_noise, corpus, denoise, psnr, random_patches};
 use faust::meg::{localization_experiment, meg_model};
@@ -11,6 +11,14 @@ use faust::rng::Rng;
 use faust::transforms::{hadamard, hadamard_faust, overcomplete_dct};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Offline-friendly error type (`anyhow` is reserved for the `pjrt`
+/// feature set; the default build has zero dependencies).
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+fn err(msg: impl Into<String>) -> Box<dyn std::error::Error> {
+    msg.into().into()
+}
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -26,6 +34,7 @@ fn main() {
         Some("localize") => cmd_localize(&args),
         Some("denoise") => cmd_denoise(&args),
         Some("serve") => cmd_serve(&args),
+        Some("engine") => cmd_engine(&args),
         Some("runtime") => cmd_runtime(&args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -37,7 +46,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -46,7 +55,7 @@ fn main() {
 fn cmd_hadamard(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 32);
     if !n.is_power_of_two() || n < 4 {
-        bail!("--n must be a power of two ≥ 4");
+        return Err(err("--n must be a power of two ≥ 4"));
     }
     let a = hadamard(n);
     let cfg = HierarchicalConfig::hadamard(n);
@@ -123,7 +132,11 @@ fn cmd_localize(args: &Args) -> Result<()> {
     );
     let mut table = Table::new(&["separation", "matrix", "median(cm)", "q3(cm)", "exact%"]);
     for (dmin, dmax, label) in [(1.0, 5.0, "1-5cm"), (5.0, 8.0, "5-8cm"), (8.0, 100.0, ">8cm")] {
-        for (name, op) in [("M (dense)", &model.gain as &dyn faust::solvers::LinOp), ("M^ (faust)", &fst)] {
+        let backends = [
+            ("M (dense)", &model.gain as &dyn faust::solvers::LinOp),
+            ("M^ (faust)", &fst),
+        ];
+        for (name, op) in backends {
             let stats = localization_experiment(&model, op, trials, dmin, dmax, seed ^ 3);
             table.row(&[
                 label.to_string(),
@@ -166,7 +179,15 @@ fn cmd_denoise(args: &Args) -> Result<()> {
     );
 
     // FAuST dictionary.
-    let hcfg = HierarchicalConfig::dictionary(p * p, atoms, 4, 4, 2 * p * p * 2, 0.5, (p * p * p * p) as f64);
+    let hcfg = HierarchicalConfig::dictionary(
+        p * p,
+        atoms,
+        4,
+        4,
+        2 * p * p * 2,
+        0.5,
+        (p * p * p * p) as f64,
+    );
     let t0 = Instant::now();
     let (fst, _) = faust::dictlearn::faust_dictionary_learning(&patches, &kcfg, &hcfg);
     let fden = denoise(&noisy, &fst, p, 5, stride);
@@ -186,30 +207,33 @@ fn cmd_denoise(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve a Hadamard FAuST + dense twin through the coordinator.
+/// Serve a Hadamard FAuST + dense twin through the coordinator, with the
+/// FAuST planned + parallelized by the engine.
 fn cmd_serve(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 64);
     let requests: usize = args.get("requests", 10_000);
     let batch: usize = args.get("batch", 32);
     let workers: usize = args.get("workers", 2);
+    let threads: usize = args.get("threads", 2);
     let h = hadamard(n);
     let hf = hadamard_faust(n);
-    println!("serving {n}x{n} operator: dense + FAuST (RCG={:.1})", hf.rcg());
+    let engine = ApplyEngine::with_threads(threads);
+    println!(
+        "serving {n}x{n} operator: dense + FAuST (RCG={:.1}), engine threads={threads}",
+        hf.rcg()
+    );
+    let mut ops = engine_ops(&engine, vec![("faust".to_string(), hf)], batch);
+    ops.push(("dense".to_string(), Arc::new(h) as Arc<dyn BatchOp>));
     let cfg = CoordinatorConfig {
         max_batch: batch,
         batch_timeout: Duration::from_micros(200),
         n_workers: workers,
         queue_capacity: 4096,
     };
-    let coord = Coordinator::start(
-        vec![
-            ("dense".to_string(), Arc::new(h) as Arc<dyn BatchOp>),
-            ("faust".to_string(), Arc::new(hf) as Arc<dyn BatchOp>),
-        ],
-        cfg,
-    );
+    let coord = Coordinator::start(ops, cfg);
     let client = coord.client();
-    let mut table = Table::new(&["operator", "throughput(req/s)", "mean latency(us)", "mean batch"]);
+    let mut table =
+        Table::new(&["operator", "throughput(req/s)", "mean latency(us)", "mean batch"]);
     for op in ["dense", "faust"] {
         let t0 = Instant::now();
         let mut rng = Rng::new(7);
@@ -248,10 +272,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     table.print();
     coord.shutdown();
+    let em = engine.metrics();
+    println!(
+        "engine: applies={} arena_reuses={} arena_allocs={}",
+        em.applies, em.arena_reuses, em.arena_allocs
+    );
+    Ok(())
+}
+
+/// Engine section: compile a plan for an operator, optionally dump it,
+/// and time planned/pooled apply against the naive per-factor chain.
+fn cmd_engine(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 1024);
+    if !n.is_power_of_two() || n < 4 {
+        return Err(err("--n must be a power of two ≥ 4"));
+    }
+    let threads: usize = args.get("threads", 4);
+    let batch: usize = args.get("batch", 32);
+    let fst = hadamard_faust(n);
+    let plan_cfg = PlanConfig::default();
+    let engine = ApplyEngine::new(EngineConfig { n_threads: threads, plan: plan_cfg.clone() });
+    let op = engine.op_batch_hint(&fst, batch);
+    if args.get_str("plan") == Some("dump") || args.flag("plan-dump") {
+        print!("{}", op.plan().dump(&plan_cfg));
+    }
+    let mut rng = Rng::new(11);
+    let x = faust::linalg::Mat::randn(n, batch, &mut rng);
+    let mut out = faust::linalg::Mat::zeros(n, batch);
+
+    let tn =
+        faust::bench_util::time_auto(200.0, || std::hint::black_box(fst.apply_mat_naive(&x)));
+    let tp = faust::bench_util::time_auto(200.0, || {
+        op.apply_batch_into(std::hint::black_box(&x), &mut out);
+    });
+    let m = engine.metrics();
+    println!(
+        "engine bench: {n}x{n}, {} factors, batch={batch}, threads={threads}",
+        fst.n_factors()
+    );
+    println!("  naive serial apply : {:.1} us", tn.median_us());
+    println!(
+        "  planned engine     : {:.1} us  ({:.2}x)",
+        tp.median_us(),
+        tn.median_ns / tp.median_ns
+    );
+    println!("  arena              : {} reuses, {} allocs", m.arena_reuses, m.arena_allocs);
     Ok(())
 }
 
 /// Check the PJRT runtime: load artifacts, execute, compare vs rust-native.
+#[cfg(feature = "pjrt")]
 fn cmd_runtime(args: &Args) -> Result<()> {
     let dir = args.get_str("artifacts").unwrap_or("artifacts");
     let mut engine = faust::runtime::Engine::cpu(dir)?;
@@ -302,8 +372,19 @@ fn cmd_runtime(args: &Args) -> Result<()> {
         }
         println!("  faust_apply_had32 vs rust-native: max |Δ| = {max_err:.3e}");
         if max_err > 1e-4 {
-            bail!("PJRT/native mismatch: {max_err}");
+            return Err(err(format!("PJRT/native mismatch: {max_err}")));
         }
     }
+    Ok(())
+}
+
+/// Without the `pjrt` feature the runtime module is compiled out.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime(_args: &Args) -> Result<()> {
+    println!(
+        "runtime: built without the `pjrt` feature. To enable it, \
+         uncomment the `xla`/`anyhow` dependencies in rust/Cargo.toml \
+         (vendored crates required), then rebuild with `--features pjrt`."
+    );
     Ok(())
 }

@@ -48,6 +48,28 @@ impl Csr {
         out
     }
 
+    /// Drop stored entries with `|v| <= threshold` in place. With
+    /// `threshold = 0.0` this removes exactly the explicitly-stored zeros,
+    /// so `nnz` (and the RC/RCG metrics built on it) counts only true
+    /// non-zeros.
+    pub fn prune(&mut self, threshold: f64) {
+        let mut new_indptr = vec![0u32; self.rows + 1];
+        let mut w = 0usize;
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                if self.vals[k].abs() > threshold {
+                    self.indices[w] = self.indices[k];
+                    self.vals[w] = self.vals[k];
+                    w += 1;
+                }
+            }
+            new_indptr[i + 1] = w as u32;
+        }
+        self.indices.truncate(w);
+        self.vals.truncate(w);
+        self.indptr = new_indptr;
+    }
+
     /// Extract non-zeros (|x| > `threshold`) from a dense matrix.
     pub fn from_dense(m: &Mat, threshold: f64) -> Self {
         let rows = m.rows();
@@ -85,6 +107,9 @@ impl Csr {
         }
     }
 
+    /// Merge duplicate `(row, col)` entries by summation, dropping results
+    /// that are exactly zero (explicitly-stored zeros and exact
+    /// cancellations must not inflate `nnz`).
     fn sum_duplicates(&mut self) {
         let mut new_indptr = vec![0u32; self.rows + 1];
         let mut new_indices = Vec::with_capacity(self.indices.len());
@@ -101,8 +126,10 @@ impl Csr {
                     v += self.vals[k2];
                     k2 += 1;
                 }
-                new_indices.push(c);
-                new_vals.push(v);
+                if v != 0.0 {
+                    new_indices.push(c);
+                    new_vals.push(v);
+                }
                 k = k2;
             }
             new_indptr[i + 1] = new_indices.len() as u32;
@@ -271,6 +298,57 @@ impl Csr {
             }
         }
         out
+    }
+
+    /// Sparse × sparse product `self · other` (Gustavson row-merge with a
+    /// dense accumulator + touched-column markers, `O(flops)`). Exact-zero
+    /// results (cancellations) are dropped so the product's `nnz` is
+    /// honest. Used by the engine planner to fuse adjacent tiny factors.
+    pub fn spgemm(&self, other: &Csr) -> Csr {
+        assert_eq!(self.cols, other.rows, "spgemm dim mismatch");
+        let n = other.cols;
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        indptr.push(0u32);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        let mut acc = vec![0.0f64; n];
+        let mut last_row = vec![u32::MAX; n];
+        let mut touched: Vec<u32> = Vec::new();
+        for i in 0..self.rows {
+            touched.clear();
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                let a = self.vals[k];
+                let r = self.indices[k] as usize;
+                for k2 in other.indptr[r] as usize..other.indptr[r + 1] as usize {
+                    let c = other.indices[k2] as usize;
+                    if last_row[c] != i as u32 {
+                        last_row[c] = i as u32;
+                        acc[c] = 0.0;
+                        touched.push(c as u32);
+                    }
+                    acc[c] += a * other.vals[k2];
+                }
+            }
+            touched.sort_unstable();
+            for &c in &touched {
+                let v = acc[c as usize];
+                if v != 0.0 {
+                    indices.push(c);
+                    vals.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr { rows: self.rows, cols: n, indptr, indices, vals }
+    }
+
+    /// Fill fraction `nnz / (rows·cols)`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows * self.cols) as f64
+        }
     }
 
     /// Frobenius norm.

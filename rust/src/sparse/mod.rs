@@ -121,6 +121,63 @@ mod tests {
     }
 
     #[test]
+    fn spgemm_matches_dense_product() {
+        let mut rng = Rng::new(48);
+        for &(m, k, n, z1, z2) in &[(6usize, 7, 8, 15, 18), (10, 3, 10, 12, 9), (4, 4, 4, 16, 16)] {
+            let a = random_sparse(m, k, z1, &mut rng);
+            let b = random_sparse(k, n, z2, &mut rng);
+            let sa = Csr::from_dense(&a, 0.0);
+            let sb = Csr::from_dense(&b, 0.0);
+            let sp = sa.spgemm(&sb);
+            assert!(sp.to_dense().rel_fro_err(&a.matmul(&b)) < 1e-13);
+            assert_eq!(sp.nnz(), a.matmul(&b).nnz());
+        }
+    }
+
+    #[test]
+    fn spgemm_drops_exact_cancellations() {
+        // [[1, -1]] · [[1], [1]] = [[0]] — the product must have nnz = 0.
+        let a = Csr::from_dense(&Mat::from_vec(1, 2, vec![1.0, -1.0]), 0.0);
+        let b = Csr::from_dense(&Mat::from_vec(2, 1, vec![1.0, 1.0]), 0.0);
+        let p = a.spgemm(&b);
+        assert_eq!(p.nnz(), 0);
+        assert_eq!(p.rows(), 1);
+        assert_eq!(p.cols(), 1);
+    }
+
+    #[test]
+    fn from_coo_drops_explicit_zeros_and_cancellations() {
+        // Regression: explicitly-stored zeros (e.g. from a serialized
+        // operator) and duplicates summing to zero must not inflate nnz,
+        // which would corrupt the RC/RCG metrics downstream.
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 0.0); // explicit zero
+        coo.push(1, 1, 2.0);
+        coo.push(2, 2, 1.5);
+        coo.push(2, 2, -1.5); // duplicate pair cancelling exactly
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.to_dense().at(1, 1), 2.0);
+    }
+
+    #[test]
+    fn prune_drops_small_entries_in_place() {
+        let d = Mat::from_vec(2, 3, vec![0.5, 1e-12, 0.0, -2.0, 3.0, -1e-13]);
+        let mut s = Csr::from_dense(&d, 0.0);
+        assert_eq!(s.nnz(), 4);
+        s.prune(1e-9);
+        assert_eq!(s.nnz(), 3);
+        let dd = s.to_dense();
+        assert_eq!(dd.at(0, 0), 0.5);
+        assert_eq!(dd.at(1, 0), -2.0);
+        assert_eq!(dd.at(1, 1), 3.0);
+        let x = [1.0, 1.0, 1.0];
+        let y = s.spmv(&x);
+        assert!((y[0] - 0.5).abs() < 1e-15);
+        assert!((y[1] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
     fn csr_spmm_into_reuses_buffer() {
         let mut rng = Rng::new(47);
         let d = random_sparse(6, 7, 15, &mut rng);

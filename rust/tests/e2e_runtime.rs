@@ -3,7 +3,9 @@
 //! the rust-native implementations.
 //!
 //! Skips gracefully (with a message) when `artifacts/` has not been built
-//! — run `make artifacts` first for full coverage.
+//! — run `make artifacts` first for full coverage. The whole file is
+//! compiled out without the `pjrt` feature (the default offline build).
+#![cfg(feature = "pjrt")]
 
 use faust::rng::Rng;
 use faust::runtime::Engine;

@@ -1,8 +1,9 @@
 //! Property-based test sweeps (seeded generators; failures report the
 //! case seed — see `faust::testutil`).
 
+use faust::engine::{par_spmm_into, ApplyEngine, EngineConfig, PlanConfig, ThreadPool};
 use faust::faust::Faust;
-use faust::linalg::{lstsq, qr_thin, svd_jacobi, Mat};
+use faust::linalg::{chain_product, lstsq, qr_thin, svd_jacobi, Mat};
 use faust::prox::{proj_sp, proj_spcol, proj_sprow, Constraint};
 use faust::palm::{palm4msa, FactorState, PalmConfig};
 use faust::sparse::{Coo, Csr};
@@ -205,6 +206,113 @@ fn prop_qr_and_svd_reconstruct() {
         let bn: f64 = back.iter().map(|v| v * v).sum::<f64>().sqrt();
         let scale: f64 = 1.0 + b.iter().map(|v| v * v).sum::<f64>().sqrt();
         ensure(bn < 1e-7 * scale, format!("normal equations violated: {bn}"))
+    });
+}
+
+/// Random rightmost-first factor chain + its dense reference λ·S_J⋯S_1.
+fn gen_chain(rng: &mut faust::rng::Rng) -> (Faust, Mat) {
+    let depth = 1 + rng.below(4);
+    let mut dims = vec![2 + rng.below(9)];
+    for _ in 0..depth {
+        dims.push(2 + rng.below(9));
+    }
+    let mats: Vec<Mat> = (0..depth)
+        .map(|i| {
+            let (r, c) = (dims[i + 1], dims[i]);
+            let nz = 1 + rng.below(r * c);
+            gen::sparse_mat(rng, r, c, nz)
+        })
+        .collect();
+    let lambda = rng.range(0.2, 2.5);
+    let refs: Vec<&Mat> = mats.iter().rev().collect();
+    let dense = chain_product(&refs, dims[0]).scaled(lambda);
+    (Faust::from_dense_factors(&mats, lambda), dense)
+}
+
+#[test]
+fn prop_parallel_spmm_equals_serial() {
+    let pool = ThreadPool::new(4);
+    check("parallel spmm == serial spmm", &cfg(60), |rng| {
+        let r = 1 + rng.below(40);
+        let c = 1 + rng.below(40);
+        let nnz = rng.below(r * c + 1);
+        let b = 1 + rng.below(9);
+        let d = gen::sparse_mat(rng, r, c, nnz);
+        let s = Csr::from_dense(&d, 0.0);
+        let x = Mat::randn(c, b, rng);
+        let want = s.spmm(&x);
+        let mut got = vec![0.0; r * b];
+        par_spmm_into(&pool, &s, x.data(), b, &mut got);
+        for (i, (g, w)) in got.iter().zip(want.data()).enumerate() {
+            ensure((g - w).abs() < 1e-10, format!("entry {i}: {g} vs {w}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planned_apply_matches_naive_dense_reference() {
+    // Planned apply (fusion + strategy selection + pooled kernels) must
+    // equal the dense reference λ·S_J⋯S_1 within 1e-10 relative
+    // Frobenius error, for both forward and transpose, serial and pooled.
+    let engines = [
+        ApplyEngine::serial(),
+        ApplyEngine::new(EngineConfig { n_threads: 4, plan: PlanConfig::default() }),
+        ApplyEngine::new(EngineConfig {
+            n_threads: 2,
+            plan: PlanConfig { fuse: false, dense_threshold: 0.1, ..PlanConfig::default() },
+        }),
+    ];
+    check("planned apply == dense reference", &cfg(40), |rng| {
+        let (f, dense) = gen_chain(rng);
+        let b = 1 + rng.below(6);
+        let x = Mat::randn(f.cols(), b, rng);
+        let want = dense.matmul(&x);
+        let xt = Mat::randn(f.rows(), b, rng);
+        let want_t = dense.t().matmul(&xt);
+        for engine in &engines {
+            let op = engine.op(&f);
+            let got = op.apply_batch(&x);
+            let fwd_err = got.sub(&want).fro();
+            ensure(
+                fwd_err < 1e-10 * (1.0 + want.fro()),
+                format!("forward mismatch: {fwd_err}"),
+            )?;
+            let got_t = op.apply_t_batch(&xt);
+            let t_err = got_t.sub(&want_t).fro();
+            ensure(
+                t_err < 1e-10 * (1.0 + want_t.fro()),
+                format!("transpose mismatch: {t_err}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faust_apply_routes_through_plan_consistently() {
+    // Faust::apply / apply_mat (cached-plan paths) agree with the dense
+    // reference and with each other, column by column.
+    check("faust planned paths consistent", &cfg(40), |rng| {
+        let (f, dense) = gen_chain(rng);
+        let x = rng.gauss_vec(f.cols());
+        let y = f.apply(&x);
+        let want = dense.matvec(&x);
+        for i in 0..f.rows() {
+            ensure(
+                (y[i] - want[i]).abs() < 1e-10 * (1.0 + want[i].abs()),
+                format!("apply row {i}"),
+            )?;
+        }
+        let xm = Mat::randn(f.cols(), 3, rng);
+        let ym = f.apply_mat(&xm);
+        for j in 0..3 {
+            let col = f.apply(&xm.col(j));
+            for i in 0..f.rows() {
+                ensure((ym.at(i, j) - col[i]).abs() < 1e-12, format!("batch col {j} row {i}"))?;
+            }
+        }
+        Ok(())
     });
 }
 
