@@ -41,12 +41,12 @@ impl PjrtHad32 {
                 let mut engine = match Engine::cpu("artifacts") {
                     Ok(e) => e,
                     Err(e) => {
-                        let _ = ready_tx.send(Err(e));
+                        let _ = ready_tx.send(Err(e.into()));
                         return;
                     }
                 };
                 if let Err(e) = engine.load("faust_apply_had32") {
-                    let _ = ready_tx.send(Err(e));
+                    let _ = ready_tx.send(Err(e.into()));
                     return;
                 }
                 let _ = ready_tx.send(Ok(()));

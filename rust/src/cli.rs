@@ -76,25 +76,34 @@ faust — Flexible Approximate Multi-layer Sparse Transforms
 USAGE: faust <subcommand> [--key value ...]
 
 SUBCOMMANDS:
-  hadamard    --n 32 [--save out.faust]
+  hadamard    --n 32 [--save out.faust] [--threads N]
               reverse-engineer the Hadamard transform (paper §IV-C)
   factorize   --rows R --cols C --j J --k K --s S [--rho 0.8] [--seed 0]
-              hierarchically factorize a synthetic MEG-like operator
+              [--threads N]
+              hierarchically factorize a synthetic MEG-like operator on
+              an N-thread ExecCtx (0 / omitted = process default)
+  dict        --m 32 --atoms 64 --samples 400 [--sparsity 4] [--j 3]
+              [--iters 10] [--threads N] [--save out.faust]
+              K-SVD + hierarchical FAuST dictionary learning (paper §VI)
+              on planted k-sparse data, on a shared ExecCtx
   localize    --sensors 204 --sources 1024 --trials 100 --rcg-target 6
+              [--threads N]
               source-localization experiment (paper Fig. 9, scaled)
-  denoise     --size 128 --sigma 30 --atoms 128 [--stride 2]
+  denoise     --size 128 --sigma 30 --atoms 128 [--stride 2] [--threads N]
               FAuST vs K-SVD vs DCT image denoising (paper Fig. 12, scaled)
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
-              [--threads 2]
+              [--threads 2] [--factorize]
               run the operator-serving coordinator on a Hadamard FAuST,
-              planned + parallelized by the apply engine
+              planned + parallelized by the apply engine; --factorize
+              builds the operator on-line on the serving engine's ctx
   engine      --n 1024 [--threads 4] [--batch 32] [--plan dump]
               compile a cost-modeled execution plan, optionally dump it,
               and time planned/pooled apply vs the naive factor chain
   runtime     [--artifacts artifacts]
               check PJRT artifacts load + execute, compare vs rust-native
-              (needs --features pjrt plus the vendored xla/anyhow deps
-              uncommented in rust/Cargo.toml)
+              (needs --features pjrt,pjrt-xla plus the vendored xla/anyhow
+              deps uncommented in rust/Cargo.toml; plain --features pjrt
+              compiles a stub backend that reports unavailability)
   help        print this message
 ";
 

@@ -12,7 +12,11 @@
 //!
 //! Operators are best registered as [`EngineOp`]s (see [`engine_ops`]):
 //! the batch a worker executes then runs through the engine's cost-modeled
-//! plan, row-parallel pooled spmm, and zero-alloc arena.
+//! plan, row-parallel pooled spmm, and zero-alloc arena. A deployment
+//! needs exactly one engine: `ApplyEngine::ctx()` hands the same pool to
+//! the factorization stack, so on-line refactorization (building or
+//! refreshing an operator while the service runs) shares the serving
+//! threads instead of oversubscribing the machine.
 //!
 //! tokio is not available offline; a compute-bound matvec service needs
 //! threads, not async IO, so the pool is `std::thread` + channels.
@@ -539,6 +543,37 @@ mod tests {
         let m = engine.metrics();
         assert!(m.applies >= 1, "engine never executed a batch");
         assert_eq!(m.plans_compiled, 1);
+    }
+
+    #[test]
+    fn serving_and_refactorization_share_one_engine() {
+        // The deployment story: one engine serves planned applies while
+        // the same engine's ctx factorizes the next operator on-line.
+        use crate::hierarchical::{factorize_with_ctx, HierarchicalConfig};
+        let n = 16;
+        let h = crate::transforms::hadamard(n);
+        let engine = crate::engine::ApplyEngine::with_threads(2);
+        let ops = engine_ops(
+            &engine,
+            vec![("served".to_string(), crate::transforms::hadamard_faust(n))],
+            8,
+        );
+        let coord = Coordinator::start(ops, CoordinatorConfig::default());
+        let client = coord.client();
+        // On-line refactorization on the serving engine's own pool.
+        let ctx = engine.ctx();
+        assert!(std::sync::Arc::ptr_eq(ctx.pool(), engine.pool()));
+        let fst = factorize_with_ctx(&ctx, &h, &HierarchicalConfig::hadamard(n));
+        assert!(fst.relative_error_fro(&h) < 1e-6);
+        // The service stayed correct throughout.
+        let mut rng = Rng::new(9);
+        let x = rng.gauss_vec(n);
+        let y = client.apply("served", x.clone()).unwrap();
+        let want = h.matvec(&x);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-10);
+        }
+        coord.shutdown();
     }
 
     #[test]

@@ -4,9 +4,15 @@
 //! K-SVD is the paper's *Dense Dictionary Learning* (DDL) baseline in the
 //! denoising experiment (§VI-C); the atom update uses the rank-1
 //! power-iteration approximation (as in the efficient implementation [47]).
+//!
+//! The dense residual GEMMs and the hierarchical factorization both run
+//! on the engine's [`ExecCtx`]: [`ksvd`]/[`faust_dictionary_learning`]
+//! use the process-default ctx, the `_with_ctx` variants pin an explicit
+//! one so training shares a serving engine's pool.
 
+use crate::engine::ExecCtx;
 use crate::faust::Faust;
-use crate::hierarchical::{factorize_dict, HierarchicalConfig};
+use crate::hierarchical::{factorize_dict_with_ctx, HierarchicalConfig};
 use crate::linalg::{rank1_approx, Mat};
 use crate::rng::Rng;
 use crate::solvers::omp_batch;
@@ -61,8 +67,15 @@ pub fn init_dict_from_data(y: &Mat, n_atoms: usize, rng: &mut Rng) -> Mat {
     d
 }
 
-/// Run K-SVD on training data `y` (`m × L`).
+/// Run K-SVD on training data `y` (`m × L`) on the process-default
+/// [`ExecCtx`].
 pub fn ksvd(y: &Mat, cfg: &KsvdConfig) -> KsvdResult {
+    ksvd_with_ctx(ExecCtx::global(), y, cfg)
+}
+
+/// [`ksvd`] on an explicit execution context (the `D·Γ` residual GEMMs
+/// run pooled; the per-atom rank-1 updates stay serial — they are tiny).
+pub fn ksvd_with_ctx(ctx: &ExecCtx, y: &Mat, cfg: &KsvdConfig) -> KsvdResult {
     let mut rng = Rng::new(cfg.seed);
     let mut dict = init_dict_from_data(y, cfg.n_atoms, &mut rng);
     let mut gamma = omp_batch(&dict, y, cfg.sparsity);
@@ -77,7 +90,7 @@ pub fn ksvd(y: &Mat, cfg: &KsvdConfig) -> KsvdResult {
                 .collect();
             if users.is_empty() {
                 // Replace a dead atom with the worst-represented sample.
-                let resid = dict.matmul(&gamma).sub(y);
+                let resid = ctx.gemm(&dict, &gamma).sub(y);
                 let mut worst = 0;
                 let mut worst_norm = -1.0;
                 for c in 0..y.cols() {
@@ -132,7 +145,7 @@ pub fn ksvd(y: &Mat, cfg: &KsvdConfig) -> KsvdResult {
         }
         // --- Sparse coding step.
         gamma = omp_batch(&dict, y, cfg.sparsity);
-        trace.push(dict.matmul(&gamma).sub(y).fro() / yn);
+        trace.push(ctx.gemm(&dict, &gamma).sub(y).fro() / yn);
     }
     KsvdResult { dict, gamma, error_trace: trace }
 }
@@ -146,10 +159,21 @@ pub fn faust_dictionary_learning(
     ksvd_cfg: &KsvdConfig,
     hier_cfg: &HierarchicalConfig,
 ) -> (Faust, Mat) {
-    let base = ksvd(y, ksvd_cfg);
+    faust_dictionary_learning_with_ctx(ExecCtx::global(), y, ksvd_cfg, hier_cfg)
+}
+
+/// [`faust_dictionary_learning`] on an explicit execution context: both
+/// the K-SVD warm-up and the hierarchical factorization run on `ctx`.
+pub fn faust_dictionary_learning_with_ctx(
+    ctx: &ExecCtx,
+    y: &Mat,
+    ksvd_cfg: &KsvdConfig,
+    hier_cfg: &HierarchicalConfig,
+) -> (Faust, Mat) {
+    let base = ksvd_with_ctx(ctx, y, ksvd_cfg);
     let sparsity = ksvd_cfg.sparsity;
     let coder = move |yy: &Mat, d: &Mat| -> Mat { omp_batch(d, yy, sparsity) };
-    factorize_dict(y, &base.dict, &base.gamma, hier_cfg, &coder)
+    factorize_dict_with_ctx(ctx, y, &base.dict, &base.gamma, hier_cfg, &coder)
 }
 
 #[cfg(test)]

@@ -1,0 +1,272 @@
+//! `ExecCtx` — the shared execution context that runs *training* on the
+//! engine.
+//!
+//! PR 1 gave serving a substrate (plans, pool, arenas); this module hands
+//! the same substrate to the factorization stack. An [`ExecCtx`] bundles
+//! the engine's [`ThreadPool`] with the flop/byte cost model and exposes
+//! the dense-GEMM entry points palm4MSA's gradients bottom out in:
+//! cost-dispatched [`ExecCtx::gemm`] (serial / row-parallel /
+//! transpose-rewrite picked per call), the transpose variants
+//! [`ExecCtx::gemm_tn`] / [`ExecCtx::gemm_nt`], and pooled power
+//! iterations for spectral norms ([`ExecCtx::spectral_norm_warm`]).
+//!
+//! How execution flows — serving and training share one substrate:
+//!
+//! ```text
+//!   serving                             training
+//!   ───────                             ────────
+//!   coordinator                         palm4msa / hierarchical / dictlearn
+//!        │ apply_batch                       │ gemm / gemm_tn / gemm_nt /
+//!        ▼                                   │ spectral_norm_warm
+//!   EngineOp ──► ApplyPlan                   ▼
+//!        │        (cost model)           ExecCtx ◄── ApplyEngine::ctx()
+//!        │ execute_*                         │        (same pool, same
+//!        ▼                                   │         cost-model β)
+//!      Arena ◄──── scratch ────┐             │
+//!        │                     │             │
+//!        └────► ThreadPool ◄───┴─────────────┘
+//!                 par_ranges (row-partitioned, bitwise
+//!                 thread-invariant kernels)
+//! ```
+//!
+//! Every parallel kernel the ctx dispatches is **bitwise
+//! thread-invariant**: outputs are partitioned into disjoint row/column
+//! ranges and each output element is accumulated in the same index order
+//! regardless of the thread count, so `ExecCtx::serial()` and
+//! `ExecCtx::new(8)` produce identical bits. Factorization results are
+//! therefore reproducible from the seed alone, independent of
+//! `--threads` — checked by the determinism proptests and the
+//! `factorize_scaling` bench.
+//!
+//! Zero-config callers use [`ExecCtx::global`] (shares the process-wide
+//! serving engine's pool); a coordinator deployment reuses its engine for
+//! on-line refactorization via [`super::ApplyEngine::ctx`].
+
+use super::plan::PlanConfig;
+use super::pool::{par_gemm_into, par_gemv_into, par_gemv_t_into, ThreadPool};
+use crate::linalg::{spectral_norm_with, Mat};
+use std::sync::{Arc, OnceLock};
+
+/// Shared execution context: thread pool + cost-model dispatch for the
+/// dense kernels of the factorization stack. Cheap to clone (the pool is
+/// behind an `Arc`).
+#[derive(Clone)]
+pub struct ExecCtx {
+    pool: Arc<ThreadPool>,
+    /// β in the dispatch cost `flops + β·bytes` (same knob as
+    /// [`PlanConfig::bytes_per_flop_weight`]).
+    beta: f64,
+}
+
+impl ExecCtx {
+    /// Context with its own pool of `n_threads` total threads
+    /// (1 = inline serial) and the default cost-model weight.
+    pub fn new(n_threads: usize) -> Self {
+        Self::from_pool(
+            Arc::new(ThreadPool::new(n_threads)),
+            PlanConfig::default().bytes_per_flop_weight,
+        )
+    }
+
+    /// Inline serial context (no workers, no dispatch overhead).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Context sharing an existing pool (how [`super::ApplyEngine::ctx`]
+    /// hands the serving pool to factorization).
+    pub fn from_pool(pool: Arc<ThreadPool>, beta: f64) -> Self {
+        ExecCtx { pool, beta }
+    }
+
+    /// Process-default context: shares the global serving engine's pool
+    /// (`FAUST_THREADS` / available parallelism — see [`super::global`]).
+    pub fn global() -> &'static ExecCtx {
+        static CTX: OnceLock<ExecCtx> = OnceLock::new();
+        CTX.get_or_init(|| super::global().ctx())
+    }
+
+    /// Total threads participating in each parallel kernel.
+    pub fn n_threads(&self) -> usize {
+        self.pool.n_threads()
+    }
+
+    /// The underlying worker pool.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    /// Cost-model decision for `a·b`: is the double-transpose rewrite
+    /// `(bᵀ aᵀ)ᵀ` (zero-skip lands on `b`'s entries) cheaper than the
+    /// direct ikj pass (zero-skip on `a`), three extra transpose passes
+    /// included? PALM factors are dense-stored but often extremely sparse
+    /// after projection, so this is regularly a ~10× call.
+    fn rewrite_wins(&self, a: &Mat, b: &Mat) -> bool {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let base_bytes = 8 * (m * k + k * n + m * n);
+        let direct = (2 * a.nnz() * n) as f64 + self.beta * base_bytes as f64;
+        // Rewrite pays the same streaming traffic plus one full pass each
+        // for aᵀ, bᵀ and the final out-transpose.
+        let transpose_bytes = 8 * (m * k + k * n + 2 * m * n);
+        let rewrite =
+            (2 * b.nnz() * m) as f64 + self.beta * (base_bytes + transpose_bytes) as f64;
+        rewrite < direct
+    }
+
+    /// `a · b`, dispatched by the cost model between the direct
+    /// row-parallel kernel and the transpose rewrite. Serial-vs-parallel
+    /// is decided per call by the pool's work grain, so tiny products run
+    /// inline with zero dispatch overhead.
+    pub fn gemm(&self, a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols(), b.rows(), "ctx gemm dim mismatch");
+        if self.rewrite_wins(a, b) {
+            let bt = b.t();
+            let at = a.t();
+            let mut out_t = Mat::zeros(b.cols(), a.rows());
+            par_gemm_into(&self.pool, &bt, at.data(), a.rows(), out_t.data_mut());
+            out_t.t()
+        } else {
+            let mut out = Mat::zeros(a.rows(), b.cols());
+            par_gemm_into(&self.pool, a, b.data(), b.cols(), out.data_mut());
+            out
+        }
+    }
+
+    /// `aᵀ · b` via explicit transpose + the dispatched kernel: better
+    /// cache behaviour than a scatter-accumulate, and the zero-skip lands
+    /// on `aᵀ`'s rows.
+    pub fn gemm_tn(&self, a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.rows(), b.rows(), "ctx gemm_tn dim mismatch");
+        self.gemm(&a.t(), b)
+    }
+
+    /// `a · bᵀ` via explicit transpose + the dispatched kernel.
+    pub fn gemm_nt(&self, a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols(), b.cols(), "ctx gemm_nt dim mismatch");
+        self.gemm(a, &b.t())
+    }
+
+    /// Spectral norm `‖a‖₂` by pooled power iteration on `aᵀa`, with a
+    /// caller-owned warm-start vector (see
+    /// [`crate::linalg::spectral_norm_warm`] for the warm-start
+    /// contract). Both half-iterations run row/column-partitioned on the
+    /// pool; the accumulation order per output element is fixed, so the
+    /// result is bitwise independent of the thread count.
+    pub fn spectral_norm_warm(
+        &self,
+        a: &Mat,
+        x: &mut Vec<f64>,
+        max_iter: usize,
+        tol: f64,
+    ) -> f64 {
+        let (m, n) = a.shape();
+        if m == 0 || n == 0 {
+            return 0.0;
+        }
+        let mut y = vec![0.0; m];
+        spectral_norm_with(n, x, max_iter, tol, |xv, z| {
+            par_gemv_into(&self.pool, a, xv, &mut y);
+            par_gemv_t_into(&self.pool, a, &y, z);
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ApplyEngine;
+    use crate::linalg::svd_jacobi;
+    use crate::rng::Rng;
+
+    fn sparse_mat(rng: &mut Rng, r: usize, c: usize, nnz: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        for i in rng.sample_indices(r * c, nnz.min(r * c)) {
+            m.data_mut()[i] = rng.gauss();
+        }
+        m
+    }
+
+    #[test]
+    fn gemm_matches_matmul_both_dispatch_branches() {
+        let mut rng = Rng::new(701);
+        let ctx = ExecCtx::new(3);
+        // Dense·sparse forces the transpose rewrite; sparse·dense the
+        // direct kernel; dense·dense exercises the tie region.
+        let cases = [
+            (Mat::randn(20, 16, &mut rng), sparse_mat(&mut rng, 16, 12, 10)),
+            (sparse_mat(&mut rng, 18, 14, 9), Mat::randn(14, 11, &mut rng)),
+            (Mat::randn(9, 7, &mut rng), Mat::randn(7, 13, &mut rng)),
+        ];
+        for (a, b) in &cases {
+            let got = ctx.gemm(a, b);
+            let want = a.matmul(b);
+            assert!(got.rel_fro_err(&want) < 1e-13);
+        }
+    }
+
+    #[test]
+    fn gemm_transpose_variants_match_reference() {
+        let mut rng = Rng::new(702);
+        let ctx = ExecCtx::new(2);
+        let a = Mat::randn(8, 6, &mut rng);
+        let b = Mat::randn(8, 5, &mut rng);
+        let c = Mat::randn(4, 6, &mut rng);
+        assert!(ctx.gemm_tn(&a, &b).rel_fro_err(&a.t().matmul(&b)) < 1e-13);
+        assert!(ctx.gemm_nt(&a, &c).rel_fro_err(&a.matmul(&c.t())) < 1e-13);
+    }
+
+    #[test]
+    fn gemm_is_bitwise_thread_invariant() {
+        let mut rng = Rng::new(703);
+        let a = sparse_mat(&mut rng, 60, 50, 400);
+        let b = Mat::randn(50, 40, &mut rng);
+        let base = ExecCtx::serial().gemm(&a, &b);
+        for threads in [2usize, 8] {
+            let got = ExecCtx::new(threads).gemm(&a, &b);
+            assert_eq!(got.data(), base.data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_spectral_norm_matches_svd() {
+        let mut rng = Rng::new(705);
+        let ctx = ExecCtx::new(4);
+        let a = Mat::randn(15, 9, &mut rng);
+        let s = svd_jacobi(&a);
+        let mut warm = vec![];
+        let sn = ctx.spectral_norm_warm(&a, &mut warm, 200, 1e-10);
+        assert!((sn - s.s[0]).abs() < 1e-6 * s.s[0], "sn={sn} s0={}", s.s[0]);
+        // Warm restart converges to the same value.
+        let sn2 = ctx.spectral_norm_warm(&a, &mut warm, 200, 1e-10);
+        assert!((sn2 - sn).abs() < 1e-8 * sn);
+    }
+
+    #[test]
+    fn spectral_norm_is_thread_invariant() {
+        let mut rng = Rng::new(706);
+        let a = Mat::randn(30, 22, &mut rng);
+        let mut w1 = vec![];
+        let n1 = ExecCtx::serial().spectral_norm_warm(&a, &mut w1, 40, 0.0);
+        let mut w8 = vec![];
+        let n8 = ExecCtx::new(8).spectral_norm_warm(&a, &mut w8, 40, 0.0);
+        assert_eq!(n1.to_bits(), n8.to_bits());
+        assert_eq!(w1, w8);
+    }
+
+    #[test]
+    fn engine_ctx_shares_the_serving_pool() {
+        let engine = ApplyEngine::with_threads(3);
+        let ctx = engine.ctx();
+        assert!(Arc::ptr_eq(engine.pool(), ctx.pool()));
+        assert_eq!(ctx.n_threads(), 3);
+    }
+
+    #[test]
+    fn global_ctx_is_usable() {
+        let ctx = ExecCtx::global();
+        assert!(ctx.n_threads() >= 1);
+        let a = Mat::eye(4, 4);
+        let b = Mat::eye(4, 4);
+        assert!(ctx.gemm(&a, &b).rel_fro_err(&Mat::eye(4, 4)) < 1e-15);
+    }
+}

@@ -14,6 +14,12 @@
 //! - [`arena`] — [`Arena`], ping-pong scratch buffers sized from the
 //!   plan's max intermediate dimension, so steady-state applies perform
 //!   zero heap allocations (checkable via [`EngineMetricsSnapshot`]).
+//! - [`ctx`] — [`ExecCtx`], the same pool + cost model packaged for the
+//!   *training* side: cost-dispatched dense GEMM and pooled spectral
+//!   norms consumed by `palm4msa`, `hierarchical`, and `dictlearn`
+//!   (see the module's "how execution flows" diagram). The engine is the
+//!   repo's single execution substrate — serving and factorization share
+//!   one pool via [`ApplyEngine::ctx`].
 //!
 //! [`ApplyEngine`] owns a pool + config and compiles plans;
 //! [`EngineOp`] bundles plan + pool + metrics into a servable operator
@@ -21,13 +27,16 @@
 //! per-thread arena so concurrent callers never serialize on a lock.
 
 pub mod arena;
+pub mod ctx;
 pub mod plan;
 pub mod pool;
 
 pub use arena::Arena;
+pub use ctx::ExecCtx;
 pub use plan::{ApplyPlan, PlanConfig, Stage, StageKernel};
 pub use pool::{
-    par_gemm_into, par_gemv_into, par_spmm_into, par_spmv_into, ThreadPool,
+    par_gemm_into, par_gemv_into, par_gemv_t_into, par_spmm_into, par_spmv_into,
+    ThreadPool,
 };
 
 use crate::faust::Faust;
@@ -132,6 +141,13 @@ impl ApplyEngine {
     /// The engine's shared worker pool.
     pub fn pool(&self) -> &Arc<ThreadPool> {
         &self.pool
+    }
+
+    /// An [`ExecCtx`] sharing this engine's pool and cost-model weight:
+    /// on-line refactorization runs on the same threads that serve
+    /// applies, so a deployment needs exactly one pool.
+    pub fn ctx(&self) -> ExecCtx {
+        ExecCtx::from_pool(self.pool.clone(), self.cfg.plan.bytes_per_flop_weight)
     }
 
     /// Compile an execution plan for `faust` under this engine's config.

@@ -28,7 +28,7 @@ use super::pool::{par_gemm_into, par_spmm_into, ThreadPool};
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use crate::sparse::Csr;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// Tuning knobs for plan compilation.
 #[derive(Clone, Debug)]
@@ -60,8 +60,11 @@ impl Default for PlanConfig {
 /// Kernel variant chosen for one stage.
 #[derive(Clone, Debug)]
 pub enum StageKernel {
-    /// Row-parallel CSR spmm.
-    Sparse(Csr),
+    /// Row-parallel CSR spmm. Unfused factors share the owning
+    /// [`Faust`]'s `Arc<Csr>` — compiling a plan for an already-sparse
+    /// operator copies no factor data (fused products, transposed chains,
+    /// and λ-folded stages own fresh allocations).
+    Sparse(Arc<Csr>),
     /// Row-parallel dense GEMM over the densified factor.
     Dense(Mat),
 }
@@ -134,7 +137,7 @@ impl Stage {
     /// Transposed copy of this stage (kernel materialized transposed).
     fn transposed(&self) -> Stage {
         let kernel = match &self.kernel {
-            StageKernel::Sparse(s) => StageKernel::Sparse(s.transpose()),
+            StageKernel::Sparse(s) => StageKernel::Sparse(Arc::new(s.transpose())),
             StageKernel::Dense(m) => StageKernel::Dense(m.t()),
         };
         Stage { kernel, factor_range: self.factor_range }
@@ -142,7 +145,9 @@ impl Stage {
 
     fn scale(&mut self, s: f64) {
         match &mut self.kernel {
-            StageKernel::Sparse(c) => c.scale(s),
+            // `make_mut` un-shares a stage that aliases a Faust factor, so
+            // λ folding never mutates the operator's own CSR.
+            StageKernel::Sparse(c) => Arc::make_mut(c).scale(s),
             StageKernel::Dense(m) => m.scale(s),
         }
     }
@@ -187,7 +192,10 @@ impl ApplyPlan {
         let factors = faust.factors();
         // 1. Fusion pass (greedy, rightmost-first): precompute products of
         //    adjacent tiny factors when that strictly reduces apply flops.
-        let mut fused: Vec<(Csr, (usize, usize))> = Vec::with_capacity(factors.len());
+        //    Unfused factors keep the Faust's own `Arc<Csr>` (zero-copy);
+        //    only fused products allocate.
+        let mut fused: Vec<(Arc<Csr>, (usize, usize))> =
+            Vec::with_capacity(factors.len());
         let mut cur = factors[0].clone();
         let mut range = (0usize, 1usize);
         for (j, next) in factors.iter().enumerate().skip(1) {
@@ -198,7 +206,7 @@ impl ApplyPlan {
                 // Chain order: `next` applies after `cur` ⇒ product next·cur.
                 let product = next.spgemm(&cur);
                 if product.nnz() < cur.nnz() + next.nnz() {
-                    cur = product;
+                    cur = Arc::new(product);
                     range.1 = j + 1;
                     continue;
                 }
@@ -569,6 +577,40 @@ mod tests {
             for i in 0..6 {
                 assert!((out[i * b + j] - ycol[i]).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn unfused_sparse_stages_share_factor_storage() {
+        // ROADMAP item (e): a compiled plan must alias the Faust's own
+        // Arc<Csr> for every unfused sparse stage — MEG-scale operators
+        // used to hold ~2x factor memory per plan.
+        let f = crate::transforms::hadamard_faust(32);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        assert_eq!(plan.n_stages(), f.n_factors());
+        for (stage, fac) in plan.stages().iter().zip(f.factors()) {
+            match &stage.kernel {
+                StageKernel::Sparse(s) => {
+                    assert!(Arc::ptr_eq(s, fac), "stage copied its factor")
+                }
+                StageKernel::Dense(_) => panic!("butterfly stage went dense"),
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_folding_unshares_the_last_stage() {
+        // λ ≠ 1 must scale a copy, never the operator's own factor.
+        let mut rng = Rng::new(508);
+        let (f, dense) = chain(&mut rng, &[6, 6, 6], 0.1, 2.5);
+        let before: Vec<f64> = f.factors().last().unwrap().vals.clone();
+        let plan = ApplyPlan::compile(&f, &PlanConfig { fuse: false, ..PlanConfig::default() });
+        assert_eq!(f.factors().last().unwrap().vals, before, "factor mutated");
+        let x = rng.gauss_vec(6);
+        let got = apply_via_plan(&plan, &x);
+        let want = dense.matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
         }
     }
 

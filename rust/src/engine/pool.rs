@@ -289,6 +289,33 @@ pub fn par_gemv_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
     par_gemm_into(pool, a, x, 1, y);
 }
 
+/// Column-parallel dense transposed matvec: `y = Aᵀ x`. The output is
+/// partitioned over `A`'s columns; within a chunk the scan stays row-major
+/// (each row contributes to the chunk's column stripe), so every output
+/// element accumulates its terms in row order regardless of the thread
+/// count — results are bitwise thread-invariant, which the ExecCtx's
+/// pooled power iterations rely on for deterministic factorization.
+pub fn par_gemv_t_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.rows(), "par_gemv_t x dim mismatch");
+    assert_eq!(y.len(), a.cols(), "par_gemv_t y dim mismatch");
+    let min_cols = grain_rows(2 * a.rows() * a.cols(), a.cols());
+    let yptr = SendPtr(y.as_mut_ptr());
+    pool.par_ranges(a.cols(), min_cols, |s, e| {
+        // SAFETY: disjoint column ranges own disjoint slices of y.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(yptr.0.add(s), e - s) };
+        chunk.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &a.row(i)[s..e];
+            for (o, &v) in chunk.iter_mut().zip(row) {
+                *o += xi * v;
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,6 +425,22 @@ mod tests {
         par_spmv_into(&pool, &s, &x, &mut got);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn par_gemv_t_matches_matvec_t() {
+        let mut rng = Rng::new(304);
+        let pool = ThreadPool::new(4);
+        for &(m, n) in &[(130usize, 70usize), (3, 200), (64, 64)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let x = rng.gauss_vec(m);
+            let want = a.matvec_t(&x);
+            let mut got = vec![0.0; n];
+            par_gemv_t_into(&pool, &a, &x, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12 * (1.0 + w.abs()));
+            }
         }
     }
 

@@ -24,8 +24,11 @@ use std::sync::{Arc, OnceLock};
 #[derive(Clone, Debug)]
 pub struct Faust {
     /// Sparse factors, rightmost first: `factors[0] = S_1 (a_2×a_1)`,
-    /// `factors[J-1] = S_J (m×a_J)`.
-    factors: Vec<Csr>,
+    /// `factors[J-1] = S_J (m×a_J)`. Stored behind `Arc` so compiled
+    /// plans alias the same CSR buffers for unfused sparse stages instead
+    /// of holding a second copy of every factor (MEG-scale operators used
+    /// to pay ~2× factor memory per plan).
+    factors: Vec<Arc<Csr>>,
     /// Global scale λ.
     lambda: f64,
     /// Lazily-compiled engine plan shared by all apply paths.
@@ -35,6 +38,13 @@ pub struct Faust {
 impl Faust {
     /// Build from rightmost-first sparse factors and a scale.
     pub fn new(factors: Vec<Csr>, lambda: f64) -> Self {
+        Self::from_shared(factors.into_iter().map(Arc::new).collect(), lambda)
+    }
+
+    /// Build from already-shared factors without copying — the dual of
+    /// [`Faust::factors`] for callers that assemble operators from
+    /// existing `Arc<Csr>` handles.
+    pub fn from_shared(factors: Vec<Arc<Csr>>, lambda: f64) -> Self {
         assert!(!factors.is_empty(), "FAuST needs at least one factor");
         for w in factors.windows(2) {
             assert_eq!(
@@ -71,8 +81,9 @@ impl Faust {
         self.factors.len()
     }
 
-    /// The factors, rightmost (applied first) first.
-    pub fn factors(&self) -> &[Csr] {
+    /// The factors, rightmost (applied first) first. Shared handles:
+    /// unfused sparse plan stages alias these same allocations.
+    pub fn factors(&self) -> &[Arc<Csr>] {
         &self.factors
     }
 

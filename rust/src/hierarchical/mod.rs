@@ -6,10 +6,21 @@
 //! `T_ℓ` (constraint `Ẽ_ℓ`) — followed by a *global* palm4MSA refit of all
 //! factors introduced so far. The analogy with greedy layer-wise
 //! pre-training + fine-tuning of deep networks is the paper's §IV-A.
+//!
+//! Every split and refit runs on the engine's
+//! [`ExecCtx`](crate::engine::ExecCtx) (pooled cost-dispatched GEMMs,
+//! pooled power iterations): [`factorize`]/[`factorize_traced`]/
+//! [`factorize_dict`] use the process-default ctx, the `_with_ctx`
+//! variants pin an explicit one (e.g. a serving engine's via
+//! `ApplyEngine::ctx()`). Per-level error tracking reuses each refit's
+//! cached [`PalmResult::product`](crate::palm::PalmResult::product)
+//! instead of re-multiplying the factor chain. Results are bitwise
+//! identical across thread counts for a fixed seed.
 
+use crate::engine::ExecCtx;
 use crate::faust::Faust;
 use crate::linalg::Mat;
-use crate::palm::{palm4msa, FactorState, PalmConfig};
+use crate::palm::{palm4msa_with_ctx, FactorState, PalmConfig};
 use crate::prox::Constraint;
 use crate::rng::Rng;
 
@@ -205,15 +216,30 @@ impl HierarchicalConfig {
     }
 }
 
-/// Hierarchical factorization of `a` (paper Fig. 5). Returns the FAμST
+/// Hierarchical factorization of `a` (paper Fig. 5) on the
+/// process-default [`ExecCtx`]. Returns the FAμST
 /// `λ · T_{J-1} S_{J-1} ⋯ S_1` with `S_J := T_{J-1}`.
 pub fn factorize(a: &Mat, cfg: &HierarchicalConfig) -> Faust {
-    factorize_traced(a, cfg).0
+    factorize_with_ctx(ExecCtx::global(), a, cfg)
+}
+
+/// [`factorize`] on an explicit execution context.
+pub fn factorize_with_ctx(ctx: &ExecCtx, a: &Mat, cfg: &HierarchicalConfig) -> Faust {
+    factorize_traced_with_ctx(ctx, a, cfg).0
 }
 
 /// Like [`factorize`] but also returns the relative Frobenius error after
 /// each level's global refit (used by the benches).
 pub fn factorize_traced(a: &Mat, cfg: &HierarchicalConfig) -> (Faust, Vec<f64>) {
+    factorize_traced_with_ctx(ExecCtx::global(), a, cfg)
+}
+
+/// [`factorize_traced`] on an explicit execution context.
+pub fn factorize_traced_with_ctx(
+    ctx: &ExecCtx,
+    a: &Mat,
+    cfg: &HierarchicalConfig,
+) -> (Faust, Vec<f64>) {
     let jm1 = cfg.levels.len();
     assert!(jm1 >= 1, "need at least one split level");
     let a_fro = a.fro().max(1e-300);
@@ -233,7 +259,8 @@ pub fn factorize_traced(a: &Mat, cfg: &HierarchicalConfig) -> (Faust, Vec<f64>) 
         let s_rows = s_shape.0;
         let dims = vec![(s_rows, residual.cols()), (residual.rows(), s_rows)];
         let split_init = cfg.split_init(l, &dims);
-        let split = palm4msa(
+        let split = palm4msa_with_ctx(
+            ctx,
             &residual,
             split_init,
             &cfg.split_cfg(l, (residual.rows(), s_rows)),
@@ -244,6 +271,8 @@ pub fn factorize_traced(a: &Mat, cfg: &HierarchicalConfig) -> (Faust, Vec<f64>) 
         s_factors.push(f1);
         residual = f2;
 
+        // The refit's cached product (reused for the error trace below).
+        let mut level_product: Option<Mat> = None;
         if !cfg.skip_global {
             // --- Global refit of {T_ℓ, S_ℓ..S_1} against A (Fig. 5 line 5),
             // init = current values.
@@ -264,7 +293,7 @@ pub fn factorize_traced(a: &Mat, cfg: &HierarchicalConfig) -> (Faust, Vec<f64>) 
             }
             init.lambda = {
                 // optimal λ for the warm start
-                let p = init.product();
+                let p = init.product_ctx(ctx);
                 let d = p.fro2();
                 if d > 0.0 {
                     a.dot(&p) / d
@@ -275,21 +304,34 @@ pub fn factorize_traced(a: &Mat, cfg: &HierarchicalConfig) -> (Faust, Vec<f64>) 
             let mut gcfg = PalmConfig::new(constraints, cfg.n_iter_global);
             gcfg.alpha = cfg.alpha;
             gcfg.seed = cfg.seed ^ (0x1000 + l as u64);
-            let refit = palm4msa(a, init, &gcfg);
+            let refit = palm4msa_with_ctx(ctx, a, init, &gcfg);
             lambda = refit.state.lambda;
             let nm = refit.state.mats.len();
             s_factors = refit.state.mats[..nm - 1].to_vec();
             residual = refit.state.mats[nm - 1].clone();
+            level_product = Some(refit.product);
         }
 
-        // Track the current overall error ‖A − λ T Π S‖ / ‖A‖.
-        let mut prod = s_factors[0].clone();
-        for m in &s_factors[1..] {
-            prod = m.matmul(&prod);
-        }
-        prod = residual.matmul(&prod);
-        prod.scale(if cfg.skip_global { 1.0 } else { lambda });
-        errs.push(prod.sub(a).fro() / a_fro);
+        // Track the current overall error ‖A − λ T Π S‖ / ‖A‖, reusing the
+        // refit's prefix-product cache output — the pre-ctx code paid an
+        // extra O(level) GEMM chain here every level (O(J²) per run).
+        let err = match level_product {
+            Some(p) => {
+                let mut approx = p;
+                approx.scale(lambda);
+                approx.sub(a).fro() / a_fro
+            }
+            None => {
+                // skip_global ablation: no refit product to reuse.
+                let mut prod = s_factors[0].clone();
+                for m in &s_factors[1..] {
+                    prod = ctx.gemm(m, &prod);
+                }
+                prod = ctx.gemm(&residual, &prod);
+                prod.sub(a).fro() / a_fro
+            }
+        };
+        errs.push(err);
     }
 
     // S_J ← T_{J-1}.
@@ -323,6 +365,18 @@ pub fn factorize_dict(
     cfg: &HierarchicalConfig,
     sparse_coder: &SparseCoder,
 ) -> (Faust, Mat) {
+    factorize_dict_with_ctx(ExecCtx::global(), y, d0, gamma0, cfg, sparse_coder)
+}
+
+/// [`factorize_dict`] on an explicit execution context.
+pub fn factorize_dict_with_ctx(
+    ctx: &ExecCtx,
+    y: &Mat,
+    d0: &Mat,
+    gamma0: &Mat,
+    cfg: &HierarchicalConfig,
+    sparse_coder: &SparseCoder,
+) -> (Faust, Mat) {
     let jm1 = cfg.levels.len();
     assert_eq!(d0.cols(), gamma0.rows(), "D/Γ shape mismatch");
     assert_eq!(d0.rows(), y.rows());
@@ -337,7 +391,8 @@ pub fn factorize_dict(
         // (i) split the residual (same as Fig. 5 line 3).
         let s_rows = cfg.residual_dims[l].0.min(residual.rows());
         let dims = vec![(s_rows, residual.cols()), (residual.rows(), s_rows)];
-        let split = palm4msa(
+        let split = palm4msa_with_ctx(
+            ctx,
             &residual,
             cfg.split_init(l, &dims),
             &cfg.split_cfg(l, (residual.rows(), s_rows)),
@@ -362,7 +417,7 @@ pub fn factorize_dict(
         constraints.push(cfg.levels[l].residual.clone());
         let mut init = FactorState { mats, lambda: lambda * rf };
         init.lambda = {
-            let p = init.product();
+            let p = init.product_ctx(ctx);
             let d = p.fro2();
             if d > 0.0 {
                 y.dot(&p) / d
@@ -373,18 +428,21 @@ pub fn factorize_dict(
         let mut gcfg = PalmConfig::new(constraints, cfg.n_iter_global);
         gcfg.alpha = cfg.alpha;
         gcfg.seed = cfg.seed ^ (0x2000 + l as u64);
-        let refit = palm4msa(y, init, &gcfg);
+        let refit = palm4msa_with_ctx(ctx, y, init, &gcfg);
         lambda = refit.state.lambda;
         let nm = refit.state.mats.len();
         s_factors = refit.state.mats[1..nm - 1].to_vec();
         residual = refit.state.mats[nm - 1].clone();
 
         // (iii) coefficient update (Fig. 11 line 5): Γ = sparseCoding(Y, D).
+        // The refit's cached product is D·Γ (Γ rides frozen as the
+        // rightmost factor), so the dictionary itself still needs its own
+        // chain — multiplied on the ctx pool.
         let mut dict = s_factors[0].clone();
         for m in &s_factors[1..] {
-            dict = m.matmul(&dict);
+            dict = ctx.gemm(m, &dict);
         }
-        dict = residual.matmul(&dict);
+        dict = ctx.gemm(&residual, &dict);
         dict.scale(lambda);
         gamma = sparse_coder(y, &dict);
     }

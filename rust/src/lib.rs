@@ -13,13 +13,16 @@
 //!   [`hierarchical`]), projection operators ([`prox`]), the [`faust`]
 //!   operator type, solvers, dictionary learning, and the MEG / image
 //!   application substrates.
-//! - **L3-exec ([`engine`])**: the execution layer between [`faust`] and
-//!   the serving [`coordinator`] — cost-modeled [`engine::ApplyPlan`]s
-//!   (CSR-vs-dense strategy, factor fusion, transpose-aware kernels), a
-//!   `std::thread` chunked worker pool with row-partitioned parallel
-//!   spmv/spmm, and zero-alloc ping-pong buffer arenas. Every
-//!   `Faust::apply*` routes through it; the coordinator serves
-//!   [`engine::EngineOp`]s.
+//! - **L3-exec ([`engine`])**: the repo's single execution substrate —
+//!   cost-modeled [`engine::ApplyPlan`]s (CSR-vs-dense strategy, factor
+//!   fusion, transpose-aware kernels), a `std::thread` chunked worker
+//!   pool with row-partitioned parallel spmv/spmm, zero-alloc ping-pong
+//!   buffer arenas, and the [`engine::ExecCtx`] that runs *training* on
+//!   the same pool (cost-dispatched GEMM + pooled power iterations for
+//!   palm4MSA / hierarchical / dictlearn). Every `Faust::apply*` routes
+//!   through it; the coordinator serves [`engine::EngineOp`]s; the
+//!   factorizers take a ctx (`_with_ctx` variants) or default to the
+//!   process-wide one.
 //! - **L3-serve ([`coordinator`])**: operator registry + dynamic batcher
 //!   + worker pool turning planned operators into a matvec service.
 //! - **L2/L1 (python/, build-time only)**: JAX palm4MSA step + Pallas

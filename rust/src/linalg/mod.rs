@@ -7,6 +7,6 @@ pub mod svd;
 pub use mat::{chain_product, Mat};
 pub use qr::{lstsq, qr_thin, solve_upper};
 pub use svd::{
-    rank1_approx, spectral_norm, spectral_norm_iter, spectral_norm_warm, svd_jacobi,
-    svd_randomized, Svd,
+    rank1_approx, spectral_norm, spectral_norm_iter, spectral_norm_warm,
+    spectral_norm_with, svd_jacobi, svd_randomized, Svd,
 };

@@ -170,15 +170,34 @@ pub fn spectral_norm_warm(a: &Mat, x: &mut Vec<f64>, max_iter: usize, tol: f64) 
     if m == 0 || n == 0 {
         return 0.0;
     }
+    spectral_norm_with(n, x, max_iter, tol, |xv, z| {
+        let y = a.matvec(xv);
+        z.copy_from_slice(&a.matvec_t(&y));
+    })
+}
+
+/// Power-iteration driver generic over the Gram apply `z ← AᵀA x` — the
+/// serial [`spectral_norm_warm`] and the engine's pooled
+/// `ExecCtx::spectral_norm_warm` share this loop (and therefore the exact
+/// warm-start, re-seed, and stopping semantics). `n` is `A`'s column
+/// count; `x` is the caller-owned warm-start vector (re-seeded
+/// deterministically when absent or all-zero), updated in place.
+pub fn spectral_norm_with(
+    n: usize,
+    x: &mut Vec<f64>,
+    max_iter: usize,
+    tol: f64,
+    mut gram_apply: impl FnMut(&[f64], &mut [f64]),
+) -> f64 {
     let fresh = x.len() != n || x.iter().all(|&v| v == 0.0);
     if fresh {
         let mut rng = Rng::new(0x5EC);
         *x = rng.gauss_vec(n);
     }
+    let mut z = vec![0.0; n];
     let mut norm_prev = 0.0;
     for _ in 0..max_iter {
-        let y = a.matvec(x);
-        let z = a.matvec_t(&y);
+        gram_apply(x, &mut z);
         let nz: f64 = z.iter().map(|v| v * v).sum::<f64>().sqrt();
         if nz < 1e-300 {
             return 0.0;

@@ -3,9 +3,11 @@
 use faust::bench_util::{fmt, Table};
 use faust::cli::{Args, USAGE};
 use faust::coordinator::{engine_ops, BatchOp, Coordinator, CoordinatorConfig};
-use faust::engine::{ApplyEngine, EngineConfig, PlanConfig};
-use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::dictlearn::{faust_dictionary_learning_with_ctx, KsvdConfig};
+use faust::engine::{ApplyEngine, EngineConfig, ExecCtx, PlanConfig};
+use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
 use faust::image::{add_noise, corpus, denoise, psnr, random_patches};
+use faust::linalg::Mat;
 use faust::meg::{localization_experiment, meg_model};
 use faust::rng::Rng;
 use faust::transforms::{hadamard, hadamard_faust, overcomplete_dct};
@@ -20,6 +22,16 @@ fn err(msg: impl Into<String>) -> Box<dyn std::error::Error> {
     msg.into().into()
 }
 
+/// `--threads N` → an [`ExecCtx`] with its own N-thread pool; `0` (the
+/// default) → the process-default ctx shared with the serving engine.
+fn ctx_for(threads: usize) -> ExecCtx {
+    if threads == 0 {
+        ExecCtx::global().clone()
+    } else {
+        ExecCtx::new(threads)
+    }
+}
+
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -31,6 +43,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("hadamard") => cmd_hadamard(&args),
         Some("factorize") => cmd_factorize(&args),
+        Some("dict") => cmd_dict(&args),
         Some("localize") => cmd_localize(&args),
         Some("denoise") => cmd_denoise(&args),
         Some("serve") => cmd_serve(&args),
@@ -57,11 +70,16 @@ fn cmd_hadamard(args: &Args) -> Result<()> {
     if !n.is_power_of_two() || n < 4 {
         return Err(err("--n must be a power of two ≥ 4"));
     }
+    let ctx = ctx_for(args.get("threads", 0));
     let a = hadamard(n);
     let cfg = HierarchicalConfig::hadamard(n);
-    println!("factorizing the {n}x{n} Hadamard matrix into {} factors...", cfg.n_factors());
+    println!(
+        "factorizing the {n}x{n} Hadamard matrix into {} factors ({} ctx threads)...",
+        cfg.n_factors(),
+        ctx.n_threads()
+    );
     let t0 = Instant::now();
-    let fst = factorize(&a, &cfg);
+    let fst = factorize_with_ctx(&ctx, &a, &cfg);
     let dt = t0.elapsed();
     let rel = fst.relative_error_fro(&a);
     let reference = hadamard_faust(n);
@@ -85,11 +103,16 @@ fn cmd_factorize(args: &Args) -> Result<()> {
     let s: usize = args.get("s", 2 * rows);
     let rho: f64 = args.get("rho", 0.8);
     let seed: u64 = args.get("seed", 0);
+    let ctx = ctx_for(args.get("threads", 0));
     let model = meg_model(rows, cols, seed);
     let cfg = HierarchicalConfig::meg(rows, cols, j, k, s, rho, 1.4 * (rows * rows) as f64);
-    println!("factorizing {rows}x{cols} synthetic MEG gain (J={j}, k={k}, s={s}, rho={rho})...");
+    println!(
+        "factorizing {rows}x{cols} synthetic MEG gain (J={j}, k={k}, s={s}, rho={rho}, \
+         {} ctx threads)...",
+        ctx.n_threads()
+    );
     let t0 = Instant::now();
-    let fst = factorize(&model.gain, &cfg);
+    let fst = factorize_with_ctx(&ctx, &model.gain, &cfg);
     let mut rng = Rng::new(seed ^ 1);
     let re = fst.relative_error_spectral(&model.gain, &mut rng);
     println!("  time           : {:.2?}", t0.elapsed());
@@ -111,6 +134,7 @@ fn cmd_localize(args: &Args) -> Result<()> {
     let j: usize = args.get("j", 4);
     let k: usize = args.get("k", 10);
     let seed: u64 = args.get("seed", 0);
+    let ctx = ctx_for(args.get("threads", 0));
     println!("building synthetic MEG model {sensors}x{sources}...");
     let model = meg_model(sensors, sources, seed);
     let cfg = HierarchicalConfig::meg(
@@ -123,7 +147,7 @@ fn cmd_localize(args: &Args) -> Result<()> {
         1.4 * (sensors * sensors) as f64,
     );
     println!("factorizing (J={j}, k={k})...");
-    let fst = factorize(&model.gain, &cfg);
+    let fst = factorize_with_ctx(&ctx, &model.gain, &cfg);
     let mut rng = Rng::new(seed ^ 2);
     println!(
         "  FAuST: RCG={:.1}, RE={:.4}",
@@ -158,6 +182,7 @@ fn cmd_denoise(args: &Args) -> Result<()> {
     let atoms: usize = args.get("atoms", 128);
     let stride: usize = args.get("stride", 2);
     let seed: u64 = args.get("seed", 0);
+    let ctx = ctx_for(args.get("threads", 0));
     let p = 8usize;
     let imgs = corpus(size);
     let (name, img) = &imgs[args.get("image", 9usize).min(imgs.len() - 1)];
@@ -168,9 +193,9 @@ fn cmd_denoise(args: &Args) -> Result<()> {
     let patches = random_patches(&noisy, p, 2000, &mut rng);
 
     // K-SVD (DDL baseline).
-    let kcfg = faust::dictlearn::KsvdConfig { n_atoms: atoms, sparsity: 5, n_iter: 10, seed };
+    let kcfg = KsvdConfig { n_atoms: atoms, sparsity: 5, n_iter: 10, seed };
     let t0 = Instant::now();
-    let ddl = faust::dictlearn::ksvd(&patches, &kcfg);
+    let ddl = faust::dictlearn::ksvd_with_ctx(&ctx, &patches, &kcfg);
     let ddl_den = denoise(&noisy, &ddl.dict, p, 5, stride);
     println!(
         "  DDL (K-SVD)        : {:.2} dB   [{:.1?}]",
@@ -189,7 +214,7 @@ fn cmd_denoise(args: &Args) -> Result<()> {
         (p * p * p * p) as f64,
     );
     let t0 = Instant::now();
-    let (fst, _) = faust::dictlearn::faust_dictionary_learning(&patches, &kcfg, &hcfg);
+    let (fst, _) = faust_dictionary_learning_with_ctx(&ctx, &patches, &kcfg, &hcfg);
     let fden = denoise(&noisy, &fst, p, 5, stride);
     println!(
         "  FAuST (s_tot={})  : {:.2} dB   [{:.1?}]  RCG={:.1}",
@@ -207,8 +232,65 @@ fn cmd_denoise(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Paper §VI-C scaled to synthetic data: learn a FAuST dictionary from
+/// planted k-sparse samples — K-SVD warm-up then hierarchical
+/// factorization, all on one shared [`ExecCtx`].
+fn cmd_dict(args: &Args) -> Result<()> {
+    let m: usize = args.get("m", 32);
+    let atoms: usize = args.get("atoms", 64);
+    let samples: usize = args.get("samples", 400);
+    let sparsity: usize = args.get("sparsity", 4);
+    let j: usize = args.get("j", 3);
+    let iters: usize = args.get("iters", 10);
+    let seed: u64 = args.get("seed", 0);
+    let ctx = ctx_for(args.get("threads", 0));
+    if atoms < m {
+        return Err(err("--atoms must be >= --m (overcomplete dictionary)"));
+    }
+    // Planted dictionary + k-sparse codes.
+    let mut rng = Rng::new(seed);
+    let mut d = Mat::randn(m, atoms, &mut rng);
+    d.normalize_cols();
+    let mut gamma = Mat::zeros(atoms, samples);
+    for c in 0..samples {
+        for i in rng.sample_indices(atoms, sparsity.min(atoms)) {
+            gamma.set(i, c, rng.gauss());
+        }
+    }
+    let y = d.matmul(&gamma);
+    let kcfg = KsvdConfig { n_atoms: atoms, sparsity, n_iter: iters, seed };
+    let hcfg = HierarchicalConfig::dictionary(
+        m,
+        atoms,
+        j,
+        sparsity.max(2),
+        4 * m,
+        0.7,
+        (m * m) as f64,
+    );
+    println!(
+        "dictionary learning: Y {m}x{samples}, {atoms} atoms, k={sparsity}, \
+         J={j}, ctx threads={}",
+        ctx.n_threads()
+    );
+    let t0 = Instant::now();
+    let (fst, g) = faust_dictionary_learning_with_ctx(&ctx, &y, &kcfg, &hcfg);
+    let resid = fst.to_dense().matmul(&g).sub(&y).fro() / y.fro();
+    println!("  time           : {:.2?}", t0.elapsed());
+    println!("  residual       : {resid:.4}");
+    println!("  s_tot          : {}", fst.s_tot());
+    println!("  RCG            : {:.2}", fst.rcg());
+    if let Some(path) = args.get_str("save") {
+        fst.save(path)?;
+        println!("  saved to {path}");
+    }
+    Ok(())
+}
+
 /// Serve a Hadamard FAuST + dense twin through the coordinator, with the
-/// FAuST planned + parallelized by the engine.
+/// FAuST planned + parallelized by the engine. `--factorize` builds the
+/// operator by hierarchical factorization *on the serving engine's ctx*
+/// (on-line refactorization: one pool for training and serving).
 fn cmd_serve(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 64);
     let requests: usize = args.get("requests", 10_000);
@@ -216,8 +298,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers: usize = args.get("workers", 2);
     let threads: usize = args.get("threads", 2);
     let h = hadamard(n);
-    let hf = hadamard_faust(n);
     let engine = ApplyEngine::with_threads(threads);
+    let hf = if args.flag("factorize") {
+        let t0 = Instant::now();
+        let f = factorize_with_ctx(&engine.ctx(), &h, &HierarchicalConfig::hadamard(n));
+        println!(
+            "factorized the {n}-point Hadamard on the serving ctx in {:.2?} \
+             (rel err {:.1e})",
+            t0.elapsed(),
+            f.relative_error_fro(&h)
+        );
+        f
+    } else {
+        hadamard_faust(n)
+    };
     println!(
         "serving {n}x{n} operator: dense + FAuST (RCG={:.1}), engine threads={threads}",
         hf.rcg()
@@ -382,9 +476,11 @@ fn cmd_runtime(args: &Args) -> Result<()> {
 #[cfg(not(feature = "pjrt"))]
 fn cmd_runtime(_args: &Args) -> Result<()> {
     println!(
-        "runtime: built without the `pjrt` feature. To enable it, \
+        "runtime: built without the `pjrt` feature. Rebuild with \
+         `--features pjrt` for the API surface (stub backend), or \
          uncomment the `xla`/`anyhow` dependencies in rust/Cargo.toml \
-         (vendored crates required), then rebuild with `--features pjrt`."
+         (vendored crates required) and use `--features pjrt,pjrt-xla` \
+         for real PJRT execution."
     );
     Ok(())
 }

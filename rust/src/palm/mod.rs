@@ -6,9 +6,26 @@
 //! Convergence to a stationary point follows from Bolte–Sabach–Teboulle's
 //! PALM theory (§III-B conditions (i)–(v); indicator penalties of the
 //! semi-algebraic sets of Appendix A).
+//!
+//! Execution runs on the engine's [`ExecCtx`]: every GEMM in the sweep is
+//! cost-dispatched (serial / row-parallel / transpose-rewrite) on the
+//! shared thread pool, and the per-factor Lipschitz moduli come from
+//! pooled power iterations. Zero-config callers get the process-default
+//! ctx through [`palm4msa`]; [`palm4msa_with_ctx`] pins an explicit one
+//! (e.g. a serving engine's, via `ApplyEngine::ctx()`). All ctx kernels
+//! are bitwise thread-invariant, so a fixed seed reproduces identical
+//! factors at any thread count.
+//!
+//! Partial products are managed by a per-sweep prefix-product cache
+//! ([`SweepCache`]): the fixed side's suffix products are built once per
+//! sweep, the moving side grows incrementally with each updated factor,
+//! and the full updated product falls out of the sweep for free — the λ
+//! update, the objective, and callers (via [`PalmResult::product`]) all
+//! reuse it instead of re-multiplying the chain.
 
+use crate::engine::ExecCtx;
 use crate::faust::Faust;
-use crate::linalg::{spectral_norm_warm, Mat};
+use crate::linalg::Mat;
 use crate::prox::Constraint;
 
 /// Configuration for one palm4MSA run.
@@ -77,20 +94,42 @@ impl FactorState {
         FactorState { mats, lambda: 1.0 }
     }
 
-    /// Current dense product `S_J ⋯ S_1` (λ not applied).
+    /// Current dense product `S_J ⋯ S_1` (λ not applied), on the
+    /// process-default [`ExecCtx`]. Callers sitting on a [`PalmResult`]
+    /// should prefer its cached [`PalmResult::product`].
     pub fn product(&self) -> Mat {
+        self.product_ctx(ExecCtx::global())
+    }
+
+    /// [`FactorState::product`] on an explicit execution context.
+    pub fn product_ctx(&self, ctx: &ExecCtx) -> Mat {
         let mut acc = self.mats[0].clone();
         for m in &self.mats[1..] {
-            acc = m.matmul(&acc);
+            acc = ctx.gemm(m, &acc);
         }
         acc
     }
 
     /// Objective `½ ‖A − λ Π S_j‖_F²`.
     pub fn objective(&self, a: &Mat) -> f64 {
-        let mut p = self.product();
-        p.scale(self.lambda);
-        0.5 * a.sub(&p).fro2()
+        self.objective_with(a, &self.product())
+    }
+
+    /// Objective reusing an already-computed factor product (e.g.
+    /// [`PalmResult::product`]) instead of re-multiplying the chain.
+    /// One fused pass, no temporaries.
+    pub fn objective_with(&self, a: &Mat, product: &Mat) -> f64 {
+        assert_eq!(a.shape(), product.shape(), "objective product shape");
+        let lam = self.lambda;
+        0.5 * a
+            .data()
+            .iter()
+            .zip(product.data())
+            .map(|(av, pv)| {
+                let d = av - lam * pv;
+                d * d
+            })
+            .sum::<f64>()
     }
 
     /// Convert into a [`Faust`] operator (exact-zero sparsification).
@@ -106,55 +145,97 @@ pub struct PalmResult {
     pub objective_trace: Vec<f64>,
     /// Iterations actually performed (≤ `n_iter` if early-stopped).
     pub iters_run: usize,
+    /// Final dense product `S_J ⋯ S_1` of `state.mats` (λ not applied) —
+    /// the last sweep's prefix-product cache output, handed to callers so
+    /// objective/error evaluation never re-multiplies the chain.
+    pub product: Mat,
 }
 
-/// Fraction of non-zero entries (cheap single pass; used to pick the
-/// cheapest GEMM formulation — PALM factors are dense-stored but often
-/// extremely sparse after projection).
-fn density(m: &Mat) -> f64 {
-    m.nnz() as f64 / (m.rows() * m.cols()) as f64
+/// Per-sweep prefix-product cache (the L/R sides of Fig. 4's gradient).
+///
+/// `fixed[j]` holds the product of the *pre-sweep* factor values on the
+/// far side of factor `j` — suffix products built once per sweep in `J−1`
+/// GEMMs — while `moving` is grown incrementally as factors are updated.
+/// After a complete sweep `moving` *is* the full updated product
+/// `S_J ⋯ S_1`, which the λ update, the objective, and
+/// [`PalmResult::product`] reuse: without the cache each factor update
+/// would recompute its partial chains from scratch (O(J²) GEMMs per
+/// sweep instead of O(J)).
+struct SweepCache {
+    fixed: Vec<Option<Mat>>,
+    moving: Option<Mat>,
 }
 
-/// `a · b`, choosing between the direct ikj kernel (skips zeros of the
-/// *left* operand) and the double-transpose form `(bᵀ aᵀ)ᵀ` (skips zeros
-/// of the *right* operand). On the MEG-scale gradient this is worth ~10×
-/// when the sparse factor sits on the right (see EXPERIMENTS.md §Perf).
-fn smart_matmul(a: &Mat, b: &Mat) -> Mat {
-    let da = density(a);
-    let db = density(b);
-    // Transposes cost two O(size) passes; only flip when clearly cheaper.
-    if db < 0.5 * da {
-        b.t().matmul(&a.t()).t()
-    } else {
-        a.matmul(b)
+impl SweepCache {
+    /// Build the fixed-side suffix products of the pre-sweep factors:
+    /// for R2L `fixed[j] = S_J ⋯ S_{j+1}` (left side); for L2R
+    /// `fixed[j] = S_{j-1} ⋯ S_1` (right side).
+    fn build(ctx: &ExecCtx, mats: &[Mat], order: UpdateOrder) -> SweepCache {
+        let nfac = mats.len();
+        let mut fixed: Vec<Option<Mat>> = vec![None; nfac];
+        match order {
+            UpdateOrder::RightToLeft => {
+                for j in (0..nfac - 1).rev() {
+                    fixed[j] = Some(match &fixed[j + 1] {
+                        None => mats[j + 1].clone(),
+                        Some(m) => ctx.gemm(m, &mats[j + 1]),
+                    });
+                }
+            }
+            UpdateOrder::LeftToRight => {
+                for j in 1..nfac {
+                    fixed[j] = Some(match &fixed[j - 1] {
+                        None => mats[j - 1].clone(),
+                        Some(m) => ctx.gemm(&mats[j - 1], m),
+                    });
+                }
+            }
+        }
+        SweepCache { fixed, moving: None }
+    }
+
+    /// The (L, R) side products seen by factor `j` mid-sweep: old factors
+    /// on the fixed side, already-updated factors on the moving side.
+    fn sides(&self, j: usize, order: UpdateOrder) -> (Option<&Mat>, Option<&Mat>) {
+        match order {
+            UpdateOrder::RightToLeft => (self.fixed[j].as_ref(), self.moving.as_ref()),
+            UpdateOrder::LeftToRight => (self.moving.as_ref(), self.fixed[j].as_ref()),
+        }
+    }
+
+    /// Fold the (possibly updated) factor into the moving-side product.
+    fn fold(&mut self, ctx: &ExecCtx, mat: &Mat, order: UpdateOrder) {
+        self.moving = Some(match (order, self.moving.take()) {
+            (_, None) => mat.clone(),
+            (UpdateOrder::RightToLeft, Some(am)) => ctx.gemm(mat, &am),
+            (UpdateOrder::LeftToRight, Some(am)) => ctx.gemm(&am, mat),
+        });
+    }
+
+    /// The full updated product `S_J ⋯ S_1` after a complete sweep.
+    fn into_product(self) -> Mat {
+        self.moving.expect("at least one factor folded")
     }
 }
 
-/// `aᵀ · b` via explicit transpose + direct kernel: better cache behaviour
-/// than the scatter-accumulate `matmul_tn` and re-enables the zero-skip on
-/// `aᵀ`'s rows. `a` is a PALM side-product (small) so the transpose is
-/// negligible next to the GEMM.
-fn smart_matmul_tn(a: &Mat, b: &Mat) -> Mat {
-    a.t().matmul(b)
-}
-
-/// `a · bᵀ` with the same density dispatch as [`smart_matmul`].
-fn smart_matmul_nt(a: &Mat, b: &Mat) -> Mat {
-    let da = density(a);
-    let db = density(b);
-    if db < 0.5 * da {
-        // (b aᵀ)ᵀ — skips zeros of b.
-        b.matmul(&a.t()).t()
-    } else {
-        a.matmul_nt(b)
-    }
-}
-
-/// Run palm4MSA on operator `a` from `init` (see paper Fig. 4).
+/// Run palm4MSA on operator `a` from `init` (see paper Fig. 4), on the
+/// process-default [`ExecCtx`].
 ///
 /// `init.mats` must match `cfg.constraints` in length and chain to the
 /// shape of `a`.
 pub fn palm4msa(a: &Mat, init: FactorState, cfg: &PalmConfig) -> PalmResult {
+    palm4msa_with_ctx(ExecCtx::global(), a, init, cfg)
+}
+
+/// [`palm4msa`] on an explicit execution context: all GEMMs and power
+/// iterations run on `ctx`'s pool. Results are bitwise identical across
+/// thread counts (the ctx kernels are thread-invariant).
+pub fn palm4msa_with_ctx(
+    ctx: &ExecCtx,
+    a: &Mat,
+    init: FactorState,
+    cfg: &PalmConfig,
+) -> PalmResult {
     let nfac = cfg.constraints.len();
     assert_eq!(init.mats.len(), nfac, "constraint/factor count mismatch");
     assert_eq!(init.mats[0].cols(), a.cols(), "rightmost factor input dim");
@@ -172,53 +253,25 @@ pub fn palm4msa(a: &Mat, init: FactorState, cfg: &PalmConfig) -> PalmResult {
     let mut trace = Vec::with_capacity(cfg.n_iter);
     let mut prev_obj = f64::INFINITY;
     let mut iters_run = 0;
+    let mut product: Option<Mat> = None;
     for _iter in 0..cfg.n_iter {
         // Gauss–Seidel sweep. For RightToLeft (paper Fig. 4): factor j
-        // sees *old* factors on its left (suffix products precomputed) and
-        // *updated* factors on its right (accumulated). LeftToRight is the
-        // mirror (FAμST toolbox default).
+        // sees *old* factors on its left (cached suffix products) and
+        // *updated* factors on its right (the incrementally grown moving
+        // side). LeftToRight is the mirror (FAμST toolbox default).
         let order: Vec<usize> = match cfg.update_order {
             UpdateOrder::RightToLeft => (0..nfac).collect(),
             UpdateOrder::LeftToRight => (0..nfac).rev().collect(),
         };
-        // Fixed-side products of OLD factor values, indexed by factor:
-        // for R2L: fixed[j] = S_J ⋯ S_{j+1} (left side);
-        // for L2R: fixed[j] = S_{j-1} ⋯ S_1 (right side).
-        let fixed: Vec<Option<Mat>> = match cfg.update_order {
-            UpdateOrder::RightToLeft => {
-                let mut v: Vec<Option<Mat>> = vec![None; nfac];
-                for j in (0..nfac - 1).rev() {
-                    v[j] = Some(match &v[j + 1] {
-                        None => st.mats[j + 1].clone(),
-                        Some(m) => smart_matmul(m, &st.mats[j + 1]),
-                    });
-                }
-                v
-            }
-            UpdateOrder::LeftToRight => {
-                let mut v: Vec<Option<Mat>> = vec![None; nfac];
-                for j in 1..nfac {
-                    v[j] = Some(match &v[j - 1] {
-                        None => st.mats[j - 1].clone(),
-                        Some(m) => smart_matmul(&st.mats[j - 1], m),
-                    });
-                }
-                v
-            }
-        };
-        // Moving-side product of UPDATED factors.
-        let mut acc: Option<Mat> = None;
+        let mut cache = SweepCache::build(ctx, &st.mats, cfg.update_order);
         for &j in &order {
-            let (l, r) = match cfg.update_order {
-                UpdateOrder::RightToLeft => (fixed[j].as_ref(), acc.as_ref()),
-                UpdateOrder::LeftToRight => (acc.as_ref(), fixed[j].as_ref()),
-            };
+            let (l, r) = cache.sides(j, cfg.update_order);
             if !matches!(cfg.constraints[j], Constraint::Frozen) {
                 // Lipschitz modulus: λ² ‖L‖₂² ‖R‖₂² (Appendix B).
                 let l_norm =
-                    l.map_or(1.0, |m| spectral_norm_warm(m, &mut l_warm[j], 50, 1e-9));
+                    l.map_or(1.0, |m| ctx.spectral_norm_warm(m, &mut l_warm[j], 50, 1e-9));
                 let r_norm =
-                    r.map_or(1.0, |m| spectral_norm_warm(m, &mut r_warm[j], 50, 1e-9));
+                    r.map_or(1.0, |m| ctx.spectral_norm_warm(m, &mut r_warm[j], 50, 1e-9));
                 let c = (1.0 + cfg.alpha)
                     * st.lambda
                     * st.lambda
@@ -232,26 +285,26 @@ pub fn palm4msa(a: &Mat, init: FactorState, cfg: &PalmConfig) -> PalmResult {
                     st.mats[j] = cfg.constraints[j].project(&st.mats[j]);
                 } else {
                     // grad = λ Lᵀ (λ L S R − A) Rᵀ, identity sides elided;
-                    // GEMMs dispatched on factor density (§Perf).
+                    // GEMMs cost-dispatched on the ctx (§Perf).
                     let s = &st.mats[j];
                     let ls = match l {
                         None => s.clone(),
-                        Some(lm) => smart_matmul(lm, s),
+                        Some(lm) => ctx.gemm(lm, s),
                     };
                     let lsr = match r {
                         None => ls,
-                        Some(rm) => smart_matmul(&ls, rm),
+                        Some(rm) => ctx.gemm(&ls, rm),
                     };
                     let mut err = lsr;
                     err.scale(st.lambda);
                     err = err.sub(a);
                     let lt_err = match l {
                         None => err,
-                        Some(lm) => smart_matmul_tn(lm, &err),
+                        Some(lm) => ctx.gemm_tn(lm, &err),
                     };
                     let mut grad = match r {
                         None => lt_err,
-                        Some(rm) => smart_matmul_nt(&lt_err, rm),
+                        Some(rm) => ctx.gemm_nt(&lt_err, rm),
                     };
                     grad.scale(st.lambda);
                     let mut stepped = st.mats[j].clone();
@@ -259,26 +312,18 @@ pub fn palm4msa(a: &Mat, init: FactorState, cfg: &PalmConfig) -> PalmResult {
                     st.mats[j] = cfg.constraints[j].project(&stepped);
                 }
             }
-            // Fold the (possibly updated) factor into the moving side.
-            acc = Some(match (cfg.update_order, acc) {
-                (UpdateOrder::RightToLeft, None) => st.mats[j].clone(),
-                (UpdateOrder::RightToLeft, Some(am)) => smart_matmul(&st.mats[j], &am),
-                (UpdateOrder::LeftToRight, None) => st.mats[j].clone(),
-                (UpdateOrder::LeftToRight, Some(am)) => smart_matmul(&am, &st.mats[j]),
-            });
+            cache.fold(ctx, &st.mats[j], cfg.update_order);
         }
-        // λ update: λ = Tr(Aᵀ Â) / Tr(Âᵀ Â) with Â = Π S_j (Fig. 4 line 9).
-        let a_hat = acc.expect("at least one factor");
+        // λ update: λ = Tr(Aᵀ Â) / Tr(Âᵀ Â) with Â = Π S_j (Fig. 4 line 9)
+        // — Â comes out of the sweep cache for free.
+        let a_hat = cache.into_product();
         let denom = a_hat.fro2();
         if denom > 0.0 {
             st.lambda = a.dot(&a_hat) / denom;
         }
         iters_run += 1;
-        let obj = {
-            let mut p = a_hat;
-            p.scale(st.lambda);
-            0.5 * a.sub(&p).fro2()
-        };
+        let obj = st.objective_with(a, &a_hat);
+        product = Some(a_hat);
         trace.push(obj);
         if cfg.rel_tol > 0.0 && prev_obj.is_finite() {
             // Objective change measured relative to the data energy
@@ -292,7 +337,12 @@ pub fn palm4msa(a: &Mat, init: FactorState, cfg: &PalmConfig) -> PalmResult {
         }
         prev_obj = obj;
     }
-    PalmResult { state: st, objective_trace: trace, iters_run }
+    let product = match product {
+        Some(p) => p,
+        // n_iter = 0: no sweep ran — compute the init's product directly.
+        None => st.product_ctx(ctx),
+    };
+    PalmResult { state: st, objective_trace: trace, iters_run, product }
 }
 
 #[cfg(test)]
@@ -389,6 +439,26 @@ mod tests {
     }
 
     #[test]
+    fn cached_product_matches_state_product() {
+        // PalmResult::product is the final sweep's cache output — it must
+        // equal the chain re-multiplication it replaces.
+        let mut rng = Rng::new(98);
+        let (a, _, _) = planted(&mut rng, 7, 16);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpGlobal(24), Constraint::SpGlobal(24)],
+            12,
+        );
+        let init = FactorState::default_init(&[(7, 7), (7, 7)]);
+        let res = palm4msa(&a, init, &cfg);
+        let recomputed = res.state.product();
+        assert!(res.product.rel_fro_err(&recomputed) < 1e-12);
+        // Objective through the cache equals the from-scratch objective.
+        let o1 = res.state.objective_with(&a, &res.product);
+        let o2 = res.state.objective(&a);
+        assert!((o1 - o2).abs() <= 1e-12 * (1.0 + o2.abs()));
+    }
+
+    #[test]
     fn frozen_factor_is_untouched() {
         let mut rng = Rng::new(95);
         let gamma = Mat::randn(6, 9, &mut rng);
@@ -440,5 +510,29 @@ mod tests {
         let init = FactorState::default_init(&[(6, 6), (6, 6)]);
         let res = palm4msa(&a, init, &cfg);
         assert!(res.iters_run < 500, "early stop never fired");
+    }
+
+    #[test]
+    fn explicit_ctx_matches_default_path() {
+        let mut rng = Rng::new(99);
+        let (a, _, _) = planted(&mut rng, 8, 20);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpGlobal(28), Constraint::SpGlobal(28)],
+            15,
+        );
+        let base = palm4msa(&a, FactorState::default_init(&[(8, 8), (8, 8)]), &cfg);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::new(threads);
+            let res = palm4msa_with_ctx(
+                &ctx,
+                &a,
+                FactorState::default_init(&[(8, 8), (8, 8)]),
+                &cfg,
+            );
+            assert!((res.state.lambda - base.state.lambda).abs() < 1e-12);
+            for (m1, m2) in res.state.mats.iter().zip(&base.state.mats) {
+                assert!(m1.rel_fro_err(m2) < 1e-12, "threads={threads}");
+            }
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! set). Seeded generators + a runner that reports the failing case's seed
 //! so any counterexample is reproducible.
 
+use crate::faust::Faust;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -37,6 +38,20 @@ pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
     } else {
         Err(msg.into())
     }
+}
+
+/// Bit-exact fingerprint of a [`Faust`]: λ's bits plus every factor
+/// entry's bits (densified, rightmost first). Two operators fingerprint
+/// equal iff they are numerically identical down to the last ulp — the
+/// thread-determinism proptests and the `factorize_scaling` bench share
+/// this definition.
+pub fn faust_fingerprint(f: &Faust) -> (u64, Vec<Vec<u64>>) {
+    let facs = f
+        .factors()
+        .iter()
+        .map(|c| c.to_dense().data().iter().map(|v| v.to_bits()).collect())
+        .collect();
+    (f.lambda().to_bits(), facs)
 }
 
 /// Generators for common test inputs.

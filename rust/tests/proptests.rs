@@ -1,13 +1,16 @@
 //! Property-based test sweeps (seeded generators; failures report the
 //! case seed — see `faust::testutil`).
 
-use faust::engine::{par_spmm_into, ApplyEngine, EngineConfig, PlanConfig, ThreadPool};
+use faust::engine::{
+    par_spmm_into, ApplyEngine, EngineConfig, ExecCtx, PlanConfig, ThreadPool,
+};
 use faust::faust::Faust;
+use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
 use faust::linalg::{chain_product, lstsq, qr_thin, svd_jacobi, Mat};
 use faust::prox::{proj_sp, proj_spcol, proj_sprow, Constraint};
-use faust::palm::{palm4msa, FactorState, PalmConfig};
+use faust::palm::{palm4msa, palm4msa_with_ctx, FactorState, PalmConfig};
 use faust::sparse::{Coo, Csr};
-use faust::testutil::{check, ensure, gen, PropConfig};
+use faust::testutil::{check, ensure, faust_fingerprint, gen, PropConfig};
 
 fn cfg(cases: usize) -> PropConfig {
     PropConfig { cases, base_seed: 0xBEEF }
@@ -314,6 +317,85 @@ fn prop_faust_apply_routes_through_plan_consistently() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_ctx_palm4msa_thread_invariant() {
+    // ISSUE 2: ctx-parallel palm4MSA equals the serial path within 1e-10
+    // relative Frobenius error across thread counts {1, 2, 8}.
+    let serial = ExecCtx::serial();
+    let pooled = [ExecCtx::new(2), ExecCtx::new(8)];
+    check("ctx palm4msa thread-invariant", &cfg(10), |rng| {
+        let n = 4 + rng.below(5);
+        let a = gen::mat_shaped(rng, n, n);
+        let budget = n + rng.below(n * n - n);
+        let pcfg = PalmConfig::new(
+            vec![Constraint::SpGlobal(budget), Constraint::SpGlobal(budget)],
+            12,
+        );
+        let dims = [(n, n), (n, n)];
+        let base = palm4msa_with_ctx(&serial, &a, FactorState::default_init(&dims), &pcfg);
+        for ctx in &pooled {
+            let res = palm4msa_with_ctx(ctx, &a, FactorState::default_init(&dims), &pcfg);
+            let dl = (res.state.lambda - base.state.lambda).abs();
+            ensure(
+                dl <= 1e-10 * (1.0 + base.state.lambda.abs()),
+                format!("lambda drift {dl} at {} threads", ctx.n_threads()),
+            )?;
+            for (m1, m2) in res.state.mats.iter().zip(&base.state.mats) {
+                let d = m1.sub(m2).fro();
+                ensure(
+                    d <= 1e-10 * (1.0 + m2.fro()),
+                    format!("factor drift {d} at {} threads", ctx.n_threads()),
+                )?;
+            }
+            let dp = res.product.sub(&base.product).fro();
+            ensure(
+                dp <= 1e-10 * (1.0 + base.product.fro()),
+                format!("cached product drift {dp}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ctx_hierarchical_thread_invariant() {
+    // ISSUE 2: ctx-parallel hierarchical::factorize equals the serial
+    // path within 1e-10 relative Frobenius error for threads {1, 2, 8}.
+    let serial = ExecCtx::serial();
+    let pooled = [ExecCtx::new(2), ExecCtx::new(8)];
+    check("ctx hierarchical thread-invariant", &cfg(5), |rng| {
+        let a = gen::mat_shaped(rng, 12, 12);
+        let mut hcfg = HierarchicalConfig::meg(12, 12, 3, 4, 30, 0.8, 60.0);
+        hcfg.n_iter_split = 15;
+        hcfg.n_iter_global = 8;
+        hcfg.seed = rng.below(1 << 20) as u64;
+        let base = factorize_with_ctx(&serial, &a, &hcfg).to_dense();
+        for ctx in &pooled {
+            let got = factorize_with_ctx(ctx, &a, &hcfg).to_dense();
+            let d = got.sub(&base).fro();
+            ensure(
+                d <= 1e-10 * (1.0 + base.fro()),
+                format!("drift {d} at {} threads", ctx.n_threads()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hierarchical_factorization_is_bitwise_deterministic_across_threads() {
+    // ISSUE 2 determinism: same seed ⇒ identical factor bits regardless
+    // of the thread count (every ctx kernel accumulates each output
+    // element in a fixed order).
+    let a = faust::transforms::hadamard(16);
+    let hcfg = HierarchicalConfig::hadamard(16);
+    let base = faust_fingerprint(&factorize_with_ctx(&ExecCtx::serial(), &a, &hcfg));
+    for threads in [2usize, 8] {
+        let got = faust_fingerprint(&factorize_with_ctx(&ExecCtx::new(threads), &a, &hcfg));
+        assert_eq!(base, got, "{threads} threads changed the factorization bits");
+    }
 }
 
 #[test]
