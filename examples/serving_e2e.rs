@@ -159,6 +159,7 @@ fn main() -> anyhow::Result<()> {
             batch_timeout: Duration::from_micros(300),
             n_workers: 3,
             queue_capacity: 4096,
+            adaptive: None,
         },
     );
     let client = coord.client();

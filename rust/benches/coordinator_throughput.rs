@@ -1,8 +1,12 @@
-//! L3 serving bench: coordinator throughput/latency, batching on vs off,
-//! dense vs FAμST backends.
+//! L3 serving bench: coordinator throughput/latency across batching modes
+//! — fixed batch sizes vs plan-aware adaptive sizing — on dense and FAμST
+//! backends. The adaptive row derives each operator's batch width from
+//! its plan's flop/byte `CostProfile` (see `coordinator::target_batch`).
 
 use faust::bench_util::{fmt, Table};
-use faust::coordinator::{BatchOp, Coordinator, CoordinatorConfig};
+use faust::coordinator::{
+    target_batch, AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig,
+};
 use faust::rng::Rng;
 use faust::transforms::{hadamard, hadamard_faust};
 use std::sync::Arc;
@@ -11,20 +15,11 @@ use std::time::{Duration, Instant};
 fn run_load(
     op_name: &str,
     ops: Vec<(String, Arc<dyn BatchOp>)>,
-    max_batch: usize,
-    n_workers: usize,
+    cfg: CoordinatorConfig,
     requests: usize,
     dim: usize,
 ) -> (f64, f64, f64) {
-    let coord = Coordinator::start(
-        ops,
-        CoordinatorConfig {
-            max_batch,
-            batch_timeout: Duration::from_micros(200),
-            n_workers,
-            queue_capacity: 8192,
-        },
-    );
+    let coord = Coordinator::start(ops, cfg);
     let client = coord.client();
     let n_threads = 4;
     let per = requests / n_threads;
@@ -73,44 +68,103 @@ fn run_load(
     )
 }
 
+fn config(mode: Mode, workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        max_batch: match mode {
+            Mode::Fixed(b) => b,
+            Mode::Adaptive => 32,
+        },
+        batch_timeout: Duration::from_micros(200),
+        n_workers: workers,
+        queue_capacity: 8192,
+        adaptive: match mode {
+            Mode::Fixed(_) => None,
+            Mode::Adaptive => Some(AdaptiveBatchConfig::default()),
+        },
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Fixed(usize),
+    Adaptive,
+}
+
 fn main() {
     let full = std::env::var("FAUST_BENCH_FULL").is_ok();
     let n = 256usize;
     let requests = if full { 60_000 } else { 20_000 };
-    println!("# coordinator throughput — {n}x{n} operator, {requests} requests, 4 client threads\n");
+    println!(
+        "# coordinator throughput — {n}x{n} operator, {requests} requests, \
+         4 client threads, fixed vs plan-aware adaptive batching\n"
+    );
     let dense = Arc::new(hadamard(n));
     let fst = Arc::new(hadamard_faust(n));
+    let acfg = AdaptiveBatchConfig::default();
     let mut table = Table::new(&[
         "backend",
-        "max_batch",
+        "batching",
         "workers",
         "req/s",
         "mean_latency_us",
         "mean_batch",
     ]);
+    // (backend, workers) -> (best fixed rps, adaptive rps)
+    let mut summary: Vec<(String, usize, f64, f64)> = Vec::new();
     for (backend, op) in [
         ("dense", dense.clone() as Arc<dyn BatchOp>),
         ("faust", fst.clone() as Arc<dyn BatchOp>),
     ] {
-        for (mb, wk) in [(1usize, 1usize), (1, 4), (32, 1), (32, 4), (128, 4)] {
-            let (rps, lat, batch) = run_load(
-                "op",
-                vec![("op".to_string(), op.clone())],
-                mb,
-                wk,
-                requests,
-                n,
-            );
-            table.row(&[
-                backend.to_string(),
-                mb.to_string(),
-                wk.to_string(),
-                fmt(rps),
-                fmt(lat),
-                fmt(batch),
-            ]);
+        let target = op
+            .cost_profile()
+            .map(|p| target_batch(&p, &acfg))
+            .unwrap_or(0);
+        for wk in [1usize, 4] {
+            let mut best_fixed = 0.0f64;
+            let mut adaptive_rps = 0.0f64;
+            for mode in [
+                Mode::Fixed(1),
+                Mode::Fixed(32),
+                Mode::Fixed(128),
+                Mode::Adaptive,
+            ] {
+                let (rps, lat, batch) = run_load(
+                    "op",
+                    vec![("op".to_string(), op.clone())],
+                    config(mode, wk),
+                    requests,
+                    n,
+                );
+                let label = match mode {
+                    Mode::Fixed(b) => format!("fixed({b})"),
+                    Mode::Adaptive => format!("adaptive({target})"),
+                };
+                match mode {
+                    Mode::Fixed(_) => best_fixed = best_fixed.max(rps),
+                    Mode::Adaptive => adaptive_rps = rps,
+                }
+                table.row(&[
+                    backend.to_string(),
+                    label,
+                    wk.to_string(),
+                    fmt(rps),
+                    fmt(lat),
+                    fmt(batch),
+                ]);
+            }
+            summary.push((backend.to_string(), wk, best_fixed, adaptive_rps));
         }
     }
     table.print();
-    println!("\n# expected: faust > dense at every setting; batching lifts both (spmm/matmul locality)");
+    println!("\n# adaptive vs best fixed setting (>= 1.00x within noise expected):");
+    for (backend, wk, best_fixed, adaptive) in &summary {
+        println!(
+            "#   {backend} workers={wk}: adaptive/best-fixed = {:.2}x",
+            adaptive / best_fixed.max(1e-9)
+        );
+    }
+    println!(
+        "# expected: faust > dense at every setting; adaptive matches the best\n\
+         # fixed sweep point without hand-tuning, and never exceeds its arena cap"
+    );
 }

@@ -92,10 +92,18 @@ SUBCOMMANDS:
   denoise     --size 128 --sigma 30 --atoms 128 [--stride 2] [--threads N]
               FAuST vs K-SVD vs DCT image denoising (paper Fig. 12, scaled)
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
-              [--threads 2] [--factorize]
+              [--threads 2] [--adaptive-batch] [--factorize] [--repl]
               run the operator-serving coordinator on a Hadamard FAuST,
-              planned + parallelized by the apply engine; --factorize
-              builds the operator on-line on the serving engine's ctx
+              planned + parallelized by the apply engine.
+              --adaptive-batch sizes each operator's batches from its
+              plan's flop/byte profile instead of the fixed --batch;
+              --factorize starts serving the reference butterfly, then
+              refactorizes on-line on the serving engine's ctx and
+              hot-swaps the learned operator in mid-traffic (registry
+              swap_epoch, zero stall); --repl drops into an interactive
+              operator console:
+                ops | ops add <name> <n> | ops swap <name> |
+                ops rm <name> | apply <name> | stats | quit
   engine      --n 1024 [--threads 4] [--batch 32] [--plan dump]
               compile a cost-modeled execution plan, optionally dump it,
               and time planned/pooled apply vs the naive factor chain

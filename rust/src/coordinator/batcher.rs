@@ -1,15 +1,85 @@
 //! Dynamic batching policy: collect requests per operator until the batch
 //! is full or the oldest request's deadline expires (vLLM-style continuous
 //! batching, simplified to the matvec setting).
+//!
+//! Since PR 3 the "full" threshold is **per operator**: the router passes
+//! each [`Batcher::add`] call a limit resolved from the operator's
+//! [`CostProfile`](crate::engine::CostProfile) by [`target_batch`] —
+//! batches grow until the plan's fixed operand traffic is amortized, and
+//! are capped by the execution-latency deadline and by the arena
+//! footprint the batch would pin (the zero-alloc invariant from PR 1).
+//! A fixed-size deployment simply passes the same limit for every call.
 
+use crate::engine::{Arena, CostProfile};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 /// When to flush a partial batch.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
+    /// Default flush threshold for operators without a cost profile.
     pub max_batch: usize,
+    /// Deadline before a partial batch is flushed.
     pub timeout: Duration,
+}
+
+/// Knobs of the plan-aware batch sizing model (see [`target_batch`]).
+#[derive(Clone, Debug)]
+pub struct AdaptiveBatchConfig {
+    /// β in the model cost `flops + β·bytes` (same machine knob as
+    /// [`PlanConfig::bytes_per_flop_weight`](crate::engine::PlanConfig)).
+    pub beta: f64,
+    /// ε — tolerated share of a batch's cost spent on the plan's fixed
+    /// operand traffic. Smaller ε ⇒ wider batches.
+    pub overhead_frac: f64,
+    /// Nominal execution rate in model-cost units per nanosecond
+    /// (≈ GFLOP/s for β = 0; deliberately conservative).
+    pub cost_rate_per_ns: f64,
+    /// Cap on the modeled execution time of one batch — bounds the
+    /// latency a request can pay for riding in a wide batch.
+    pub latency_cap: Duration,
+    /// Cap on the arena ping-pong footprint a batch may pin
+    /// (`2 × 8 × max_dim × b` bytes).
+    pub max_arena_bytes: usize,
+    /// Hard ceiling regardless of what the model asks for.
+    pub max_batch: usize,
+}
+
+impl Default for AdaptiveBatchConfig {
+    fn default() -> Self {
+        AdaptiveBatchConfig {
+            beta: 0.25,
+            overhead_frac: 0.02,
+            cost_rate_per_ns: 1.0,
+            latency_cap: Duration::from_millis(1),
+            max_arena_bytes: 4 << 20,
+            max_batch: 512,
+        }
+    }
+}
+
+/// Pick a per-operator target batch width from its [`CostProfile`].
+///
+/// The model: a `b`-column batch costs `fixed + b·col` where
+/// `fixed = β·fixed_bytes` (operands streamed once) and
+/// `col = flops_per_col + β·bytes_per_col`. The target is the smallest
+/// `b` whose fixed-cost share is at most `ε` — wide enough to amortize
+/// the plan, no wider — clamped by three caps:
+///
+/// 1. **latency**: modeled batch execution time stays under
+///    `latency_cap` at the configured `cost_rate_per_ns`;
+/// 2. **arena**: the batch's ping-pong scratch footprint
+///    (`2·8·max_dim·b`) stays under `max_arena_bytes`, so adaptive
+///    sizing can never silently break the zero-alloc steady state;
+/// 3. the hard `max_batch` ceiling.
+pub fn target_batch(p: &CostProfile, cfg: &AdaptiveBatchConfig) -> usize {
+    let col = p.col_cost(cfg.beta).max(1.0);
+    let fixed = p.fixed_cost(cfg.beta);
+    let b_amort = (fixed / (cfg.overhead_frac.max(1e-9) * col)).ceil() as usize;
+    let budget = cfg.latency_cap.as_nanos() as f64 * cfg.cost_rate_per_ns;
+    let b_latency = (((budget - fixed) / col).floor().max(1.0)) as usize;
+    let b_arena = (cfg.max_arena_bytes / Arena::footprint_for(p.max_dim.max(1))).max(1);
+    b_amort.clamp(1, b_latency.min(b_arena).min(cfg.max_batch.max(1)))
 }
 
 /// Accumulates requests per key; generic so it is unit-testable without
@@ -24,20 +94,38 @@ impl<R> Batcher<R> {
         Batcher { policy, pending: HashMap::new() }
     }
 
-    /// Add a request under `key`; returns a full batch if the size
-    /// threshold was reached.
-    pub fn add(&mut self, key: String, r: R) -> Option<(String, Vec<R>)> {
+    /// Add a request under `key`; returns a full batch once `limit`
+    /// requests have accumulated. `limit` is resolved per operator by the
+    /// router ([`target_batch`] under adaptive sizing, the policy default
+    /// otherwise) and re-read on every call, so a registry swap that
+    /// changes an operator's plan takes effect on the very next request.
+    ///
+    /// The returned batch never exceeds `limit`, even when a swap just
+    /// *lowered* it below what had already accumulated — the surplus
+    /// stays pending (oldest-first flush), so the arena-footprint cap
+    /// behind an adaptive limit holds across swaps.
+    pub fn add(&mut self, key: String, r: R, limit: usize) -> Option<(String, Vec<R>)> {
+        let limit = limit.max(1);
         let entry = self
             .pending
             .entry(key.clone())
             .or_insert_with(|| (Vec::new(), Instant::now()));
         entry.0.push(r);
-        if entry.0.len() >= self.policy.max_batch {
-            let (reqs, _) = self.pending.remove(&key).unwrap();
-            Some((key, reqs))
+        if entry.0.len() >= limit {
+            let batch: Vec<R> = entry.0.drain(..limit).collect();
+            if entry.0.is_empty() {
+                self.pending.remove(&key);
+            }
+            Some((key, batch))
         } else {
             None
         }
+    }
+
+    /// [`Batcher::add`] at the policy's default threshold.
+    pub fn add_default(&mut self, key: String, r: R) -> Option<(String, Vec<R>)> {
+        let limit = self.policy.max_batch;
+        self.add(key, r, limit)
     }
 
     /// Time until the earliest pending batch expires (None if idle).
@@ -86,6 +174,7 @@ impl<R> Batcher<R> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{ApplyPlan, PlanConfig};
 
     fn policy(max: usize, ms: u64) -> BatchPolicy {
         BatchPolicy { max_batch: max, timeout: Duration::from_millis(ms) }
@@ -94,21 +183,50 @@ mod tests {
     #[test]
     fn flushes_when_full() {
         let mut b: Batcher<u32> = Batcher::new(policy(3, 1000));
-        assert!(b.add("a".into(), 1).is_none());
-        assert!(b.add("a".into(), 2).is_none());
-        let (k, reqs) = b.add("a".into(), 3).expect("should flush at max");
+        assert!(b.add_default("a".into(), 1).is_none());
+        assert!(b.add_default("a".into(), 2).is_none());
+        let (k, reqs) = b.add_default("a".into(), 3).expect("should flush at max");
         assert_eq!(k, "a");
         assert_eq!(reqs, vec![1, 2, 3]);
         assert_eq!(b.pending_len(), 0);
     }
 
     #[test]
+    fn per_key_limits_override_the_policy_default() {
+        let mut b: Batcher<u32> = Batcher::new(policy(100, 1000));
+        assert!(b.add("a".into(), 1, 2).is_none());
+        let (k, reqs) = b.add("a".into(), 2, 2).expect("per-key limit of 2");
+        assert_eq!(k, "a");
+        assert_eq!(reqs, vec![1, 2]);
+        // A zero limit is treated as 1, never as "never flush".
+        let (_, reqs) = b.add("z".into(), 9, 0).expect("limit 0 clamps to 1");
+        assert_eq!(reqs, vec![9]);
+    }
+
+    #[test]
+    fn lowered_limit_never_flushes_an_oversized_batch() {
+        let mut b: Batcher<u32> = Batcher::new(policy(100, 1000));
+        for i in 0..5 {
+            assert!(b.add("a".into(), i, 10).is_none());
+        }
+        // A swap lowered the operator's target to 2: the next add flushes
+        // a chunk of 2 (oldest first), never the whole backlog.
+        let (_, reqs) = b.add("a".into(), 5, 2).expect("flush at new limit");
+        assert_eq!(reqs, vec![0, 1]);
+        assert_eq!(b.pending_len(), 4);
+        // Subsequent adds keep draining in limit-sized chunks.
+        let (_, reqs) = b.add("a".into(), 6, 2).expect("still over the limit");
+        assert_eq!(reqs, vec![2, 3]);
+        assert_eq!(b.pending_len(), 3);
+    }
+
+    #[test]
     fn keys_are_batched_separately() {
         let mut b: Batcher<u32> = Batcher::new(policy(2, 1000));
-        assert!(b.add("a".into(), 1).is_none());
-        assert!(b.add("b".into(), 2).is_none());
+        assert!(b.add_default("a".into(), 1).is_none());
+        assert!(b.add_default("b".into(), 2).is_none());
         assert_eq!(b.pending_len(), 2);
-        let (k, reqs) = b.add("a".into(), 3).unwrap();
+        let (k, reqs) = b.add_default("a".into(), 3).unwrap();
         assert_eq!(k, "a");
         assert_eq!(reqs, vec![1, 3]);
         assert_eq!(b.pending_len(), 1);
@@ -117,7 +235,7 @@ mod tests {
     #[test]
     fn expiry_flushes_partial_batches() {
         let mut b: Batcher<u32> = Batcher::new(policy(100, 5));
-        b.add("a".into(), 1);
+        b.add_default("a".into(), 1);
         assert!(b.take_expired().is_empty());
         std::thread::sleep(Duration::from_millis(8));
         let expired = b.take_expired();
@@ -129,7 +247,7 @@ mod tests {
     fn deadline_reporting() {
         let mut b: Batcher<u32> = Batcher::new(policy(10, 50));
         assert!(b.next_deadline_in().is_none());
-        b.add("a".into(), 1);
+        b.add_default("a".into(), 1);
         let d = b.next_deadline_in().unwrap();
         assert!(d <= Duration::from_millis(50));
     }
@@ -137,11 +255,55 @@ mod tests {
     #[test]
     fn drain_returns_everything() {
         let mut b: Batcher<u32> = Batcher::new(policy(10, 1000));
-        b.add("a".into(), 1);
-        b.add("b".into(), 2);
+        b.add_default("a".into(), 1);
+        b.add_default("b".into(), 2);
         let mut all = b.drain();
         all.sort_by(|x, y| x.0.cmp(&y.0));
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn target_amortizes_fixed_cost() {
+        let cfg = AdaptiveBatchConfig::default();
+        let f = crate::transforms::hadamard_faust(256);
+        let p = ApplyPlan::compile(&f, &PlanConfig::default()).profile();
+        let t = target_batch(&p, &cfg);
+        // The fixed share at the target is at most ε (unless a cap bit).
+        let col = p.col_cost(cfg.beta);
+        let fixed = p.fixed_cost(cfg.beta);
+        assert!(t >= 1 && t <= cfg.max_batch);
+        assert!(
+            fixed / (t as f64 * col) <= cfg.overhead_frac * 1.01 || t == cfg.max_batch,
+            "t={t} leaves fixed share {}",
+            fixed / (t as f64 * col)
+        );
+        // A heavier operator (more fixed bytes per column) wants wider
+        // batches; an expensive-per-column one saturates the deadline.
+        let dense = crate::engine::CostProfile::dense(256, 256);
+        let td = target_batch(&dense, &cfg);
+        assert!(td >= 1);
+    }
+
+    #[test]
+    fn target_respects_latency_and_arena_caps() {
+        let f = crate::transforms::hadamard_faust(64);
+        let p = ApplyPlan::compile(&f, &PlanConfig::default()).profile();
+        // Tight latency cap pins the batch low.
+        let tight = AdaptiveBatchConfig {
+            latency_cap: Duration::from_nanos(1),
+            ..AdaptiveBatchConfig::default()
+        };
+        assert_eq!(target_batch(&p, &tight), 1);
+        // Tight arena cap bounds the pinned footprint.
+        let small = AdaptiveBatchConfig {
+            max_arena_bytes: Arena::footprint_for(p.max_dim) * 4,
+            ..AdaptiveBatchConfig::default()
+        };
+        let t = target_batch(&p, &small);
+        assert!(Arena::footprint_for(p.max_dim * t) <= small.max_arena_bytes);
+        // Hard ceiling always wins.
+        let capped = AdaptiveBatchConfig { max_batch: 3, ..AdaptiveBatchConfig::default() };
+        assert!(target_batch(&p, &capped) <= 3);
     }
 }

@@ -1,4 +1,6 @@
-//! Lock-free serving metrics.
+//! Lock-free serving metrics: request/batch/latency counters updated on
+//! the hot path, plus registry lifecycle counters (register/swap/retire)
+//! so a deployment can see operator churn next to its throughput.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,6 +16,9 @@ pub struct Metrics {
     latency_ns_total: AtomicU64,
     latency_ns_max: AtomicU64,
     flops_total: AtomicU64,
+    registered: AtomicU64,
+    swaps: AtomicU64,
+    retired: AtomicU64,
 }
 
 /// Point-in-time copy of the metrics.
@@ -29,6 +34,12 @@ pub struct MetricsSnapshot {
     pub latency_ns_total: u64,
     pub latency_ns_max: u64,
     pub flops_total: u64,
+    /// Operators published via `Registry::register`.
+    pub registered: u64,
+    /// Live hot swaps (`Registry::swap_epoch`).
+    pub swaps: u64,
+    /// Operators removed via `Registry::retire`.
+    pub retired: u64,
 }
 
 impl MetricsSnapshot {
@@ -73,6 +84,9 @@ impl Metrics {
             latency_ns_total: AtomicU64::new(0),
             latency_ns_max: AtomicU64::new(0),
             flops_total: AtomicU64::new(0),
+            registered: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            retired: AtomicU64::new(0),
         }
     }
 
@@ -101,6 +115,18 @@ impl Metrics {
         self.latency_ns_max.fetch_max(latency_ns, Ordering::Relaxed);
     }
 
+    pub fn record_registered(&self) {
+        self.registered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_swap(&self) {
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_retired(&self) {
+        self.retired.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -113,6 +139,9 @@ impl Metrics {
             latency_ns_total: self.latency_ns_total.load(Ordering::Relaxed),
             latency_ns_max: self.latency_ns_max.load(Ordering::Relaxed),
             flops_total: self.flops_total.load(Ordering::Relaxed),
+            registered: self.registered.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            retired: self.retired.load(Ordering::Relaxed),
         }
     }
 }
@@ -138,6 +167,17 @@ mod tests {
         assert_eq!(s.latency_ns_max, 1500);
         assert!((s.mean_latency_us() - 1.0).abs() < 1e-12);
         assert!((s.gflops() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_lifecycle_counters() {
+        let m = Metrics::new();
+        m.record_registered();
+        m.record_registered();
+        m.record_swap();
+        m.record_retired();
+        let s = m.snapshot();
+        assert_eq!((s.registered, s.swaps, s.retired), (2, 1, 1));
     }
 
     #[test]

@@ -1,36 +1,75 @@
 //! Operator-serving coordinator: the L3 runtime that turns a FAμST into a
 //! *service*.
 //!
-//! The paper's motivating workload (§V) is an iterative solver issuing many
-//! matvec requests against a fixed operator. This module provides the
-//! deployment shape for that: an operator **registry**, a **router** thread
-//! that groups incoming requests per operator into dynamic **batches**
-//! (size- or deadline-triggered), and a **worker pool** executing batches
-//! as a single `spmm` — which is both cache-friendlier and, for the PJRT
-//! backend, amortizes executable dispatch. Bounded queues give
-//! backpressure; metrics are lock-free atomics.
+//! The paper's motivating workload (§V, the fig8/fig9 MEG experiments) is
+//! an iterative solver issuing many matvec requests against an operator.
+//! This module provides the deployment shape for that, the tail of the
+//! repo's serving pipeline **plan → pool → arena → batcher → registry**:
+//!
+//! - a live [`Registry`] mapping names to operators, supporting
+//!   [`register`](Registry::register) / [`swap_epoch`](Registry::swap_epoch)
+//!   / [`retire`](Registry::retire) while traffic flows — on-line
+//!   refactorization (Mairal-style re-learning) publishes a fresh operator
+//!   into the running service with zero stall, old generations draining on
+//!   their `Arc`s;
+//! - a **router** thread grouping requests per operator into dynamic
+//!   **batches** — flushed on a deadline or at a per-operator width that
+//!   adaptive sizing derives from the plan's flop/byte
+//!   [`CostProfile`](crate::engine::CostProfile) (see [`target_batch`];
+//!   fixed-size batching remains the default);
+//! - a **worker pool** executing each batch as a single `spmm`, which is
+//!   cache-friendlier and amortizes dispatch. Bounded queues give
+//!   backpressure; metrics are lock-free atomics.
 //!
 //! Operators are best registered as [`EngineOp`]s (see [`engine_ops`]):
 //! the batch a worker executes then runs through the engine's cost-modeled
 //! plan, row-parallel pooled spmm, and zero-alloc arena. A deployment
 //! needs exactly one engine: `ApplyEngine::ctx()` hands the same pool to
-//! the factorization stack, so on-line refactorization (building or
-//! refreshing an operator while the service runs) shares the serving
+//! the factorization stack, so on-line refactorization shares the serving
 //! threads instead of oversubscribing the machine.
+//!
+//! Hot-swapping an operator mid-serve:
+//!
+//! ```
+//! use faust::coordinator::{Coordinator, CoordinatorConfig, BatchOp};
+//! use faust::transforms::{hadamard, hadamard_faust};
+//! use std::sync::Arc;
+//!
+//! let n = 16;
+//! let coord = Coordinator::start(
+//!     vec![("h".to_string(), Arc::new(hadamard(n)) as Arc<dyn BatchOp>)],
+//!     CoordinatorConfig::default(),
+//! );
+//! let client = coord.client();
+//! let y0 = client.apply("h", vec![1.0; n]).unwrap();
+//!
+//! // Publish the factorized generation while the service runs.
+//! let epoch = coord
+//!     .registry()
+//!     .swap_epoch("h", Arc::new(hadamard_faust(n)) as Arc<dyn BatchOp>)
+//!     .unwrap();
+//! assert!(epoch > 1);
+//! let y1 = client.apply("h", vec![1.0; n]).unwrap();
+//! for i in 0..n {
+//!     assert!((y0[i] - y1[i]).abs() < 1e-10); // same operator, new factors
+//! }
+//! coord.shutdown();
+//! ```
 //!
 //! tokio is not available offline; a compute-bound matvec service needs
 //! threads, not async IO, so the pool is `std::thread` + channels.
 
 mod batcher;
 mod metrics;
+mod registry;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{target_batch, AdaptiveBatchConfig, BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{Registry, RegistryError};
 
-use crate::engine::{ApplyEngine, EngineOp};
+use crate::engine::{ApplyEngine, CostProfile, EngineOp};
 use crate::faust::Faust;
 use crate::linalg::Mat;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -45,6 +84,11 @@ pub trait BatchOp: Send + Sync {
     fn apply_batch(&self, x: &Mat) -> Mat;
     /// Flops per single matvec (for metrics / RCG reporting).
     fn flops_per_matvec(&self) -> usize;
+    /// Flop/byte profile for adaptive batch sizing; `None` opts the
+    /// operator out (it then batches at the policy's fixed default).
+    fn cost_profile(&self) -> Option<CostProfile> {
+        None
+    }
 }
 
 impl BatchOp for Mat {
@@ -59,6 +103,9 @@ impl BatchOp for Mat {
     }
     fn flops_per_matvec(&self) -> usize {
         2 * Mat::rows(self) * Mat::cols(self)
+    }
+    fn cost_profile(&self) -> Option<CostProfile> {
+        Some(CostProfile::dense(Mat::rows(self), Mat::cols(self)))
     }
 }
 
@@ -76,6 +123,10 @@ impl BatchOp for Faust {
     fn flops_per_matvec(&self) -> usize {
         self.flops_per_matvec()
     }
+    /// Profile of the operator's cached engine plan.
+    fn cost_profile(&self) -> Option<CostProfile> {
+        Some(self.plan().profile())
+    }
 }
 
 impl BatchOp for EngineOp {
@@ -91,6 +142,9 @@ impl BatchOp for EngineOp {
     }
     fn flops_per_matvec(&self) -> usize {
         EngineOp::flops_per_matvec(self)
+    }
+    fn cost_profile(&self) -> Option<CostProfile> {
+        Some(EngineOp::profile(self))
     }
 }
 
@@ -115,7 +169,8 @@ pub fn engine_ops(
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Maximum vectors per batch.
+    /// Flush threshold for operators without an adaptive target
+    /// (all of them when `adaptive` is `None`).
     pub max_batch: usize,
     /// Deadline before a partial batch is flushed.
     pub batch_timeout: Duration,
@@ -123,6 +178,10 @@ pub struct CoordinatorConfig {
     pub n_workers: usize,
     /// Bounded request-queue capacity (backpressure).
     pub queue_capacity: usize,
+    /// Plan-aware batch sizing: `Some(_)` derives a per-operator flush
+    /// threshold from each operator's [`CostProfile`] (see
+    /// [`target_batch`]); `None` keeps the fixed `max_batch` for all.
+    pub adaptive: Option<AdaptiveBatchConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -132,7 +191,15 @@ impl Default for CoordinatorConfig {
             batch_timeout: Duration::from_micros(200),
             n_workers: 2,
             queue_capacity: 1024,
+            adaptive: None,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Default config with plan-aware adaptive batching enabled.
+    pub fn adaptive() -> Self {
+        CoordinatorConfig { adaptive: Some(AdaptiveBatchConfig::default()), ..Self::default() }
     }
 }
 
@@ -214,7 +281,7 @@ impl JobQueue {
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Request>,
-    registry: Arc<HashMap<String, Arc<dyn BatchOp>>>,
+    registry: Arc<Registry>,
     metrics: Arc<Metrics>,
 }
 
@@ -257,6 +324,12 @@ impl Client {
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
+
+    /// The live operator registry behind this client (register / swap /
+    /// retire operators without stopping the service).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
 }
 
 /// The running coordinator: router + workers.
@@ -270,10 +343,20 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start serving the given named operators.
+    ///
+    /// # Panics
+    /// If two operators share a name. The pre-registry coordinator
+    /// silently kept the last duplicate; a name collision at startup is
+    /// a deployment bug, so it now fails loudly (after startup, use
+    /// [`Registry::swap_epoch`] to replace an operator).
     pub fn start(ops: Vec<(String, Arc<dyn BatchOp>)>, cfg: CoordinatorConfig) -> Self {
-        let registry: Arc<HashMap<String, Arc<dyn BatchOp>>> =
-            Arc::new(ops.into_iter().collect());
         let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(Registry::with_metrics(cfg.adaptive.clone(), metrics.clone()));
+        for (name, op) in ops {
+            registry
+                .register(name, op)
+                .expect("duplicate operator name at startup");
+        }
         let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
         let jobs = Arc::new(JobQueue::new());
         let stop = Arc::new(AtomicBool::new(false));
@@ -311,6 +394,12 @@ impl Coordinator {
         self.client.clone()
     }
 
+    /// The live operator registry: register, hot-swap (`swap_epoch`) or
+    /// retire operators while the service runs.
+    pub fn registry(&self) -> Arc<Registry> {
+        self.client.registry.clone()
+    }
+
     /// Graceful shutdown: stop accepting, drain in-flight work, join.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.stop.store(true, Ordering::Release);
@@ -327,13 +416,18 @@ impl Coordinator {
 
 fn router_loop(
     rx: Receiver<Request>,
-    registry: Arc<HashMap<String, Arc<dyn BatchOp>>>,
+    registry: Arc<Registry>,
     jobs: Arc<JobQueue>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
     stop: Arc<AtomicBool>,
 ) {
     let mut batcher: Batcher<Request> = Batcher::new(policy.clone());
+    // Per-operator flush threshold, re-resolved on every request so a
+    // registry swap that changes the plan re-sizes batches immediately.
+    let limit_for = |registry: &Registry, key: &str| {
+        registry.batch_limit(key).unwrap_or(policy.max_batch)
+    };
     loop {
         let timeout = batcher
             .next_deadline_in()
@@ -341,22 +435,25 @@ fn router_loop(
         match rx.recv_timeout(timeout) {
             Ok(req) => {
                 let key = req.op.clone();
-                if let Some((op_name, reqs)) = batcher.add(key, req) {
-                    flush(&registry, &jobs, &metrics, op_name, reqs);
+                let limit = limit_for(&registry, &key);
+                if let Some((op_name, reqs)) = batcher.add(key, req, limit) {
+                    flush(&registry, &jobs, &metrics, op_name, reqs, limit);
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
         }
         for (op_name, reqs) in batcher.take_expired() {
-            flush(&registry, &jobs, &metrics, op_name, reqs);
+            let limit = limit_for(&registry, &op_name);
+            flush(&registry, &jobs, &metrics, op_name, reqs, limit);
         }
         if stop.load(Ordering::Acquire) {
             // Drain anything still in the channel, then stop.
             while let Ok(req) = rx.try_recv() {
                 let key = req.op.clone();
-                if let Some((op_name, reqs)) = batcher.add(key, req) {
-                    flush(&registry, &jobs, &metrics, op_name, reqs);
+                let limit = limit_for(&registry, &key);
+                if let Some((op_name, reqs)) = batcher.add(key, req, limit) {
+                    flush(&registry, &jobs, &metrics, op_name, reqs, limit);
                 }
             }
             break;
@@ -364,21 +461,32 @@ fn router_loop(
     }
     // Drain remaining partial batches on shutdown.
     for (op_name, reqs) in batcher.drain() {
-        flush(&registry, &jobs, &metrics, op_name, reqs);
+        let limit = limit_for(&registry, &op_name);
+        flush(&registry, &jobs, &metrics, op_name, reqs, limit);
     }
 }
 
+/// Hand a batch to the workers, split into `limit`-sized jobs. The split
+/// is what upholds the adaptive arena cap even on paths where more than
+/// `limit` requests had already accumulated (timeout expiry, or a swap
+/// that lowered the operator's target mid-batch).
 fn flush(
-    registry: &Arc<HashMap<String, Arc<dyn BatchOp>>>,
+    registry: &Registry,
     jobs: &Arc<JobQueue>,
     metrics: &Arc<Metrics>,
     op_name: String,
-    reqs: Vec<Request>,
+    mut reqs: Vec<Request>,
+    limit: usize,
 ) {
     match registry.get(&op_name) {
         Some(op) => {
-            metrics.record_batch(reqs.len());
-            jobs.push(Job { op: op.clone(), reqs });
+            let limit = limit.max(1);
+            while !reqs.is_empty() {
+                let rest = reqs.split_off(reqs.len().min(limit));
+                let batch = std::mem::replace(&mut reqs, rest);
+                metrics.record_batch(batch.len());
+                jobs.push(Job { op: op.clone(), reqs: batch });
+            }
         }
         None => {
             for r in reqs {
@@ -392,11 +500,26 @@ fn flush(
 
 fn worker_loop(jobs: Arc<JobQueue>, metrics: Arc<Metrics>) {
     while let Some(job) = jobs.pop() {
-        let b = job.reqs.len();
         let n = job.op.cols();
+        // Re-validate dimensions against the operator that actually
+        // resolved: a retire + register under the same name can change
+        // the shape after a request was submit-checked (swap_epoch can't
+        // — it is shape-checked — but the worker must never panic on a
+        // stale request either way).
+        let (reqs, stale): (Vec<Request>, Vec<Request>) =
+            job.reqs.into_iter().partition(|r| r.x.len() == n);
+        for r in stale {
+            let _ = r
+                .resp
+                .send(Err(ServeError::WrongDimension { expected: n, got: r.x.len() }));
+        }
+        if reqs.is_empty() {
+            continue;
+        }
+        let b = reqs.len();
         // Assemble the column batch.
         let mut x = Mat::zeros(n, b);
-        for (c, r) in job.reqs.iter().enumerate() {
+        for (c, r) in reqs.iter().enumerate() {
             for i in 0..n {
                 x.set(i, c, r.x[i]);
             }
@@ -405,7 +528,7 @@ fn worker_loop(jobs: Arc<JobQueue>, metrics: Arc<Metrics>) {
         let y = job.op.apply_batch(&x);
         let exec_ns = t0.elapsed().as_nanos() as u64;
         metrics.record_exec(b, exec_ns, job.op.flops_per_matvec() as u64 * b as u64);
-        for (c, r) in job.reqs.into_iter().enumerate() {
+        for (c, r) in reqs.into_iter().enumerate() {
             let latency = r.enqueued.elapsed().as_nanos() as u64;
             metrics.record_completed(latency);
             let _ = r.resp.send(Ok(y.col(c)));
@@ -573,6 +696,209 @@ mod tests {
         for i in 0..n {
             assert!((y[i] - want[i]).abs() < 1e-10);
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn swap_epoch_mid_serve_loses_no_requests() {
+        // Hot-swap the operator while clients hammer it: every request
+        // must succeed and every response must match one of the two
+        // generations exactly (no misrouting, no mixing).
+        let n = 32;
+        let h = crate::transforms::hadamard(n);
+        let engine = crate::engine::ApplyEngine::with_threads(2);
+        let ops = engine_ops(
+            &engine,
+            vec![("op".to_string(), crate::transforms::hadamard_faust(n))],
+            8,
+        );
+        let coord = Coordinator::start(ops, CoordinatorConfig::default());
+        let client = coord.client();
+        let registry = coord.registry();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Generation 2: the same operator scaled by 2 — distinguishable.
+        let h2 = h.scaled(2.0);
+        let mut handles = vec![];
+        for t in 0..3u64 {
+            let c = client.clone();
+            let h = h.clone();
+            let h2 = h2.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(900 + t);
+                let mut served = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    let x = rng.gauss_vec(n);
+                    let y = c.apply("op", x.clone()).expect("request failed mid-swap");
+                    let (w1, w2) = (h.matvec(&x), h2.matvec(&x));
+                    let matches = |w: &[f64]| {
+                        y.iter().zip(w).all(|(a, b)| (a - b).abs() < 1e-9)
+                    };
+                    assert!(
+                        matches(&w1) || matches(&w2),
+                        "response matches neither generation"
+                    );
+                    served += 1;
+                }
+                served
+            }));
+        }
+        // Let traffic flow, then publish generation 2 mid-flight.
+        std::thread::sleep(Duration::from_millis(20));
+        let weak_old = Arc::downgrade(&registry.get("op").unwrap());
+        let e = registry
+            .swap_epoch("op", Arc::new(h2.clone()) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert!(e >= 2);
+        // Every request submitted from here on is served by generation 2.
+        let mut rng = Rng::new(999);
+        let x = rng.gauss_vec(n);
+        let y = client.apply("op", x.clone()).unwrap();
+        let want = h2.matvec(&x);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-9, "post-swap request misrouted");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Ordering::Release);
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0, "no traffic flowed during the swap");
+        let snap = coord.shutdown();
+        assert_eq!(snap.swaps, 1);
+        assert_eq!(snap.rejected, 0, "swap caused rejections");
+        // The old generation drained: its last Arc died with its batches.
+        assert!(weak_old.upgrade().is_none(), "old generation never drained");
+    }
+
+    #[test]
+    fn register_and_retire_while_serving() {
+        let (op, a) = dense_op(5, 5, 164);
+        let coord = Coordinator::start(vec![], CoordinatorConfig::default());
+        let client = coord.client();
+        // Nothing registered yet.
+        assert!(matches!(
+            client.apply("late", vec![0.0; 5]),
+            Err(ServeError::UnknownOperator(_))
+        ));
+        // Register after startup; the running service picks it up.
+        coord.registry().register("late", op).unwrap();
+        let y = client.apply("late", vec![1.0, 0.0, 0.0, 0.0, 0.0]).unwrap();
+        for i in 0..5 {
+            assert!((y[i] - a.at(i, 0)).abs() < 1e-12);
+        }
+        // Retire: later submissions are rejected cleanly.
+        coord.registry().retire("late").unwrap();
+        assert!(matches!(
+            client.apply("late", vec![0.0; 5]),
+            Err(ServeError::UnknownOperator(_))
+        ));
+        let snap = coord.shutdown();
+        assert_eq!((snap.registered, snap.retired), (1, 1));
+    }
+
+    #[test]
+    fn adaptive_batches_never_exceed_the_derived_target() {
+        // Regression for the zero-alloc invariant: under adaptive sizing
+        // the router must never flush a batch wider than the target the
+        // arena was budgeted for.
+        let n = 64;
+        let acfg = AdaptiveBatchConfig {
+            max_arena_bytes: crate::engine::Arena::footprint_for(n) * 6,
+            ..AdaptiveBatchConfig::default()
+        };
+        let engine = crate::engine::ApplyEngine::with_threads(2);
+        let f = crate::transforms::hadamard_faust(n);
+        let profile = engine.plan(&f).profile();
+        let target = target_batch(&profile, &acfg);
+        assert!(target <= 6, "arena cap ignored: target={target}");
+        let cfg = CoordinatorConfig {
+            adaptive: Some(acfg.clone()),
+            max_batch: 512, // fixed default must NOT apply to profiled ops
+            batch_timeout: Duration::from_millis(5),
+            ..CoordinatorConfig::default()
+        };
+        let ops = engine_ops(&engine, vec![("f".to_string(), f)], target);
+        let coord = Coordinator::start(ops, cfg);
+        assert_eq!(coord.registry().batch_limit("f"), Some(target));
+        let client = coord.client();
+        let mut rng = Rng::new(1234);
+        let mut pending = vec![];
+        for _ in 0..200 {
+            if let Ok(rx) = client.submit("f", rng.gauss_vec(n)) {
+                pending.push(rx);
+            }
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        let snap = coord.shutdown();
+        assert!(
+            snap.max_batch_size <= target as u64,
+            "flushed a batch of {} > target {target}",
+            snap.max_batch_size
+        );
+        // And the batch width the batcher chose fits the arena budget.
+        assert!(
+            crate::engine::Arena::footprint_for(profile.max_dim * target)
+                <= acfg.max_arena_bytes
+        );
+    }
+
+    #[test]
+    fn reshape_reregistration_never_panics_workers() {
+        // retire + register under the same name may legally change the
+        // shape (unlike swap_epoch); stale queued requests must resolve
+        // with a clean error, never a worker panic or a hang.
+        struct Slow(usize, usize);
+        impl BatchOp for Slow {
+            fn rows(&self) -> usize {
+                self.0
+            }
+            fn cols(&self) -> usize {
+                self.1
+            }
+            fn apply_batch(&self, x: &Mat) -> Mat {
+                std::thread::sleep(Duration::from_millis(10));
+                Mat::zeros(self.0, x.cols())
+            }
+            fn flops_per_matvec(&self) -> usize {
+                1
+            }
+        }
+        let cfg = CoordinatorConfig {
+            max_batch: 1,
+            n_workers: 1,
+            ..CoordinatorConfig::default()
+        };
+        let coord = Coordinator::start(
+            vec![("s".to_string(), Arc::new(Slow(4, 4)) as Arc<dyn BatchOp>)],
+            cfg,
+        );
+        let client = coord.client();
+        // Queue several 4-dim requests; the slow worker keeps a backlog.
+        let pending: Vec<_> = (0..6)
+            .filter_map(|_| client.submit("s", vec![0.0; 4]).ok())
+            .collect();
+        let registry = coord.registry();
+        registry.retire("s").unwrap();
+        registry
+            .register("s", Arc::new(Slow(2, 2)) as Arc<dyn BatchOp>)
+            .unwrap();
+        for rx in pending {
+            match rx.recv() {
+                // Flushed against the old generation before the retire.
+                Ok(Ok(y)) => assert_eq!(y.len(), 4),
+                // Resolved against the gap or the reshaped successor.
+                Ok(Err(e)) => assert!(matches!(
+                    e,
+                    ServeError::WrongDimension { .. } | ServeError::UnknownOperator(_)
+                )),
+                Err(_) => panic!("worker died (response channel closed)"),
+            }
+        }
+        // The service still works for the new shape.
+        let y = client.apply("s", vec![0.0; 2]).unwrap();
+        assert_eq!(y.len(), 2);
         coord.shutdown();
     }
 

@@ -60,6 +60,20 @@ impl Arena {
     pub fn capacity(&self) -> usize {
         self.ping.len()
     }
+
+    /// Total heap footprint of the ping-pong pair in bytes — what the
+    /// coordinator's adaptive batch sizing bounds when it caps a batch
+    /// width (`2 buffers × 8 bytes × capacity`).
+    pub fn footprint_bytes(&self) -> usize {
+        16 * self.capacity()
+    }
+
+    /// Footprint a scratch request of `n` elements would pin (the
+    /// adaptive batcher checks this *before* sizing a batch, so the
+    /// zero-alloc steady state is preserved by construction).
+    pub fn footprint_for(n: usize) -> usize {
+        16 * n
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +111,14 @@ mod tests {
         let _ = a.acquire(64);
         assert_eq!(a.allocs(), 1);
         assert_eq!(a.reuses(), 1);
+    }
+
+    #[test]
+    fn footprint_counts_both_buffers() {
+        let mut a = Arena::new();
+        let _ = a.acquire(32);
+        assert_eq!(a.footprint_bytes(), 2 * 8 * 32);
+        assert_eq!(Arena::footprint_for(32), a.footprint_bytes());
     }
 
     #[test]

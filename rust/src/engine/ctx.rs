@@ -96,6 +96,13 @@ impl ExecCtx {
         &self.pool
     }
 
+    /// β of the cost model `flops + β·bytes` this ctx dispatches with —
+    /// the same weight the plan compiler and the coordinator's adaptive
+    /// batch sizing use, so one knob describes the machine everywhere.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
     /// Cost-model decision for `a·b`: is the double-transpose rewrite
     /// `(bᵀ aᵀ)ᵀ` (zero-skip lands on `b`'s entries) cheaper than the
     /// direct ikj pass (zero-skip on `a`), three extra transpose passes

@@ -25,6 +25,20 @@
 //! [`EngineOp`] bundles plan + pool + metrics into a servable operator
 //! (it implements the coordinator's `BatchOp`), drawing scratch from a
 //! per-thread arena so concurrent callers never serialize on a lock.
+//! Each plan also exposes a [`CostProfile`] (flops/bytes per column +
+//! fixed per-batch operand traffic) that the coordinator's adaptive
+//! batcher sizes per-operator batches from.
+//!
+//! **Architecture** (the serving path end to end):
+//! `plan` → `pool` → `arena` → `coordinator::batcher` →
+//! `coordinator::Registry` — the engine compiles and executes, the
+//! coordinator decides *when* (batch sizing) and *what* (live operator
+//! registry) to execute.
+//!
+//! **Paper map:** this layer realizes §II's Relative Complexity Gain as
+//! wall-clock — `faust bench engine_scaling` measures it; the fig6
+//! (Hadamard §IV-C), fig8 (MEG §V) and fig12 (denoising §VI) benches all
+//! apply their operators through plans compiled here.
 
 pub mod arena;
 pub mod ctx;
@@ -33,7 +47,7 @@ pub mod pool;
 
 pub use arena::Arena;
 pub use ctx::ExecCtx;
-pub use plan::{ApplyPlan, PlanConfig, Stage, StageKernel};
+pub use plan::{ApplyPlan, CostProfile, PlanConfig, Stage, StageKernel};
 pub use pool::{
     par_gemm_into, par_gemv_into, par_gemv_t_into, par_spmm_into, par_spmv_into,
     ThreadPool,
@@ -146,6 +160,26 @@ impl ApplyEngine {
     /// An [`ExecCtx`] sharing this engine's pool and cost-model weight:
     /// on-line refactorization runs on the same threads that serve
     /// applies, so a deployment needs exactly one pool.
+    ///
+    /// ```
+    /// use faust::engine::ApplyEngine;
+    /// use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
+    ///
+    /// let engine = ApplyEngine::with_threads(2);
+    /// let ctx = engine.ctx();
+    /// // Same pool: factorization and serving share the worker threads.
+    /// assert!(std::sync::Arc::ptr_eq(ctx.pool(), engine.pool()));
+    ///
+    /// // Factorize on the serving threads, then serve the result.
+    /// let h = faust::transforms::hadamard(8);
+    /// let f = factorize_with_ctx(&ctx, &h, &HierarchicalConfig::hadamard(8));
+    /// let op = engine.op(&f);
+    /// let x = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+    /// let (y, want) = (op.apply(&x), h.matvec(&x));
+    /// for i in 0..8 {
+    ///     assert!((y[i] - want[i]).abs() < 1e-5);
+    /// }
+    /// ```
     pub fn ctx(&self) -> ExecCtx {
         ExecCtx::from_pool(self.pool.clone(), self.cfg.plan.bytes_per_flop_weight)
     }
@@ -270,6 +304,12 @@ impl EngineOp {
     /// Flops of one planned matvec (for serving metrics).
     pub fn flops_per_matvec(&self) -> usize {
         self.plan.planned_flops()
+    }
+
+    /// The plan's flop/byte [`CostProfile`] — what the coordinator's
+    /// adaptive batcher sizes this operator's batches from.
+    pub fn profile(&self) -> CostProfile {
+        self.plan.profile()
     }
 
     /// Metrics of the engine this op belongs to.

@@ -134,6 +134,16 @@ impl Stage {
         }
     }
 
+    /// Operand bytes streamed once per batch, independent of the batch
+    /// width: the kernel's own storage (CSR vals + indices + row pointers,
+    /// or the full dense block).
+    pub fn operand_bytes(&self) -> usize {
+        match &self.kernel {
+            StageKernel::Sparse(s) => 12 * s.nnz() + 4 * (s.rows() + 1),
+            StageKernel::Dense(m) => 8 * m.rows() * m.cols(),
+        }
+    }
+
     /// Transposed copy of this stage (kernel materialized transposed).
     fn transposed(&self) -> Stage {
         let kernel = match &self.kernel {
@@ -166,6 +176,61 @@ fn dense_cost(rows: usize, cols: usize, beta: f64) -> f64 {
     let flops = 2 * rows * cols;
     let bytes = 8 * rows * cols + 8 * (rows + cols);
     flops as f64 + beta * bytes as f64
+}
+
+/// Flop/byte profile of one compiled plan, split into the part that scales
+/// with the batch width and the part that is paid once per batch.
+///
+/// Executing a `b`-column batch streams every stage operand once
+/// (`fixed_bytes`, amortized over the batch) and does `b · flops_per_col`
+/// arithmetic while moving `b · bytes_per_col` of vector data. The
+/// coordinator's adaptive batcher sizes per-operator batches from exactly
+/// this split (`coordinator::target_batch`): a FAμST with heavy factors
+/// but cheap columns wants wide batches, a dense operator saturates early.
+///
+/// ```
+/// use faust::engine::{ApplyPlan, PlanConfig};
+/// let f = faust::transforms::hadamard_faust(16);
+/// let p = ApplyPlan::compile(&f, &PlanConfig::default()).profile();
+/// assert_eq!(p.flops_per_col, 2 * f.s_tot()); // butterflies never fuse
+/// assert!(p.fixed_bytes > 0 && p.max_dim == 16);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostProfile {
+    /// Arithmetic per batch column (one matvec through the chain).
+    pub flops_per_col: usize,
+    /// Vector bytes moved per batch column: the input column plus every
+    /// intermediate/output column written along the chain.
+    pub bytes_per_col: usize,
+    /// Operand bytes streamed once per batch regardless of width
+    /// (the plan's fixed cost the batcher amortizes).
+    pub fixed_bytes: usize,
+    /// Largest intermediate dimension — ties a batch width to its arena
+    /// ping-pong footprint (`2 · 8 · max_dim · b` bytes).
+    pub max_dim: usize,
+}
+
+impl CostProfile {
+    /// Model cost of one batch column: `flops + β·bytes`.
+    pub fn col_cost(&self, beta: f64) -> f64 {
+        self.flops_per_col as f64 + beta * self.bytes_per_col as f64
+    }
+
+    /// Model cost paid once per batch: `β·fixed_bytes`.
+    pub fn fixed_cost(&self, beta: f64) -> f64 {
+        beta * self.fixed_bytes as f64
+    }
+
+    /// Profile of a plain dense `rows×cols` GEMM operator (used by the
+    /// coordinator for dense [`Mat`] operators that bypass the engine).
+    pub fn dense(rows: usize, cols: usize) -> CostProfile {
+        CostProfile {
+            flops_per_col: 2 * rows * cols,
+            bytes_per_col: 8 * (rows + cols),
+            fixed_bytes: 8 * rows * cols,
+            max_dim: rows.max(cols),
+        }
+    }
 }
 
 /// Compiled execution plan for one FAμST operator.
@@ -300,6 +365,18 @@ impl ApplyPlan {
     /// Flops of the naive per-factor CSR chain this plan replaces.
     pub fn naive_flops(&self) -> usize {
         self.naive_flops
+    }
+
+    /// The plan's [`CostProfile`]: per-column flops/bytes plus the fixed
+    /// per-batch operand traffic, for batch sizing and RCG reporting.
+    pub fn profile(&self) -> CostProfile {
+        CostProfile {
+            flops_per_col: self.planned_flops(),
+            bytes_per_col: 8
+                * (self.cols + self.stages.iter().map(Stage::rows).sum::<usize>()),
+            fixed_bytes: self.stages.iter().map(Stage::operand_bytes).sum(),
+            max_dim: self.max_dim,
+        }
     }
 
     /// Scratch elements needed for a batch of `bcols` columns.
@@ -612,6 +689,33 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
         }
+    }
+
+    #[test]
+    fn profile_accounts_flops_and_operand_bytes() {
+        let n = 32;
+        let f = crate::transforms::hadamard_faust(n);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let p = plan.profile();
+        // Butterfly chains never fuse, so planned == naive flops.
+        assert_eq!(p.flops_per_col, 2 * f.s_tot());
+        // Input column + one n-row output per stage.
+        assert_eq!(p.bytes_per_col, 8 * n * (1 + f.n_factors()));
+        // All stages stay CSR: vals+cols per nnz, row pointers per stage.
+        let per_stage = 12 * 2 * n + 4 * (n + 1);
+        assert_eq!(p.fixed_bytes, per_stage * f.n_factors());
+        assert_eq!(p.max_dim, n);
+        assert!(p.col_cost(0.25) > p.flops_per_col as f64);
+        assert!(p.fixed_cost(0.25) > 0.0);
+    }
+
+    #[test]
+    fn dense_profile_matches_gemm_accounting() {
+        let p = CostProfile::dense(6, 9);
+        assert_eq!(p.flops_per_col, 108);
+        assert_eq!(p.fixed_bytes, 8 * 54);
+        assert_eq!(p.bytes_per_col, 8 * 15);
+        assert_eq!(p.max_dim, 9);
     }
 
     #[test]

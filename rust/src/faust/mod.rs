@@ -9,8 +9,14 @@
 //! cost-modeled [`ApplyPlan`] is compiled lazily on first use and cached
 //! (factors are immutable after construction, so the cache never goes
 //! stale), kernels run on the process-wide engine pool, and scratch comes
-//! from a per-thread ping-pong [`Arena`] — steady-state applies allocate
-//! only their output buffer.
+//! from a per-thread ping-pong [`Arena`](crate::engine::Arena) —
+//! steady-state applies allocate only their output buffer.
+//!
+//! **Paper map:** §II defines the operator and its RC/RCG metrics; a
+//! `Faust` is the object every experiment produces and consumes — the
+//! fig6 Hadamard refactorization (§IV-C), the fig8 MEG gain surrogate
+//! (§V, served through [`crate::coordinator`]), and the fig12 denoising
+//! dictionary (§VI, via [`crate::dictlearn`]).
 
 use crate::engine::{self, ApplyPlan, PlanConfig};
 use crate::linalg::{spectral_norm_iter, Mat};
@@ -137,6 +143,20 @@ impl Faust {
     /// Apply: `y = λ S_J ⋯ S_1 x` in `O(s_tot)`, through the cached
     /// engine plan (fusion + per-factor strategy) with per-thread
     /// ping-pong scratch — only the output vector is allocated.
+    ///
+    /// ```
+    /// use faust::transforms::{hadamard, hadamard_faust};
+    ///
+    /// let n = 16;
+    /// let f = hadamard_faust(n); // butterfly FAμST: 2n nnz per factor
+    /// let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+    /// let y = f.apply(&x);                  // O(2n·log n) flops
+    /// let want = hadamard(n).matvec(&x);    // O(n²) reference
+    /// for i in 0..n {
+    ///     assert!((y[i] - want[i]).abs() < 1e-12);
+    /// }
+    /// assert!(f.rcg() > 1.0); // the speedup the paper's RCG predicts
+    /// ```
     pub fn apply(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols(), "faust apply dim mismatch");
         let plan = self.plan();

@@ -7,6 +7,13 @@
 //! factors introduced so far. The analogy with greedy layer-wise
 //! pre-training + fine-tuning of deep networks is the paper's §IV-A.
 //!
+//! **Paper map:** Fig. 5 (the algorithm) and Fig. 11 (its
+//! dictionary-learning variant) are this module; its outputs drive the
+//! fig6 Hadamard recovery ([`HierarchicalConfig::hadamard`], §IV-C), the
+//! fig8 MEG factorization sweep ([`HierarchicalConfig::meg`], §V) and
+//! the fig12 denoising dictionaries ([`HierarchicalConfig::dictionary`],
+//! §VI via [`crate::dictlearn`]).
+//!
 //! Every split and refit runs on the engine's
 //! [`ExecCtx`](crate::engine::ExecCtx) (pooled cost-dispatched GEMMs,
 //! pooled power iterations): [`factorize`]/[`factorize_traced`]/
@@ -219,6 +226,19 @@ impl HierarchicalConfig {
 /// Hierarchical factorization of `a` (paper Fig. 5) on the
 /// process-default [`ExecCtx`]. Returns the FAμST
 /// `λ · T_{J-1} S_{J-1} ⋯ S_1` with `S_J := T_{J-1}`.
+///
+/// ```
+/// use faust::hierarchical::{factorize, HierarchicalConfig};
+/// use faust::transforms::hadamard;
+///
+/// // Reverse-engineer the 16-point Hadamard transform (paper §IV-C).
+/// let n = 16;
+/// let a = hadamard(n);
+/// let f = factorize(&a, &HierarchicalConfig::hadamard(n));
+/// assert_eq!(f.n_factors(), 4);             // J = log2(16) butterflies
+/// assert!(f.relative_error_fro(&a) < 1e-6); // exact re-factorization
+/// assert!(f.rcg() > 1.5);                   // …at a real flop discount
+/// ```
 pub fn factorize(a: &Mat, cfg: &HierarchicalConfig) -> Faust {
     factorize_with_ctx(ExecCtx::global(), a, cfg)
 }

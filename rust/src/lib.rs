@@ -23,8 +23,11 @@
 //!   through it; the coordinator serves [`engine::EngineOp`]s; the
 //!   factorizers take a ctx (`_with_ctx` variants) or default to the
 //!   process-wide one.
-//! - **L3-serve ([`coordinator`])**: operator registry + dynamic batcher
-//!   + worker pool turning planned operators into a matvec service.
+//! - **L3-serve ([`coordinator`])**: live operator registry
+//!   (register / hot-swap / retire with epoch draining) + plan-aware
+//!   adaptive batcher (per-operator batch widths from each plan's
+//!   flop/byte [`engine::CostProfile`]) + worker pool turning planned
+//!   operators into a matvec service.
 //! - **L2/L1 (python/, build-time only)**: JAX palm4MSA step + Pallas
 //!   gradient kernel, AOT-lowered to HLO text loaded by the `runtime`
 //!   module (feature `pjrt`, off by default so the crate builds offline).

@@ -2,7 +2,9 @@
 
 use faust::bench_util::{fmt, Table};
 use faust::cli::{Args, USAGE};
-use faust::coordinator::{engine_ops, BatchOp, Coordinator, CoordinatorConfig};
+use faust::coordinator::{
+    engine_ops, AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig,
+};
 use faust::dictlearn::{faust_dictionary_learning_with_ctx, KsvdConfig};
 use faust::engine::{ApplyEngine, EngineConfig, ExecCtx, PlanConfig};
 use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
@@ -288,43 +290,75 @@ fn cmd_dict(args: &Args) -> Result<()> {
 }
 
 /// Serve a Hadamard FAuST + dense twin through the coordinator, with the
-/// FAuST planned + parallelized by the engine. `--factorize` builds the
-/// operator by hierarchical factorization *on the serving engine's ctx*
-/// (on-line refactorization: one pool for training and serving).
+/// FAuST planned + parallelized by the engine. `--adaptive-batch` sizes
+/// each operator's batches from its plan's flop/byte profile.
+/// `--factorize` serves the reference butterfly from t=0, refactorizes
+/// on-line *on the serving engine's ctx* (one pool for training and
+/// serving) and hot-swaps the learned generation in mid-traffic.
+/// `--repl` opens an interactive operator console on the live registry.
 fn cmd_serve(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 64);
     let requests: usize = args.get("requests", 10_000);
     let batch: usize = args.get("batch", 32);
     let workers: usize = args.get("workers", 2);
     let threads: usize = args.get("threads", 2);
+    let adaptive = args.flag("adaptive-batch");
     let h = hadamard(n);
-    let engine = ApplyEngine::with_threads(threads);
-    let hf = if args.flag("factorize") {
-        let t0 = Instant::now();
-        let f = factorize_with_ctx(&engine.ctx(), &h, &HierarchicalConfig::hadamard(n));
-        println!(
-            "factorized the {n}-point Hadamard on the serving ctx in {:.2?} \
-             (rel err {:.1e})",
-            t0.elapsed(),
-            f.relative_error_fro(&h)
-        );
-        f
-    } else {
-        hadamard_faust(n)
-    };
+    let engine = Arc::new(ApplyEngine::with_threads(threads));
+    let hf = hadamard_faust(n);
     println!(
-        "serving {n}x{n} operator: dense + FAuST (RCG={:.1}), engine threads={threads}",
-        hf.rcg()
+        "serving {n}x{n} operator: dense + FAuST (RCG={:.1}), engine threads={threads}, \
+         batching={}",
+        hf.rcg(),
+        if adaptive { "adaptive (plan-aware)" } else { "fixed" }
     );
     let mut ops = engine_ops(&engine, vec![("faust".to_string(), hf)], batch);
-    ops.push(("dense".to_string(), Arc::new(h) as Arc<dyn BatchOp>));
+    ops.push(("dense".to_string(), Arc::new(h.clone()) as Arc<dyn BatchOp>));
     let cfg = CoordinatorConfig {
         max_batch: batch,
         batch_timeout: Duration::from_micros(200),
         n_workers: workers,
         queue_capacity: 4096,
+        adaptive: if adaptive { Some(AdaptiveBatchConfig::default()) } else { None },
     };
     let coord = Coordinator::start(ops, cfg);
+    let registry = coord.registry();
+    if adaptive {
+        for name in registry.names() {
+            if let Some(t) = registry.batch_limit(&name) {
+                println!("  adaptive batch target for '{name}': {t} cols");
+            }
+        }
+    }
+    // On-line refactorization: learn a fresh generation on the serving
+    // engine's ctx while the butterfly serves, then hot-swap it in.
+    let swapper = if args.flag("factorize") {
+        let registry = registry.clone();
+        let engine = engine.clone();
+        let h = h.clone();
+        Some(std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let f = factorize_with_ctx(&engine.ctx(), &h, &HierarchicalConfig::hadamard(n));
+            let rel = f.relative_error_fro(&h);
+            let op = Arc::new(engine.op_batch_hint(&f, batch)) as Arc<dyn BatchOp>;
+            match registry.swap_epoch("faust", op) {
+                Ok(epoch) => println!(
+                    "hot-swapped freshly factorized 'faust' at epoch {epoch} \
+                     ({:.2?}, rel err {rel:.1e}) — zero stall",
+                    t0.elapsed()
+                ),
+                // 'faust' may have been retired from the REPL meanwhile.
+                Err(e) => println!("on-line refactorization not published: {e}"),
+            }
+        }))
+    } else {
+        None
+    };
+    if args.flag("repl") {
+        // The swapper (if any) publishes into the same live registry while
+        // the console runs; it finishes on its own.
+        return serve_repl(coord, &engine);
+    }
     let client = coord.client();
     let mut table =
         Table::new(&["operator", "throughput(req/s)", "mean latency(us)", "mean batch"]);
@@ -365,12 +399,118 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
-    coord.shutdown();
+    if let Some(s) = swapper {
+        s.join().map_err(|_| err("refactorization thread panicked"))?;
+    }
+    let snap = coord.shutdown();
     let em = engine.metrics();
     println!(
-        "engine: applies={} arena_reuses={} arena_allocs={}",
-        em.applies, em.arena_reuses, em.arena_allocs
+        "engine: applies={} arena_reuses={} arena_allocs={} | registry: \
+         registered={} swaps={}",
+        em.applies, em.arena_reuses, em.arena_allocs, snap.registered, snap.swaps
     );
+    Ok(())
+}
+
+/// Interactive operator console on a live coordinator (`serve --repl`).
+fn serve_repl(coord: Coordinator, engine: &Arc<ApplyEngine>) -> Result<()> {
+    use std::io::BufRead;
+    let client = coord.client();
+    let registry = coord.registry();
+    let mut rng = Rng::new(0xCAFE);
+    println!(
+        "serve REPL — ops | ops add <name> <n> | ops swap <name> | \
+         ops rm <name> | apply <name> | stats | quit"
+    );
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            [] => {}
+            ["quit"] | ["exit"] => break,
+            ["ops"] => {
+                for name in registry.names() {
+                    let op = registry.get(&name).expect("listed name resolves");
+                    println!(
+                        "  {name}: {}x{} epoch={} target_batch={}",
+                        op.rows(),
+                        op.cols(),
+                        registry.epoch_of(&name).unwrap_or(0),
+                        registry
+                            .batch_limit(&name)
+                            .map(|t| t.to_string())
+                            .unwrap_or_else(|| "fixed".into()),
+                    );
+                }
+            }
+            ["ops", "add", name, nstr] => match nstr.parse::<usize>() {
+                Ok(sz) if sz.is_power_of_two() && sz >= 4 => {
+                    let op = Arc::new(engine.op(&hadamard_faust(sz))) as Arc<dyn BatchOp>;
+                    match registry.register(name.to_string(), op) {
+                        Ok(e) => println!("registered '{name}' ({sz}x{sz}) at epoch {e}"),
+                        Err(e) => println!("error: {e}"),
+                    }
+                }
+                _ => println!("error: <n> must be a power of two >= 4"),
+            },
+            ["ops", "swap", name] => match registry.get(name) {
+                Some(cur) if cur.rows() == cur.cols() && cur.rows().is_power_of_two() => {
+                    let sz = cur.rows();
+                    let t0 = Instant::now();
+                    let f = factorize_with_ctx(
+                        &engine.ctx(),
+                        &hadamard(sz),
+                        &HierarchicalConfig::hadamard(sz),
+                    );
+                    let op = Arc::new(engine.op(&f)) as Arc<dyn BatchOp>;
+                    match registry.swap_epoch(name, op) {
+                        Ok(e) => println!(
+                            "swapped '{name}' to a freshly factorized generation \
+                             at epoch {e} ({:.2?})",
+                            t0.elapsed()
+                        ),
+                        Err(e) => println!("error: {e}"),
+                    }
+                }
+                Some(_) => println!("error: demo swap needs a square power-of-two operator"),
+                None => println!("error: operator '{name}' not registered"),
+            },
+            ["ops", "rm", name] => match registry.retire(name) {
+                Ok(op) => println!("retired '{name}' ({}x{})", op.rows(), op.cols()),
+                Err(e) => println!("error: {e}"),
+            },
+            ["apply", name] => match registry.get(name) {
+                Some(op) => {
+                    let x = rng.gauss_vec(op.cols());
+                    match client.apply(name, x) {
+                        Ok(y) => {
+                            let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+                            println!("||y||_2 = {norm:.6}  ({} rows)", y.len());
+                        }
+                        Err(e) => println!("error: {e}"),
+                    }
+                }
+                None => println!("error: operator '{name}' not registered"),
+            },
+            ["stats"] => {
+                let s = client.metrics();
+                println!(
+                    "  completed={} batches={} mean_batch={:.1} mean_latency_us={:.1} \
+                     registered={} swaps={} retired={}",
+                    s.completed,
+                    s.batches,
+                    s.mean_batch_size(),
+                    s.mean_latency_us(),
+                    s.registered,
+                    s.swaps,
+                    s.retired,
+                );
+            }
+            _ => println!("unknown command (ops | ops add/swap/rm | apply | stats | quit)"),
+        }
+    }
+    coord.shutdown();
     Ok(())
 }
 

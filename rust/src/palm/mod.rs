@@ -16,8 +16,13 @@
 //! are bitwise thread-invariant, so a fixed seed reproduces identical
 //! factors at any thread count.
 //!
+//! **Paper map:** Fig. 4 is this module; every experiment bottoms out
+//! here through [`crate::hierarchical`] — fig6 (Hadamard §IV-C), fig8
+//! (MEG §V) and fig12 (denoising dictionaries §VI) are hierarchies of
+//! palm4MSA splits and refits.
+//!
 //! Partial products are managed by a per-sweep prefix-product cache
-//! ([`SweepCache`]): the fixed side's suffix products are built once per
+//! (the private `SweepCache`): the fixed side's suffix products are built once per
 //! sweep, the moving side grows incrementally with each updated factor,
 //! and the full updated product falls out of the sweep for free — the λ
 //! update, the objective, and callers (via [`PalmResult::product`]) all
@@ -223,6 +228,33 @@ impl SweepCache {
 ///
 /// `init.mats` must match `cfg.constraints` in length and chain to the
 /// shape of `a`.
+///
+/// ```
+/// use faust::linalg::Mat;
+/// use faust::palm::{palm4msa, FactorState, PalmConfig};
+/// use faust::prox::Constraint;
+///
+/// // Two-factor split of the 4-point Hadamard under butterfly sparsity
+/// // (the inner step of hierarchical factorization, paper Fig. 4/5).
+/// let a = faust::transforms::hadamard(4);
+/// let init = FactorState {
+///     mats: vec![Mat::eye(4, 4), Mat::zeros(4, 4)],
+///     lambda: 1.0,
+/// };
+/// let cfg = PalmConfig::new(
+///     vec![Constraint::SpRowCol(2), Constraint::SpRowCol(2)],
+///     40,
+/// );
+/// let res = palm4msa(&a, init, &cfg);
+/// // PALM descends monotonically toward a stationary point (§III-B)…
+/// assert!(res
+///     .objective_trace
+///     .windows(2)
+///     .all(|w| w[1] <= w[0] * (1.0 + 1e-9) + 1e-12));
+/// // …and the result converts into a servable FAμST operator.
+/// let f = res.state.into_faust();
+/// assert_eq!((f.rows(), f.cols()), (4, 4));
+/// ```
 pub fn palm4msa(a: &Mat, init: FactorState, cfg: &PalmConfig) -> PalmResult {
     palm4msa_with_ctx(ExecCtx::global(), a, init, cfg)
 }

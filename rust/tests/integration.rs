@@ -49,6 +49,7 @@ fn factorize_then_serve_through_coordinator() {
             batch_timeout: Duration::from_micros(100),
             n_workers: 2,
             queue_capacity: 256,
+            adaptive: None,
         },
     );
     let client = coord.client();
@@ -143,4 +144,113 @@ fn linop_flop_accounting_consistent_with_rcg() {
     let flops_faust = LinOp::flops_per_apply(&f) as f64;
     let gain = flops_dense / flops_faust;
     assert!((gain - f.rcg()).abs() < 1e-9, "gain {gain} vs rcg {}", f.rcg());
+}
+
+#[test]
+fn online_refactorization_hot_swaps_mid_serve() {
+    // The PR-3 serving story end to end: clients hammer an operator while
+    // the same engine re-learns it (online refactorization) and publishes
+    // the fresh generation via Registry::swap_epoch — no failed and no
+    // misrouted requests, zero service stall.
+    use faust::coordinator::{engine_ops, AdaptiveBatchConfig};
+    use faust::engine::ApplyEngine;
+    use faust::hierarchical::factorize_with_ctx;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let n = 32;
+    let h = hadamard(n);
+    let engine = Arc::new(ApplyEngine::with_threads(2));
+    let ops = engine_ops(&engine, vec![("gain".to_string(), hadamard_faust(n))], 8);
+    let cfg = CoordinatorConfig {
+        adaptive: Some(AdaptiveBatchConfig::default()),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(ops, cfg);
+    let client = coord.client();
+    let registry = coord.registry();
+
+    // Clients hammer the operator for the whole duration.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = vec![];
+    for t in 0..2u64 {
+        let c = client.clone();
+        let h = h.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(40 + t);
+            let mut served = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let x = rng.gauss_vec(n);
+                let y = c.apply("gain", x.clone()).expect("request failed during swap");
+                let want = h.matvec(&x);
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 1e-4,
+                        "misrouted or garbled response mid-swap"
+                    );
+                }
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    // On-line refactorization on the serving engine's own ctx…
+    let f = factorize_with_ctx(&engine.ctx(), &h, &HierarchicalConfig::hadamard(n));
+    assert!(f.relative_error_fro(&h) < 1e-6);
+    // …published into the running service while traffic flows.
+    let epoch = registry
+        .swap_epoch(
+            "gain",
+            Arc::new(engine.op_batch_hint(&f, 8)) as Arc<dyn BatchOp>,
+        )
+        .expect("hot swap failed");
+    assert!(epoch >= 2);
+    std::thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::Release);
+    let total: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert!(total > 0, "no requests flowed during refactorization");
+
+    // Requests submitted after the swap are served by the new generation.
+    let mut rng = Rng::new(77);
+    let x = rng.gauss_vec(n);
+    let y = client.apply("gain", x.clone()).unwrap();
+    let want = h.matvec(&x);
+    for i in 0..n {
+        assert!((y[i] - want[i]).abs() < 1e-4);
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.swaps, 1);
+    assert_eq!(snap.rejected, 0, "hot swap caused rejected requests");
+    assert_eq!(snap.completed, snap.submitted, "requests were lost in the swap");
+}
+
+#[test]
+fn adaptive_batching_matches_fixed_results_exactly() {
+    // Same operator, same requests — adaptive sizing may batch
+    // differently but must return bit-identical answers.
+    use faust::coordinator::AdaptiveBatchConfig;
+
+    let n = 64;
+    let h = hadamard(n);
+    let run = |adaptive: Option<AdaptiveBatchConfig>| -> Vec<Vec<f64>> {
+        let coord = Coordinator::start(
+            vec![("h".to_string(), Arc::new(h.clone()) as Arc<dyn BatchOp>)],
+            CoordinatorConfig { adaptive, ..CoordinatorConfig::default() },
+        );
+        let client = coord.client();
+        let mut rng = Rng::new(55);
+        let out: Vec<Vec<f64>> = (0..40)
+            .map(|_| client.apply("h", rng.gauss_vec(n)).unwrap())
+            .collect();
+        coord.shutdown();
+        out
+    };
+    let fixed = run(None);
+    let adaptive = run(Some(AdaptiveBatchConfig::default()));
+    for (a, b) in fixed.iter().zip(&adaptive) {
+        for i in 0..n {
+            assert_eq!(a[i], b[i], "adaptive batching changed a result bit");
+        }
+    }
 }
