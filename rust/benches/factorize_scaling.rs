@@ -9,10 +9,12 @@
 //! a fixed seed at every thread count (this part is asserted: a
 //! non-deterministic run exits non-zero).
 //!
-//! CI runs the 256-point smoke (`-- --n 256 --max-threads 2`); locally,
-//! `cargo bench --bench factorize_scaling` sweeps 1..8 threads at n=512.
+//! CI runs the 256-point smoke (`-- --n 256 --max-threads 2 --json`),
+//! uploads the emitted `BENCH_factorize_scaling.json` as an artifact and
+//! gates it against `benches/baseline.json`; locally, `cargo bench
+//! --bench factorize_scaling` sweeps 1..8 threads at n=512.
 
-use faust::bench_util::{fmt, Table};
+use faust::bench_util::{fmt, BenchReport, Table};
 use faust::cli::Args;
 use faust::engine::ExecCtx;
 use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
@@ -68,6 +70,23 @@ fn main() {
         threads *= 2;
     }
     table.print();
+    if args.flag("json") {
+        let (serial_s, _) = baseline.as_ref().expect("at least one thread count ran");
+        let mut report = BenchReport::new("factorize_scaling");
+        report.push("n", n as f64);
+        report.push("max_threads", max_threads as f64);
+        report.push("cores", cores as f64);
+        report.push("wall_s_serial", *serial_s);
+        report.push("best_speedup", top_speedup);
+        report.push("bitwise_identical", if all_identical { 1.0 } else { 0.0 });
+        match report.write(args.get_str("json-dir").unwrap_or(".")) {
+            Ok(p) => println!("# wrote {p}"),
+            Err(e) => {
+                eprintln!("failed to write bench json: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
     let speed_ok = top_speedup >= 2.0;
     println!(
         "\n# acceptance ({n}-point, up to {max_threads} threads on {cores} cores): \

@@ -1,7 +1,10 @@
 //! Minimal benchmarking harness (criterion is not in the offline vendor
-//! set): warmup + timed iterations with robust statistics, plus an aligned
+//! set): warmup + timed iterations with robust statistics, an aligned
 //! table printer used by every `cargo bench` target to emit the paper's
-//! figure series as text.
+//! figure series as text, and a machine-readable [`BenchReport`] writer
+//! (`BENCH_<name>.json`) that CI uploads as artifacts and gates against
+//! `benches/baseline.json` (see `scripts/bench_gate.py`) — the perf
+//! trajectory is enforced, not just printed.
 
 use std::time::Instant;
 
@@ -109,6 +112,143 @@ impl Table {
     }
 }
 
+/// Result of the shared fleet-vs-sequential comparison protocol
+/// ([`fleet_compare`]): both the `faust fleet` CLI and the CI-gated
+/// `benches/fleet_scaling.rs` consume this, so they cannot drift into
+/// measuring different things.
+pub struct FleetComparison {
+    pub ops: usize,
+    pub n: usize,
+    /// Threads of the shared ctx both modes ran on.
+    pub threads: usize,
+    /// Wall clock of the `ops` sequential `factorize_with_ctx` calls.
+    pub seq_s: f64,
+    /// Wall clock of the single `factorize_fleet_with_ctx` call.
+    pub fleet_s: f64,
+    /// Fleet results fingerprint-identical to the sequential runs.
+    pub identical: bool,
+    /// Worst relative Frobenius error across the fleet's operators.
+    pub max_rel_err: f64,
+    /// The fleet ctx's crossover counters.
+    pub metrics: crate::engine::FleetMetricsSnapshot,
+}
+
+impl FleetComparison {
+    /// Sequential-over-fleet wall-clock ratio (> 1 ⇒ the fleet won).
+    pub fn speedup(&self) -> f64 {
+        self.seq_s / self.fleet_s
+    }
+}
+
+/// Factorize `ops` seeded `n`-point Hadamard problems sequentially, then
+/// the same jobs as one fleet on the same ctx, and compare: wall clock,
+/// bitwise identity (fingerprints), worst relative error. One member per
+/// "subject" (§V framing) — identical shapes, independent trajectories
+/// via per-member seeds.
+pub fn fleet_compare(ops: usize, n: usize, ctx: &crate::engine::ExecCtx) -> FleetComparison {
+    use crate::engine::FleetCtx;
+    use crate::hierarchical::{factorize_fleet_with_ctx, factorize_with_ctx, HierarchicalConfig};
+    use crate::testutil::faust_fingerprint;
+
+    assert!(n.is_power_of_two() && n >= 8, "fleet_compare needs n = 2^k >= 8");
+    assert!(ops >= 1, "fleet_compare needs at least one operator");
+    let a = crate::transforms::hadamard(n);
+    let cfgs: Vec<HierarchicalConfig> = (0..ops)
+        .map(|i| {
+            let mut c = HierarchicalConfig::hadamard(n);
+            c.seed ^= i as u64;
+            c
+        })
+        .collect();
+
+    // Untimed warmup: one throwaway factorization so first-touch
+    // allocation, allocator growth and cold caches don't land entirely on
+    // whichever mode is timed first (the sequential pass) and inflate the
+    // reported speedup.
+    std::hint::black_box(factorize_with_ctx(ctx, &a, &cfgs[0]));
+
+    let t0 = Instant::now();
+    let solo: Vec<crate::faust::Faust> = cfgs
+        .iter()
+        .map(|c| factorize_with_ctx(ctx, &a, c))
+        .collect();
+    let seq_s = t0.elapsed().as_secs_f64();
+
+    let fleet = FleetCtx::new(ctx.clone());
+    let jobs: Vec<(&crate::linalg::Mat, &HierarchicalConfig)> =
+        cfgs.iter().map(|c| (&a, c)).collect();
+    let t1 = Instant::now();
+    let flt = factorize_fleet_with_ctx(&fleet, &jobs);
+    let fleet_s = t1.elapsed().as_secs_f64();
+
+    let identical = solo
+        .iter()
+        .zip(&flt)
+        .all(|(s, f)| faust_fingerprint(s) == faust_fingerprint(f));
+    let max_rel_err = flt
+        .iter()
+        .map(|f| f.relative_error_fro(&a))
+        .fold(0.0_f64, f64::max);
+    FleetComparison {
+        ops,
+        n,
+        threads: ctx.n_threads(),
+        seq_s,
+        fleet_s,
+        identical,
+        max_rel_err,
+        metrics: fleet.metrics(),
+    }
+}
+
+/// Machine-readable bench results: named float metrics serialized to
+/// `BENCH_<name>.json` (hand-rolled writer — no serde in the offline
+/// vendor set). Benches call [`BenchReport::write`] when invoked with
+/// `--json`; CI uploads the files as workflow artifacts and
+/// `scripts/bench_gate.py` compares them against the committed
+/// `benches/baseline.json`, failing the build on regressions.
+pub struct BenchReport {
+    name: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    /// Empty report for bench target `name` (used in the file name; keep
+    /// it to `[A-Za-z0-9_-]`).
+    pub fn new(name: &str) -> Self {
+        BenchReport { name: name.to_string(), metrics: Vec::new() }
+    }
+
+    /// Record one metric (later values with the same key are kept too —
+    /// keys should be unique for the gate to be meaningful).
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// JSON body: `{"name": "...", "metrics": {"k": v, ...}}`.
+    /// Non-finite values serialize as `null` (JSON has no NaN/Inf).
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"name\": \"{}\",\n", esc(&self.name)));
+        out.push_str("  \"metrics\": {\n");
+        for (k, (key, v)) in self.metrics.iter().enumerate() {
+            let val = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+            let comma = if k + 1 < self.metrics.len() { "," } else { "" };
+            out.push_str(&format!("    \"{}\": {val}{comma}\n", esc(key)));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` into `dir` and return the path.
+    pub fn write(&self, dir: &str) -> std::io::Result<String> {
+        let path = format!("{}/BENCH_{}.json", dir.trim_end_matches('/'), self.name);
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
 /// Format a float compactly for tables.
 pub fn fmt(v: f64) -> String {
     if v == 0.0 {
@@ -162,5 +302,44 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fleet_compare_runs_and_verifies_identity() {
+        let ctx = crate::engine::ExecCtx::new(2);
+        let cmp = fleet_compare(2, 8, &ctx);
+        assert_eq!((cmp.ops, cmp.n, cmp.threads), (2, 8, 2));
+        assert!(cmp.identical, "fleet diverged from sequential runs");
+        assert!(cmp.max_rel_err < 1e-6);
+        assert!(cmp.seq_s > 0.0 && cmp.fleet_s > 0.0);
+        assert!(cmp.speedup() > 0.0);
+    }
+
+    #[test]
+    fn bench_report_serializes_valid_json() {
+        let mut r = BenchReport::new("unit_test");
+        r.push("wall_s", 1.25);
+        r.push("speedup", 2.0);
+        r.push("weird", f64::NAN);
+        let j = r.to_json();
+        assert!(j.contains("\"name\": \"unit_test\""));
+        assert!(j.contains("\"wall_s\": 1.25"));
+        assert!(j.contains("\"speedup\": 2"));
+        assert!(j.contains("\"weird\": null"));
+        // Every metric line but the last carries a trailing comma.
+        assert_eq!(j.matches(",\n").count(), 3); // name + 2 metric commas
+    }
+
+    #[test]
+    fn bench_report_writes_named_file() {
+        let dir = std::env::temp_dir();
+        let dir = dir.to_str().unwrap();
+        let mut r = BenchReport::new("writer_check");
+        r.push("x", 3.5);
+        let path = r.write(dir).unwrap();
+        assert!(path.ends_with("BENCH_writer_check.json"));
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"x\": 3.5"));
+        let _ = std::fs::remove_file(&path);
     }
 }

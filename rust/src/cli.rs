@@ -82,6 +82,12 @@ SUBCOMMANDS:
               [--threads N]
               hierarchically factorize a synthetic MEG-like operator on
               an N-thread ExecCtx (0 / omitted = process default)
+  fleet       --ops 8 --n 32 [--threads 4]
+              factorize a fleet of operators *concurrently* on one shared
+              ctx (cross-operator batched PALM sweeps, per-operator
+              convergence) vs the same jobs sequentially; verifies the
+              fleet is bitwise identical to the solo runs and reports the
+              throughput speedup + fusion counters
   dict        --m 32 --atoms 64 --samples 400 [--sparsity 4] [--j 3]
               [--iters 10] [--threads N] [--save out.faust]
               K-SVD + hierarchical FAuST dictionary learning (paper §VI)
@@ -92,7 +98,8 @@ SUBCOMMANDS:
   denoise     --size 128 --sigma 30 --atoms 128 [--stride 2] [--threads N]
               FAuST vs K-SVD vs DCT image denoising (paper Fig. 12, scaled)
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
-              [--threads 2] [--adaptive-batch] [--factorize] [--repl]
+              [--threads 2] [--adaptive-batch] [--factorize]
+              [--factorize-fleet N] [--repl]
               run the operator-serving coordinator on a Hadamard FAuST,
               planned + parallelized by the apply engine.
               --adaptive-batch sizes each operator's batches from its
@@ -100,8 +107,12 @@ SUBCOMMANDS:
               --factorize starts serving the reference butterfly, then
               refactorizes on-line on the serving engine's ctx and
               hot-swaps the learned operator in mid-traffic (registry
-              swap_epoch, zero stall); --repl drops into an interactive
-              operator console:
+              swap_epoch, zero stall); --factorize-fleet N additionally
+              serves N operators op0..op{N-1} and refactorizes them all
+              *concurrently* on the serving engine (cross-operator
+              batched sweeps), epoch-swapping each one the moment its
+              own factorization finishes; --repl drops into an
+              interactive operator console:
                 ops | ops add <name> <n> | ops swap <name> |
                 ops rm <name> | apply <name> | stats | quit
   engine      --n 1024 [--threads 4] [--batch 32] [--plan dump]

@@ -11,7 +11,10 @@
 //!   / [`retire`](Registry::retire) while traffic flows — on-line
 //!   refactorization (Mairal-style re-learning) publishes a fresh operator
 //!   into the running service with zero stall, old generations draining on
-//!   their `Arc`s;
+//!   their `Arc`s; [`Registry::refactorize_fleet`] re-learns a whole
+//!   *fleet* of served operators concurrently on one shared context
+//!   (cross-operator batched PALM sweeps) and swaps each one in the
+//!   moment its own factorization finishes;
 //! - a **router** thread grouping requests per operator into dynamic
 //!   **batches** — flushed on a deadline or at a per-operator width that
 //!   adaptive sizing derives from the plan's flop/byte
@@ -65,7 +68,7 @@ mod registry;
 
 pub use batcher::{target_batch, AdaptiveBatchConfig, BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use registry::{Registry, RegistryError};
+pub use registry::{FleetRefactorization, Registry, RegistryError};
 
 use crate::engine::{ApplyEngine, CostProfile, EngineOp};
 use crate::faust::Faust;

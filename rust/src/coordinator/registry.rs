@@ -29,17 +29,25 @@
 use super::batcher::{target_batch, AdaptiveBatchConfig};
 use super::metrics::Metrics;
 use super::BatchOp;
+use crate::engine::FleetCtx;
+use crate::faust::Faust;
+use crate::hierarchical::{factorize_fleet_traced_with_ctx, HierarchicalConfig};
+use crate::linalg::Mat;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-/// Errors from registry mutations.
+/// Errors from registry mutations. The unknown-key case is the *same
+/// typed error* on every path — `swap_epoch`, `retire`,
+/// [`Registry::refactorize_fleet`] outcomes, and the `serve --repl` ops
+/// console all surface [`RegistryError::UnknownOperator`]'s `Display`,
+/// never a hand-rolled string or a `Debug` dump.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RegistryError {
     /// `register` on a name that is already live (use `swap_epoch`).
     AlreadyRegistered(String),
     /// `swap_epoch` / `retire` on a name that is not registered.
-    Unknown(String),
+    UnknownOperator(String),
     /// `swap_epoch` with an operator of a different shape.
     ShapeMismatch {
         expected: (usize, usize),
@@ -53,7 +61,7 @@ impl std::fmt::Display for RegistryError {
             RegistryError::AlreadyRegistered(n) => {
                 write!(f, "operator '{n}' already registered (swap instead)")
             }
-            RegistryError::Unknown(n) => write!(f, "operator '{n}' not registered"),
+            RegistryError::UnknownOperator(n) => write!(f, "operator '{n}' not registered"),
             RegistryError::ShapeMismatch { expected, got } => write!(
                 f,
                 "swap shape mismatch: expected {}x{}, got {}x{}",
@@ -139,7 +147,7 @@ impl Registry {
         let mut g = self.ops.write().unwrap();
         let cur = g
             .get(name)
-            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?;
+            .ok_or_else(|| RegistryError::UnknownOperator(name.to_string()))?;
         let expected = (cur.op.rows(), cur.op.cols());
         let got = (op.rows(), op.cols());
         if expected != got {
@@ -158,7 +166,7 @@ impl Registry {
         let mut g = self.ops.write().unwrap();
         let entry = g
             .remove(name)
-            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?;
+            .ok_or_else(|| RegistryError::UnknownOperator(name.to_string()))?;
         self.epoch.fetch_add(1, Ordering::AcqRel);
         self.metrics.record_retired();
         Ok(entry.op)
@@ -200,6 +208,88 @@ impl Registry {
     pub fn is_empty(&self) -> bool {
         self.ops.read().unwrap().is_empty()
     }
+
+    /// Refactorize a fleet of served operators concurrently and hot-swap
+    /// each one **the moment its own factorization finishes** — not at a
+    /// global barrier.
+    ///
+    /// `jobs` names each target operator, the dense matrix to factorize
+    /// toward it, and its hierarchical configuration; the whole fleet
+    /// trains on `fleet`'s shared context
+    /// ([`factorize_fleet_traced_with_ctx`] batches the split/refit
+    /// kernels of separate members into fused cross-operator
+    /// dispatches). As each member completes, `publish` wraps the learned
+    /// [`Faust`] into a servable operator (typically
+    /// `engine.op(&faust)`), and [`Registry::swap_epoch`] publishes it
+    /// while the rest of the fleet keeps training — traffic on already
+    /// finished operators is served by their new generation immediately.
+    ///
+    /// Per-operator outcomes are reported in job order; a swap that fails
+    /// (operator retired meanwhile → [`RegistryError::UnknownOperator`],
+    /// or a shape-changing job → [`RegistryError::ShapeMismatch`]) never
+    /// aborts the rest of the fleet. Jobs naming a key that is not
+    /// registered *when the fleet starts* are rejected up front with the
+    /// same typed error — they never train (their `rel_err` is NaN) and
+    /// never slow the valid members' fused batches.
+    pub fn refactorize_fleet<F>(
+        &self,
+        fleet: &FleetCtx,
+        jobs: &[(String, &Mat, &HierarchicalConfig)],
+        mut publish: F,
+    ) -> Vec<FleetRefactorization>
+    where
+        F: FnMut(&str, &Faust) -> Arc<dyn BatchOp>,
+    {
+        // Reject never-registered names before spending any training time
+        // on them (a name retired mid-training still surfaces the typed
+        // error from its swap attempt below).
+        let mut outcomes: Vec<Option<FleetRefactorization>> = jobs
+            .iter()
+            .map(|(name, _, _)| {
+                if self.get(name).is_none() {
+                    Some(FleetRefactorization {
+                        name: name.clone(),
+                        outcome: Err(RegistryError::UnknownOperator(name.clone())),
+                        rel_err: f64::NAN,
+                    })
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let active: Vec<usize> = (0..jobs.len()).filter(|&i| outcomes[i].is_none()).collect();
+        let hier_jobs: Vec<(&Mat, &HierarchicalConfig)> =
+            active.iter().map(|&i| (jobs[i].1, jobs[i].2)).collect();
+        let _ = factorize_fleet_traced_with_ctx(fleet, &hier_jobs, |k, f| {
+            let i = active[k];
+            let (name, a, _) = &jobs[i];
+            let rel_err = f.relative_error_fro(a);
+            let op = publish(name, f);
+            let outcome = self.swap_epoch(name, op);
+            outcomes[i] = Some(FleetRefactorization {
+                name: name.clone(),
+                outcome,
+                rel_err,
+            });
+        });
+        outcomes
+            .into_iter()
+            .map(|o| o.expect("every fleet member reports an outcome"))
+            .collect()
+    }
+}
+
+/// Per-operator outcome of [`Registry::refactorize_fleet`].
+#[derive(Clone, Debug)]
+pub struct FleetRefactorization {
+    /// Registry key the job targeted.
+    pub name: String,
+    /// Publish epoch on success; the typed registry error otherwise
+    /// (same [`RegistryError::UnknownOperator`] the API paths return).
+    pub outcome: Result<u64, RegistryError>,
+    /// Relative Frobenius error of the learned FAμST vs. its target
+    /// (NaN when the job was rejected up front and never trained).
+    pub rel_err: f64,
 }
 
 #[cfg(test)]
@@ -233,7 +323,7 @@ mod tests {
         let old = r.retire("a").unwrap();
         assert_eq!(old.rows(), 4);
         assert!(r.get("a").is_none());
-        assert!(matches!(r.retire("a"), Err(RegistryError::Unknown(_))));
+        assert!(matches!(r.retire("a"), Err(RegistryError::UnknownOperator(_))));
     }
 
     #[test]
@@ -249,7 +339,7 @@ mod tests {
         assert_eq!(r.get("a").unwrap().cols(), 6);
         assert_eq!(
             r.swap_epoch("nope", op(1, 1)),
-            Err(RegistryError::Unknown("nope".into()))
+            Err(RegistryError::UnknownOperator("nope".into()))
         );
     }
 
@@ -266,6 +356,66 @@ mod tests {
         drop(in_flight);
         // ...and freed once the last in-flight reference drops.
         assert!(weak.upgrade().is_none());
+    }
+
+    #[test]
+    fn unknown_operator_error_is_one_typed_value_on_every_path() {
+        // The REPL and the API paths must surface the same typed error
+        // with the same Display — no hand-rolled strings, no Debug dumps.
+        let r = Registry::new(None);
+        let via_swap = r.swap_epoch("ghost", op(2, 2)).unwrap_err();
+        let via_retire = r.retire("ghost").unwrap_err();
+        let expected = RegistryError::UnknownOperator("ghost".to_string());
+        assert_eq!(via_swap, expected);
+        assert_eq!(via_retire, expected);
+        assert_eq!(via_swap.to_string(), "operator 'ghost' not registered");
+        assert_eq!(via_swap.to_string(), via_retire.to_string());
+    }
+
+    #[test]
+    fn refactorize_fleet_swaps_each_operator_and_reports_outcomes() {
+        use crate::engine::{ExecCtx, FleetCtx};
+        use crate::hierarchical::HierarchicalConfig;
+        use crate::transforms::{hadamard, hadamard_faust};
+
+        let r = Registry::new(None);
+        // Two served operators of different sizes + one name that is not
+        // registered (its swap must fail with the typed error while the
+        // others still publish).
+        let h8 = hadamard(8);
+        let h16 = hadamard(16);
+        r.register("a", Arc::new(hadamard_faust(8)) as Arc<dyn BatchOp>)
+            .unwrap();
+        r.register("b", Arc::new(hadamard_faust(16)) as Arc<dyn BatchOp>)
+            .unwrap();
+        let e_a0 = r.epoch_of("a").unwrap();
+        let e_b0 = r.epoch_of("b").unwrap();
+        let cfg8 = HierarchicalConfig::hadamard(8);
+        let cfg16 = HierarchicalConfig::hadamard(16);
+        let fleet = FleetCtx::new(ExecCtx::new(2));
+        let jobs = vec![
+            ("a".to_string(), &h8, &cfg8),
+            ("b".to_string(), &h16, &cfg16),
+            ("ghost".to_string(), &h8, &cfg8),
+        ];
+        let outcomes = r.refactorize_fleet(&fleet, &jobs, |_, f| {
+            Arc::new(f.clone()) as Arc<dyn BatchOp>
+        });
+        assert_eq!(outcomes.len(), 3);
+        assert!(outcomes[0].outcome.as_ref().unwrap() > &e_a0);
+        assert!(outcomes[1].outcome.as_ref().unwrap() > &e_b0);
+        assert_eq!(
+            outcomes[2].outcome,
+            Err(RegistryError::UnknownOperator("ghost".to_string()))
+        );
+        // Rejected up front: the doomed job never trained.
+        assert!(outcomes[2].rel_err.is_nan());
+        // The learned generations really replaced the originals and
+        // approximate their targets.
+        assert!(outcomes[0].rel_err < 1e-6);
+        assert!(outcomes[1].rel_err < 1e-6);
+        assert_eq!(r.epoch_of("a").unwrap(), *outcomes[0].outcome.as_ref().unwrap());
+        assert_eq!(r.epoch_of("b").unwrap(), *outcomes[1].outcome.as_ref().unwrap());
     }
 
     #[test]

@@ -107,16 +107,31 @@ impl ExecCtx {
     /// `(bᵀ aᵀ)ᵀ` (zero-skip lands on `b`'s entries) cheaper than the
     /// direct ikj pass (zero-skip on `a`), three extra transpose passes
     /// included? PALM factors are dense-stored but often extremely sparse
-    /// after projection, so this is regularly a ~10× call.
-    fn rewrite_wins(&self, a: &Mat, b: &Mat) -> bool {
+    /// after projection, so this is regularly a ~10× call. Shared with
+    /// [`super::FleetCtx`] so fused cross-operator GEMMs make the same
+    /// per-product choice as solo dispatch (bitwise-identity contract).
+    pub(crate) fn rewrite_wins(&self, a: &Mat, b: &Mat) -> bool {
+        self.rewrite_wins_nnz(a, b, a.nnz(), b.nnz())
+    }
+
+    /// [`ExecCtx::rewrite_wins`] with the operand nnz counts precomputed —
+    /// the fleet's batched entry point scans each operand once and reuses
+    /// the counts for both this decision and its crossover flop estimate.
+    pub(crate) fn rewrite_wins_nnz(
+        &self,
+        a: &Mat,
+        b: &Mat,
+        a_nnz: usize,
+        b_nnz: usize,
+    ) -> bool {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
         let base_bytes = 8 * (m * k + k * n + m * n);
-        let direct = (2 * a.nnz() * n) as f64 + self.beta * base_bytes as f64;
+        let direct = (2 * a_nnz * n) as f64 + self.beta * base_bytes as f64;
         // Rewrite pays the same streaming traffic plus one full pass each
         // for aᵀ, bᵀ and the final out-transpose.
         let transpose_bytes = 8 * (m * k + k * n + 2 * m * n);
         let rewrite =
-            (2 * b.nnz() * m) as f64 + self.beta * (base_bytes + transpose_bytes) as f64;
+            (2 * b_nnz * m) as f64 + self.beta * (base_bytes + transpose_bytes) as f64;
         rewrite < direct
     }
 

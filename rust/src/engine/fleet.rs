@@ -1,0 +1,449 @@
+//! `FleetCtx` — cross-operator batched execution for factorizing *fleets*
+//! of operators on one shared [`ExecCtx`].
+//!
+//! The paper's deployments hold many operators at once: one MEG gain
+//! matrix per subject (§V), one dictionary per image class (§VI). Each
+//! individual factorization bottoms out in GEMMs and power iterations
+//! that are *small* — a 64×64 sparse-factor product carries a few
+//! thousand flops, far below the pool's parallel grain — so a
+//! one-operator-at-a-time loop leaves the `ExecCtx` pool idle between
+//! dispatches. This module batches the independent per-operator kernels
+//! of *separate* factorization problems into fused pool calls:
+//!
+//! - [`FleetCtx::gemm_many`] — N independent dense GEMMs in one pooled
+//!   dispatch, each product executing serially inside its own task
+//!   (operator-level parallelism) when the cost model says fusion beats N
+//!   solo dispatches, and falling back to the solo cost-dispatched
+//!   [`ExecCtx::gemm`] path for products big enough to feed every thread
+//!   a full grain on their own;
+//! - [`FleetCtx::spectral_norm_many`] — N independent warm-started power
+//!   iterations, one per task, each bitwise identical to
+//!   [`ExecCtx::spectral_norm_warm`];
+//! - [`FleetCtx::map_many`] — N independent element-wise/projection jobs
+//!   (gradient steps, proximal projections, objective evaluations)
+//!   fanned out at job granularity.
+//!
+//! **Crossover cost model.** A GEMM with `F` flops splits into at most
+//! `F / PAR_GRAIN` useful chunks; if `F ≥ n_threads · PAR_GRAIN` the solo
+//! row-parallel kernel already saturates the pool and fusing adds nothing
+//! (the fused task would serialize a product that wanted to spread out).
+//! Below that, a solo dispatch degenerates to (mostly) serial execution,
+//! so running whole small products on different threads is the only
+//! parallelism available — exactly the regime hierarchical sparse
+//! factorization lives in. [`FleetConfig::solo_flops`] is that threshold.
+//!
+//! **Bitwise contract.** Every fused kernel reuses the same serial
+//! row/column kernels the pooled solo paths chunk over
+//! (`pool::gemm_rows`, `pool::gemv_t_cols`), and the per-product
+//! transpose-rewrite decision is the same [`ExecCtx`] cost model — so a
+//! fleet-batched factorization produces **bit-identical** factors to N
+//! independent `_with_ctx` runs at any thread count (enforced by the
+//! fleet proptests).
+//!
+//! Fleet methods must be called from an orchestrator thread, never from
+//! inside a pool task (nested dispatch can deadlock the pool — see
+//! [`pool::par_map_jobs`]).
+
+use super::ctx::ExecCtx;
+use super::pool::{self, par_gemm_into, par_map_jobs};
+use crate::linalg::{spectral_norm_with, Mat};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Crossover knobs for the fleet's fuse-vs-solo decision.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Products with at least this many flops dispatch solo (internally
+    /// row-parallel via [`ExecCtx::gemm`]); smaller ones fuse into one
+    /// operator-granular pool call. `0` means "derive from the pool":
+    /// `n_threads × PAR_GRAIN` at [`FleetCtx`] construction.
+    pub solo_flops: usize,
+    /// Fewer than this many fusable jobs in a call → no fusion (a batch
+    /// of one gains nothing over the solo path). Governs both
+    /// [`FleetCtx::gemm_many`] and [`FleetCtx::spectral_norm_many`].
+    pub min_fused: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { solo_flops: 0, min_fused: 2 }
+    }
+}
+
+/// Lifetime counters for the crossover decisions a [`FleetCtx`] made.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetricsSnapshot {
+    /// `gemm_many` calls that fused at least two products.
+    pub fused_calls: u64,
+    /// Products executed inside fused dispatches.
+    pub fused_gemms: u64,
+    /// Products routed to the solo cost-dispatched path.
+    pub solo_gemms: u64,
+    /// Power iterations executed through `spectral_norm_many`.
+    pub spectral_jobs: u64,
+}
+
+#[derive(Default)]
+struct FleetMetrics {
+    fused_calls: AtomicU64,
+    fused_gemms: AtomicU64,
+    solo_gemms: AtomicU64,
+    spectral_jobs: AtomicU64,
+}
+
+/// One prepared product: the transpose-rewrite decision is already made
+/// (identically to [`ExecCtx::gemm`]), operands are ready for the shared
+/// serial kernel.
+enum Prep<'p> {
+    /// Direct ikj pass: `out = a · b`.
+    Direct { a: &'p Mat, b: &'p Mat },
+    /// Double-transpose rewrite: `out = (bᵀ · aᵀ)ᵀ`, zero-skip on `b`.
+    Rewrite { bt: Mat, at: Mat, m: usize },
+}
+
+impl Prep<'_> {
+    /// Execute serially with the shared row kernel (a fused task).
+    fn run_serial(self) -> Mat {
+        match self {
+            Prep::Direct { a, b } => {
+                let (m, n) = (a.rows(), b.cols());
+                let mut out = Mat::zeros(m, n);
+                pool::gemm_rows(a, b.data(), n, 0, m, out.data_mut());
+                out
+            }
+            Prep::Rewrite { bt, at, m } => {
+                let n = bt.rows();
+                let mut out_t = Mat::zeros(n, m);
+                pool::gemm_rows(&bt, at.data(), m, 0, n, out_t.data_mut());
+                out_t.t()
+            }
+        }
+    }
+}
+
+/// Shared execution context for fleets: an [`ExecCtx`] plus the
+/// fuse-vs-solo crossover. Cheap to clone.
+#[derive(Clone)]
+pub struct FleetCtx {
+    ctx: ExecCtx,
+    solo_flops: usize,
+    min_fused: usize,
+    metrics: std::sync::Arc<FleetMetrics>,
+}
+
+impl FleetCtx {
+    /// Fleet context on `ctx`'s pool with the default crossover
+    /// (`solo_flops = n_threads × PAR_GRAIN`).
+    pub fn new(ctx: ExecCtx) -> Self {
+        Self::with_config(ctx, FleetConfig::default())
+    }
+
+    /// Fleet context with explicit crossover knobs.
+    pub fn with_config(ctx: ExecCtx, cfg: FleetConfig) -> Self {
+        let solo_flops = if cfg.solo_flops == 0 {
+            ctx.n_threads() * pool::PAR_GRAIN_FLOPS
+        } else {
+            cfg.solo_flops
+        };
+        FleetCtx {
+            ctx,
+            solo_flops,
+            min_fused: cfg.min_fused.max(2),
+            metrics: std::sync::Arc::new(FleetMetrics::default()),
+        }
+    }
+
+    /// The underlying execution context (shared pool + cost model).
+    pub fn ctx(&self) -> &ExecCtx {
+        &self.ctx
+    }
+
+    /// Threads participating in fleet dispatches.
+    pub fn n_threads(&self) -> usize {
+        self.ctx.n_threads()
+    }
+
+    /// Crossover counters accumulated so far.
+    pub fn metrics(&self) -> FleetMetricsSnapshot {
+        FleetMetricsSnapshot {
+            fused_calls: self.metrics.fused_calls.load(Ordering::Relaxed),
+            fused_gemms: self.metrics.fused_gemms.load(Ordering::Relaxed),
+            solo_gemms: self.metrics.solo_gemms.load(Ordering::Relaxed),
+            spectral_jobs: self.metrics.spectral_jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// N independent products `aᵢ · bᵢ`, results in input order.
+    ///
+    /// Each product gets the same transpose-rewrite decision as
+    /// [`ExecCtx::gemm`]; the crossover then routes it either into the
+    /// fused operator-granular dispatch (small products, parallel across
+    /// the fleet) or the solo row-parallel path (large products, parallel
+    /// within the product). Results are bitwise identical to calling
+    /// `ctx.gemm(aᵢ, bᵢ)` in a loop.
+    pub fn gemm_many(&self, pairs: &[(&Mat, &Mat)]) -> Vec<Mat> {
+        let n = pairs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut preps: Vec<Option<(Prep, usize)>> = Vec::with_capacity(n);
+        for &(a, b) in pairs {
+            assert_eq!(a.cols(), b.rows(), "fleet gemm dim mismatch");
+            // One nnz scan per operand, reused for the (solo-identical)
+            // rewrite decision and the crossover flop estimate.
+            let (a_nnz, b_nnz) = (a.nnz(), b.nnz());
+            if self.ctx.rewrite_wins_nnz(a, b, a_nnz, b_nnz) {
+                let flops = 2 * b_nnz * a.rows();
+                preps.push(Some((
+                    Prep::Rewrite { bt: b.t(), at: a.t(), m: a.rows() },
+                    flops,
+                )));
+            } else {
+                let flops = 2 * a_nnz * b.cols();
+                preps.push(Some((Prep::Direct { a, b }, flops)));
+            }
+        }
+        let fusable: Vec<usize> = (0..n)
+            .filter(|&i| preps[i].as_ref().is_some_and(|(_, f)| *f < self.solo_flops))
+            .collect();
+        let mut out: Vec<Option<Mat>> = std::iter::repeat_with(|| None).take(n).collect();
+        if self.n_threads() > 1 && fusable.len() >= self.min_fused {
+            // Fused dispatch: whole small products run serially on
+            // different threads.
+            let jobs: Vec<(usize, Prep)> = fusable
+                .iter()
+                .map(|&i| (i, preps[i].take().expect("fusable prep present").0))
+                .collect();
+            self.metrics.fused_calls.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .fused_gemms
+                .fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            for (i, m) in par_map_jobs(self.ctx.pool(), jobs, |(i, p)| (i, p.run_serial())) {
+                out[i] = Some(m);
+            }
+        }
+        // Solo path: everything still unexecuted (large products, or the
+        // whole batch when fusion did not clear the crossover).
+        for (i, slot) in preps.into_iter().enumerate() {
+            if let Some((p, _)) = slot {
+                self.metrics.solo_gemms.fetch_add(1, Ordering::Relaxed);
+                out[i] = Some(self.run_solo(p));
+            }
+        }
+        out.into_iter()
+            .map(|m| m.expect("fleet gemm produced"))
+            .collect()
+    }
+
+    /// Execute one prepared product through the pooled row-parallel
+    /// kernel — exactly the code path [`ExecCtx::gemm`] takes after its
+    /// (identical) rewrite decision.
+    fn run_solo(&self, p: Prep) -> Mat {
+        match p {
+            Prep::Direct { a, b } => {
+                let mut out = Mat::zeros(a.rows(), b.cols());
+                par_gemm_into(self.ctx.pool(), a, b.data(), b.cols(), out.data_mut());
+                out
+            }
+            Prep::Rewrite { bt, at, m } => {
+                let mut out_t = Mat::zeros(bt.rows(), m);
+                par_gemm_into(self.ctx.pool(), &bt, at.data(), m, out_t.data_mut());
+                out_t.t()
+            }
+        }
+    }
+
+    /// N independent spectral norms `‖aᵢ‖₂` by warm-started power
+    /// iteration. Takes each job's warm-start vector by value and hands
+    /// it back (updated) with the norm, in job order.
+    ///
+    /// Same crossover as [`FleetCtx::gemm_many`]: operators whose
+    /// per-iteration gram-apply (two gemv passes, `4·m·n` flops) clears
+    /// the solo threshold run through the pooled
+    /// [`ExecCtx::spectral_norm_warm`] (row-parallel within the
+    /// operator); the small rest fuse one-operator-per-task. Both routes
+    /// are bitwise identical — the fused serial gram-apply reuses the
+    /// pooled kernels' shared per-chunk row/column routines.
+    pub fn spectral_norm_many(
+        &self,
+        jobs: Vec<(&Mat, Vec<f64>)>,
+        max_iter: usize,
+        tol: f64,
+    ) -> Vec<(f64, Vec<f64>)> {
+        let njobs = jobs.len();
+        self.metrics
+            .spectral_jobs
+            .fetch_add(njobs as u64, Ordering::Relaxed);
+        let mut out: Vec<Option<(f64, Vec<f64>)>> =
+            std::iter::repeat_with(|| None).take(njobs).collect();
+        let mut small: Vec<(usize, &Mat, Vec<f64>)> = Vec::new();
+        for (idx, (a, warm)) in jobs.into_iter().enumerate() {
+            if self.n_threads() > 1 && 4 * a.rows() * a.cols() < self.solo_flops {
+                small.push((idx, a, warm));
+            } else {
+                let mut w = warm;
+                let v = self.ctx.spectral_norm_warm(a, &mut w, max_iter, tol);
+                out[idx] = Some((v, w));
+            }
+        }
+        if small.len() < self.min_fused {
+            // Below the fusion floor (same knob as gemm_many): too few
+            // jobs to amortize a fused dispatch — run them solo instead.
+            for (idx, a, warm) in small.drain(..) {
+                let mut w = warm;
+                let v = self.ctx.spectral_norm_warm(a, &mut w, max_iter, tol);
+                out[idx] = Some((v, w));
+            }
+        }
+        let fused = par_map_jobs(self.ctx.pool(), small, move |(idx, a, mut warm)| {
+            let (m, n) = a.shape();
+            if m == 0 || n == 0 {
+                return (idx, 0.0, warm);
+            }
+            let mut y = vec![0.0; m];
+            let norm = spectral_norm_with(n, &mut warm, max_iter, tol, |xv, z| {
+                pool::gemm_rows(a, xv, 1, 0, m, &mut y);
+                pool::gemv_t_cols(a, &y, 0, n, z);
+            });
+            (idx, norm, warm)
+        });
+        for (idx, norm, warm) in fused {
+            out[idx] = Some((norm, warm));
+        }
+        out.into_iter()
+            .map(|o| o.expect("spectral job completed"))
+            .collect()
+    }
+
+    /// Fan N independent jobs out at job granularity (element-wise factor
+    /// updates, proximal projections, objective evaluations). Results in
+    /// job order. Jobs must not touch the pool (no nested dispatch).
+    pub fn map_many<J: Send, T: Send>(
+        &self,
+        jobs: Vec<J>,
+        f: impl Fn(J) -> T + Sync,
+    ) -> Vec<T> {
+        par_map_jobs(self.ctx.pool(), jobs, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sparse_mat(rng: &mut Rng, r: usize, c: usize, nnz: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        for i in rng.sample_indices(r * c, nnz.min(r * c)) {
+            m.data_mut()[i] = rng.gauss();
+        }
+        m
+    }
+
+    /// Mixed shapes + sparsity: both rewrite branches, both crossover
+    /// routes must match solo `ctx.gemm` bitwise.
+    #[test]
+    fn gemm_many_matches_solo_gemm_bitwise() {
+        let mut rng = Rng::new(811);
+        let ctx = ExecCtx::new(4);
+        let cases: Vec<(Mat, Mat)> = vec![
+            (Mat::randn(20, 16, &mut rng), sparse_mat(&mut rng, 16, 12, 10)),
+            (sparse_mat(&mut rng, 18, 14, 9), Mat::randn(14, 11, &mut rng)),
+            (Mat::randn(9, 7, &mut rng), Mat::randn(7, 13, &mut rng)),
+            (Mat::randn(40, 40, &mut rng), Mat::randn(40, 40, &mut rng)),
+            (Mat::randn(3, 5, &mut rng), Mat::randn(5, 2, &mut rng)),
+        ];
+        let want: Vec<Mat> = cases.iter().map(|(a, b)| ctx.gemm(a, b)).collect();
+        for cfg in [
+            FleetConfig::default(),
+            FleetConfig { solo_flops: usize::MAX, min_fused: 2 }, // force fused
+            FleetConfig { solo_flops: 1, min_fused: 2 },          // force solo
+        ] {
+            let fleet = FleetCtx::with_config(ctx.clone(), cfg);
+            let pairs: Vec<(&Mat, &Mat)> = cases.iter().map(|(a, b)| (a, b)).collect();
+            let got = fleet.gemm_many(&pairs);
+            for ((g, w), (a, _)) in got.iter().zip(&want).zip(&cases) {
+                assert_eq!(g.shape(), w.shape());
+                assert_eq!(g.data(), w.data(), "a.rows={}", a.rows());
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_many_crossover_routes_by_size() {
+        let mut rng = Rng::new(812);
+        // 2 threads, tiny solo threshold: the big product goes solo, the
+        // small ones fuse.
+        let fleet = FleetCtx::with_config(
+            ExecCtx::new(2),
+            FleetConfig { solo_flops: 10_000, min_fused: 2 },
+        );
+        let big = (Mat::randn(40, 40, &mut rng), Mat::randn(40, 40, &mut rng)); // 128k flops
+        let s1 = (Mat::randn(6, 6, &mut rng), Mat::randn(6, 6, &mut rng));
+        let s2 = (Mat::randn(5, 7, &mut rng), Mat::randn(7, 4, &mut rng));
+        let pairs = vec![(&big.0, &big.1), (&s1.0, &s1.1), (&s2.0, &s2.1)];
+        let _ = fleet.gemm_many(&pairs);
+        let m = fleet.metrics();
+        assert_eq!(m.solo_gemms, 1, "big product must dispatch solo");
+        assert_eq!(m.fused_gemms, 2, "small products must fuse");
+        assert_eq!(m.fused_calls, 1);
+    }
+
+    #[test]
+    fn single_threaded_fleet_never_fuses() {
+        let mut rng = Rng::new(813);
+        let fleet = FleetCtx::with_config(
+            ExecCtx::serial(),
+            FleetConfig { solo_flops: usize::MAX, min_fused: 2 },
+        );
+        let a = Mat::randn(6, 6, &mut rng);
+        let b = Mat::randn(6, 6, &mut rng);
+        let got = fleet.gemm_many(&[(&a, &b), (&a, &b)]);
+        assert_eq!(fleet.metrics().fused_calls, 0);
+        assert!(got[0].rel_fro_err(&a.matmul(&b)) < 1e-13);
+    }
+
+    #[test]
+    fn spectral_norm_many_matches_ctx_bitwise() {
+        let mut rng = Rng::new(814);
+        let ctx = ExecCtx::new(4);
+        let fleet = FleetCtx::new(ctx.clone());
+        let mats: Vec<Mat> = (0..5)
+            .map(|i| Mat::randn(10 + i, 7 + i, &mut rng))
+            .collect();
+        // Reference: solo ctx norms, fresh warm vectors.
+        let mut want = Vec::new();
+        for a in &mats {
+            let mut w = vec![];
+            let n = ctx.spectral_norm_warm(a, &mut w, 40, 1e-9);
+            want.push((n, w));
+        }
+        let jobs: Vec<(&Mat, Vec<f64>)> = mats.iter().map(|a| (a, vec![])).collect();
+        let got = fleet.spectral_norm_many(jobs, 40, 1e-9);
+        assert_eq!(fleet.metrics().spectral_jobs, 5);
+        for ((gn, gw), (wn, ww)) in got.iter().zip(&want) {
+            assert_eq!(gn.to_bits(), wn.to_bits());
+            assert_eq!(gw, ww, "warm-start vector diverged");
+        }
+        // Warm restarts flow through the fleet path too.
+        let jobs2: Vec<(&Mat, Vec<f64>)> =
+            mats.iter().zip(got).map(|(a, (_, w))| (a, w)).collect();
+        let got2 = fleet.spectral_norm_many(jobs2, 40, 1e-9);
+        for ((gn, _), (wn, _)) in got2.iter().zip(&want) {
+            assert!((gn - wn).abs() <= 1e-9 * (1.0 + wn.abs()));
+        }
+    }
+
+    #[test]
+    fn map_many_runs_everything_in_order() {
+        let fleet = FleetCtx::new(ExecCtx::new(3));
+        let got = fleet.map_many((0..20usize).collect(), |i| 2 * i);
+        assert_eq!(got, (0..20usize).map(|i| 2 * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let fleet = FleetCtx::new(ExecCtx::new(2));
+        assert!(fleet.gemm_many(&[]).is_empty());
+        assert!(fleet.spectral_norm_many(vec![], 10, 1e-9).is_empty());
+    }
+}

@@ -20,6 +20,13 @@
 //!   (see the module's "how execution flows" diagram). The engine is the
 //!   repo's single execution substrate — serving and factorization share
 //!   one pool via [`ApplyEngine::ctx`].
+//! - [`fleet`] — [`FleetCtx`], cross-operator batched execution: the
+//!   small independent GEMMs / power iterations / projections of many
+//!   *concurrent* factorization problems fuse into operator-granular
+//!   pool dispatches when the cost model says N solo dispatches would
+//!   leave the pool idle. Drives `palm4msa_fleet` /
+//!   `hierarchical::factorize_fleet` and the registry's
+//!   `refactorize_fleet` (fleets of operators behind one service).
 //!
 //! [`ApplyEngine`] owns a pool + config and compiles plans;
 //! [`EngineOp`] bundles plan + pool + metrics into a servable operator
@@ -42,15 +49,17 @@
 
 pub mod arena;
 pub mod ctx;
+pub mod fleet;
 pub mod plan;
 pub mod pool;
 
 pub use arena::Arena;
 pub use ctx::ExecCtx;
+pub use fleet::{FleetConfig, FleetCtx, FleetMetricsSnapshot};
 pub use plan::{ApplyPlan, CostProfile, PlanConfig, Stage, StageKernel};
 pub use pool::{
-    par_gemm_into, par_gemv_into, par_gemv_t_into, par_spmm_into, par_spmv_into,
-    ThreadPool,
+    par_gemm_into, par_gemv_into, par_gemv_t_into, par_map_jobs, par_spmm_into,
+    par_spmv_into, ThreadPool,
 };
 
 use crate::faust::Faust;

@@ -19,8 +19,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// Target amount of work (flops) per dispatched chunk; below this,
-/// splitting costs more in wake-ups than it saves in compute.
-const PAR_GRAIN_FLOPS: usize = 16_384;
+/// splitting costs more in wake-ups than it saves in compute. Also the
+/// unit of the fleet crossover: a GEMM whose total flops cannot feed
+/// every pool thread a full grain is better batched *across* operators
+/// than split *within* one (see [`crate::engine::FleetCtx`]).
+pub(crate) const PAR_GRAIN_FLOPS: usize = 16_384;
 
 /// One scheduled row range. The closure pointer is only dereferenced while
 /// the submitting call is blocked in [`Latch::wait`], which keeps the
@@ -223,8 +226,18 @@ fn spmm_rows(a: &Csr, b: &[f64], bcols: usize, start: usize, end: usize, out: &m
     }
 }
 
-/// Serial dense GEMM over an output row range, slice layout.
-fn gemm_rows(a: &Mat, b: &[f64], bcols: usize, start: usize, end: usize, out: &mut [f64]) {
+/// Serial dense GEMM over an output row range, slice layout. Shared by
+/// the pooled [`par_gemm_into`] chunks and the fleet's fused per-operator
+/// tasks, so both paths accumulate every output element in the same
+/// order — the bitwise-invariance contract.
+pub(crate) fn gemm_rows(
+    a: &Mat,
+    b: &[f64],
+    bcols: usize,
+    start: usize,
+    end: usize,
+    out: &mut [f64],
+) {
     debug_assert_eq!(out.len(), (end - start) * bcols);
     let k = a.cols();
     for i in start..end {
@@ -303,17 +316,82 @@ pub fn par_gemv_t_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
     pool.par_ranges(a.cols(), min_cols, |s, e| {
         // SAFETY: disjoint column ranges own disjoint slices of y.
         let chunk = unsafe { std::slice::from_raw_parts_mut(yptr.0.add(s), e - s) };
-        chunk.fill(0.0);
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let row = &a.row(i)[s..e];
-            for (o, &v) in chunk.iter_mut().zip(row) {
-                *o += xi * v;
-            }
+        gemv_t_cols(a, x, s, e, chunk);
+    });
+}
+
+/// Serial `y[s..e] = (Aᵀ x)[s..e]` column stripe — the per-chunk kernel
+/// of [`par_gemv_t_into`], shared with the fleet's per-operator serial
+/// power iterations so both compute identical bits.
+pub(crate) fn gemv_t_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    debug_assert_eq!(chunk.len(), e - s);
+    chunk.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a.row(i)[s..e];
+        for (o, &v) in chunk.iter_mut().zip(row) {
+            *o += xi * v;
+        }
+    }
+}
+
+/// Raw cell pointer for job-granular fan-out; tasks index disjoint slots.
+struct SendCell<T>(*mut T);
+unsafe impl<T> Send for SendCell<T> {}
+unsafe impl<T> Sync for SendCell<T> {}
+impl<T> Clone for SendCell<T> {
+    fn clone(&self) -> Self {
+        SendCell(self.0)
+    }
+}
+impl<T> Copy for SendCell<T> {}
+
+/// Run `f` over a list of independent jobs, parallel across the pool at
+/// *job* granularity (each job executes serially inside one task), and
+/// return the results in job order.
+///
+/// This is the fleet fan-out primitive: when N small independent pieces
+/// of work (per-operator GEMMs, power iterations, projections) are each
+/// below the pool's parallel grain, splitting any one of them wastes more
+/// in wake-ups than it gains — but running whole jobs on different
+/// threads keeps the pool busy with zero intra-job coordination. Jobs
+/// must not touch the pool themselves (nested `par_ranges` from a worker
+/// can deadlock: every worker could end up waiting on subtasks that no
+/// free worker remains to run).
+///
+/// Panics in any job propagate after all scheduled jobs finish (same
+/// contract as [`ThreadPool::par_ranges`]).
+pub fn par_map_jobs<J, T>(
+    pool: &ThreadPool,
+    jobs: Vec<J>,
+    f: impl Fn(J) -> T + Sync,
+) -> Vec<T>
+where
+    J: Send,
+    T: Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut slots: Vec<Option<J>> = jobs.into_iter().map(Some).collect();
+    let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
+    let sp = SendCell(slots.as_mut_ptr());
+    let op = SendCell(out.as_mut_ptr());
+    pool.par_ranges(n, 1, move |s, e| {
+        for i in s..e {
+            // SAFETY: par_ranges partitions [0, n) into disjoint index
+            // ranges, so each slot / output cell is touched exactly once.
+            let job = unsafe { (*sp.0.add(i)).take().expect("fleet job taken once") };
+            let r = f(job);
+            unsafe { *op.0.add(i) = Some(r) };
         }
     });
+    out.into_iter()
+        .map(|t| t.expect("fleet job completed"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -441,6 +519,48 @@ mod tests {
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-12 * (1.0 + w.abs()));
             }
+        }
+    }
+
+    #[test]
+    fn par_map_jobs_preserves_order_and_runs_every_job() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<usize> = (0..37).collect();
+        let got = par_map_jobs(&pool, jobs, |i| i * i);
+        assert_eq!(got.len(), 37);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        // Empty job lists and serial pools degrade gracefully.
+        assert!(par_map_jobs(&pool, Vec::<usize>::new(), |i| i).is_empty());
+        let serial = ThreadPool::serial();
+        assert_eq!(par_map_jobs(&serial, vec![1usize, 2, 3], |i| i + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine pool task panicked")]
+    fn par_map_jobs_propagates_job_panics() {
+        let pool = ThreadPool::new(4);
+        let _ = par_map_jobs(&pool, (0..16usize).collect(), |i| {
+            if i == 7 {
+                panic!("job boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn gemv_t_cols_matches_pooled_transposed_matvec() {
+        let mut rng = Rng::new(305);
+        let pool = ThreadPool::new(4);
+        let a = Mat::randn(33, 21, &mut rng);
+        let x = rng.gauss_vec(33);
+        let mut pooled = vec![0.0; 21];
+        par_gemv_t_into(&pool, &a, &x, &mut pooled);
+        let mut serial = vec![0.0; 21];
+        gemv_t_cols(&a, &x, 0, 21, &mut serial);
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.to_bits(), p.to_bits());
         }
     }
 

@@ -23,11 +23,23 @@
 //! cached [`PalmResult::product`](crate::palm::PalmResult::product)
 //! instead of re-multiplying the factor chain. Results are bitwise
 //! identical across thread counts for a fixed seed.
+//!
+//! **Fleets.** [`factorize_fleet`] / [`factorize_fleet_with_ctx`]
+//! factorize many operators *concurrently* on one shared pool — the
+//! paper's deployments hold one gain matrix per subject (§V) and one
+//! dictionary per class (§VI) — batching the split/refit kernels of
+//! separate members into fused cross-operator dispatches
+//! ([`FleetCtx`]); members finish independently (no global barrier), so
+//! a serving registry can hot-swap each operator the moment its own
+//! factorization completes (`Registry::refactorize_fleet`). Fleet
+//! results are bitwise identical to the same jobs run one at a time.
 
-use crate::engine::ExecCtx;
+use crate::engine::{ExecCtx, FleetCtx};
 use crate::faust::Faust;
 use crate::linalg::Mat;
-use crate::palm::{palm4msa_with_ctx, FactorState, PalmConfig};
+use crate::palm::{
+    palm4msa_fleet_with_ctx, palm4msa_with_ctx, FactorState, FleetProblem, PalmConfig,
+};
 use crate::prox::Constraint;
 use crate::rng::Rng;
 
@@ -366,6 +378,236 @@ pub fn factorize_traced_with_ctx(
     (Faust::from_dense_factors(&mats, final_lambda), errs)
 }
 
+/// Factorize a *fleet* of operators concurrently on the process-default
+/// execution context (see [`factorize_fleet_with_ctx`]).
+///
+/// ```
+/// use faust::hierarchical::{factorize_fleet, HierarchicalConfig};
+/// use faust::transforms::hadamard;
+///
+/// // Two subjects' operators (paper §V holds one gain matrix per
+/// // subject) factorized concurrently on one shared pool.
+/// let a = hadamard(8);
+/// let cfg = HierarchicalConfig::hadamard(8);
+/// let fleet = factorize_fleet(&[(&a, &cfg), (&a, &cfg)]);
+/// assert_eq!(fleet.len(), 2);
+/// for f in &fleet {
+///     assert!(f.relative_error_fro(&a) < 1e-6);
+/// }
+/// ```
+pub fn factorize_fleet(jobs: &[(&Mat, &HierarchicalConfig)]) -> Vec<Faust> {
+    factorize_fleet_with_ctx(&FleetCtx::new(ExecCtx::global().clone()), jobs)
+}
+
+/// [`factorize_fleet`] on an explicit fleet context.
+pub fn factorize_fleet_with_ctx(
+    fleet: &FleetCtx,
+    jobs: &[(&Mat, &HierarchicalConfig)],
+) -> Vec<Faust> {
+    factorize_fleet_traced_with_ctx(fleet, jobs, |_, _| {})
+        .into_iter()
+        .map(|(f, _)| f)
+        .collect()
+}
+
+/// Per-member bookkeeping of the lockstep hierarchical fleet.
+struct HierMember<'a> {
+    a: &'a Mat,
+    cfg: &'a HierarchicalConfig,
+    a_fro: f64,
+    s_factors: Vec<Mat>,
+    residual: Mat,
+    lambda: f64,
+    errs: Vec<f64>,
+    finished: Option<Faust>,
+}
+
+/// Hierarchical factorization of many operators *concurrently* on one
+/// shared context, with per-level error traces and an early-completion
+/// hook.
+///
+/// Every live member advances through Fig. 5 in lockstep — 2-factor
+/// split, global refit, error tracking — and the palm4MSA inner loops of
+/// *separate members* batch into fused cross-operator dispatches (see
+/// [`palm4msa_fleet_with_ctx`]). Members may have different shapes and
+/// level counts: a member whose hierarchy is exhausted finishes early,
+/// `on_done(index, &faust)` fires the moment *its* factorization
+/// completes (not at a global barrier — the registry's
+/// `refactorize_fleet` hot-swaps each operator from this hook while the
+/// rest of the fleet keeps training), and the member drops out of all
+/// later fused batches.
+///
+/// Results are bitwise identical to running
+/// [`factorize_traced_with_ctx`] on each job independently.
+pub fn factorize_fleet_traced_with_ctx(
+    fleet: &FleetCtx,
+    jobs: &[(&Mat, &HierarchicalConfig)],
+    mut on_done: impl FnMut(usize, &Faust),
+) -> Vec<(Faust, Vec<f64>)> {
+    let ctx = fleet.ctx();
+    let mut members: Vec<HierMember> = jobs
+        .iter()
+        .map(|&(a, cfg)| {
+            assert!(!cfg.levels.is_empty(), "need at least one split level");
+            HierMember {
+                a,
+                cfg,
+                a_fro: a.fro().max(1e-300),
+                s_factors: Vec::with_capacity(cfg.levels.len()),
+                residual: a.clone(),
+                lambda: 1.0,
+                errs: Vec::with_capacity(cfg.levels.len()),
+                finished: None,
+            }
+        })
+        .collect();
+
+    let max_levels = members.iter().map(|m| m.cfg.levels.len()).max().unwrap_or(0);
+    for l in 0..max_levels {
+        let live: Vec<usize> = (0..members.len())
+            .filter(|&i| members[i].finished.is_none() && l < members[i].cfg.levels.len())
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+
+        // --- Split: T_{ℓ-1} ≈ λ' T_ℓ S_ℓ for every live member, batched
+        // into one fleet palm call (Fig. 5 lines 3–4).
+        {
+            let mut problems: Vec<FleetProblem> = Vec::with_capacity(live.len());
+            for &i in &live {
+                let m = &members[i];
+                let (rt_rows, _) = m.cfg.residual_dims[l];
+                let s_rows = rt_rows.min(m.residual.rows());
+                let dims = vec![(s_rows, m.residual.cols()), (m.residual.rows(), s_rows)];
+                problems.push(FleetProblem {
+                    a: &m.residual,
+                    init: m.cfg.split_init(l, &dims),
+                    cfg: m.cfg.split_cfg(l, (m.residual.rows(), s_rows)),
+                });
+            }
+            let results = palm4msa_fleet_with_ctx(fleet, problems);
+            for (&i, res) in live.iter().zip(results) {
+                let m = &mut members[i];
+                let f1 = res.state.mats[0].clone(); // S_ℓ
+                let mut f2 = res.state.mats[1].clone(); // T_ℓ
+                f2.scale(res.state.lambda); // T_ℓ ← λ' F_2 (Fig. 5 line 4)
+                m.s_factors.push(f1);
+                m.residual = f2;
+            }
+        }
+
+        // --- Global refit of {T_ℓ, S_ℓ..S_1} against A (Fig. 5 line 5)
+        // for members that keep it, batched likewise.
+        let refitting: Vec<usize> = live
+            .iter()
+            .copied()
+            .filter(|&i| !members[i].cfg.skip_global)
+            .collect();
+        let mut level_products: Vec<Option<Mat>> = members.iter().map(|_| None).collect();
+        if !refitting.is_empty() {
+            // Warm-start assembly per member (identical to the solo path;
+            // the init-λ product chains run solo — they are one GEMM
+            // chain per level vs. n_iter_global chains inside the refit).
+            let mut inits: Vec<FactorState> = Vec::with_capacity(refitting.len());
+            let mut gcfgs: Vec<PalmConfig> = Vec::with_capacity(refitting.len());
+            for &i in &refitting {
+                let m = &members[i];
+                let mut mats = m.s_factors.clone();
+                mats.push(m.residual.clone());
+                let mut constraints: Vec<Constraint> = (0..=l)
+                    .map(|k| m.cfg.levels[k].factor.clone())
+                    .collect();
+                constraints.push(m.cfg.levels[l].residual.clone());
+                let rf = m.residual.fro();
+                let mut init = FactorState { mats, lambda: m.lambda * rf.max(1e-300) };
+                let last = init.mats.len() - 1;
+                if rf > 0.0 {
+                    init.mats[last].scale(1.0 / rf);
+                }
+                init.lambda = {
+                    let p = init.product_ctx(ctx);
+                    let d = p.fro2();
+                    if d > 0.0 {
+                        m.a.dot(&p) / d
+                    } else {
+                        1.0
+                    }
+                };
+                let mut gcfg = PalmConfig::new(constraints, m.cfg.n_iter_global);
+                gcfg.alpha = m.cfg.alpha;
+                gcfg.seed = m.cfg.seed ^ (0x1000 + l as u64);
+                inits.push(init);
+                gcfgs.push(gcfg);
+            }
+            let problems: Vec<FleetProblem> = refitting
+                .iter()
+                .zip(inits)
+                .zip(&gcfgs)
+                .map(|((&i, init), gcfg)| FleetProblem {
+                    a: members[i].a,
+                    init,
+                    cfg: gcfg.clone(),
+                })
+                .collect();
+            let results = palm4msa_fleet_with_ctx(fleet, problems);
+            for (&i, res) in refitting.iter().zip(results) {
+                let m = &mut members[i];
+                m.lambda = res.state.lambda;
+                let nm = res.state.mats.len();
+                m.s_factors = res.state.mats[..nm - 1].to_vec();
+                m.residual = res.state.mats[nm - 1].clone();
+                level_products[i] = Some(res.product);
+            }
+        }
+
+        // --- Per-level error ‖A − λ T Π S‖ / ‖A‖, reusing each refit's
+        // cached product (the skip_global ablation re-multiplies solo).
+        for &i in &live {
+            let m = &mut members[i];
+            let err = match level_products[i].take() {
+                Some(p) => {
+                    let mut approx = p;
+                    approx.scale(m.lambda);
+                    approx.sub(m.a).fro() / m.a_fro
+                }
+                None => {
+                    let mut prod = m.s_factors[0].clone();
+                    for f in &m.s_factors[1..] {
+                        prod = ctx.gemm(f, &prod);
+                    }
+                    prod = ctx.gemm(&m.residual, &prod);
+                    prod.sub(m.a).fro() / m.a_fro
+                }
+            };
+            m.errs.push(err);
+        }
+
+        // --- Members whose hierarchy is exhausted finish *now*: build
+        // the FAμST and fire the completion hook while the rest of the
+        // fleet keeps training (no global barrier).
+        for &i in &live {
+            if members[i].cfg.levels.len() == l + 1 {
+                let m = &mut members[i];
+                let mut mats = std::mem::take(&mut m.s_factors);
+                mats.push(m.residual.clone());
+                let final_lambda = if m.cfg.skip_global { 1.0 } else { m.lambda };
+                let f = Faust::from_dense_factors(&mats, final_lambda);
+                on_done(i, &f);
+                m.finished = Some(f);
+            }
+        }
+    }
+
+    members
+        .into_iter()
+        .map(|m| {
+            let f = m.finished.expect("every member completes its hierarchy");
+            (f, m.errs)
+        })
+        .collect()
+}
+
 /// Sparse-coding callback used by the dictionary variant: given the data
 /// `Y` and the current dictionary (dense, `m×n`), return coefficients
 /// `Γ ∈ R^{n×L}`.
@@ -551,6 +793,70 @@ mod tests {
             with_global <= without + 1e-9,
             "global refit hurt: with={with_global} without={without}"
         );
+    }
+
+    #[test]
+    fn fleet_factorization_matches_solo_runs_bitwise() {
+        use crate::testutil::faust_fingerprint;
+        // Ragged fleet: different sizes, level counts and seeds — each
+        // member must reproduce its solo run bit for bit, and members
+        // with shorter hierarchies must finish early.
+        let h8 = hadamard(8);
+        let h16 = hadamard(16);
+        let mut rng = Rng::new(77);
+        let r12 = Mat::randn(12, 12, &mut rng);
+        let cfg8 = HierarchicalConfig::hadamard(8);
+        let mut cfg16 = HierarchicalConfig::hadamard(16);
+        cfg16.seed = 99;
+        let mut cfgr = HierarchicalConfig::meg(12, 12, 3, 4, 30, 0.8, 60.0);
+        cfgr.n_iter_split = 12;
+        cfgr.n_iter_global = 6;
+        let jobs: Vec<(&Mat, &HierarchicalConfig)> =
+            vec![(&h8, &cfg8), (&h16, &cfg16), (&r12, &cfgr)];
+        let ctx = ExecCtx::new(4);
+        let solo: Vec<(Faust, Vec<f64>)> = jobs
+            .iter()
+            .map(|&(a, cfg)| factorize_traced_with_ctx(&ctx, a, cfg))
+            .collect();
+        let fleet = FleetCtx::new(ctx);
+        let mut done_order: Vec<usize> = vec![];
+        let got = factorize_fleet_traced_with_ctx(&fleet, &jobs, |i, f| {
+            // The hook fires with the finished operator, usable at once.
+            assert!(f.rows() > 0);
+            done_order.push(i);
+        });
+        assert_eq!(done_order.len(), 3, "every member completes exactly once");
+        // The 2-level member (J=3 hadamard-8… levels=2) finishes before
+        // the 3-level hadamard-16 member — completion is per-member, not
+        // a global barrier.
+        let pos8 = done_order.iter().position(|&i| i == 0).unwrap();
+        let pos16 = done_order.iter().position(|&i| i == 1).unwrap();
+        assert!(pos8 < pos16, "shorter hierarchy must finish first");
+        for ((gf, ge), (wf, we)) in got.iter().zip(&solo) {
+            assert_eq!(faust_fingerprint(gf), faust_fingerprint(wf));
+            assert_eq!(ge.len(), we.len());
+            for (x, y) in ge.iter().zip(we) {
+                assert_eq!(x.to_bits(), y.to_bits(), "error trace diverged");
+            }
+        }
+        // The fleet actually fused cross-operator work.
+        assert!(fleet.metrics().fused_gemms > 0, "no cross-operator fusion happened");
+    }
+
+    #[test]
+    fn fleet_skip_global_member_rides_along() {
+        let a = hadamard(8);
+        let mut cfg_skip = HierarchicalConfig::hadamard(8);
+        cfg_skip.skip_global = true;
+        let cfg_full = HierarchicalConfig::hadamard(8);
+        let ctx = ExecCtx::new(2);
+        let solo_skip = factorize_with_ctx(&ctx, &a, &cfg_skip);
+        let solo_full = factorize_with_ctx(&ctx, &a, &cfg_full);
+        let fleet = FleetCtx::new(ctx);
+        let got = factorize_fleet_with_ctx(&fleet, &[(&a, &cfg_skip), (&a, &cfg_full)]);
+        use crate::testutil::faust_fingerprint;
+        assert_eq!(faust_fingerprint(&got[0]), faust_fingerprint(&solo_skip));
+        assert_eq!(faust_fingerprint(&got[1]), faust_fingerprint(&solo_full));
     }
 
     #[test]

@@ -22,9 +22,15 @@
 //!   palm4MSA / hierarchical / dictlearn). Every `Faust::apply*` routes
 //!   through it; the coordinator serves [`engine::EngineOp`]s; the
 //!   factorizers take a ctx (`_with_ctx` variants) or default to the
-//!   process-wide one.
+//!   process-wide one. [`engine::FleetCtx`] extends the substrate to
+//!   *fleets*: the small independent kernels of many concurrent
+//!   factorization problems fuse into operator-granular pool dispatches
+//!   ([`palm::palm4msa_fleet_with_ctx`],
+//!   [`hierarchical::factorize_fleet`]), bitwise identical to solo runs.
 //! - **L3-serve ([`coordinator`])**: live operator registry
-//!   (register / hot-swap / retire with epoch draining) + plan-aware
+//!   (register / hot-swap / retire with epoch draining, plus
+//!   `Registry::refactorize_fleet` — re-learn a whole served fleet
+//!   concurrently and swap each operator as it finishes) + plan-aware
 //!   adaptive batcher (per-operator batch widths from each plan's
 //!   flop/byte [`engine::CostProfile`]) + worker pool turning planned
 //!   operators into a matvec service.

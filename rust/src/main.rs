@@ -4,9 +4,10 @@ use faust::bench_util::{fmt, Table};
 use faust::cli::{Args, USAGE};
 use faust::coordinator::{
     engine_ops, AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig,
+    RegistryError,
 };
 use faust::dictlearn::{faust_dictionary_learning_with_ctx, KsvdConfig};
-use faust::engine::{ApplyEngine, EngineConfig, ExecCtx, PlanConfig};
+use faust::engine::{ApplyEngine, EngineConfig, ExecCtx, FleetCtx, PlanConfig};
 use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
 use faust::image::{add_noise, corpus, denoise, psnr, random_patches};
 use faust::linalg::Mat;
@@ -45,6 +46,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("hadamard") => cmd_hadamard(&args),
         Some("factorize") => cmd_factorize(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("dict") => cmd_dict(&args),
         Some("localize") => cmd_localize(&args),
         Some("denoise") => cmd_denoise(&args),
@@ -124,6 +126,57 @@ fn cmd_factorize(args: &Args) -> Result<()> {
     if let Some(path) = args.get_str("save") {
         fst.save(path)?;
         println!("  saved to {path}");
+    }
+    Ok(())
+}
+
+/// Fleet factorization: factorize `--ops` operators *concurrently* on one
+/// shared ctx (cross-operator batched PALM sweeps) and compare against
+/// the same jobs run sequentially — the paper's many-operators deployment
+/// (§V: one gain matrix per subject; §VI: one dictionary per class).
+/// Verifies the fleet results are bitwise identical to the solo runs.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let ops: usize = args.get("ops", 8);
+    let n: usize = args.get("n", 32);
+    let threads: usize = args.get("threads", 4);
+    if !n.is_power_of_two() || n < 8 {
+        return Err(err("--n must be a power of two ≥ 8"));
+    }
+    if ops == 0 {
+        return Err(err("--ops must be ≥ 1"));
+    }
+    let ctx = ctx_for(threads.max(1));
+    println!(
+        "fleet factorization: {ops} × {n}x{n} Hadamard, {} ctx threads",
+        ctx.n_threads()
+    );
+    // Shared protocol with benches/fleet_scaling.rs — one harness, so the
+    // CLI and the CI-gated bench cannot drift apart.
+    let cmp = faust::bench_util::fleet_compare(ops, n, &ctx);
+    let mut table = Table::new(&["mode", "wall_s", "ops/s", "speedup"]);
+    table.row(&[
+        "sequential".into(),
+        format!("{:.3}", cmp.seq_s),
+        fmt(ops as f64 / cmp.seq_s),
+        fmt(1.0),
+    ]);
+    table.row(&[
+        "fleet".into(),
+        format!("{:.3}", cmp.fleet_s),
+        fmt(ops as f64 / cmp.fleet_s),
+        fmt(cmp.speedup()),
+    ]);
+    table.print();
+    let m = &cmp.metrics;
+    println!(
+        "  bitwise identical to solo runs : {}\n  max relative error             : \
+         {:.2e}\n  fused gemms                    : {} (in {} fused dispatches, \
+         {} solo)\n  batched power iterations       : {}",
+        cmp.identical, cmp.max_rel_err, m.fused_gemms, m.fused_calls, m.solo_gemms,
+        m.spectral_jobs
+    );
+    if !cmp.identical {
+        return Err(err("fleet factorization diverged from the solo runs"));
     }
     Ok(())
 }
@@ -312,8 +365,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hf.rcg(),
         if adaptive { "adaptive (plan-aware)" } else { "fixed" }
     );
+    let fleet_n: usize = args.get("factorize-fleet", 0);
     let mut ops = engine_ops(&engine, vec![("faust".to_string(), hf)], batch);
     ops.push(("dense".to_string(), Arc::new(h.clone()) as Arc<dyn BatchOp>));
+    // A fleet of served operators (one per "subject", §V framing): all
+    // start as the reference butterfly and get hot-swapped one by one as
+    // their on-line refactorizations finish.
+    ops.extend(engine_ops(
+        &engine,
+        (0..fleet_n)
+            .map(|i| (format!("op{i}"), hadamard_faust(n)))
+            .collect(),
+        batch,
+    ));
     let cfg = CoordinatorConfig {
         max_batch: batch,
         batch_timeout: Duration::from_micros(200),
@@ -330,6 +394,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
+    // On-line *fleet* refactorization: learn a fresh generation for every
+    // op<i> concurrently on the serving engine's ctx (cross-operator
+    // batched sweeps) and epoch-swap each one as its own factorization
+    // finishes — no global barrier, zero stall.
+    let fleet_swapper = if fleet_n > 0 {
+        let registry = registry.clone();
+        let engine = engine.clone();
+        let h = h.clone();
+        Some(std::thread::spawn(move || {
+            let fleet = FleetCtx::new(engine.ctx());
+            let cfgs: Vec<HierarchicalConfig> = (0..fleet_n)
+                .map(|i| {
+                    let mut c = HierarchicalConfig::hadamard(n);
+                    c.seed ^= i as u64;
+                    c
+                })
+                .collect();
+            let jobs: Vec<(String, &Mat, &HierarchicalConfig)> = cfgs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (format!("op{i}"), &h, c))
+                .collect();
+            let t0 = Instant::now();
+            let outcomes = registry.refactorize_fleet(&fleet, &jobs, |_, f| {
+                Arc::new(engine.op_batch_hint(f, batch)) as Arc<dyn BatchOp>
+            });
+            for o in &outcomes {
+                match &o.outcome {
+                    Ok(epoch) => println!(
+                        "fleet-swapped '{}' at epoch {epoch} (rel err {:.1e})",
+                        o.name, o.rel_err
+                    ),
+                    Err(e) => println!("fleet job '{}' not published: {e}", o.name),
+                }
+            }
+            println!(
+                "fleet refactorization of {fleet_n} operators done in {:.2?} \
+                 (fused gemms: {})",
+                t0.elapsed(),
+                fleet.metrics().fused_gemms
+            );
+        }))
+    } else {
+        None
+    };
     // On-line refactorization: learn a fresh generation on the serving
     // engine's ctx while the butterfly serves, then hot-swap it in.
     let swapper = if args.flag("factorize") {
@@ -362,7 +471,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let client = coord.client();
     let mut table =
         Table::new(&["operator", "throughput(req/s)", "mean latency(us)", "mean batch"]);
-    for op in ["dense", "faust"] {
+    // Fleet operators take traffic while their refactorizations train on
+    // the same engine — the hot-swap happens mid-benchmark.
+    let mut bench_ops = vec!["dense".to_string(), "faust".to_string()];
+    bench_ops.extend((0..fleet_n).map(|i| format!("op{i}")));
+    for op in bench_ops.iter().map(|s| s.as_str()) {
         let t0 = Instant::now();
         let mut rng = Rng::new(7);
         let mut pending = Vec::with_capacity(256);
@@ -401,6 +514,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     table.print();
     if let Some(s) = swapper {
         s.join().map_err(|_| err("refactorization thread panicked"))?;
+    }
+    if let Some(s) = fleet_swapper {
+        s.join()
+            .map_err(|_| err("fleet refactorization thread panicked"))?;
     }
     let snap = coord.shutdown();
     let em = engine.metrics();
@@ -474,7 +591,12 @@ fn serve_repl(coord: Coordinator, engine: &Arc<ApplyEngine>) -> Result<()> {
                     }
                 }
                 Some(_) => println!("error: demo swap needs a square power-of-two operator"),
-                None => println!("error: operator '{name}' not registered"),
+                // Same typed error (and Display) the API's swap_epoch
+                // returns for a never-registered key.
+                None => println!(
+                    "error: {}",
+                    RegistryError::UnknownOperator(name.to_string())
+                ),
             },
             ["ops", "rm", name] => match registry.retire(name) {
                 Ok(op) => println!("retired '{name}' ({}x{})", op.rows(), op.cols()),
@@ -491,7 +613,10 @@ fn serve_repl(coord: Coordinator, engine: &Arc<ApplyEngine>) -> Result<()> {
                         Err(e) => println!("error: {e}"),
                     }
                 }
-                None => println!("error: operator '{name}' not registered"),
+                None => println!(
+                    "error: {}",
+                    RegistryError::UnknownOperator(name.to_string())
+                ),
             },
             ["stats"] => {
                 let s = client.metrics();

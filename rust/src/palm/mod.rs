@@ -27,8 +27,16 @@
 //! and the full updated product falls out of the sweep for free — the λ
 //! update, the objective, and callers (via [`PalmResult::product`]) all
 //! reuse it instead of re-multiplying the chain.
+//!
+//! **Fleets.** Real deployments factorize many operators at once (one MEG
+//! gain per subject, §V; one dictionary per class, §VI) whose individual
+//! GEMMs are too small to keep a pool busy. [`palm4msa_fleet_with_ctx`]
+//! runs a whole fleet of independent problems through the sweep in
+//! lockstep, batching each stage's per-member kernels into fused
+//! [`FleetCtx`] dispatches, with per-member convergence: results are
+//! bitwise identical to N separate [`palm4msa_with_ctx`] runs.
 
-use crate::engine::ExecCtx;
+use crate::engine::{ExecCtx, FleetCtx};
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use crate::prox::Constraint;
@@ -125,16 +133,7 @@ impl FactorState {
     /// One fused pass, no temporaries.
     pub fn objective_with(&self, a: &Mat, product: &Mat) -> f64 {
         assert_eq!(a.shape(), product.shape(), "objective product shape");
-        let lam = self.lambda;
-        0.5 * a
-            .data()
-            .iter()
-            .zip(product.data())
-            .map(|(av, pv)| {
-                let d = av - lam * pv;
-                d * d
-            })
-            .sum::<f64>()
+        objective_of(a, product, self.lambda)
     }
 
     /// Convert into a [`Faust`] operator (exact-zero sparsification).
@@ -377,6 +376,521 @@ pub fn palm4msa_with_ctx(
     PalmResult { state: st, objective_trace: trace, iters_run, product }
 }
 
+/// `½ ‖A − λ·P‖_F²` in one fused pass — shared by the solo path
+/// ([`FactorState::objective_with`]) and the fleet sweep driver so both
+/// accumulate the sum in identical order (bitwise-identity contract).
+fn objective_of(a: &Mat, product: &Mat, lambda: f64) -> f64 {
+    0.5 * a
+        .data()
+        .iter()
+        .zip(product.data())
+        .map(|(av, pv)| {
+            let d = av - lambda * pv;
+            d * d
+        })
+        .sum::<f64>()
+}
+
+/// One member of a fleet palm4MSA call: its own target operator, warm
+/// start and configuration. Members are completely independent problems;
+/// the fleet driver only shares *execution* (fused cross-operator
+/// dispatch), never state.
+pub struct FleetProblem<'a> {
+    /// Target operator `A`.
+    pub a: &'a Mat,
+    /// Initial factors + λ.
+    pub init: FactorState,
+    /// Per-member configuration (iteration budgets, constraints and
+    /// sweep orders may all differ across the fleet).
+    pub cfg: PalmConfig,
+}
+
+/// Per-member bookkeeping of the lockstep fleet sweep.
+struct FleetMember<'a> {
+    a: &'a Mat,
+    cfg: PalmConfig,
+    st: FactorState,
+    /// Sweep visit order (factor indices), fixed per member.
+    order: Vec<usize>,
+    nfac: usize,
+    l_warm: Vec<Vec<f64>>,
+    r_warm: Vec<Vec<f64>>,
+    trace: Vec<f64>,
+    prev_obj: f64,
+    iters_run: usize,
+    product: Option<Mat>,
+    done: bool,
+}
+
+/// What a sweep position does for one member, decided after the
+/// Lipschitz stage.
+enum StepKind {
+    Frozen,
+    Degenerate,
+    Grad { c: f64 },
+}
+
+/// [`palm4msa`] over a fleet of independent problems on the
+/// process-default execution context (see [`palm4msa_fleet_with_ctx`]).
+pub fn palm4msa_fleet(problems: Vec<FleetProblem>) -> Vec<PalmResult> {
+    palm4msa_fleet_with_ctx(&FleetCtx::new(ExecCtx::global().clone()), problems)
+}
+
+/// Run many palm4MSA problems *concurrently* on one shared context.
+///
+/// The driver advances every live member through the same sweep stages in
+/// lockstep — fixed-side cache build, Lipschitz power iterations,
+/// gradient GEMMs, projected steps, moving-side folds, λ/objective
+/// updates — and batches each stage's independent per-member kernels into
+/// fused [`FleetCtx`] dispatches. Members converge independently: a
+/// member that exhausts its `n_iter` or trips its `rel_tol` early stop
+/// drops out of every subsequent fused batch while the rest keep going.
+/// Members may have different shapes, factor counts, constraint sets,
+/// sweep orders and iteration budgets.
+///
+/// Results are **bitwise identical** to running
+/// [`palm4msa_with_ctx`] on each problem independently (at any thread
+/// count): every fused kernel reuses the solo path's serial per-chunk
+/// routines and cost-model decisions. The fleet proptests enforce this.
+pub fn palm4msa_fleet_with_ctx(
+    fleet: &FleetCtx,
+    problems: Vec<FleetProblem>,
+) -> Vec<PalmResult> {
+    let ctx = fleet.ctx();
+    let mut members: Vec<FleetMember> = problems
+        .into_iter()
+        .map(|p| {
+            let nfac = p.cfg.constraints.len();
+            assert_eq!(p.init.mats.len(), nfac, "constraint/factor count mismatch");
+            assert_eq!(p.init.mats[0].cols(), p.a.cols(), "rightmost factor input dim");
+            assert_eq!(
+                p.init.mats.last().unwrap().rows(),
+                p.a.rows(),
+                "leftmost factor output dim"
+            );
+            let order: Vec<usize> = match p.cfg.update_order {
+                UpdateOrder::RightToLeft => (0..nfac).collect(),
+                UpdateOrder::LeftToRight => (0..nfac).rev().collect(),
+            };
+            let done = p.cfg.n_iter == 0;
+            FleetMember {
+                a: p.a,
+                st: p.init,
+                order,
+                nfac,
+                l_warm: vec![vec![]; nfac],
+                r_warm: vec![vec![]; nfac],
+                trace: Vec::with_capacity(p.cfg.n_iter),
+                prev_obj: f64::INFINITY,
+                iters_run: 0,
+                product: None,
+                done,
+                cfg: p.cfg,
+            }
+        })
+        .collect();
+
+    // One pass of this loop = one palm4MSA outer iteration for every
+    // still-live member.
+    loop {
+        let live: Vec<usize> = (0..members.len()).filter(|&i| !members[i].done).collect();
+        if live.is_empty() {
+            break;
+        }
+
+        // --- Fixed-side cache build, lockstep over suffix depth: step s
+        // folds one more pre-sweep factor per member; the independent
+        // per-member products fuse into one dispatch.
+        let mut caches: Vec<Option<SweepCache>> = members.iter().map(|_| None).collect();
+        for &i in &live {
+            caches[i] = Some(SweepCache { fixed: vec![None; members[i].nfac], moving: None });
+        }
+        let max_steps = live.iter().map(|&i| members[i].nfac - 1).max().unwrap_or(0);
+        for s in 0..max_steps {
+            let mut pairs: Vec<(&Mat, &Mat)> = Vec::new();
+            let mut gemm_slots: Vec<(usize, usize)> = Vec::new();
+            let mut clone_slots: Vec<(usize, usize, Mat)> = Vec::new();
+            for &i in &live {
+                let m = &members[i];
+                if s >= m.nfac - 1 {
+                    continue;
+                }
+                // Same visit order as SweepCache::build: R2L fills
+                // fixed[j] from nfac−2 downward, L2R from 1 upward.
+                let cache = caches[i].as_ref().expect("live member has a cache");
+                match m.cfg.update_order {
+                    UpdateOrder::RightToLeft => {
+                        let j = m.nfac - 2 - s;
+                        match &cache.fixed[j + 1] {
+                            None => clone_slots.push((i, j, m.st.mats[j + 1].clone())),
+                            Some(src) => {
+                                pairs.push((src, &m.st.mats[j + 1]));
+                                gemm_slots.push((i, j));
+                            }
+                        }
+                    }
+                    UpdateOrder::LeftToRight => {
+                        let j = 1 + s;
+                        match &cache.fixed[j - 1] {
+                            None => clone_slots.push((i, j, m.st.mats[j - 1].clone())),
+                            Some(src) => {
+                                pairs.push((&m.st.mats[j - 1], src));
+                                gemm_slots.push((i, j));
+                            }
+                        }
+                    }
+                }
+            }
+            let outs = fleet.gemm_many(&pairs);
+            for ((i, j), out) in gemm_slots.into_iter().zip(outs) {
+                caches[i].as_mut().expect("cache").fixed[j] = Some(out);
+            }
+            for (i, j, m) in clone_slots {
+                caches[i].as_mut().expect("cache").fixed[j] = Some(m);
+            }
+        }
+
+        // --- Gauss–Seidel sweep, lockstep over sweep position t: every
+        // live member updates its t-th factor (in its own order) with the
+        // same staged kernels the solo path runs, batched across members.
+        let max_pos = live.iter().map(|&i| members[i].nfac).max().unwrap_or(0);
+        for t in 0..max_pos {
+            let mut pos: Vec<(usize, usize)> = Vec::new();
+            for &i in &live {
+                if t < members[i].nfac {
+                    pos.push((i, members[i].order[t]));
+                }
+            }
+            if pos.is_empty() {
+                continue;
+            }
+            let npos = pos.len();
+
+            // Stage A: Lipschitz spectral norms — batched warm-started
+            // power iterations (identity sides default to 1.0).
+            let mut l_norm = vec![1.0f64; npos];
+            let mut r_norm = vec![1.0f64; npos];
+            {
+                let mut spec_jobs: Vec<(&Mat, Vec<f64>)> = Vec::new();
+                let mut spec_slots: Vec<(usize, bool)> = Vec::new();
+                for (p, &(i, j)) in pos.iter().enumerate() {
+                    if matches!(members[i].cfg.constraints[j], Constraint::Frozen) {
+                        continue;
+                    }
+                    let order = members[i].cfg.update_order;
+                    let (l, r) = caches[i].as_ref().expect("cache").sides(j, order);
+                    if let Some(lm) = l {
+                        let warm = std::mem::take(&mut members[i].l_warm[j]);
+                        spec_jobs.push((lm, warm));
+                        spec_slots.push((p, true));
+                    }
+                    if let Some(rm) = r {
+                        let warm = std::mem::take(&mut members[i].r_warm[j]);
+                        spec_jobs.push((rm, warm));
+                        spec_slots.push((p, false));
+                    }
+                }
+                let spec_out = fleet.spectral_norm_many(spec_jobs, 50, 1e-9);
+                for ((p, is_left), (norm, warm)) in spec_slots.into_iter().zip(spec_out) {
+                    let (i, j) = pos[p];
+                    if is_left {
+                        l_norm[p] = norm;
+                        members[i].l_warm[j] = warm;
+                    } else {
+                        r_norm[p] = norm;
+                        members[i].r_warm[j] = warm;
+                    }
+                }
+            }
+
+            // Stage B: classify — frozen factors skip, degenerate chains
+            // (zero L/R) project in place, the rest take a gradient step
+            // with modulus c = (1+α) λ² ‖L‖₂² ‖R‖₂² (Appendix B).
+            let kinds: Vec<StepKind> = pos
+                .iter()
+                .enumerate()
+                .map(|(p, &(i, j))| {
+                    let m = &members[i];
+                    if matches!(m.cfg.constraints[j], Constraint::Frozen) {
+                        return StepKind::Frozen;
+                    }
+                    let c = (1.0 + m.cfg.alpha)
+                        * m.st.lambda
+                        * m.st.lambda
+                        * l_norm[p]
+                        * l_norm[p]
+                        * r_norm[p]
+                        * r_norm[p];
+                    if c <= 0.0 || !c.is_finite() {
+                        StepKind::Degenerate
+                    } else {
+                        StepKind::Grad { c }
+                    }
+                })
+                .collect();
+            let grads: Vec<usize> = (0..npos)
+                .filter(|&p| matches!(kinds[p], StepKind::Grad { .. }))
+                .collect();
+            // `store[p]` carries the gradient pipeline value for position
+            // p through stages C→G (ls → lsr → err → Lᵀerr → grad).
+            let mut store: Vec<Option<Mat>> = std::iter::repeat_with(|| None).take(npos).collect();
+
+            // Stage C: ls = L·S (members whose L side is identity pass
+            // their factor through unchanged).
+            {
+                let mut pairs: Vec<(&Mat, &Mat)> = Vec::new();
+                let mut slots: Vec<usize> = Vec::new();
+                for &p in &grads {
+                    let (i, j) = pos[p];
+                    let order = members[i].cfg.update_order;
+                    let (l, _) = caches[i].as_ref().expect("cache").sides(j, order);
+                    let s = &members[i].st.mats[j];
+                    match l {
+                        Some(lm) => {
+                            pairs.push((lm, s));
+                            slots.push(p);
+                        }
+                        None => store[p] = Some(s.clone()),
+                    }
+                }
+                let outs = fleet.gemm_many(&pairs);
+                for (p, o) in slots.into_iter().zip(outs) {
+                    store[p] = Some(o);
+                }
+            }
+
+            // Stage D: lsr = (L·S)·R.
+            {
+                let mut pairs: Vec<(&Mat, &Mat)> = Vec::new();
+                let mut slots: Vec<usize> = Vec::new();
+                for &p in &grads {
+                    let (i, j) = pos[p];
+                    let order = members[i].cfg.update_order;
+                    let (_, r) = caches[i].as_ref().expect("cache").sides(j, order);
+                    if let Some(rm) = r {
+                        pairs.push((store[p].as_ref().expect("ls computed"), rm));
+                        slots.push(p);
+                    }
+                }
+                let outs = fleet.gemm_many(&pairs);
+                for (p, o) in slots.into_iter().zip(outs) {
+                    store[p] = Some(o);
+                }
+            }
+
+            // Stage E: err = λ·(LSR) − A — element-wise, fleet-mapped.
+            {
+                let jobs: Vec<(usize, Mat, f64, &Mat)> = grads
+                    .iter()
+                    .map(|&p| {
+                        let (i, _) = pos[p];
+                        (
+                            p,
+                            store[p].take().expect("lsr computed"),
+                            members[i].st.lambda,
+                            members[i].a,
+                        )
+                    })
+                    .collect();
+                let outs = fleet.map_many(jobs, |(p, mut lsr, lambda, a)| {
+                    lsr.scale(lambda);
+                    (p, lsr.sub(a))
+                });
+                for (p, e) in outs {
+                    store[p] = Some(e);
+                }
+            }
+
+            // Stage F: Lᵀ·err (the Lᵀ materialization matches the solo
+            // gemm_tn path, so the rewrite decision sees the same bits).
+            {
+                let mut lts: Vec<Option<Mat>> =
+                    std::iter::repeat_with(|| None).take(npos).collect();
+                for &p in &grads {
+                    let (i, j) = pos[p];
+                    let order = members[i].cfg.update_order;
+                    let (l, _) = caches[i].as_ref().expect("cache").sides(j, order);
+                    if let Some(lm) = l {
+                        lts[p] = Some(lm.t());
+                    }
+                }
+                let mut pairs: Vec<(&Mat, &Mat)> = Vec::new();
+                let mut slots: Vec<usize> = Vec::new();
+                for &p in &grads {
+                    if let Some(lt) = &lts[p] {
+                        pairs.push((lt, store[p].as_ref().expect("err computed")));
+                        slots.push(p);
+                    }
+                }
+                let outs = fleet.gemm_many(&pairs);
+                for (p, o) in slots.into_iter().zip(outs) {
+                    store[p] = Some(o);
+                }
+            }
+
+            // Stage G: grad = (Lᵀ err)·Rᵀ.
+            {
+                let mut rts: Vec<Option<Mat>> =
+                    std::iter::repeat_with(|| None).take(npos).collect();
+                for &p in &grads {
+                    let (i, j) = pos[p];
+                    let order = members[i].cfg.update_order;
+                    let (_, r) = caches[i].as_ref().expect("cache").sides(j, order);
+                    if let Some(rm) = r {
+                        rts[p] = Some(rm.t());
+                    }
+                }
+                let mut pairs: Vec<(&Mat, &Mat)> = Vec::new();
+                let mut slots: Vec<usize> = Vec::new();
+                for &p in &grads {
+                    if let Some(rt) = &rts[p] {
+                        pairs.push((store[p].as_ref().expect("lt_err computed"), rt));
+                        slots.push(p);
+                    }
+                }
+                let outs = fleet.gemm_many(&pairs);
+                for (p, o) in slots.into_iter().zip(outs) {
+                    store[p] = Some(o);
+                }
+            }
+
+            // Stage H: projected gradient step (or plain projection for
+            // degenerate chains) — proximal ops fleet-mapped.
+            {
+                type StepJob = (usize, Option<(Mat, f64)>, f64, Mat, Constraint);
+                let mut jobs: Vec<StepJob> = Vec::new();
+                for (p, &(i, j)) in pos.iter().enumerate() {
+                    let m = &members[i];
+                    match kinds[p] {
+                        StepKind::Frozen => {}
+                        StepKind::Degenerate => jobs.push((
+                            p,
+                            None,
+                            m.st.lambda,
+                            m.st.mats[j].clone(),
+                            m.cfg.constraints[j].clone(),
+                        )),
+                        StepKind::Grad { c } => jobs.push((
+                            p,
+                            Some((store[p].take().expect("grad computed"), c)),
+                            m.st.lambda,
+                            m.st.mats[j].clone(),
+                            m.cfg.constraints[j].clone(),
+                        )),
+                    }
+                }
+                let outs = fleet.map_many(jobs, |(p, grad_c, lambda, s, cst)| {
+                    let newm = match grad_c {
+                        Some((mut grad, c)) => {
+                            grad.scale(lambda);
+                            let mut stepped = s;
+                            stepped.axpy(-1.0 / c, &grad);
+                            cst.project(&stepped)
+                        }
+                        None => cst.project(&s),
+                    };
+                    (p, newm)
+                });
+                for (p, newm) in outs {
+                    let (i, j) = pos[p];
+                    members[i].st.mats[j] = newm;
+                }
+            }
+
+            // Stage I: fold the (possibly updated) factor into the
+            // moving-side product — frozen factors fold too.
+            {
+                let mut pairs: Vec<(&Mat, &Mat)> = Vec::new();
+                let mut slots: Vec<usize> = Vec::new();
+                let mut clones: Vec<(usize, Mat)> = Vec::new();
+                for &(i, j) in &pos {
+                    let order = members[i].cfg.update_order;
+                    let mat = &members[i].st.mats[j];
+                    match (&caches[i].as_ref().expect("cache").moving, order) {
+                        (None, _) => clones.push((i, mat.clone())),
+                        (Some(mv), UpdateOrder::RightToLeft) => {
+                            pairs.push((mat, mv));
+                            slots.push(i);
+                        }
+                        (Some(mv), UpdateOrder::LeftToRight) => {
+                            pairs.push((mv, mat));
+                            slots.push(i);
+                        }
+                    }
+                }
+                let outs = fleet.gemm_many(&pairs);
+                for (i, o) in slots.into_iter().zip(outs) {
+                    caches[i].as_mut().expect("cache").moving = Some(o);
+                }
+                for (i, m) in clones {
+                    caches[i].as_mut().expect("cache").moving = Some(m);
+                }
+            }
+        }
+
+        // --- λ update, objective, convergence — per member, fleet-mapped
+        // (Fig. 4 line 9; Â falls out of the sweep cache for free).
+        {
+            let jobs: Vec<(usize, Mat, f64, &Mat)> = live
+                .iter()
+                .map(|&i| {
+                    let a_hat = caches[i]
+                        .as_mut()
+                        .expect("cache")
+                        .moving
+                        .take()
+                        .expect("at least one factor folded");
+                    (i, a_hat, members[i].st.lambda, members[i].a)
+                })
+                .collect();
+            let outs = fleet.map_many(jobs, |(i, a_hat, lambda_old, a)| {
+                let denom = a_hat.fro2();
+                let lambda = if denom > 0.0 { a.dot(&a_hat) / denom } else { lambda_old };
+                let obj = objective_of(a, &a_hat, lambda);
+                (i, a_hat, lambda, obj)
+            });
+            for (i, a_hat, lambda, obj) in outs {
+                let m = &mut members[i];
+                m.st.lambda = lambda;
+                m.iters_run += 1;
+                m.trace.push(obj);
+                m.product = Some(a_hat);
+                let mut stop = m.iters_run >= m.cfg.n_iter;
+                if m.cfg.rel_tol > 0.0 && m.prev_obj.is_finite() {
+                    // Same stop rule as the solo driver: objective change
+                    // relative to the data energy ½‖A‖_F².
+                    let denom = 0.5 * m.a.fro2();
+                    let rel = (m.prev_obj - obj).abs() / denom.max(1e-300);
+                    if rel < m.cfg.rel_tol {
+                        stop = true;
+                    }
+                }
+                m.prev_obj = obj;
+                if stop {
+                    m.done = true;
+                }
+            }
+        }
+    }
+
+    members
+        .into_iter()
+        .map(|m| {
+            let product = match m.product {
+                Some(p) => p,
+                // n_iter = 0: no sweep ran — compute the init's product.
+                None => m.st.product_ctx(ctx),
+            };
+            PalmResult {
+                state: m.st,
+                objective_trace: m.trace,
+                iters_run: m.iters_run,
+                product,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,6 +1056,173 @@ mod tests {
         let init = FactorState::default_init(&[(6, 6), (6, 6)]);
         let res = palm4msa(&a, init, &cfg);
         assert!(res.iters_run < 500, "early stop never fired");
+    }
+
+    /// Byte-level comparison of two factor states.
+    fn assert_states_bitwise_eq(a: &FactorState, b: &FactorState, tag: &str) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{tag}: lambda");
+        assert_eq!(a.mats.len(), b.mats.len(), "{tag}: factor count");
+        for (p, q) in a.mats.iter().zip(&b.mats) {
+            assert_eq!(p.data(), q.data(), "{tag}: factor bits");
+        }
+    }
+
+    #[test]
+    fn fleet_matches_independent_runs_bitwise() {
+        // Heterogeneous fleet: different shapes, budgets, sweep orders.
+        let mut rng = Rng::new(8101);
+        let (a1, _, _) = planted(&mut rng, 8, 20);
+        let (a2, _, _) = planted(&mut rng, 6, 12);
+        let s1 = Mat::randn(6, 10, &mut rng);
+        let s2 = Mat::randn(4, 6, &mut rng);
+        let a3 = s2.matmul(&s1);
+        let cfg1 = PalmConfig::new(
+            vec![Constraint::SpGlobal(28), Constraint::SpGlobal(28)],
+            14,
+        );
+        let mut cfg2 = PalmConfig::new(
+            vec![Constraint::SpGlobal(18), Constraint::SpGlobal(18)],
+            9,
+        );
+        cfg2.update_order = UpdateOrder::LeftToRight;
+        let cfg3 = PalmConfig::new(
+            vec![Constraint::SpGlobal(60), Constraint::SpGlobal(24)],
+            11,
+        );
+        let mk_inits = || {
+            vec![
+                FactorState::default_init(&[(8, 8), (8, 8)]),
+                FactorState::default_init(&[(6, 6), (6, 6)]),
+                FactorState::default_init(&[(6, 10), (4, 6)]),
+            ]
+        };
+        let targets = [&a1, &a2, &a3];
+        let cfgs = [&cfg1, &cfg2, &cfg3];
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::new(threads);
+            let solo: Vec<PalmResult> = targets
+                .into_iter()
+                .zip(mk_inits())
+                .zip(cfgs)
+                .map(|((a, init), cfg)| palm4msa_with_ctx(&ctx, a, init, cfg))
+                .collect();
+            let fleet = FleetCtx::new(ctx);
+            let problems: Vec<FleetProblem> = targets
+                .into_iter()
+                .zip(mk_inits())
+                .zip(cfgs)
+                .map(|((a, init), cfg)| FleetProblem { a, init, cfg: cfg.clone() })
+                .collect();
+            let got = palm4msa_fleet_with_ctx(&fleet, problems);
+            assert_eq!(got.len(), solo.len());
+            for (k, (g, w)) in got.iter().zip(&solo).enumerate() {
+                let tag = format!("member {k}, {threads} threads");
+                assert_states_bitwise_eq(&g.state, &w.state, &tag);
+                assert_eq!(g.iters_run, w.iters_run, "{tag}: iters");
+                assert_eq!(g.objective_trace.len(), w.objective_trace.len(), "{tag}");
+                for (x, y) in g.objective_trace.iter().zip(&w.objective_trace) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{tag}: trace");
+                }
+                assert_eq!(g.product.data(), w.product.data(), "{tag}: product");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_members_converge_independently() {
+        // One member early-stops, one runs a tiny budget, one runs zero
+        // iterations — each must match its own solo run exactly.
+        let mut rng = Rng::new(8102);
+        let (a1, _, _) = planted(&mut rng, 6, 12);
+        let (a2, _, _) = planted(&mut rng, 7, 16);
+        let mut cfg_stop = PalmConfig::new(
+            vec![Constraint::SpGlobal(36), Constraint::SpGlobal(36)],
+            500,
+        );
+        cfg_stop.rel_tol = 1e-8;
+        let cfg_short = PalmConfig::new(
+            vec![Constraint::SpGlobal(24), Constraint::SpGlobal(24)],
+            3,
+        );
+        let cfg_zero = PalmConfig::new(
+            vec![Constraint::SpGlobal(24), Constraint::SpGlobal(24)],
+            0,
+        );
+        let ctx = ExecCtx::new(2);
+        let solo_stop = palm4msa_with_ctx(
+            &ctx,
+            &a1,
+            FactorState::default_init(&[(6, 6), (6, 6)]),
+            &cfg_stop,
+        );
+        let solo_short = palm4msa_with_ctx(
+            &ctx,
+            &a2,
+            FactorState::default_init(&[(7, 7), (7, 7)]),
+            &cfg_short,
+        );
+        let solo_zero = palm4msa_with_ctx(
+            &ctx,
+            &a2,
+            FactorState::default_init(&[(7, 7), (7, 7)]),
+            &cfg_zero,
+        );
+        assert!(solo_stop.iters_run < 500, "early stop must fire for this seed");
+        let fleet = FleetCtx::new(ctx);
+        let got = palm4msa_fleet_with_ctx(
+            &fleet,
+            vec![
+                FleetProblem {
+                    a: &a1,
+                    init: FactorState::default_init(&[(6, 6), (6, 6)]),
+                    cfg: cfg_stop,
+                },
+                FleetProblem {
+                    a: &a2,
+                    init: FactorState::default_init(&[(7, 7), (7, 7)]),
+                    cfg: cfg_short,
+                },
+                FleetProblem {
+                    a: &a2,
+                    init: FactorState::default_init(&[(7, 7), (7, 7)]),
+                    cfg: cfg_zero,
+                },
+            ],
+        );
+        for (g, w) in got.iter().zip([&solo_stop, &solo_short, &solo_zero]) {
+            assert_eq!(g.iters_run, w.iters_run);
+            assert_states_bitwise_eq(&g.state, &w.state, "dropout member");
+            assert_eq!(g.product.data(), w.product.data());
+        }
+    }
+
+    #[test]
+    fn fleet_with_frozen_factor_matches_solo() {
+        let mut rng = Rng::new(8103);
+        let gamma = Mat::randn(6, 9, &mut rng);
+        let d = Mat::randn(6, 6, &mut rng);
+        let y = d.matmul(&gamma);
+        let mk_init = || FactorState {
+            mats: vec![gamma.clone(), Mat::eye(6, 6), Mat::eye(6, 6)],
+            lambda: 1.0,
+        };
+        let cfg = PalmConfig::new(
+            vec![
+                Constraint::Frozen,
+                Constraint::SpGlobal(20),
+                Constraint::SpGlobal(20),
+            ],
+            8,
+        );
+        let ctx = ExecCtx::new(2);
+        let solo = palm4msa_with_ctx(&ctx, &y, mk_init(), &cfg);
+        let fleet = FleetCtx::new(ctx);
+        let got = palm4msa_fleet_with_ctx(
+            &fleet,
+            vec![FleetProblem { a: &y, init: mk_init(), cfg }],
+        );
+        assert_states_bitwise_eq(&got[0].state, &solo.state, "frozen");
+        assert!(got[0].state.mats[0].rel_fro_err(&gamma) < 1e-15);
     }
 
     #[test]

@@ -226,6 +226,112 @@ fn online_refactorization_hot_swaps_mid_serve() {
 }
 
 #[test]
+fn fleet_refactorization_hot_swaps_every_operator_mid_serve() {
+    // The ISSUE-4 serving story end to end: a fleet of served operators
+    // is re-learned *concurrently* on the serving engine's ctx
+    // (cross-operator batched PALM sweeps) and each one is epoch-swapped
+    // the moment its own factorization finishes — with zero failed
+    // requests on any operator throughout.
+    use faust::coordinator::engine_ops;
+    use faust::engine::{ApplyEngine, FleetCtx};
+    use faust::linalg::Mat;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let n = 16;
+    let n_ops = 3usize;
+    let h = hadamard(n);
+    let engine = Arc::new(ApplyEngine::with_threads(2));
+    let ops = engine_ops(
+        &engine,
+        (0..n_ops)
+            .map(|i| (format!("op{i}"), hadamard_faust(n)))
+            .collect(),
+        8,
+    );
+    let coord = Coordinator::start(ops, CoordinatorConfig::default());
+    let client = coord.client();
+    let registry = coord.registry();
+
+    // Clients hammer every fleet operator for the whole duration.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = vec![];
+    for t in 0..2u64 {
+        let c = client.clone();
+        let h = h.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(60 + t);
+            let mut served = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let op = format!("op{}", rng.below(n_ops));
+                let x = rng.gauss_vec(n);
+                let y = c
+                    .apply(&op, x.clone())
+                    .expect("request failed during fleet refactorization");
+                let want = h.matvec(&x);
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() < 1e-4,
+                        "misrouted or garbled response mid-fleet-swap"
+                    );
+                }
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    // Refactorize the whole fleet on the serving engine's own ctx; each
+    // operator is swapped in as soon as its factorization completes.
+    let initial_epoch = registry.epoch();
+    let fleet = FleetCtx::new(engine.ctx());
+    let cfgs: Vec<HierarchicalConfig> = (0..n_ops)
+        .map(|i| {
+            let mut c = HierarchicalConfig::hadamard(n);
+            c.seed ^= i as u64;
+            c
+        })
+        .collect();
+    let jobs: Vec<(String, &Mat, &HierarchicalConfig)> = cfgs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (format!("op{i}"), &h, c))
+        .collect();
+    let outcomes = registry.refactorize_fleet(&fleet, &jobs, |_, f| {
+        Arc::new(engine.op_batch_hint(f, 8)) as Arc<dyn BatchOp>
+    });
+    for o in &outcomes {
+        let epoch = *o.outcome.as_ref().expect("fleet swap failed");
+        assert!(epoch > initial_epoch, "'{}' not republished", o.name);
+        assert!(o.rel_err < 1e-6, "'{}' learned a bad operator", o.name);
+    }
+
+    std::thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::Release);
+    let total: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert!(total > 0, "no requests flowed during fleet refactorization");
+
+    // Requests submitted after the fleet swap are served by the learned
+    // generations.
+    let mut rng = Rng::new(88);
+    for i in 0..n_ops {
+        let x = rng.gauss_vec(n);
+        let y = client.apply(&format!("op{i}"), x.clone()).unwrap();
+        let want = h.matvec(&x);
+        for k in 0..n {
+            assert!((y[k] - want[k]).abs() < 1e-4);
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.swaps, n_ops as u64, "every fleet member must swap");
+    assert_eq!(snap.rejected, 0, "fleet swap caused rejected requests");
+    assert_eq!(
+        snap.completed, snap.submitted,
+        "requests were lost during the fleet swap"
+    );
+}
+
+#[test]
 fn adaptive_batching_matches_fixed_results_exactly() {
     // Same operator, same requests — adaptive sizing may batch
     // differently but must return bit-identical answers.

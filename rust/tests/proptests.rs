@@ -2,10 +2,12 @@
 //! case seed — see `faust::testutil`).
 
 use faust::engine::{
-    par_spmm_into, ApplyEngine, EngineConfig, ExecCtx, PlanConfig, ThreadPool,
+    par_spmm_into, ApplyEngine, EngineConfig, ExecCtx, FleetCtx, PlanConfig, ThreadPool,
 };
 use faust::faust::Faust;
-use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
+use faust::hierarchical::{
+    factorize_fleet_with_ctx, factorize_with_ctx, HierarchicalConfig,
+};
 use faust::linalg::{chain_product, lstsq, qr_thin, svd_jacobi, Mat};
 use faust::prox::{proj_sp, proj_spcol, proj_sprow, Constraint};
 use faust::palm::{palm4msa, palm4msa_with_ctx, FactorState, PalmConfig};
@@ -379,6 +381,50 @@ fn prop_ctx_hierarchical_thread_invariant() {
                 d <= 1e-10 * (1.0 + base.fro()),
                 format!("drift {d} at {} threads", ctx.n_threads()),
             )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_factorize_fleet_bitwise_identical_to_independent_runs() {
+    // ISSUE 4: `factorize_fleet` of N operators must be bitwise identical
+    // to N independent `factorize_with_ctx` runs, at every thread count
+    // in {1, 2, 8}. Fleets are randomized: member count, operator
+    // contents, level counts and seeds all vary per case.
+    let ctxs = [ExecCtx::serial(), ExecCtx::new(2), ExecCtx::new(8)];
+    check("factorize_fleet == independent runs", &cfg(4), |rng| {
+        let n_ops = 2 + rng.below(2); // 2..=3 members
+        let mut targets: Vec<Mat> = Vec::new();
+        let mut cfgs: Vec<HierarchicalConfig> = Vec::new();
+        for k in 0..n_ops {
+            let n = 10 + rng.below(5);
+            targets.push(gen::mat_shaped(rng, n, n));
+            let j = 2 + rng.below(2); // 2..=3 levels+1
+            let mut hcfg = HierarchicalConfig::meg(n, n, j, 4, 3 * n, 0.8, (5 * n) as f64);
+            hcfg.n_iter_split = 8;
+            hcfg.n_iter_global = 5;
+            hcfg.seed = rng.below(1 << 20) as u64 ^ k as u64;
+            cfgs.push(hcfg);
+        }
+        let jobs: Vec<(&Mat, &HierarchicalConfig)> =
+            targets.iter().zip(&cfgs).collect();
+        for ctx in &ctxs {
+            let solo: Vec<(u64, Vec<Vec<u64>>)> = jobs
+                .iter()
+                .map(|&(a, c)| faust_fingerprint(&factorize_with_ctx(ctx, a, c)))
+                .collect();
+            let fleet = FleetCtx::new(ctx.clone());
+            let got = factorize_fleet_with_ctx(&fleet, &jobs);
+            for (k, (g, w)) in got.iter().zip(&solo).enumerate() {
+                ensure(
+                    &faust_fingerprint(g) == w,
+                    format!(
+                        "member {k} diverged at {} threads",
+                        ctx.n_threads()
+                    ),
+                )?;
+            }
         }
         Ok(())
     });

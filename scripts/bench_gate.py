@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Gate machine-readable bench results against the committed baseline.
+
+Usage:
+    bench_gate.py <baseline.json> <BENCH_*.json> [<BENCH_*.json> ...]
+
+Each bench result file is the output of `faust::bench_util::BenchReport`
+(`{"name": ..., "metrics": {...}}`). The baseline maps bench names to
+per-metric rules:
+
+    {"min": x}                  fail if measured < x        (ratios, flags)
+    {"max": x}                  fail if measured > x        (error bounds)
+    {"value": x, "tol_pct": p}  fail if measured > x*(1+p/100)
+                                (wall-clock regression gate)
+
+Keys starting with "_" are comments. A metric named in the baseline but
+missing from the results fails the gate (a bench silently dropping a
+gated metric is itself a regression). Exits non-zero on any failure, and
+also when nothing was checked at all.
+"""
+
+import json
+import sys
+
+
+def check_metric(name, key, value, rule):
+    """Return (ok, description) for one metric against one rule."""
+    parts = []
+    ok = True
+    if "min" in rule:
+        parts.append(f"min {rule['min']}")
+        if value < rule["min"]:
+            ok = False
+    if "max" in rule:
+        parts.append(f"max {rule['max']}")
+        if value > rule["max"]:
+            ok = False
+    if "value" in rule:
+        tol = rule.get("tol_pct", 25.0)
+        ceiling = rule["value"] * (1.0 + tol / 100.0)
+        parts.append(f"<= {rule['value']} +{tol}% = {ceiling:.4g}")
+        if value > ceiling:
+            ok = False
+    bound = ", ".join(parts) if parts else "no bounds?!"
+    return ok, f"{name}.{key} = {value:.6g}  ({bound})"
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    failures = []
+    checked = 0
+    for path in argv[2:]:
+        with open(path) as f:
+            data = json.load(f)
+        name = data.get("name", "?")
+        metrics = data.get("metrics", {})
+        rules = baseline.get(name)
+        if rules is None:
+            print(f"[gate] {path}: no baseline entry for '{name}' — skipped")
+            continue
+        for key, rule in rules.items():
+            if key.startswith("_"):
+                continue
+            value = metrics.get(key)
+            if value is None:
+                failures.append(f"{name}.{key}: metric missing from {path}")
+                print(f"[gate] FAIL {name}.{key}: missing from {path}")
+                continue
+            checked += 1
+            ok, desc = check_metric(name, key, value, rule)
+            print(f"[gate] {'ok  ' if ok else 'FAIL'} {desc}")
+            if not ok:
+                failures.append(desc)
+    if checked == 0:
+        print("[gate] nothing was checked — missing bench results?", file=sys.stderr)
+        return 1
+    if failures:
+        print(f"\n[gate] {len(failures)} gate failure(s):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print(f"\n[gate] all {checked} gated metrics within baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
