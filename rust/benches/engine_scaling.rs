@@ -1,13 +1,21 @@
 //! Engine scaling: planned + pooled apply vs the seed's serial
 //! per-factor CSR chain, across Hadamard, MEG-like, and dictionary-like
-//! operators, single- vs multi-threaded, with arena-alloc accounting.
+//! operators, single- vs multi-threaded, with arena-alloc accounting —
+//! plus a scalar-vs-tiled comparison of the dense-stage microkernels
+//! (ISSUE 5) on the serving path's batch shapes.
 //!
 //! Acceptance target (ISSUE 1): for a 1024×1024 operator with ≥4 factors
 //! at batch ≥ 32, planned multi-threaded apply ≥ 2× the naive serial
 //! chain, with zero steady-state allocations in the apply loop.
+//!
+//! With `--json` the run emits `BENCH_engine_scaling.json` (planned
+//! speedup + steady-state allocs at the acceptance point, dense-stage
+//! scalar/tiled timings); CI uploads it and gates it against
+//! `benches/baseline.json` alongside the factorize smoke.
 
-use faust::bench_util::{fmt, time_auto, Table};
-use faust::engine::ApplyEngine;
+use faust::bench_util::{compare_scalar_vs_tiled, fmt, time_auto, BenchReport, Table};
+use faust::cli::Args;
+use faust::engine::{kernel, ApplyEngine};
 use faust::faust::Faust;
 use faust::linalg::Mat;
 use faust::rng::Rng;
@@ -34,6 +42,7 @@ fn random_chain(dims: &[usize], nnz_per_row: usize, seed: u64) -> Faust {
 }
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
     let full = std::env::var("FAUST_BENCH_FULL").is_ok();
     let ms = if full { 150.0 } else { 50.0 };
     let ops: Vec<(&str, Faust)> = vec![
@@ -95,6 +104,23 @@ fn main() {
         }
     }
     table.print();
+
+    // Dense-stage microkernel comparison (ISSUE 5): a 512×512 dense
+    // stage applied to a 32-column batch — the mixed dense/sparse plan
+    // regime — via the shared bench_util scalar-vs-tiled protocol (same
+    // harness as the gated factorize_scaling GEMM-stage comparison).
+    let (sd, sb) = (512usize, 32usize);
+    let cmp = compare_scalar_vs_tiled(sd, sd, sb, ms, 0xE512);
+    let dense_stage_speedup = cmp.speedup();
+    println!(
+        "\n# dense stage {sd}x{sd} @ batch {sb}, 1 thread, {}-lane {:?} kernel: \
+         scalar={:.1}us tiled={:.1}us speedup={dense_stage_speedup:.2}x",
+        cmp.lanes,
+        kernel::simd_level(),
+        cmp.scalar.median_us(),
+        cmp.tiled.median_us(),
+    );
+
     if let Some((speedup, allocs)) = acceptance {
         let speed_ok = speedup >= 2.0;
         let alloc_ok = allocs == 0;
@@ -106,4 +132,23 @@ fn main() {
         );
     }
     println!("# naive = serial per-factor CSR spmm with per-layer allocation (seed apply path)");
+
+    if args.flag("json") {
+        let mut report = BenchReport::new("engine_scaling");
+        report.push("simd_lanes", cmp.lanes as f64);
+        report.push("dense_stage_scalar_us", cmp.scalar.median_us());
+        report.push("dense_stage_tiled_us", cmp.tiled.median_us());
+        report.push("dense_stage_tiled_speedup", dense_stage_speedup);
+        if let Some((speedup, allocs)) = acceptance {
+            report.push("planned_speedup_b32t4", speedup);
+            report.push("steady_allocs_b32t4", allocs as f64);
+        }
+        match report.write(args.get_str("json-dir").unwrap_or(".")) {
+            Ok(p) => println!("# wrote {p}"),
+            Err(e) => {
+                eprintln!("failed to write bench json: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

@@ -1,6 +1,6 @@
 //! Factorization scaling: hierarchical Hadamard factorization on the
 //! engine's `ExecCtx`, swept over thread counts, with a bitwise
-//! determinism check.
+//! determinism check and a scalar-vs-tiled dense-microkernel comparison.
 //!
 //! Acceptance (ISSUE 2): ≥2x wall-clock speedup for the 512-point
 //! Hadamard factorization at 8 threads vs the serial path — on hardware
@@ -9,14 +9,23 @@
 //! a fixed seed at every thread count (this part is asserted: a
 //! non-deterministic run exits non-zero).
 //!
+//! Acceptance (ISSUE 5): ≥1.25x single-thread speedup of the
+//! register-tiled `engine::kernel` GEMM over the scalar reference on the
+//! 512-dim dense stages PALM sweeps bottom out in, reported here
+//! (`gemm512_tiled_speedup`) and enforced as a `min` rule in
+//! `benches/baseline.json`. The tiled result is also checked against the
+//! scalar one in-process (≤ 1e-12 relative) before it is reported.
+//!
 //! CI runs the 256-point smoke (`-- --n 256 --max-threads 2 --json`),
 //! uploads the emitted `BENCH_factorize_scaling.json` as an artifact and
 //! gates it against `benches/baseline.json`; locally, `cargo bench
-//! --bench factorize_scaling` sweeps 1..8 threads at n=512.
+//! --bench factorize_scaling` sweeps 1..8 threads at n=512. The GEMM
+//! stage comparison always runs at dim 512 so the gated metric measures
+//! the same shape on every configuration.
 
-use faust::bench_util::{fmt, BenchReport, Table};
+use faust::bench_util::{compare_scalar_vs_tiled, fmt, BenchReport, Table};
 use faust::cli::Args;
-use faust::engine::ExecCtx;
+use faust::engine::{kernel, ExecCtx};
 use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
 use faust::testutil::faust_fingerprint;
 use faust::transforms::hadamard;
@@ -70,6 +79,27 @@ fn main() {
         threads *= 2;
     }
     table.print();
+
+    // Scalar-vs-tiled microkernel comparison on the dense GEMM stage size
+    // the PALM sweeps of a 512-dim operator bottom out in (ISSUE 5 /
+    // ROADMAP item d), via the shared bench_util protocol (one harness
+    // for both gated benches). The dim is pinned to 512 so the gated
+    // `gemm512_*` metrics always measure the same shape, whatever `--n`
+    // the factorization sweep ran at.
+    let gd: usize = 512;
+    let cmp = compare_scalar_vs_tiled(gd, gd, gd, 80.0, 0xD512);
+    let gemm_speedup = cmp.speedup();
+    println!(
+        "\n# dense {gd}-dim GEMM stage, 1 thread, {}-lane {:?} kernel: \
+         scalar={:.2}ms tiled={:.2}ms speedup={gemm_speedup:.2}x [{}] (max rel dev {:.1e})",
+        cmp.lanes,
+        kernel::simd_level(),
+        cmp.scalar.median_ms(),
+        cmp.tiled.median_ms(),
+        if gemm_speedup >= 1.25 { "PASS >=1.25x" } else { "FAIL <1.25x" },
+        cmp.max_rel_dev,
+    );
+
     if args.flag("json") {
         let (serial_s, _) = baseline.as_ref().expect("at least one thread count ran");
         let mut report = BenchReport::new("factorize_scaling");
@@ -79,6 +109,11 @@ fn main() {
         report.push("wall_s_serial", *serial_s);
         report.push("best_speedup", top_speedup);
         report.push("bitwise_identical", if all_identical { 1.0 } else { 0.0 });
+        report.push("gemm_dim", gd as f64);
+        report.push("simd_lanes", cmp.lanes as f64);
+        report.push("gemm512_scalar_ms", cmp.scalar.median_ms());
+        report.push("gemm512_tiled_ms", cmp.tiled.median_ms());
+        report.push("gemm512_tiled_speedup", gemm_speedup);
         match report.write(args.get_str("json-dir").unwrap_or(".")) {
             Ok(p) => println!("# wrote {p}"),
             Err(e) => {

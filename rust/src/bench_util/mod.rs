@@ -201,6 +201,69 @@ pub fn fleet_compare(ops: usize, n: usize, ctx: &crate::engine::ExecCtx) -> Flee
     }
 }
 
+/// Result of the shared scalar-vs-tiled dense-microkernel comparison
+/// ([`compare_scalar_vs_tiled`]) — consumed by both `engine_scaling`
+/// and `factorize_scaling`, so the two gated speedup metrics cannot
+/// drift into measuring different protocols.
+pub struct KernelComparison {
+    /// Scalar-reference kernel timing.
+    pub scalar: Timing,
+    /// Register-tiled kernel timing.
+    pub tiled: Timing,
+    /// Worst relative deviation between the two results (asserted
+    /// ≤ 1e-12 before this struct is returned).
+    pub max_rel_dev: f64,
+    /// f64 lane-chunk width of the tiled build (4 or 8).
+    pub lanes: usize,
+}
+
+impl KernelComparison {
+    /// Scalar-over-tiled median ratio (> 1 ⇒ the tiled kernel won).
+    pub fn speedup(&self) -> f64 {
+        self.scalar.median_ns / self.tiled.median_ns
+    }
+}
+
+/// Time the scalar-reference GEMM against the register-tiled
+/// `engine::kernel` build on one seeded `m×k · k×bcols` product, single
+/// thread on both sides so the ratio isolates the microkernel. Outputs
+/// are `black_box`ed (dead-code-elimination-proof) and checked to agree
+/// within 1e-12 relative before the ratio is reported; panics on
+/// divergence.
+pub fn compare_scalar_vs_tiled(
+    m: usize,
+    k: usize,
+    bcols: usize,
+    min_ms: f64,
+    seed: u64,
+) -> KernelComparison {
+    use crate::engine::kernel;
+    use std::hint::black_box;
+    let mut rng = crate::rng::Rng::new(seed);
+    let a = crate::linalg::Mat::randn(m, k, &mut rng);
+    let b = crate::linalg::Mat::randn(k, bcols, &mut rng);
+    let mut scalar_out = vec![0.0; m * bcols];
+    let mut tiled_out = vec![0.0; m * bcols];
+    let scalar = time_auto(min_ms, || {
+        kernel::gemm_scalar_rows(&a, b.data(), bcols, 0, m, &mut scalar_out);
+        black_box(&mut scalar_out);
+    });
+    let tiled = time_auto(min_ms, || {
+        kernel::gemm_tiled_rows(&a, b.data(), bcols, 0, m, &mut tiled_out);
+        black_box(&mut tiled_out);
+    });
+    let max_rel_dev = scalar_out
+        .iter()
+        .zip(&tiled_out)
+        .map(|(s, t)| (t - s).abs() / (1.0 + s.abs()))
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_rel_dev <= 1e-12,
+        "tiled kernel diverged from the scalar reference: {max_rel_dev:.3e}"
+    );
+    KernelComparison { scalar, tiled, max_rel_dev, lanes: kernel::lane_width() }
+}
+
 /// Machine-readable bench results: named float metrics serialized to
 /// `BENCH_<name>.json` (hand-rolled writer — no serde in the offline
 /// vendor set). Benches call [`BenchReport::write`] when invoked with
@@ -313,6 +376,15 @@ mod tests {
         assert!(cmp.max_rel_err < 1e-6);
         assert!(cmp.seq_s > 0.0 && cmp.fleet_s > 0.0);
         assert!(cmp.speedup() > 0.0);
+    }
+
+    #[test]
+    fn kernel_comparison_agrees_and_reports() {
+        let cmp = compare_scalar_vs_tiled(12, 9, 8, 1.0, 42);
+        assert!(cmp.max_rel_dev <= 1e-12);
+        assert!(cmp.lanes == 4 || cmp.lanes == 8);
+        assert!(cmp.speedup() > 0.0);
+        assert!(cmp.scalar.median_ns > 0.0 && cmp.tiled.median_ns > 0.0);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! The paper's motivating workload (§V, the fig8/fig9 MEG experiments) is
 //! an iterative solver issuing many matvec requests against an operator.
 //! This module provides the deployment shape for that, the tail of the
-//! repo's serving pipeline **plan → pool → arena → batcher → registry**:
+//! repo's serving pipeline **plan → kernel → pool → arena → batcher →
+//! registry**:
 //!
 //! - a live [`Registry`] mapping names to operators, supporting
 //!   [`register`](Registry::register) / [`swap_epoch`](Registry::swap_epoch)

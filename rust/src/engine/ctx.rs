@@ -33,7 +33,11 @@
 //! thread-invariant**: outputs are partitioned into disjoint row/column
 //! ranges and each output element is accumulated in the same index order
 //! regardless of the thread count, so `ExecCtx::serial()` and
-//! `ExecCtx::new(8)` produce identical bits. Factorization results are
+//! `ExecCtx::new(8)` produce identical bits. The dense inner loops are
+//! the register-tiled [`super::kernel`] microkernels (lane width
+//! selected once per process and exposed via [`ExecCtx::simd_lanes`]);
+//! pooled chunks split at the kernel's tile boundaries, which is what
+//! keeps the tile grid thread-independent. Factorization results are
 //! therefore reproducible from the seed alone, independent of
 //! `--threads` — checked by the determinism proptests and the
 //! `factorize_scaling` bench.
@@ -42,6 +46,7 @@
 //! serving engine's pool); a coordinator deployment reuses its engine for
 //! on-line refactorization via [`super::ApplyEngine::ctx`].
 
+use super::kernel::{self, SimdLevel};
 use super::plan::PlanConfig;
 use super::pool::{par_gemm_into, par_gemv_into, par_gemv_t_into, ThreadPool};
 use crate::linalg::{spectral_norm_with, Mat};
@@ -101,6 +106,19 @@ impl ExecCtx {
     /// batch sizing use, so one knob describes the machine everywhere.
     pub fn beta(&self) -> f64 {
         self.beta
+    }
+
+    /// Microkernel build this ctx's dense GEMM paths dispatch to —
+    /// runtime-selected once per process ([`super::kernel::simd_level`]),
+    /// so it is fixed for the ctx's whole lifetime.
+    pub fn simd_level(&self) -> SimdLevel {
+        kernel::simd_level()
+    }
+
+    /// Width of the explicit f64 lane chunks of this ctx's microkernels
+    /// (4 or 8; also recorded in every [`super::CostProfile`]).
+    pub fn simd_lanes(&self) -> usize {
+        self.simd_level().lane_width()
     }
 
     /// Cost-model decision for `a·b`: is the double-transpose rewrite
@@ -273,6 +291,14 @@ mod tests {
         let n8 = ExecCtx::new(8).spectral_norm_warm(&a, &mut w8, 40, 0.0);
         assert_eq!(n1.to_bits(), n8.to_bits());
         assert_eq!(w1, w8);
+    }
+
+    #[test]
+    fn ctx_records_the_process_simd_level() {
+        let ctx = ExecCtx::new(2);
+        assert_eq!(ctx.simd_level(), crate::engine::kernel::simd_level());
+        let w = ctx.simd_lanes();
+        assert!(w == 4 || w == 8);
     }
 
     #[test]

@@ -34,11 +34,12 @@
 //!
 //! **Bitwise contract.** Every fused kernel reuses the same serial
 //! row/column kernels the pooled solo paths chunk over
-//! (`pool::gemm_rows`, `pool::gemv_t_cols`), and the per-product
-//! transpose-rewrite decision is the same [`ExecCtx`] cost model — so a
-//! fleet-batched factorization produces **bit-identical** factors to N
-//! independent `_with_ctx` runs at any thread count (enforced by the
-//! fleet proptests).
+//! (`pool::gemm_rows`, `pool::gemv_t_cols` — both routing into the
+//! register-tiled [`super::kernel`] microkernels over the same absolute
+//! tile grid), and the per-product transpose-rewrite decision is the
+//! same [`ExecCtx`] cost model — so a fleet-batched factorization
+//! produces **bit-identical** factors to N independent `_with_ctx` runs
+//! at any thread count (enforced by the fleet proptests).
 //!
 //! Fleet methods must be called from an orchestrator thread, never from
 //! inside a pool task (nested dispatch can deadlock the pool — see
@@ -101,7 +102,10 @@ enum Prep<'p> {
 }
 
 impl Prep<'_> {
-    /// Execute serially with the shared row kernel (a fused task).
+    /// Execute serially with the shared row kernel (a fused task). The
+    /// kernel is the same SIMD-width-dispatched microkernel the solo
+    /// pooled path runs, over the same absolute tile grid, so fused bits
+    /// equal solo bits.
     fn run_serial(self) -> Mat {
         match self {
             Prep::Direct { a, b } => {

@@ -1,0 +1,625 @@
+//! SIMD-width-aware dense microkernels — the register-tiled, cache-blocked
+//! GEMM layer every dense hot path bottoms out in (ROADMAP item d).
+//!
+//! The engine's previous dense kernels streamed the output row through
+//! memory once per `k` step and leaned entirely on auto-vectorization.
+//! This module replaces those scalar inner loops with an explicit
+//! microkernel layer shared by **every** dense GEMM path: the
+//! cost-dispatched [`super::ExecCtx::gemm`] family, the pooled
+//! [`super::pool::par_gemm_into`] / `gemm_rows` / `gemv_t_cols` kernels,
+//! the dense stages of [`super::plan::ApplyPlan`], and the fleet's fused
+//! per-operator jobs ([`super::FleetCtx::gemm_many`]).
+//!
+//! **Blocking scheme.** `C = A·B` is computed in fixed [`MR`]×NR register
+//! tiles: `B` is packed once per product into NR-column stripes
+//! (`k`-major, zero-padded to the lane width — `with_pack_panel`), and
+//! each tile of [`MR`] consecutive `A` rows walks one packed stripe
+//! keeping all `MR × NR` partial sums in registers for the whole `k`
+//! loop. The packed panel is built on the dispatching thread and shared
+//! read-only across all row chunks of a pooled call, so every chunk
+//! streams the same L1/L2-resident stripe instead of re-striding the raw
+//! `B`. Rows beyond the last full tile and columns beyond the last full
+//! stripe take a scalar edge path.
+//!
+//! **Lane-width selection.** The stripe width NR is picked from the
+//! machine's f64 SIMD level — 8 on AVX-512 hardware, 4 on AVX2 and on
+//! the portable fallback (pairs of SSE2/NEON lanes) — detected once per
+//! process ([`simd_level`]), exposed on every [`super::ExecCtx`] and
+//! recorded in every [`super::CostProfile`]. The microkernel
+//! body is monomorphized per width and entered through
+//! `#[target_feature(enable = "avx2")]` wrappers (256-bit codegen: the
+//! widest width every supported stable toolchain can emit, and the
+//! preferred width on most AVX-512 silicon — there the 8-lane chunk
+//! lands as two 256-bit ops, doubling the register tile and halving
+//! loop overhead per flop), with no unstable intrinsics anywhere.
+//!
+//! **Determinism contract.** Every output element accumulates its `k`
+//! terms in ascending-`k` order with a single accumulator, and tile
+//! membership depends only on *absolute* row indices (`MR` is a
+//! compile-time constant; pooled callers split work at tile boundaries).
+//! The lane width only changes how independent output elements are
+//! *grouped*, never the per-element operation sequence, so results are
+//! bitwise identical across thread counts, across the solo/fleet
+//! dispatch routes, and even across machines with different SIMD levels.
+//! The one deliberate deviation from the scalar reference
+//! ([`gemm_scalar_rows`]) is the zero-skip: the tiled kernel skips a `k`
+//! step only when *all* [`MR`] rows of the tile are zero there, which
+//! can flip the sign of an exact-zero output where the scalar path's
+//! per-row skip would not — hence the kernel proptests compare tiled to
+//! scalar within 1e-12 but thread counts bitwise.
+
+use crate::linalg::Mat;
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Row-tile height of the register microkernel. Compile-time fixed so
+/// the tile a row belongs to depends only on its absolute index — the
+/// pooled dispatchers split work at `MR` boundaries, which is what keeps
+/// the zero-skip pattern (and therefore every output bit) independent of
+/// the thread count.
+pub const MR: usize = 4;
+
+/// Dense products narrower than this many output columns stay on the
+/// scalar path (a packed stripe cannot amortize below half a lane).
+const MIN_TILED_BCOLS: usize = 4;
+
+/// Instruction-set level the microkernels were dispatched for, detected
+/// once per process and recorded in [`super::ExecCtx`] /
+/// [`super::CostProfile`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// AVX-512F hardware: 8-wide f64 lane chunks (emitted as pairs of
+    /// 256-bit ops — see the module docs on width selection).
+    Avx512,
+    /// AVX2: 4 × f64 lane chunks.
+    Avx2,
+    /// Portable fallback: 4-wide chunks compiled for the baseline target
+    /// (pairs of SSE2 lanes on x86-64, NEON on aarch64).
+    Portable,
+}
+
+impl SimdLevel {
+    /// Width of one explicit f64 lane chunk (the NR of the microkernel).
+    pub fn lane_width(self) -> usize {
+        match self {
+            SimdLevel::Avx512 => 8,
+            SimdLevel::Avx2 | SimdLevel::Portable => 4,
+        }
+    }
+}
+
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Both width-specialized builds are compiled under `avx2`, so
+        // every non-portable level requires it (avx512f implies avx2 on
+        // real silicon; checking both keeps the dispatch sound anyway).
+        if std::arch::is_x86_feature_detected!("avx2") {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return SimdLevel::Avx512;
+            }
+            return SimdLevel::Avx2;
+        }
+    }
+    SimdLevel::Portable
+}
+
+/// The process-wide SIMD level (detected on first use, then cached).
+pub fn simd_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+/// The selected f64 lane-chunk width (4 or 8).
+pub fn lane_width() -> usize {
+    simd_level().lane_width()
+}
+
+/// Does the tiled path apply to an `m`-row, `bcols`-column product?
+/// Deterministic in the shape alone, so the solo and fleet routes always
+/// agree on the kernel choice.
+pub(crate) fn tiled_applies(m: usize, bcols: usize) -> bool {
+    m >= MR && bcols >= MIN_TILED_BCOLS
+}
+
+thread_local! {
+    /// Reusable pack buffer: packing allocates only until the buffer has
+    /// grown to the deployment's largest operand (the serving plans'
+    /// zero-alloc steady state keeps holding).
+    static PACK_BUF: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// Number of NR-wide column stripes covering `bcols` columns.
+fn n_stripes(bcols: usize, nr: usize) -> usize {
+    bcols.div_ceil(nr)
+}
+
+/// Pack row-major `b` (`ktot × bcols`) into NR-column stripes,
+/// stripe-major then `k`-major, zero-padded to the lane width:
+/// `buf[(s·ktot + k)·NR + l] = b[k][s·NR + l]`.
+fn pack_b<const NR: usize>(b: &[f64], ktot: usize, bcols: usize, buf: &mut [f64]) {
+    let stripes = n_stripes(bcols, NR);
+    debug_assert_eq!(buf.len(), stripes * ktot * NR);
+    for (k, brow) in b.chunks_exact(bcols).enumerate() {
+        for s in 0..stripes {
+            let j0 = s * NR;
+            let w = NR.min(bcols - j0);
+            let dst = &mut buf[(s * ktot + k) * NR..][..NR];
+            dst[..w].copy_from_slice(&brow[j0..j0 + w]);
+            dst[w..].fill(0.0);
+        }
+    }
+}
+
+/// Pack `b` into this thread's reusable panel buffer at the process lane
+/// width and hand the packed panel to `f`. The panel is plain `&[f64]`,
+/// safe to share read-only with pool workers for the duration of the
+/// call — "packed once, reused across row chunks".
+pub(crate) fn with_pack_panel<R>(
+    b: &[f64],
+    ktot: usize,
+    bcols: usize,
+    f: impl FnOnce(&[f64]) -> R,
+) -> R {
+    let nr = lane_width();
+    let len = n_stripes(bcols, nr) * ktot * nr;
+    PACK_BUF.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        match simd_level() {
+            SimdLevel::Avx512 => pack_b::<8>(b, ktot, bcols, &mut buf[..len]),
+            SimdLevel::Avx2 | SimdLevel::Portable => {
+                pack_b::<4>(b, ktot, bcols, &mut buf[..len])
+            }
+        }
+        f(&buf[..len])
+    })
+}
+
+/// MR×NR register tile: accumulate `acc[r][l] += a_r[k] · panel[k][l]`
+/// over the whole `k` range, skipping `k` steps where all four `a` rows
+/// are zero (PALM factors are dense-stored but extremely sparse after
+/// projection). Single accumulator per output element, `k` ascending —
+/// the determinism contract.
+#[inline(always)]
+#[allow(clippy::needless_range_loop)]
+fn mr_tile<const NR: usize>(
+    a0: &[f64],
+    a1: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    panel: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    let it = panel.chunks_exact(NR).zip(a0).zip(a1).zip(a2).zip(a3);
+    for ((((bv, &v0), &v1), &v2), &v3) in it {
+        if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+            continue;
+        }
+        let bv: &[f64; NR] = bv.try_into().expect("stripe chunk is NR wide");
+        for l in 0..NR {
+            acc[0][l] += v0 * bv[l];
+            acc[1][l] += v1 * bv[l];
+            acc[2][l] += v2 * bv[l];
+            acc[3][l] += v3 * bv[l];
+        }
+    }
+}
+
+/// 1×NR edge tile for the rows past the last full MR tile (per-row
+/// zero-skip, same as the scalar reference).
+#[inline(always)]
+#[allow(clippy::needless_range_loop)]
+fn row_tile<const NR: usize>(arow: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+    for (bv, &av) in panel.chunks_exact(NR).zip(arow) {
+        if av == 0.0 {
+            continue;
+        }
+        let bv: &[f64; NR] = bv.try_into().expect("stripe chunk is NR wide");
+        for l in 0..NR {
+            acc[l] += av * bv[l];
+        }
+    }
+}
+
+/// Tiled GEMM over output rows `[rs, re)` against a packed panel.
+/// `rs` must sit on an `MR` tile boundary (pooled callers split at tile
+/// granularity); `out` holds exactly rows `[rs, re)`.
+///
+/// `inline(always)` is load-bearing: the body must inline into the
+/// `#[target_feature(enable = "avx2")]` wrappers below (a callee with
+/// fewer features may inline into a more-featured caller) so the lane
+/// chunks are actually emitted as AVX ops — out-of-line it would compile
+/// once for the baseline target and the dispatch would be cosmetic.
+#[inline(always)]
+fn gemm_panel_range<const NR: usize>(
+    a: &Mat,
+    panel: &[f64],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f64],
+) {
+    let ktot = a.cols();
+    let stripes = n_stripes(bcols, NR);
+    debug_assert_eq!(out.len(), (re - rs) * bcols);
+    debug_assert_eq!(panel.len(), stripes * ktot * NR);
+    debug_assert_eq!(rs % MR, 0, "chunk start off the tile grid");
+    let mut i = rs;
+    while i + MR <= re {
+        let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+        for s in 0..stripes {
+            let stripe = &panel[s * ktot * NR..][..ktot * NR];
+            let mut acc = [[0.0f64; NR]; MR];
+            mr_tile::<NR>(a0, a1, a2, a3, stripe, &mut acc);
+            let j0 = s * NR;
+            let w = NR.min(bcols - j0);
+            for (r, accr) in acc.iter().enumerate() {
+                out[(i - rs + r) * bcols + j0..][..w].copy_from_slice(&accr[..w]);
+            }
+        }
+        i += MR;
+    }
+    // Scalar edge path: the (m mod MR) rows past the last full tile.
+    for row in i..re {
+        let arow = a.row(row);
+        for s in 0..stripes {
+            let stripe = &panel[s * ktot * NR..][..ktot * NR];
+            let mut acc = [0.0f64; NR];
+            row_tile::<NR>(arow, stripe, &mut acc);
+            let j0 = s * NR;
+            let w = NR.min(bcols - j0);
+            out[(row - rs) * bcols + j0..][..w].copy_from_slice(&acc[..w]);
+        }
+    }
+}
+
+// The width-specialized builds are compiled under `avx2` (stable as a
+// `target_feature` since Rust 1.27) rather than `avx512f` (stable only
+// in much newer toolchains): 256-bit is the preferred vector width LLVM
+// picks on most AVX-512 silicon anyway, so the 8-lane chunk lands as two
+// 256-bit ops — wider register tiles, halved loop overhead per flop —
+// while the crate keeps building on every supported stable toolchain.
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_panel_range_w8(
+    a: &Mat,
+    panel: &[f64],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f64],
+) {
+    gemm_panel_range::<8>(a, panel, bcols, rs, re, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_panel_range_w4(
+    a: &Mat,
+    panel: &[f64],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f64],
+) {
+    gemm_panel_range::<4>(a, panel, bcols, rs, re, out)
+}
+
+/// Run the tiled kernel for rows `[rs, re)` of `a · B` against a packed
+/// panel, dispatched to the microkernel build selected at process start.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn gemm_panel_rows(
+    a: &Mat,
+    panel: &[f64],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f64],
+) {
+    match simd_level() {
+        // SAFETY: avx2 was verified present by `detect()` (avx512f
+        // implies avx2 on every shipping CPU and in the detection order).
+        SimdLevel::Avx512 => unsafe { gemm_panel_range_w8(a, panel, bcols, rs, re, out) },
+        SimdLevel::Avx2 => unsafe { gemm_panel_range_w4(a, panel, bcols, rs, re, out) },
+        SimdLevel::Portable => gemm_panel_range::<4>(a, panel, bcols, rs, re, out),
+    }
+}
+
+/// Portable build of [`gemm_panel_rows`] for non-x86-64 targets.
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn gemm_panel_rows(
+    a: &Mat,
+    panel: &[f64],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f64],
+) {
+    gemm_panel_range::<4>(a, panel, bcols, rs, re, out)
+}
+
+/// Scalar reference GEMM over an output row range (the engine's
+/// pre-kernel inner loop, kept verbatim): ikj order with per-row
+/// zero-skip, output row streamed through memory each `k` step. This is
+/// the baseline the kernel proptests and the scalar-vs-tiled benches
+/// compare against.
+pub fn gemm_scalar_rows(
+    a: &Mat,
+    b: &[f64],
+    bcols: usize,
+    start: usize,
+    end: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), (end - start) * bcols);
+    let k = a.cols();
+    for i in start..end {
+        let orow = &mut out[(i - start) * bcols..(i - start + 1) * bcols];
+        orow.fill(0.0);
+        let arow = a.row(i);
+        for (kk, &av) in arow.iter().enumerate().take(k) {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * bcols..][..bcols];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Serial kernel-layer GEMM over an output row range: packs `b` into this
+/// thread's panel buffer and runs the tiled microkernel, falling back to
+/// the scalar reference for shapes the tiles cannot cover (narrow
+/// batches, fewer than [`MR`] rows) and for ranges off the absolute
+/// [`MR`] tile grid — both `start` and `end` must sit on a tile
+/// boundary (`end == a.rows()` counts) to take the tiled route, because
+/// a mid-tile range would regroup the tile zero-skip and silently break
+/// the bitwise identity with full-range/tile-chunked calls. Produces
+/// the same bits as the pooled path at any thread count — the fleet's
+/// fused per-operator jobs call this directly.
+pub fn gemm_tiled_rows(
+    a: &Mat,
+    b: &[f64],
+    bcols: usize,
+    start: usize,
+    end: usize,
+    out: &mut [f64],
+) {
+    let off_grid = start % MR != 0 || (end % MR != 0 && end != a.rows());
+    if !tiled_applies(a.rows(), bcols) || off_grid {
+        gemm_scalar_rows(a, b, bcols, start, end, out);
+        return;
+    }
+    with_pack_panel(b, a.cols(), bcols, |panel| {
+        gemm_panel_rows(a, panel, bcols, start, end, out);
+    });
+}
+
+/// Tiled transposed matvec stripe: `chunk = (Aᵀ x)[s..e)`. Columns are
+/// processed in NR-wide register chunks with a scalar tail; each output
+/// element accumulates its terms in ascending row order with the same
+/// per-row `x[i] == 0` skip as the scalar reference, so the result is
+/// bitwise identical to [`gemv_t_scalar_cols`] for every chunking.
+///
+/// `inline(always)` is load-bearing for the same reason as on
+/// `gemm_panel_range`: the body must inline into the `target_feature`
+/// wrappers so the lane chunks compile as AVX ops.
+#[inline(always)]
+#[allow(clippy::needless_range_loop)]
+fn gemv_t_range<const NR: usize>(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    debug_assert_eq!(chunk.len(), e - s);
+    let mut j = s;
+    while j + NR <= e {
+        let mut acc = [0.0f64; NR];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row: &[f64; NR] = a.row(i)[j..j + NR]
+                .try_into()
+                .expect("column chunk is NR wide");
+            for l in 0..NR {
+                acc[l] += xi * row[l];
+            }
+        }
+        chunk[j - s..j - s + NR].copy_from_slice(&acc);
+        j += NR;
+    }
+    if j < e {
+        let tail = &mut chunk[j - s..];
+        tail.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &a.row(i)[j..e];
+            for (o, &v) in tail.iter_mut().zip(row) {
+                *o += xi * v;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_t_range_w8(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    gemv_t_range::<8>(a, x, s, e, chunk)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_t_range_w4(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    gemv_t_range::<4>(a, x, s, e, chunk)
+}
+
+/// Serial `chunk = (Aᵀ x)[s..e)` through the width-dispatched tiled
+/// kernel — the per-chunk routine of the pooled transposed matvec and
+/// the fleet's fused power iterations.
+#[cfg(target_arch = "x86_64")]
+pub fn gemv_t_tiled_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    match simd_level() {
+        // SAFETY: avx2 was verified present by `detect()` for both
+        // non-portable levels.
+        SimdLevel::Avx512 => unsafe { gemv_t_range_w8(a, x, s, e, chunk) },
+        SimdLevel::Avx2 => unsafe { gemv_t_range_w4(a, x, s, e, chunk) },
+        SimdLevel::Portable => gemv_t_range::<4>(a, x, s, e, chunk),
+    }
+}
+
+/// Portable build of [`gemv_t_tiled_cols`] for non-x86-64 targets.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn gemv_t_tiled_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    gemv_t_range::<4>(a, x, s, e, chunk)
+}
+
+/// Scalar reference for the transposed matvec stripe (the pre-kernel
+/// inner loop, kept as the comparison baseline).
+pub fn gemv_t_scalar_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+    debug_assert_eq!(chunk.len(), e - s);
+    chunk.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a.row(i)[s..e];
+        for (o, &v) in chunk.iter_mut().zip(row) {
+            *o += xi * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sparse_mat(rng: &mut Rng, r: usize, c: usize, nnz: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        for i in rng.sample_indices(r * c, nnz.min(r * c)) {
+            m.data_mut()[i] = rng.gauss();
+        }
+        m
+    }
+
+    #[test]
+    fn lane_width_is_4_or_8_and_stable() {
+        let w = lane_width();
+        assert!(w == 4 || w == 8, "unexpected lane width {w}");
+        assert_eq!(w, lane_width());
+        assert_eq!(w, simd_level().lane_width());
+    }
+
+    #[test]
+    fn pack_b_stripes_and_pads() {
+        // 3×5 matrix packed at NR=4: two stripes, second padded.
+        let b: Vec<f64> = (1..=15).map(|v| v as f64).collect();
+        let mut buf = vec![-1.0; 2 * 3 * 4];
+        pack_b::<4>(&b, 3, 5, &mut buf);
+        // Stripe 0, k=0 holds b[0][0..4]; stripe 1, k=2 holds b[2][4] + pad
+        // at offset (s·ktot + k)·NR = (3 + 2)·4.
+        assert_eq!(&buf[0..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&buf[(3 + 2) * 4..][..4], &[15.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn tiled_matches_scalar_across_edge_shapes() {
+        let mut rng = Rng::new(901);
+        // Lane remainders on both axes, sub-tile rows, narrow batches,
+        // empty inner dimension.
+        let shapes = [
+            (12usize, 9usize, 8usize),
+            (13, 7, 9),
+            (4, 5, 4),
+            (3, 6, 8),   // fewer rows than MR -> scalar fallback
+            (17, 1, 5),  // k = 1
+            (9, 4, 3),   // bcols below the tiled floor
+            (5, 0, 6),   // empty k: output must be all zeros
+            (21, 11, 17),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = sparse_mat(&mut rng, m, k, (m * k) / 2 + 1);
+            let b = Mat::randn(k, n, &mut rng);
+            let mut want = vec![0.0; m * n];
+            gemm_scalar_rows(&a, b.data(), n, 0, m, &mut want);
+            let mut got = vec![1.0; m * n];
+            gemm_tiled_rows(&a, b.data(), n, 0, m, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-12 * (1.0 + w.abs()),
+                    "({m},{k},{n}): {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_chunked_at_tile_boundaries_is_bitwise_identical_to_full_range() {
+        let mut rng = Rng::new(902);
+        let (m, k, n) = (23usize, 14usize, 11usize);
+        let a = sparse_mat(&mut rng, m, k, 150);
+        let b = Mat::randn(k, n, &mut rng);
+        let mut full = vec![0.0; m * n];
+        gemm_tiled_rows(&a, b.data(), n, 0, m, &mut full);
+        // Split at every MR boundary, as the pooled dispatcher does.
+        for split_tile in 1..m.div_ceil(MR) {
+            let mid = split_tile * MR;
+            let mut lo = vec![0.0; mid * n];
+            let mut hi = vec![0.0; (m - mid) * n];
+            gemm_tiled_rows(&a, b.data(), n, 0, mid, &mut lo);
+            gemm_tiled_rows(&a, b.data(), n, mid, m, &mut hi);
+            let stitched: Vec<f64> = lo.into_iter().chain(hi).collect();
+            for (s, f) in stitched.iter().zip(&full) {
+                assert_eq!(s.to_bits(), f.to_bits(), "split at row {mid}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_t_tiled_matches_scalar_bitwise_for_any_stripe_split() {
+        let mut rng = Rng::new(903);
+        for &(m, n) in &[(15usize, 13usize), (40, 6), (7, 32), (9, 3)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let mut x = rng.gauss_vec(m);
+            x[0] = 0.0; // exercise the zero-skip
+            let mut want = vec![0.0; n];
+            gemv_t_scalar_cols(&a, &x, 0, n, &mut want);
+            let mut got = vec![0.0; n];
+            gemv_t_tiled_cols(&a, &x, 0, n, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{n})");
+            }
+            // Arbitrary column splits must not change a single bit.
+            for split in 1..n {
+                let mut lo = vec![0.0; split];
+                let mut hi = vec![0.0; n - split];
+                gemv_t_tiled_cols(&a, &x, 0, split, &mut lo);
+                gemv_t_tiled_cols(&a, &x, split, n, &mut hi);
+                let stitched: Vec<f64> = lo.into_iter().chain(hi).collect();
+                for (s, w) in stitched.iter().zip(&want) {
+                    assert_eq!(s.to_bits(), w.to_bits(), "split {split} ({m},{n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_buffer_is_reused_across_calls() {
+        let mut rng = Rng::new(904);
+        let a = Mat::randn(16, 12, &mut rng);
+        let b = Mat::randn(12, 8, &mut rng);
+        let mut out = vec![0.0; 16 * 8];
+        gemm_tiled_rows(&a, b.data(), 8, 0, 16, &mut out);
+        let cap_after_warm = PACK_BUF.with(|c| c.borrow().capacity());
+        for _ in 0..5 {
+            gemm_tiled_rows(&a, b.data(), 8, 0, 16, &mut out);
+        }
+        let cap_after_reuse = PACK_BUF.with(|c| c.borrow().capacity());
+        assert_eq!(cap_after_warm, cap_after_reuse, "pack buffer must not regrow");
+    }
+}

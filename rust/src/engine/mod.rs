@@ -11,6 +11,12 @@
 //! - [`pool`] — [`ThreadPool`], a `std::thread` chunked worker pool with
 //!   row-partitioned parallel `spmv`/`spmm`/GEMM, shared by the engine and
 //!   the coordinator's batch workers.
+//! - [`kernel`] — the SIMD-width-aware dense microkernels every dense
+//!   GEMM path bottoms out in: fixed MR×NR register tiles over packed,
+//!   lane-width-aligned `B` panels (explicit f64 lane chunks of 4/8,
+//!   runtime-selected once per process), with absolute tile blocking so
+//!   results are bitwise identical across thread counts and across the
+//!   solo/fleet dispatch routes.
 //! - [`arena`] — [`Arena`], ping-pong scratch buffers sized from the
 //!   plan's max intermediate dimension, so steady-state applies perform
 //!   zero heap allocations (checkable via [`EngineMetricsSnapshot`]).
@@ -37,7 +43,7 @@
 //! batcher sizes per-operator batches from.
 //!
 //! **Architecture** (the serving path end to end):
-//! `plan` → `pool` → `arena` → `coordinator::batcher` →
+//! `plan` → `kernel` → `pool` → `arena` → `coordinator::batcher` →
 //! `coordinator::Registry` — the engine compiles and executes, the
 //! coordinator decides *when* (batch sizing) and *what* (live operator
 //! registry) to execute.
@@ -50,12 +56,14 @@
 pub mod arena;
 pub mod ctx;
 pub mod fleet;
+pub mod kernel;
 pub mod plan;
 pub mod pool;
 
 pub use arena::Arena;
 pub use ctx::ExecCtx;
 pub use fleet::{FleetConfig, FleetCtx, FleetMetricsSnapshot};
+pub use kernel::SimdLevel;
 pub use plan::{ApplyPlan, CostProfile, PlanConfig, Stage, StageKernel};
 pub use pool::{
     par_gemm_into, par_gemv_into, par_gemv_t_into, par_map_jobs, par_spmm_into,

@@ -65,7 +65,8 @@ pub enum StageKernel {
     /// operator copies no factor data (fused products, transposed chains,
     /// and λ-folded stages own fresh allocations).
     Sparse(Arc<Csr>),
-    /// Row-parallel dense GEMM over the densified factor.
+    /// Row-parallel dense GEMM over the densified factor, executed on
+    /// the register-tiled [`super::kernel`] microkernels.
     Dense(Mat),
 }
 
@@ -208,6 +209,11 @@ pub struct CostProfile {
     /// Largest intermediate dimension — ties a batch width to its arena
     /// ping-pong footprint (`2 · 8 · max_dim · b` bytes).
     pub max_dim: usize,
+    /// f64 lane-chunk width of the dense microkernels this profile's
+    /// stages execute on (4 or 8, runtime-selected once per process —
+    /// see [`super::kernel::lane_width`]). Recorded so serving metrics
+    /// and bench artifacts state which kernel build produced them.
+    pub simd_lanes: usize,
 }
 
 impl CostProfile {
@@ -229,6 +235,7 @@ impl CostProfile {
             bytes_per_col: 8 * (rows + cols),
             fixed_bytes: 8 * rows * cols,
             max_dim: rows.max(cols),
+            simd_lanes: super::kernel::lane_width(),
         }
     }
 }
@@ -376,6 +383,7 @@ impl ApplyPlan {
                 * (self.cols + self.stages.iter().map(Stage::rows).sum::<usize>()),
             fixed_bytes: self.stages.iter().map(Stage::operand_bytes).sum(),
             max_dim: self.max_dim,
+            simd_lanes: super::kernel::lane_width(),
         }
     }
 
@@ -705,6 +713,7 @@ mod tests {
         let per_stage = 12 * 2 * n + 4 * (n + 1);
         assert_eq!(p.fixed_bytes, per_stage * f.n_factors());
         assert_eq!(p.max_dim, n);
+        assert_eq!(p.simd_lanes, crate::engine::kernel::lane_width());
         assert!(p.col_cost(0.25) > p.flops_per_col as f64);
         assert!(p.fixed_cost(0.25) > 0.0);
     }
@@ -716,6 +725,7 @@ mod tests {
         assert_eq!(p.fixed_bytes, 8 * 54);
         assert_eq!(p.bytes_per_col, 8 * 15);
         assert_eq!(p.max_dim, 9);
+        assert_eq!(p.simd_lanes, crate::engine::kernel::lane_width());
     }
 
     #[test]

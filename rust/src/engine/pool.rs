@@ -8,12 +8,18 @@
 //! by construction: each range owns a disjoint slice of the output.
 //!
 //! The parallel `spmv`/`spmm`/`gemm` entry points are shared by the
-//! [`crate::engine`] executor and the coordinator's batch workers.
+//! [`crate::engine`] executor and the coordinator's batch workers. Dense
+//! GEMM/gemv inner loops live in [`super::kernel`] — the pooled dispatch
+//! here packs the `B` operand once on the calling thread, splits the
+//! output at the microkernel's `MR` tile boundaries (so tile membership,
+//! and therefore every output bit, is independent of the thread count),
+//! and hands each chunk the shared read-only panel.
 
+use super::kernel;
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 use std::collections::VecDeque;
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -152,15 +158,21 @@ impl ThreadPool {
             return;
         }
         let min_chunk = min_chunk.max(1);
-        let max_chunks = (n + min_chunk - 1) / min_chunk;
+        let max_chunks = n.div_ceil(min_chunk);
         let nchunks = self.n_threads.min(max_chunks).max(1);
         if self.workers.is_empty() || nchunks == 1 {
             f(0, n);
             return;
         }
-        let chunk = (n + nchunks - 1) / nchunks;
+        let chunk = n.div_ceil(nchunks);
+        // When `n` sits just above `nchunks × min_chunk`, the ceil-divided
+        // chunk width overshoots and later nominal chunks start past `n`.
+        // Clamp both endpoints to `n` and drop the empties so the
+        // invariant workers rely on — `start < end <= n`, every index
+        // covered exactly once — holds by construction rather than by the
+        // filter alone (the awkward-size sweep test pins it).
         let ranges: Vec<(usize, usize)> = (0..nchunks)
-            .map(|c| (c * chunk, ((c + 1) * chunk).min(n)))
+            .map(|c| ((c * chunk).min(n), ((c + 1) * chunk).min(n)))
             .filter(|(s, e)| s < e)
             .collect();
         let latch = Arc::new(Latch::new(ranges.len() - 1));
@@ -227,9 +239,11 @@ fn spmm_rows(a: &Csr, b: &[f64], bcols: usize, start: usize, end: usize, out: &m
 }
 
 /// Serial dense GEMM over an output row range, slice layout. Shared by
-/// the pooled [`par_gemm_into`] chunks and the fleet's fused per-operator
-/// tasks, so both paths accumulate every output element in the same
-/// order — the bitwise-invariance contract.
+/// the fleet's fused per-operator tasks and (via tile-aligned chunks)
+/// the pooled [`par_gemm_into`] path: both routes run the same
+/// [`super::kernel`] microkernels over the same absolute tile grid, so
+/// every output element accumulates in the same order — the
+/// bitwise-invariance contract.
 pub(crate) fn gemm_rows(
     a: &Mat,
     b: &[f64],
@@ -238,22 +252,7 @@ pub(crate) fn gemm_rows(
     end: usize,
     out: &mut [f64],
 ) {
-    debug_assert_eq!(out.len(), (end - start) * bcols);
-    let k = a.cols();
-    for i in start..end {
-        let orow = &mut out[(i - start) * bcols..(i - start + 1) * bcols];
-        orow.fill(0.0);
-        let arow = a.row(i);
-        for (kk, &av) in arow.iter().enumerate().take(k) {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * bcols..][..bcols];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    kernel::gemm_tiled_rows(a, b, bcols, start, end, out);
 }
 
 /// Minimum rows per chunk so each dispatched chunk carries at least
@@ -278,17 +277,43 @@ pub fn par_spmm_into(pool: &ThreadPool, a: &Csr, b: &[f64], bcols: usize, out: &
     });
 }
 
-/// Row-parallel dense GEMM (slice layout): `out = A · B`.
+/// Row-parallel dense GEMM (slice layout): `out = A · B`, routed through
+/// the [`super::kernel`] microkernels. For tile-eligible shapes `B` is
+/// packed once on the calling thread and the output is split at `MR`
+/// tile boundaries, so the tile grid (and every output bit) is the same
+/// at any thread count; narrow products fall back to the scalar
+/// reference chunked by rows.
 pub fn par_gemm_into(pool: &ThreadPool, a: &Mat, b: &[f64], bcols: usize, out: &mut [f64]) {
     assert_eq!(b.len(), a.cols() * bcols, "par_gemm b dim mismatch");
     assert_eq!(out.len(), a.rows() * bcols, "par_gemm out dim mismatch");
-    let min_rows = grain_rows(2 * a.rows() * a.cols() * bcols, a.rows());
+    let m = a.rows();
+    if m == 0 || bcols == 0 {
+        return;
+    }
+    let min_rows = grain_rows(2 * m * a.cols() * bcols, m);
     let optr = SendPtr(out.as_mut_ptr());
-    pool.par_ranges(a.rows(), min_rows, |s, e| {
-        // SAFETY: disjoint ranges (see par_spmm_into).
-        let chunk =
-            unsafe { std::slice::from_raw_parts_mut(optr.0.add(s * bcols), (e - s) * bcols) };
-        gemm_rows(a, b, bcols, s, e, chunk);
+    if !kernel::tiled_applies(m, bcols) {
+        pool.par_ranges(m, min_rows, |s, e| {
+            // SAFETY: disjoint ranges (see par_spmm_into).
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(s * bcols), (e - s) * bcols)
+            };
+            kernel::gemm_scalar_rows(a, b, bcols, s, e, chunk);
+        });
+        return;
+    }
+    kernel::with_pack_panel(b, a.cols(), bcols, |panel| {
+        let ntiles = m.div_ceil(kernel::MR);
+        let min_tiles = min_rows.div_ceil(kernel::MR);
+        pool.par_ranges(ntiles, min_tiles, |ts, te| {
+            let rs = ts * kernel::MR;
+            let re = (te * kernel::MR).min(m);
+            // SAFETY: disjoint tile ranges own disjoint output rows.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(rs * bcols), (re - rs) * bcols)
+            };
+            kernel::gemm_panel_rows(a, panel, bcols, rs, re, chunk);
+        });
     });
 }
 
@@ -322,19 +347,13 @@ pub fn par_gemv_t_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
 
 /// Serial `y[s..e] = (Aᵀ x)[s..e]` column stripe — the per-chunk kernel
 /// of [`par_gemv_t_into`], shared with the fleet's per-operator serial
-/// power iterations so both compute identical bits.
+/// power iterations so both compute identical bits. Routed through the
+/// width-dispatched [`super::kernel::gemv_t_tiled_cols`]; its per-element
+/// accumulation order (ascending rows, `x[i] == 0` skipped) is unchanged
+/// from the scalar reference, so any column chunking yields the same
+/// bits.
 pub(crate) fn gemv_t_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
-    debug_assert_eq!(chunk.len(), e - s);
-    chunk.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &a.row(i)[s..e];
-        for (o, &v) in chunk.iter_mut().zip(row) {
-            *o += xi * v;
-        }
-    }
+    kernel::gemv_t_tiled_cols(a, x, s, e, chunk);
 }
 
 /// Raw cell pointer for job-granular fan-out; tasks index disjoint slots.
@@ -361,8 +380,15 @@ impl<T> Copy for SendCell<T> {}
 /// can deadlock: every worker could end up waiting on subtasks that no
 /// free worker remains to run).
 ///
-/// Panics in any job propagate after all scheduled jobs finish (same
-/// contract as [`ThreadPool::par_ranges`]).
+/// A panicking job no longer takes its chunk-mates down with it: each
+/// job runs under its own `catch_unwind`, so every remaining job in the
+/// chunk still executes (previously the chunk unwound and its later
+/// jobs were silently skipped), and the first captured payload is
+/// re-raised verbatim via `resume_unwind` after all jobs settle —
+/// instead of the pool's generic "engine pool task panicked" replacing
+/// the original message. All result slots are therefore settled before
+/// the re-raise; the collect below can only run when every slot is
+/// `Some`.
 pub fn par_map_jobs<J, T>(
     pool: &ThreadPool,
     jobs: Vec<J>,
@@ -380,15 +406,24 @@ where
     let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
     let sp = SendCell(slots.as_mut_ptr());
     let op = SendCell(out.as_mut_ptr());
-    pool.par_ranges(n, 1, move |s, e| {
+    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    pool.par_ranges(n, 1, |s, e| {
         for i in s..e {
             // SAFETY: par_ranges partitions [0, n) into disjoint index
             // ranges, so each slot / output cell is touched exactly once.
             let job = unsafe { (*sp.0.add(i)).take().expect("fleet job taken once") };
-            let r = f(job);
-            unsafe { *op.0.add(i) = Some(r) };
+            match catch_unwind(AssertUnwindSafe(|| f(job))) {
+                Ok(r) => unsafe { *op.0.add(i) = Some(r) },
+                Err(p) => {
+                    let mut slot = panic_payload.lock().unwrap();
+                    slot.get_or_insert(p);
+                }
+            }
         }
     });
+    if let Some(p) = panic_payload.into_inner().unwrap() {
+        resume_unwind(p);
+    }
     out.into_iter()
         .map(|t| t.expect("fleet job completed"))
         .collect()
@@ -538,8 +573,8 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "engine pool task panicked")]
-    fn par_map_jobs_propagates_job_panics() {
+    #[should_panic(expected = "job boom")]
+    fn par_map_jobs_propagates_job_panics_with_their_payload() {
         let pool = ThreadPool::new(4);
         let _ = par_map_jobs(&pool, (0..16usize).collect(), |i| {
             if i == 7 {
@@ -547,6 +582,79 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn par_map_jobs_settles_every_other_job_before_reraising() {
+        let pool = ThreadPool::new(4);
+        let ran = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            par_map_jobs(&pool, (0..32usize).collect(), |i| {
+                if i == 5 {
+                    panic!("fleet job 5 exploded");
+                }
+                ran.fetch_add(1, Ordering::Relaxed);
+                i
+            })
+        }));
+        let payload = r.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("fleet job 5 exploded"), "payload lost: {msg:?}");
+        assert_eq!(
+            ran.load(Ordering::Relaxed),
+            31,
+            "non-panicking jobs must all run before the re-raise"
+        );
+        // The pool and the fan-out stay usable afterwards.
+        assert_eq!(par_map_jobs(&pool, vec![1usize, 2], |i| i * 10), vec![10, 20]);
+    }
+
+    #[test]
+    fn par_ranges_awkward_sizes_cover_everything_exactly_once() {
+        // Sweep n just above nchunks × min_chunk (and other awkward
+        // combinations): every index must be covered exactly once and no
+        // empty or inverted range may reach a worker.
+        for &threads in &[2usize, 4, 7] {
+            let pool = ThreadPool::new(threads);
+            for &n in &[1usize, 2, 3, 5, 7, 9, 13, 17, 31, 33, 65, 101, 127, 129] {
+                for &min_chunk in &[1usize, 2, 3, 7, 16, 64, 1000] {
+                    let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    pool.par_ranges(n, min_chunk, |s, e| {
+                        assert!(s < e && e <= n, "bad range {s}..{e} (n={n})");
+                        for h in &hits[s..e] {
+                            h.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(
+                            h.load(Ordering::Relaxed),
+                            1,
+                            "index {i} (n={n}, min_chunk={min_chunk}, threads={threads})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_gemm_is_bitwise_thread_invariant_off_the_tile_grid() {
+        // 23 rows: not a multiple of the microkernel's MR, so the pooled
+        // tile-aligned split and the serial full range must still agree
+        // bit for bit (scalar edge rows included).
+        let mut rng = Rng::new(306);
+        let a = Mat::randn(23, 17, &mut rng);
+        let b = Mat::randn(17, 11, &mut rng);
+        let mut base = vec![0.0; 23 * 11];
+        kernel::gemm_tiled_rows(&a, b.data(), 11, 0, 23, &mut base);
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut got = vec![0.0; 23 * 11];
+            par_gemm_into(&pool, &a, b.data(), 11, &mut got);
+            for (g, w) in got.iter().zip(&base) {
+                assert_eq!(g.to_bits(), w.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

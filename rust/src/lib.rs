@@ -16,7 +16,10 @@
 //! - **L3-exec ([`engine`])**: the repo's single execution substrate —
 //!   cost-modeled [`engine::ApplyPlan`]s (CSR-vs-dense strategy, factor
 //!   fusion, transpose-aware kernels), a `std::thread` chunked worker
-//!   pool with row-partitioned parallel spmv/spmm, zero-alloc ping-pong
+//!   pool with row-partitioned parallel spmv/spmm, SIMD-width-aware
+//!   register-tiled dense microkernels ([`engine::kernel`]: explicit
+//!   f64 lane chunks of 4/8 selected once per process, packed `B`
+//!   panels, bitwise thread-invariant tiling), zero-alloc ping-pong
 //!   buffer arenas, and the [`engine::ExecCtx`] that runs *training* on
 //!   the same pool (cost-dispatched GEMM + pooled power iterations for
 //!   palm4MSA / hierarchical / dictlearn). Every `Faust::apply*` routes

@@ -52,6 +52,14 @@ impl Csr {
     /// `threshold = 0.0` this removes exactly the explicitly-stored zeros,
     /// so `nnz` (and the RC/RCG metrics built on it) counts only true
     /// non-zeros.
+    ///
+    /// The result is left **canonical**: `indptr` is rebuilt to exactly
+    /// `rows + 1` non-decreasing offsets with `indptr[rows] == nnz()`,
+    /// surviving entries keep their column-sorted order, rows emptied by
+    /// the prune collapse to zero-width ranges, and the backing buffers
+    /// release their now-unused slack — so the plan compiler's
+    /// flop/byte cost models (which price stages from `nnz()`) never
+    /// over-count a pruned factor.
     pub fn prune(&mut self, threshold: f64) {
         let mut new_indptr = vec![0u32; self.rows + 1];
         let mut w = 0usize;
@@ -67,6 +75,8 @@ impl Csr {
         }
         self.indices.truncate(w);
         self.vals.truncate(w);
+        self.indices.shrink_to_fit();
+        self.vals.shrink_to_fit();
         self.indptr = new_indptr;
     }
 

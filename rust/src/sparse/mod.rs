@@ -178,6 +178,63 @@ mod tests {
     }
 
     #[test]
+    fn prune_after_from_coo_with_zeros_and_duplicates_is_canonical() {
+        // Regression (ISSUE 5): pruning must leave the matrix canonical —
+        // indptr rebuilt and consistent with nnz(), emptied rows collapsed
+        // to zero-width ranges, per-row column order intact — so plan
+        // cost models never over-count a pruned factor.
+        let mut coo = Coo::new(4, 5);
+        coo.push(0, 3, 0.5);
+        coo.push(0, 1, 0.0); // explicit zero (dropped by from_coo)
+        coo.push(0, 1, 1e-12); // survives from_coo, pruned below
+        coo.push(1, 4, 1e-12); // row 1 empties entirely after prune
+        coo.push(1, 4, 1e-12); // duplicate: sums to 2e-12, still tiny
+        coo.push(2, 2, 1.0);
+        coo.push(2, 0, -2.0);
+        coo.push(3, 3, 1.5);
+        coo.push(3, 3, 1.5); // duplicate summed -> 3.0
+        let mut s = Csr::from_coo(&coo);
+        assert_eq!(s.nnz(), 6);
+        s.prune(1e-9);
+        // Canonical structure.
+        assert_eq!(s.indptr.len(), s.rows() + 1);
+        assert_eq!(s.indptr[0], 0);
+        assert_eq!(*s.indptr.last().unwrap() as usize, s.nnz());
+        for w in s.indptr.windows(2) {
+            assert!(w[0] <= w[1], "indptr must be non-decreasing");
+        }
+        assert_eq!(s.indices.len(), s.nnz());
+        assert_eq!(s.vals.len(), s.nnz());
+        for i in 0..s.rows() {
+            let row = &s.indices[s.indptr[i] as usize..s.indptr[i + 1] as usize];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {i} lost its column order");
+            }
+        }
+        // Emptied row collapses; survivors and nnz-derived metrics agree.
+        assert_eq!(s.indptr[1], s.indptr[2], "row 1 must be empty");
+        assert_eq!(s.nnz(), 4);
+        assert_eq!(s.flops_per_matvec(), 2 * 4);
+        assert!((s.density() - 4.0 / 20.0).abs() < 1e-15);
+        let mut want = Mat::zeros(4, 5);
+        want.set(0, 3, 0.5);
+        want.set(2, 0, -2.0);
+        want.set(2, 2, 1.0);
+        want.set(3, 3, 3.0);
+        assert!(s.to_dense().rel_fro_err(&want) < 1e-15);
+        // Idempotent, and a full prune leaves a canonical empty matrix.
+        let before = (s.indptr.clone(), s.indices.clone(), s.vals.clone());
+        s.prune(1e-9);
+        assert_eq!(before.0, s.indptr);
+        assert_eq!(before.1, s.indices);
+        assert_eq!(before.2, s.vals);
+        s.prune(f64::INFINITY);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(*s.indptr.last().unwrap(), 0);
+        assert_eq!(s.indptr.len(), 5);
+    }
+
+    #[test]
     fn csr_spmm_into_reuses_buffer() {
         let mut rng = Rng::new(47);
         let d = random_sparse(6, 7, 15, &mut rng);

@@ -235,6 +235,89 @@ fn gen_chain(rng: &mut faust::rng::Rng) -> (Faust, Mat) {
 }
 
 #[test]
+fn prop_tiled_gemm_matches_scalar_reference() {
+    // ISSUE 5: the register-tiled microkernel must agree with the scalar
+    // reference within 1e-12 across shapes, including lane-remainder
+    // column counts (n not a multiple of 4/8), sub-tile row counts, and
+    // sparse operands (the tiled zero-skip groups rows per MR tile).
+    use faust::engine::kernel;
+    check("tiled gemm == scalar reference", &cfg(80), |rng| {
+        let m = 1 + rng.below(45);
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(21);
+        let nnz = rng.below(m * k + 1);
+        let a = gen::sparse_mat(rng, m, k, nnz);
+        let b = Mat::randn(k, n, rng);
+        let mut want = vec![0.0; m * n];
+        kernel::gemm_scalar_rows(&a, b.data(), n, 0, m, &mut want);
+        let mut got = vec![0.0; m * n];
+        kernel::gemm_tiled_rows(&a, b.data(), n, 0, m, &mut got);
+        for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+            ensure(
+                (g - w).abs() <= 1e-12 * (1.0 + w.abs()),
+                format!("({m},{k},{n}) entry {idx}: {g} vs {w}"),
+            )?;
+        }
+        // The transposed-matvec kernel is held to the stricter bitwise
+        // bar (its per-element accumulation order is unchanged).
+        let x = rng.gauss_vec(m);
+        let mut tv_want = vec![0.0; k];
+        kernel::gemv_t_scalar_cols(&a, &x, 0, k, &mut tv_want);
+        let mut tv_got = vec![0.0; k];
+        kernel::gemv_t_tiled_cols(&a, &x, 0, k, &mut tv_got);
+        for (idx, (g, w)) in tv_got.iter().zip(&tv_want).enumerate() {
+            ensure(g.to_bits() == w.to_bits(), format!("gemv_t col {idx}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_kernels_bitwise_thread_invariant() {
+    // ISSUE 5: the new kernels must keep the engine's bitwise
+    // thread-invariance contract across {1, 2, 8} threads, for both GEMM
+    // dispatch branches and the pooled transposed matvec.
+    use faust::engine::{par_gemv_t_into, ThreadPool};
+    let serial = ExecCtx::serial();
+    let pooled = [ExecCtx::new(2), ExecCtx::new(8)];
+    let pools = [ThreadPool::new(2), ThreadPool::new(8)];
+    check("tiled kernels thread-invariant", &cfg(30), |rng| {
+        let m = 1 + rng.below(60);
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(30);
+        // Sparse a, dense b: exercises both rewrite branches over cases.
+        let a = gen::sparse_mat(rng, m, k, 1 + rng.below(m * k));
+        let b = Mat::randn(k, n, rng);
+        let base = serial.gemm(&a, &b);
+        for ctx in &pooled {
+            let got = ctx.gemm(&a, &b);
+            ensure(
+                got.data()
+                    .iter()
+                    .zip(base.data())
+                    .all(|(g, w)| g.to_bits() == w.to_bits()),
+                format!("gemm bits drift at {} threads", ctx.n_threads()),
+            )?;
+        }
+        let x = rng.gauss_vec(m);
+        let mut base_t = vec![0.0; k];
+        par_gemv_t_into(serial.pool(), &a, &x, &mut base_t);
+        for pool in &pools {
+            let mut got_t = vec![0.0; k];
+            par_gemv_t_into(pool, &a, &x, &mut got_t);
+            ensure(
+                got_t
+                    .iter()
+                    .zip(&base_t)
+                    .all(|(g, w)| g.to_bits() == w.to_bits()),
+                format!("gemv_t bits drift at {} threads", pool.n_threads()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_parallel_spmm_equals_serial() {
     let pool = ThreadPool::new(4);
     check("parallel spmm == serial spmm", &cfg(60), |rng| {

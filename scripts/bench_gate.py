@@ -3,6 +3,7 @@
 
 Usage:
     bench_gate.py <baseline.json> <BENCH_*.json> [<BENCH_*.json> ...]
+    bench_gate.py --self-check
 
 Each bench result file is the output of `faust::bench_util::BenchReport`
 (`{"name": ..., "metrics": {...}}`). The baseline maps bench names to
@@ -13,14 +14,28 @@ per-metric rules:
     {"value": x, "tol_pct": p}  fail if measured > x*(1+p/100)
                                 (wall-clock regression gate)
 
-Keys starting with "_" are comments. A metric named in the baseline but
-missing from the results fails the gate (a bench silently dropping a
-gated metric is itself a regression). Exits non-zero on any failure, and
-also when nothing was checked at all.
+Keys starting with "_" are comments. Every way a gate can silently
+disarm itself is a loud failure instead:
+
+  - a metric named in the baseline but missing from the results (a bench
+    silently dropping a gated metric is itself a regression);
+  - a result file that does not exist or is not valid JSON (a bench that
+    forgot `--json`, or crashed mid-write);
+  - a result whose bench name has no baseline entry (a renamed bench
+    would otherwise skip its own rules);
+  - a rule naming no recognized bound key (a min/max/value typo would
+    otherwise vacuously pass);
+  - a run in which nothing was checked at all.
+
+`--self-check` runs a built-in pytest-free scenario suite (temp files,
+exit-code assertions) so CI can verify the gate itself still gates.
+Exits non-zero on any failure.
 """
 
 import json
+import os
 import sys
+import tempfile
 
 
 def check_metric(name, key, value, rule):
@@ -41,11 +56,16 @@ def check_metric(name, key, value, rule):
         parts.append(f"<= {rule['value']} +{tol}% = {ceiling:.4g}")
         if value > ceiling:
             ok = False
-    bound = ", ".join(parts) if parts else "no bounds?!"
-    return ok, f"{name}.{key} = {value:.6g}  ({bound})"
+    if not parts:
+        # A rule that names no recognized bound (min/max/value) is a
+        # baseline typo that would otherwise silently disarm the gate.
+        return False, f"{name}.{key} = {value:.6g}  (rule has no min/max/value bound)"
+    return ok, f"{name}.{key} = {value:.6g}  ({', '.join(parts)})"
 
 
 def main(argv):
+    if len(argv) >= 2 and argv[1] == "--self-check":
+        return self_check()
     if len(argv) < 3:
         print(__doc__, file=sys.stderr)
         return 2
@@ -54,13 +74,24 @@ def main(argv):
     failures = []
     checked = 0
     for path in argv[2:]:
-        with open(path) as f:
-            data = json.load(f)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except OSError as e:
+            failures.append(f"{path}: unreadable bench results ({e})")
+            print(f"[gate] FAIL {path}: unreadable ({e})")
+            continue
+        except ValueError as e:
+            failures.append(f"{path}: invalid JSON ({e})")
+            print(f"[gate] FAIL {path}: invalid JSON ({e})")
+            continue
         name = data.get("name", "?")
         metrics = data.get("metrics", {})
         rules = baseline.get(name)
         if rules is None:
-            print(f"[gate] {path}: no baseline entry for '{name}' — skipped")
+            # A renamed bench must not silently disarm its own gate.
+            failures.append(f"{path}: no baseline entry for bench '{name}'")
+            print(f"[gate] FAIL {path}: no baseline entry for '{name}'")
             continue
         for key, rule in rules.items():
             if key.startswith("_"):
@@ -75,7 +106,7 @@ def main(argv):
             print(f"[gate] {'ok  ' if ok else 'FAIL'} {desc}")
             if not ok:
                 failures.append(desc)
-    if checked == 0:
+    if checked == 0 and not failures:
         print("[gate] nothing was checked — missing bench results?", file=sys.stderr)
         return 1
     if failures:
@@ -84,6 +115,88 @@ def main(argv):
             print(f"  - {f_}", file=sys.stderr)
         return 1
     print(f"\n[gate] all {checked} gated metrics within baseline")
+    return 0
+
+
+def self_check():
+    """Pytest-free scenario suite: every silent-pass path must fail loudly."""
+    baseline = {
+        "_comment": "self-check baseline",
+        "bench_a": {
+            "_note": "comment keys are skipped",
+            "ratio": {"min": 1.25},
+            "err": {"max": 1e-6},
+            "wall_s": {"value": 10.0, "tol_pct": 25},
+        },
+    }
+
+    def result(name, metrics):
+        return {"name": name, "metrics": metrics}
+
+    good = result("bench_a", {"ratio": 1.5, "err": 1e-9, "wall_s": 9.0})
+    scenarios = [
+        ("all metrics within bounds", good, 0),
+        ("min violated", result("bench_a", {"ratio": 1.1, "err": 1e-9, "wall_s": 9.0}), 1),
+        ("max violated", result("bench_a", {"ratio": 1.5, "err": 1e-3, "wall_s": 9.0}), 1),
+        ("tol ceiling violated", result("bench_a", {"ratio": 1.5, "err": 1e-9, "wall_s": 13.0}), 1),
+        ("gated metric missing from results", result("bench_a", {"ratio": 1.5, "err": 1e-9}), 1),
+        ("bench renamed away from its baseline entry", result("bench_b", {"ratio": 1.5}), 1),
+    ]
+    # A rule whose bound key is misspelled must fail, not silently pass.
+    typo_baseline = {"bench_a": {"ratio": {"mn": 1.25}}}
+    ran = 0
+    with tempfile.TemporaryDirectory() as td:
+        base_path = os.path.join(td, "baseline.json")
+        with open(base_path, "w") as f:
+            json.dump(baseline, f)
+        for desc, res, want in scenarios:
+            res_path = os.path.join(td, "BENCH_x.json")
+            with open(res_path, "w") as f:
+                json.dump(res, f)
+            got = main(["bench_gate.py", base_path, res_path])
+            assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
+            ran += 1
+
+        typo_path = os.path.join(td, "typo.json")
+        with open(typo_path, "w") as f:
+            json.dump(typo_baseline, f)
+        res_path = os.path.join(td, "BENCH_x.json")
+        with open(res_path, "w") as f:
+            json.dump(good, f)
+        got = main(["bench_gate.py", typo_path, res_path])
+        assert got == 1, f"self-check 'misspelled bound key': exit {got}, wanted 1"
+        ran += 1
+
+        # A result file that does not exist (bench forgot --json).
+        got = main(["bench_gate.py", base_path, os.path.join(td, "BENCH_missing.json")])
+        assert got == 1, f"self-check 'missing results file': exit {got}, wanted 1"
+        ran += 1
+
+        # A result file that is not JSON (crashed mid-write).
+        bad_path = os.path.join(td, "BENCH_bad.json")
+        with open(bad_path, "w") as f:
+            f.write('{"name": "bench_a", "metrics": {')
+        got = main(["bench_gate.py", base_path, bad_path])
+        assert got == 1, f"self-check 'invalid JSON': exit {got}, wanted 1"
+        ran += 1
+
+        # A baseline entry with only comment keys checks nothing -> fail.
+        empty_base = os.path.join(td, "empty.json")
+        with open(empty_base, "w") as f:
+            json.dump({"bench_a": {"_only": "comments"}}, f)
+        res_path = os.path.join(td, "BENCH_x.json")
+        with open(res_path, "w") as f:
+            json.dump(good, f)
+        got = main(["bench_gate.py", empty_base, res_path])
+        assert got == 1, f"self-check 'nothing checked': exit {got}, wanted 1"
+        ran += 1
+
+        # Usage error still reports distinctly.
+        got = main(["bench_gate.py"])
+        assert got == 2, f"self-check 'usage': exit {got}, wanted 2"
+        ran += 1
+
+    print(f"\n[gate] self-check: all {ran} scenarios behaved")
     return 0
 
 
