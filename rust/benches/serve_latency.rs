@@ -1,0 +1,246 @@
+//! L3-ingress bench: **open-loop** serving latency under Poisson load
+//! across the three QoS classes, over real loopback TCP through the full
+//! `wire → admission → batcher → registry → engine` path.
+//!
+//! Open-loop means senders pace by an absolute arrival schedule and
+//! never wait for responses — server slowdown shows up as tail latency
+//! instead of silently reducing the offered rate (the coordinated-
+//! omission trap of closed-loop serving benchmarks). Mid-run the
+//! operator is epoch-swapped between its dense and FAμST backends
+//! (`--swaps` times) while traffic flows; every OK payload is verified
+//! against the dense reference, so a misroute or a torn swap is a
+//! counted failure, not a silent wrong answer.
+//!
+//! Default shape is the CI soak: 100k requests at 25k req/s aggregate
+//! (~4-5 s wall), split ~30/40/30 across interactive/standard/bulk.
+//! With `--json` the per-class p50/p99/p999 and shed rates land in
+//! `BENCH_serve_latency.json`, gated by `scripts/bench_gate.py` against
+//! `benches/baseline.json`; the bench exits non-zero on any misrouted
+//! or protocol-error count.
+
+use faust::bench_util::{fmt, open_loop_load, BenchReport, ClassLoadReport, OpenLoopConfig, Table};
+use faust::coordinator::{
+    AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig, QosClass,
+};
+use faust::server::{Server, ServerConfig};
+use faust::transforms::{hadamard, hadamard_faust};
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Args {
+    n: usize,
+    rate: f64,
+    requests: usize,
+    swaps: usize,
+    workers: usize,
+    seed: u64,
+    json: bool,
+    json_dir: String,
+}
+
+fn parse_args() -> Args {
+    let mut a = Args {
+        n: 64,
+        rate: 25_000.0,
+        requests: 100_000,
+        swaps: 2,
+        workers: 4,
+        seed: 42,
+        json: false,
+        json_dir: ".".to_string(),
+    };
+    let argv: Vec<String> = std::env::args().collect();
+    let mut i = 1;
+    let take = |i: &mut usize| -> String {
+        *i += 1;
+        argv.get(*i).cloned().unwrap_or_else(|| {
+            eprintln!("missing value for {}", argv[*i - 1]);
+            std::process::exit(2);
+        })
+    };
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--n" => a.n = take(&mut i).parse().expect("--n"),
+            "--rate" => a.rate = take(&mut i).parse().expect("--rate"),
+            "--requests" => a.requests = take(&mut i).parse().expect("--requests"),
+            "--swaps" => a.swaps = take(&mut i).parse().expect("--swaps"),
+            "--workers" => a.workers = take(&mut i).parse().expect("--workers"),
+            "--seed" => a.seed = take(&mut i).parse().expect("--seed"),
+            "--json" => a.json = true,
+            "--json-dir" => a.json_dir = take(&mut i),
+            "--bench" => {} // ignore libtest's flag when invoked via cargo bench
+            other => {
+                eprintln!(
+                    "unknown arg {other}\nusage: serve_latency [--n D] [--rate R] \
+                     [--requests N] [--swaps S] [--workers W] [--seed S] \
+                     [--json] [--json-dir DIR]"
+                );
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    a
+}
+
+fn main() {
+    let args = parse_args();
+    let n = args.n;
+    println!(
+        "# serve_latency — open-loop Poisson load over loopback TCP\n\
+         # n={n} rate={} req/s requests={} swaps={} workers={}\n",
+        args.rate, args.requests, args.swaps, args.workers
+    );
+
+    let dense = hadamard(n);
+    let coord = Coordinator::start(
+        vec![("h".to_string(), Arc::new(dense.clone()) as Arc<dyn BatchOp>)],
+        CoordinatorConfig {
+            max_batch: 32,
+            batch_timeout: Duration::from_micros(200),
+            n_workers: args.workers,
+            queue_capacity: 8192,
+            adaptive: Some(AdaptiveBatchConfig::default()),
+        },
+    );
+    let server = Server::start(coord.client(), ServerConfig::default()).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    // Mid-traffic refactorize: swap the live operator between its dense
+    // and FAμST backends while the load runs. Same linear map, so the
+    // payload verification must keep passing across every swap.
+    let expected_wall = args.requests as f64 / args.rate.max(1.0);
+    let registry = coord.registry();
+    let swaps = args.swaps;
+    let swap_thread = std::thread::spawn(move || {
+        let mut done = 0usize;
+        let gap = expected_wall / (swaps + 1) as f64;
+        for k in 0..swaps {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+            let op: Arc<dyn BatchOp> = if k % 2 == 0 {
+                Arc::new(hadamard_faust(n))
+            } else {
+                Arc::new(hadamard(n))
+            };
+            if registry.swap_epoch("h", op).is_ok() {
+                done += 1;
+            }
+        }
+        done
+    });
+
+    // One open-loop stream per class, ~30/40/30 of the aggregate.
+    let shares = [
+        (QosClass::Interactive, 0.3),
+        (QosClass::Standard, 0.4),
+        (QosClass::Bulk, 0.3),
+    ];
+    let mut handles = Vec::new();
+    let mut assigned = 0usize;
+    for (k, (class, share)) in shares.iter().enumerate() {
+        let requests = if k + 1 == shares.len() {
+            args.requests - assigned // remainder keeps the total exact
+        } else {
+            (args.requests as f64 * share) as usize
+        };
+        assigned += requests;
+        let cfg = OpenLoopConfig {
+            addr: addr.clone(),
+            op: "h".to_string(),
+            class: *class,
+            rate_hz: args.rate * share,
+            requests,
+            dim: n,
+            seed: args.seed.wrapping_add(k as u64),
+        };
+        let verify = dense.clone();
+        handles.push(std::thread::spawn(move || open_loop_load(&cfg, Some(&verify))));
+    }
+    let reports: Vec<ClassLoadReport> = handles
+        .into_iter()
+        .map(|h| h.join().expect("load thread").expect("load stream"))
+        .collect();
+    let swaps_done = swap_thread.join().expect("swap thread");
+    server.shutdown();
+    let snap = coord.shutdown();
+
+    let mut table = Table::new(&[
+        "class", "sent", "ok", "shed", "p50_us", "p99_us", "p999_us", "epochs",
+    ]);
+    let mut epochs = std::collections::BTreeSet::new();
+    let (mut sent, mut ok, mut shed, mut misrouted, mut protocol_errors, mut other) =
+        (0usize, 0usize, 0usize, 0usize, 0usize, 0usize);
+    let mut wall_s = 0.0f64;
+    for r in &reports {
+        table.row(&[
+            r.class.name().to_string(),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            fmt(r.latency.p50_us),
+            fmt(r.latency.p99_us),
+            fmt(r.latency.p999_us),
+            r.epochs.len().to_string(),
+        ]);
+        sent += r.sent;
+        ok += r.ok;
+        shed += r.shed;
+        misrouted += r.misrouted;
+        protocol_errors += r.protocol_errors;
+        other += r.other_errors;
+        epochs.extend(r.epochs.iter().copied());
+        wall_s = wall_s.max(r.wall_s);
+    }
+    table.print();
+    let shed_rate_total = if sent == 0 { 0.0 } else { shed as f64 / sent as f64 };
+    let rps = sent as f64 / wall_s.max(1e-9);
+    println!(
+        "\n# sent={sent} ok={ok} shed={shed} ({:.2}%) other_errors={other} \
+         misrouted={misrouted} protocol_errors={protocol_errors}",
+        shed_rate_total * 100.0
+    );
+    println!(
+        "# wall={wall_s:.2}s achieved={rps:.0} req/s swaps={swaps_done} \
+         epochs_observed={} ingress_accepted={} hwm={}",
+        epochs.len(),
+        snap.ingress_accepted,
+        snap.ingress_queue_hwm
+    );
+
+    // The soak contract: every response routed to its request, every
+    // shed typed; anything else fails the bench outright.
+    let clean = misrouted == 0 && protocol_errors == 0 && ok + shed + other == sent;
+    println!(
+        "# soak: {} (zero misrouted, zero protocol errors, every request answered)",
+        if clean { "PASS" } else { "FAIL" }
+    );
+
+    if args.json {
+        let mut rep = BenchReport::new("serve_latency");
+        for r in &reports {
+            let c = r.class.name();
+            rep.push(&format!("{c}_p50_us"), r.latency.p50_us);
+            rep.push(&format!("{c}_p99_us"), r.latency.p99_us);
+            rep.push(&format!("{c}_p999_us"), r.latency.p999_us);
+            rep.push(&format!("{c}_shed_rate"), r.shed_rate());
+        }
+        rep.push("requests", sent as f64);
+        rep.push("shed_rate_total", shed_rate_total);
+        rep.push("misrouted", misrouted as f64);
+        rep.push("protocol_errors", protocol_errors as f64);
+        rep.push("epochs_observed", epochs.len() as f64);
+        rep.push("swaps_done", swaps_done as f64);
+        rep.push("wall_s", wall_s);
+        rep.push("rps", rps);
+        match rep.write(&args.json_dir) {
+            Ok(path) => println!("# wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write report: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if !clean {
+        std::process::exit(1);
+    }
+}

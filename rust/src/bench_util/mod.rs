@@ -6,7 +6,7 @@
 //! `benches/baseline.json` (see `scripts/bench_gate.py`) — the perf
 //! trajectory is enforced, not just printed.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Timing statistics over repeated runs (nanoseconds).
 #[derive(Clone, Debug)]
@@ -312,6 +312,229 @@ impl BenchReport {
     }
 }
 
+/// Latency percentiles (µs) over one request population.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+}
+
+/// Percentiles of a sample set in nanoseconds → µs (nearest-rank on the
+/// sorted samples; 0s when empty).
+pub fn latency_stats_us(samples_ns: &[u64]) -> LatencyStats {
+    let mut s: Vec<u64> = samples_ns.to_vec();
+    s.sort_unstable();
+    let q = |p: f64| {
+        if s.is_empty() {
+            0.0
+        } else {
+            s[((s.len() - 1) as f64 * p).round() as usize] as f64 / 1e3
+        }
+    };
+    LatencyStats {
+        n: s.len(),
+        p50_us: q(0.5),
+        p90_us: q(0.9),
+        p99_us: q(0.99),
+        p999_us: q(0.999),
+        max_us: q(1.0),
+    }
+}
+
+/// Configuration of one open-loop load stream (one QoS class on one
+/// connection).
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Operator to hit.
+    pub op: String,
+    pub class: crate::coordinator::QosClass,
+    /// Mean Poisson arrival rate (requests/s).
+    pub rate_hz: f64,
+    /// Requests to send.
+    pub requests: usize,
+    /// Input dimension (the operator's cols).
+    pub dim: usize,
+    /// Seed of the arrival process and the per-request inputs.
+    pub seed: u64,
+}
+
+/// Outcome of one open-loop stream.
+#[derive(Clone, Debug)]
+pub struct ClassLoadReport {
+    pub class: crate::coordinator::QosClass,
+    pub sent: usize,
+    /// OK responses whose payload verified (when a reference operator
+    /// was supplied; unverified OKs count here too).
+    pub ok: usize,
+    /// Typed `Overloaded` responses — the only acceptable shed signal.
+    pub shed: usize,
+    /// Any other typed error response.
+    pub other_errors: usize,
+    /// Wire/IO failures on the response path (should be zero).
+    pub protocol_errors: usize,
+    /// Responses that failed verification against the reference
+    /// operator, or whose req_id broke FIFO order (must be zero).
+    pub misrouted: usize,
+    /// Latency percentiles over the OK responses.
+    pub latency: LatencyStats,
+    /// Distinct registry epochs observed in OK responses (a mid-traffic
+    /// swap shows up as a second epoch).
+    pub epochs: Vec<u64>,
+    /// Wall clock of the whole stream.
+    pub wall_s: f64,
+}
+
+impl ClassLoadReport {
+    /// Shed responses over sent requests.
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.sent as f64
+        }
+    }
+}
+
+/// Seed mixer for per-request inputs: both the sender and the verifier
+/// regenerate request `i`'s input as `Rng::new(seed ^ (i+1)·GOLDEN)`.
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+fn request_input(seed: u64, req_id: u64, dim: usize) -> Vec<f64> {
+    let mut rng = crate::rng::Rng::new(seed ^ (req_id + 1).wrapping_mul(GOLDEN));
+    rng.gauss_vec(dim)
+}
+
+/// Drive one **open-loop** load stream against a running ingress server:
+/// Poisson arrivals at `cfg.rate_hz` paced by an absolute schedule — the
+/// sender never waits for responses, so server slowdown shows up as
+/// latency, not as a reduced offered rate (closed-loop coordination
+/// omission is the classic way serving benchmarks lie to themselves).
+///
+/// A receiver thread drains responses concurrently. Responses on one
+/// connection are FIFO, so each is matched to its send timestamp in
+/// order; an out-of-order `req_id` counts as misrouted. When `verify` is
+/// given, each OK payload is checked against `verify · x` for the
+/// deterministically regenerated input `x` (1e-6 absolute) — a swap to
+/// a same-operator new generation must not change results, so this is
+/// the end-to-end no-corruption check the soak gates on.
+pub fn open_loop_load(
+    cfg: &OpenLoopConfig,
+    verify: Option<&crate::linalg::Mat>,
+) -> Result<ClassLoadReport, String> {
+    use crate::coordinator::QosClass;
+    use crate::server::wire::{ErrorCode, WireResponse};
+    use crate::server::ServeConn;
+    use std::sync::mpsc;
+
+    let conn = ServeConn::connect(&cfg.addr).map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    let (mut tx_half, mut rx_half) = conn.split().map_err(|e| format!("split: {e}"))?;
+    let (ts_tx, ts_rx) = mpsc::channel::<(u64, Instant)>();
+    let class: QosClass = cfg.class;
+    let dim = cfg.dim;
+    let seed = cfg.seed;
+    let verify = verify.cloned();
+
+    let t_start = Instant::now();
+    let receiver = std::thread::Builder::new()
+        .name(format!("faust-load-rx-{}", class.name()))
+        .spawn(move || {
+            let mut ok = 0usize;
+            let mut shed = 0usize;
+            let mut other_errors = 0usize;
+            let mut protocol_errors = 0usize;
+            let mut misrouted = 0usize;
+            let mut samples_ns: Vec<u64> = Vec::new();
+            let mut epochs = std::collections::BTreeSet::new();
+            while let Ok((sent_id, t0)) = ts_rx.recv() {
+                let resp = match rx_half.recv() {
+                    Ok(r) => r,
+                    Err(_) => {
+                        protocol_errors += 1;
+                        break;
+                    }
+                };
+                let latency_ns = t0.elapsed().as_nanos() as u64;
+                if resp.req_id() != sent_id {
+                    misrouted += 1;
+                    continue;
+                }
+                match resp {
+                    WireResponse::Ok { epoch, rows, cols, data, .. } => {
+                        let mut good = cols == 1;
+                        if let Some(a) = &verify {
+                            let x = request_input(seed, sent_id, dim);
+                            let want = a.matvec(&x);
+                            good = good
+                                && rows == want.len()
+                                && data.len() == want.len()
+                                && data
+                                    .iter()
+                                    .zip(&want)
+                                    .all(|(y, w)| (y - w).abs() < 1e-6);
+                        }
+                        if good {
+                            ok += 1;
+                            epochs.insert(epoch);
+                            samples_ns.push(latency_ns);
+                        } else {
+                            misrouted += 1;
+                        }
+                    }
+                    WireResponse::Err { code: ErrorCode::Overloaded, .. } => shed += 1,
+                    WireResponse::Err { .. } => other_errors += 1,
+                }
+            }
+            (ok, shed, other_errors, protocol_errors, misrouted, samples_ns, epochs)
+        })
+        .map_err(|e| format!("spawn receiver: {e}"))?;
+
+    // Sender: absolute Poisson schedule from the seeded RNG.
+    let mut rng = crate::rng::Rng::new(cfg.seed);
+    let mean_gap_s = 1.0 / cfg.rate_hz.max(1e-9);
+    let mut t_next = 0.0f64;
+    let mut sent = 0usize;
+    for i in 0..cfg.requests {
+        let u: f64 = rng.uniform();
+        t_next += -mean_gap_s * (1.0 - u).max(1e-300).ln();
+        let elapsed = t_start.elapsed().as_secs_f64();
+        if t_next > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(t_next - elapsed));
+        }
+        let x = request_input(cfg.seed, i as u64, cfg.dim);
+        let t0 = Instant::now();
+        match tx_half.send(&cfg.op, cfg.class, 0, cfg.dim, 1, x) {
+            Ok(req_id) => {
+                sent += 1;
+                if ts_tx.send((req_id, t0)).is_err() {
+                    break; // receiver died (protocol error)
+                }
+            }
+            Err(_) => break, // connection gone; receiver will report
+        }
+    }
+    drop(ts_tx); // receiver drains the remaining responses, then exits
+    let (ok, shed, other_errors, protocol_errors, misrouted, samples_ns, epochs) =
+        receiver.join().map_err(|_| "receiver thread panicked".to_string())?;
+    Ok(ClassLoadReport {
+        class: cfg.class,
+        sent,
+        ok,
+        shed,
+        other_errors,
+        protocol_errors,
+        misrouted,
+        latency: latency_stats_us(&samples_ns),
+        epochs: epochs.into_iter().collect(),
+        wall_s: t_start.elapsed().as_secs_f64(),
+    })
+}
+
 /// Format a float compactly for tables.
 pub fn fmt(v: f64) -> String {
     if v == 0.0 {
@@ -413,5 +636,30 @@ mod tests {
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.contains("\"x\": 3.5"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn latency_stats_rank_the_tail() {
+        // 1..=1000 µs in ns: the percentiles are exact ranks.
+        let samples: Vec<u64> = (1..=1000u64).map(|us| us * 1000).collect();
+        let s = latency_stats_us(&samples);
+        assert_eq!(s.n, 1000);
+        assert!((s.p50_us - 500.0).abs() <= 1.0);
+        assert!((s.p99_us - 990.0).abs() <= 1.0);
+        assert!((s.p999_us - 999.0).abs() <= 1.0);
+        assert!((s.max_us - 1000.0).abs() < 1e-9);
+        // Empty populations report zeros, not a panic.
+        let z = latency_stats_us(&[]);
+        assert_eq!(z.n, 0);
+        assert_eq!(z.max_us, 0.0);
+    }
+
+    #[test]
+    fn request_inputs_are_deterministic_and_distinct() {
+        let a = request_input(7, 3, 16);
+        let b = request_input(7, 3, 16);
+        let c = request_input(7, 4, 16);
+        assert_eq!(a, b);
+        assert!(a.iter().zip(&c).any(|(x, y)| x != y));
     }
 }

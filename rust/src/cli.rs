@@ -99,7 +99,7 @@ SUBCOMMANDS:
               FAuST vs K-SVD vs DCT image denoising (paper Fig. 12, scaled)
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
               [--threads 2] [--adaptive-batch] [--factorize]
-              [--factorize-fleet N] [--repl]
+              [--factorize-fleet N] [--listen HOST:PORT] [--repl]
               run the operator-serving coordinator on a Hadamard FAuST,
               planned + parallelized by the apply engine.
               --adaptive-batch sizes each operator's batches from its
@@ -111,10 +111,24 @@ SUBCOMMANDS:
               serves N operators op0..op{N-1} and refactorizes them all
               *concurrently* on the serving engine (cross-operator
               batched sweeps), epoch-swapping each one the moment its
-              own factorization finishes; --repl drops into an
-              interactive operator console:
+              own factorization finishes; --listen puts the TCP ingress
+              front end (length-prefixed wire protocol, admission
+              control, QoS deadline classes — see server::wire) in
+              front of the coordinator so remote `faust client` traffic
+              is served alongside; --repl drops into an interactive
+              operator console:
                 ops | ops add <name> <n> | ops swap <name> |
                 ops rm <name> | apply <name> | stats | quit
+              (stats includes the ingress accepted/shed-per-class/
+              connection counters when --listen is active)
+  client      --addr HOST:PORT [--op faust] [--n 64] [--rate 5000]
+              [--requests 20000] [--class all|interactive|standard|bulk]
+              [--seed 42]
+              open-loop Poisson load client against a serve --listen
+              ingress: paces sends by an absolute arrival schedule
+              (never waits for responses), reports per-class p50/p99/
+              p999 latency and shed rates; exits non-zero on any
+              misrouted or protocol failure
   engine      --n 1024 [--threads 4] [--batch 32] [--plan dump]
               compile a cost-modeled execution plan, optionally dump it,
               and time planned/pooled apply vs the naive factor chain

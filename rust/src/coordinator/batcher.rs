@@ -9,9 +9,19 @@
 //! are capped by the execution-latency deadline and by the arena
 //! footprint the batch would pin (the zero-alloc invariant from PR 1).
 //! A fixed-size deployment simply passes the same limit for every call.
+//!
+//! Since PR 6 batching is additionally **traffic-class-aware**: requests
+//! carry a [`QosClass`](super::QosClass) whose deadline budget tightens
+//! (interactive) or widens (bulk) the latency term of the adaptive target
+//! ([`target_batch_for_class`]) and caps how long a partial batch may
+//! wait for company ([`Batcher::add_with_timeout`]). The router keys
+//! batches by `(operator, class)`, so an interactive request never waits
+//! behind a bulk batch filling up.
 
+use super::QosClass;
 use crate::engine::{Arena, CostProfile};
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::time::{Duration, Instant};
 
 /// When to flush a partial batch.
@@ -82,48 +92,99 @@ pub fn target_batch(p: &CostProfile, cfg: &AdaptiveBatchConfig) -> usize {
     b_amort.clamp(1, b_latency.min(b_arena).min(cfg.max_batch.max(1)))
 }
 
-/// Accumulates requests per key; generic so it is unit-testable without
-/// spinning up the full coordinator.
-pub struct Batcher<R> {
-    policy: BatchPolicy,
-    pending: HashMap<String, (Vec<R>, Instant)>,
+/// [`target_batch`] with the latency-deadline term driven by a traffic
+/// class: half the class's deadline budget (see
+/// [`QosClass::deadline_budget`]) replaces `cfg.latency_cap`, leaving the
+/// other half for queueing and accumulation. [`QosClass::Standard`]'s
+/// budget is `2 × latency_cap`, so the standard class reproduces
+/// [`target_batch`] exactly; interactive targets are never wider, bulk
+/// targets never narrower (both still bounded by the arena-footprint cap
+/// and the hard ceiling — QoS can stretch the deadline, not the
+/// zero-alloc invariant).
+pub fn target_batch_for_class(
+    p: &CostProfile,
+    cfg: &AdaptiveBatchConfig,
+    class: QosClass,
+) -> usize {
+    let cfg_c = AdaptiveBatchConfig {
+        latency_cap: class.deadline_budget(cfg.latency_cap) / 2,
+        ..cfg.clone()
+    };
+    target_batch(p, &cfg_c)
 }
 
-impl<R> Batcher<R> {
+/// One key's accumulating batch: requests, first-insert time, and the
+/// tightest flush timeout any of its requests asked for.
+struct PendingEntry<R> {
+    reqs: Vec<R>,
+    t0: Instant,
+    timeout: Duration,
+}
+
+/// Accumulates requests per key; generic over the key (the coordinator
+/// router keys by `(operator, QosClass)`) and the request type so it is
+/// unit-testable without spinning up the full coordinator.
+pub struct Batcher<K, R> {
+    policy: BatchPolicy,
+    pending: HashMap<K, PendingEntry<R>>,
+}
+
+impl<K: Eq + Hash + Clone, R> Batcher<K, R> {
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher { policy, pending: HashMap::new() }
     }
 
-    /// Add a request under `key`; returns a full batch once `limit`
+    /// Add a request under `key`; returns the key's batch once `limit`
     /// requests have accumulated. `limit` is resolved per operator by the
     /// router ([`target_batch`] under adaptive sizing, the policy default
     /// otherwise) and re-read on every call, so a registry swap that
     /// changes an operator's plan takes effect on the very next request.
     ///
-    /// The returned batch never exceeds `limit`, even when a swap just
-    /// *lowered* it below what had already accumulated — the surplus
-    /// stays pending (oldest-first flush), so the arena-footprint cap
-    /// behind an adaptive limit holds across swaps.
-    pub fn add(&mut self, key: String, r: R, limit: usize) -> Option<(String, Vec<R>)> {
+    /// The returned batch is the key's **entire accumulation**. When a
+    /// swap just *lowered* the limit below what had already accumulated,
+    /// the old accumulation flushes as one unit — the router splits it
+    /// into `limit`-sized jobs downstream, so the arena-footprint cap
+    /// behind an adaptive limit still holds — and the key starts fresh,
+    /// re-resolving the limit on its next add. (Leaving a surplus pending
+    /// here instead, as this method did before PR 6, pinned the flushed
+    /// chunk's stale deadline on the survivors: `next_deadline_in` went
+    /// to zero and the router span in a hot poll loop until the surplus
+    /// dribbled out.)
+    pub fn add(&mut self, key: K, r: R, limit: usize) -> Option<(K, Vec<R>)> {
+        let timeout = self.policy.timeout;
+        self.add_with_timeout(key, r, limit, timeout)
+    }
+
+    /// [`Batcher::add`] with a per-request flush-timeout cap: the entry
+    /// keeps the tightest timeout any of its requests carried, so one
+    /// interactive-deadline request in a batch pulls the whole batch's
+    /// flush forward. `timeout` is clamped to the policy timeout by the
+    /// router (a request can tighten the deadline, never extend it).
+    pub fn add_with_timeout(
+        &mut self,
+        key: K,
+        r: R,
+        limit: usize,
+        timeout: Duration,
+    ) -> Option<(K, Vec<R>)> {
         let limit = limit.max(1);
-        let entry = self
-            .pending
-            .entry(key.clone())
-            .or_insert_with(|| (Vec::new(), Instant::now()));
-        entry.0.push(r);
-        if entry.0.len() >= limit {
-            let batch: Vec<R> = entry.0.drain(..limit).collect();
-            if entry.0.is_empty() {
-                self.pending.remove(&key);
-            }
-            Some((key, batch))
+        let entry = self.pending.entry(key.clone()).or_insert_with(|| PendingEntry {
+            reqs: Vec::new(),
+            t0: Instant::now(),
+            timeout,
+        });
+        entry.timeout = entry.timeout.min(timeout);
+        entry.reqs.push(r);
+        if entry.reqs.len() >= limit {
+            let entry = self.pending.remove(&key).expect("entry just inserted");
+            Some((key, entry.reqs))
         } else {
             None
         }
     }
 
     /// [`Batcher::add`] at the policy's default threshold.
-    pub fn add_default(&mut self, key: String, r: R) -> Option<(String, Vec<R>)> {
+    pub fn add_default(&mut self, key: K, r: R) -> Option<(K, Vec<R>)> {
         let limit = self.policy.max_batch;
         self.add(key, r, limit)
     }
@@ -132,42 +193,35 @@ impl<R> Batcher<R> {
     pub fn next_deadline_in(&self) -> Option<Duration> {
         self.pending
             .values()
-            .map(|(_, t0)| {
-                let elapsed = t0.elapsed();
-                self.policy.timeout.saturating_sub(elapsed)
-            })
+            .map(|e| e.timeout.saturating_sub(e.t0.elapsed()))
             .min()
     }
 
-    /// Remove and return every batch older than the timeout.
-    pub fn take_expired(&mut self) -> Vec<(String, Vec<R>)> {
-        let timeout = self.policy.timeout;
-        let expired: Vec<String> = self
+    /// Remove and return every batch older than its flush timeout.
+    pub fn take_expired(&mut self) -> Vec<(K, Vec<R>)> {
+        let expired: Vec<K> = self
             .pending
             .iter()
-            .filter(|(_, (_, t0))| t0.elapsed() >= timeout)
+            .filter(|(_, e)| e.t0.elapsed() >= e.timeout)
             .map(|(k, _)| k.clone())
             .collect();
         expired
             .into_iter()
             .map(|k| {
-                let (reqs, _) = self.pending.remove(&k).unwrap();
-                (k, reqs)
+                let entry = self.pending.remove(&k).unwrap();
+                (k, entry.reqs)
             })
             .collect()
     }
 
     /// Flush everything (shutdown).
-    pub fn drain(&mut self) -> Vec<(String, Vec<R>)> {
-        self.pending
-            .drain()
-            .map(|(k, (reqs, _))| (k, reqs))
-            .collect()
+    pub fn drain(&mut self) -> Vec<(K, Vec<R>)> {
+        self.pending.drain().map(|(k, e)| (k, e.reqs)).collect()
     }
 
     /// Number of pending (unflushed) requests.
     pub fn pending_len(&self) -> usize {
-        self.pending.values().map(|(v, _)| v.len()).sum()
+        self.pending.values().map(|e| e.reqs.len()).sum()
     }
 }
 
@@ -182,7 +236,7 @@ mod tests {
 
     #[test]
     fn flushes_when_full() {
-        let mut b: Batcher<u32> = Batcher::new(policy(3, 1000));
+        let mut b: Batcher<String, u32> = Batcher::new(policy(3, 1000));
         assert!(b.add_default("a".into(), 1).is_none());
         assert!(b.add_default("a".into(), 2).is_none());
         let (k, reqs) = b.add_default("a".into(), 3).expect("should flush at max");
@@ -193,7 +247,7 @@ mod tests {
 
     #[test]
     fn per_key_limits_override_the_policy_default() {
-        let mut b: Batcher<u32> = Batcher::new(policy(100, 1000));
+        let mut b: Batcher<String, u32> = Batcher::new(policy(100, 1000));
         assert!(b.add("a".into(), 1, 2).is_none());
         let (k, reqs) = b.add("a".into(), 2, 2).expect("per-key limit of 2");
         assert_eq!(k, "a");
@@ -204,25 +258,34 @@ mod tests {
     }
 
     #[test]
-    fn lowered_limit_never_flushes_an_oversized_batch() {
-        let mut b: Batcher<u32> = Batcher::new(policy(100, 1000));
+    fn lowered_limit_flushes_the_old_accumulation_and_re_resolves() {
+        // Regression (PR 6): a key whose per-operator limit was lowered by
+        // a swap while a partial batch was pending must flush the *old*
+        // accumulation in one unit (the router splits it into limit-sized
+        // jobs — see the coordinator's never-exceeds-arena test) and then
+        // re-resolve the limit on the next add. The pre-fix behavior left
+        // a surplus pending under the flushed chunk's stale deadline,
+        // driving next_deadline_in to zero and the router into a hot poll.
+        let mut b: Batcher<String, u32> = Batcher::new(policy(100, 1000));
         for i in 0..5 {
             assert!(b.add("a".into(), i, 10).is_none());
         }
         // A swap lowered the operator's target to 2: the next add flushes
-        // a chunk of 2 (oldest first), never the whole backlog.
-        let (_, reqs) = b.add("a".into(), 5, 2).expect("flush at new limit");
-        assert_eq!(reqs, vec![0, 1]);
-        assert_eq!(b.pending_len(), 4);
-        // Subsequent adds keep draining in limit-sized chunks.
-        let (_, reqs) = b.add("a".into(), 6, 2).expect("still over the limit");
-        assert_eq!(reqs, vec![2, 3]);
-        assert_eq!(b.pending_len(), 3);
+        // everything that had accumulated under the old limit.
+        let (_, reqs) = b.add("a".into(), 5, 2).expect("flush the old accumulation");
+        assert_eq!(reqs, vec![0, 1, 2, 3, 4, 5]);
+        // The key started fresh: no surplus, no stale deadline.
+        assert_eq!(b.pending_len(), 0);
+        assert!(b.next_deadline_in().is_none(), "stale entry survived the flush");
+        // The next adds run at the re-resolved limit.
+        assert!(b.add("a".into(), 6, 2).is_none());
+        let (_, reqs) = b.add("a".into(), 7, 2).expect("fresh batch at the new limit");
+        assert_eq!(reqs, vec![6, 7]);
     }
 
     #[test]
     fn keys_are_batched_separately() {
-        let mut b: Batcher<u32> = Batcher::new(policy(2, 1000));
+        let mut b: Batcher<String, u32> = Batcher::new(policy(2, 1000));
         assert!(b.add_default("a".into(), 1).is_none());
         assert!(b.add_default("b".into(), 2).is_none());
         assert_eq!(b.pending_len(), 2);
@@ -233,8 +296,21 @@ mod tests {
     }
 
     #[test]
+    fn class_keys_batch_separately_per_class() {
+        // The router keys by (operator, class): interactive requests never
+        // wait behind a bulk batch filling up.
+        let mut b: Batcher<(String, QosClass), u32> = Batcher::new(policy(2, 1000));
+        assert!(b.add(("op".into(), QosClass::Interactive), 1, 2).is_none());
+        assert!(b.add(("op".into(), QosClass::Bulk), 2, 2).is_none());
+        let (k, reqs) = b.add(("op".into(), QosClass::Interactive), 3, 2).unwrap();
+        assert_eq!(k, ("op".to_string(), QosClass::Interactive));
+        assert_eq!(reqs, vec![1, 3]);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
     fn expiry_flushes_partial_batches() {
-        let mut b: Batcher<u32> = Batcher::new(policy(100, 5));
+        let mut b: Batcher<String, u32> = Batcher::new(policy(100, 5));
         b.add_default("a".into(), 1);
         assert!(b.take_expired().is_empty());
         std::thread::sleep(Duration::from_millis(8));
@@ -244,8 +320,23 @@ mod tests {
     }
 
     #[test]
+    fn per_request_timeout_tightens_the_entry_deadline() {
+        // One interactive-deadline request pulls the whole batch's flush
+        // forward; a later laxer request cannot push it back.
+        let mut b: Batcher<String, u32> = Batcher::new(policy(100, 1000));
+        b.add_with_timeout("a".into(), 1, 100, Duration::from_millis(1000));
+        b.add_with_timeout("a".into(), 2, 100, Duration::from_millis(5));
+        b.add_with_timeout("a".into(), 3, 100, Duration::from_millis(1000));
+        assert!(b.next_deadline_in().unwrap() <= Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(8));
+        let expired = b.take_expired();
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].1, vec![1, 2, 3]);
+    }
+
+    #[test]
     fn deadline_reporting() {
-        let mut b: Batcher<u32> = Batcher::new(policy(10, 50));
+        let mut b: Batcher<String, u32> = Batcher::new(policy(10, 50));
         assert!(b.next_deadline_in().is_none());
         b.add_default("a".into(), 1);
         let d = b.next_deadline_in().unwrap();
@@ -254,7 +345,7 @@ mod tests {
 
     #[test]
     fn drain_returns_everything() {
-        let mut b: Batcher<u32> = Batcher::new(policy(10, 1000));
+        let mut b: Batcher<String, u32> = Batcher::new(policy(10, 1000));
         b.add_default("a".into(), 1);
         b.add_default("b".into(), 2);
         let mut all = b.drain();
@@ -305,5 +396,26 @@ mod tests {
         // Hard ceiling always wins.
         let capped = AdaptiveBatchConfig { max_batch: 3, ..AdaptiveBatchConfig::default() };
         assert!(target_batch(&p, &capped) <= 3);
+    }
+
+    #[test]
+    fn class_targets_order_with_their_deadline_budgets() {
+        let cfg = AdaptiveBatchConfig::default();
+        let f = crate::transforms::hadamard_faust(256);
+        let p = ApplyPlan::compile(&f, &PlanConfig::default()).profile();
+        let ti = target_batch_for_class(&p, &cfg, QosClass::Interactive);
+        let ts = target_batch_for_class(&p, &cfg, QosClass::Standard);
+        let tb = target_batch_for_class(&p, &cfg, QosClass::Bulk);
+        // Standard reproduces the class-less model exactly; interactive
+        // is never wider, bulk never narrower.
+        assert_eq!(ts, target_batch(&p, &cfg));
+        assert!(ti <= ts && ts <= tb, "class targets out of order: {ti} {ts} {tb}");
+        // Bulk's wide budget still cannot stretch the arena cap.
+        let small = AdaptiveBatchConfig {
+            max_arena_bytes: Arena::footprint_for(p.max_dim) * 4,
+            ..AdaptiveBatchConfig::default()
+        };
+        let t = target_batch_for_class(&p, &small, QosClass::Bulk);
+        assert!(Arena::footprint_for(p.max_dim * t) <= small.max_arena_bytes);
     }
 }

@@ -1,7 +1,11 @@
 //! Lock-free serving metrics: request/batch/latency counters updated on
 //! the hot path, plus registry lifecycle counters (register/swap/retire)
-//! so a deployment can see operator churn next to its throughput.
+//! so a deployment can see operator churn next to its throughput, plus
+//! network-ingress counters (accepted / shed-per-class / connections /
+//! intake-queue high-water) recorded by the TCP front end's admission
+//! controller (see [`crate::server`]).
 
+use super::QosClass;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Atomic counters updated on the hot path.
@@ -19,6 +23,11 @@ pub struct Metrics {
     registered: AtomicU64,
     swaps: AtomicU64,
     retired: AtomicU64,
+    ingress_accepted: AtomicU64,
+    ingress_shed: [AtomicU64; 3],
+    ingress_connections: AtomicU64,
+    ingress_active_connections: AtomicU64,
+    ingress_queue_hwm: AtomicU64,
 }
 
 /// Point-in-time copy of the metrics.
@@ -40,6 +49,17 @@ pub struct MetricsSnapshot {
     pub swaps: u64,
     /// Operators removed via `Registry::retire`.
     pub retired: u64,
+    /// Wire requests admitted by the ingress admission controller.
+    pub ingress_accepted: u64,
+    /// Wire requests shed (`Overloaded`), per QoS class
+    /// (indexed by [`QosClass::index`]).
+    pub ingress_shed: [u64; 3],
+    /// TCP connections accepted over the server's lifetime.
+    pub ingress_connections: u64,
+    /// TCP connections currently open.
+    pub ingress_active_connections: u64,
+    /// High-water mark of the admission controller's in-flight depth.
+    pub ingress_queue_hwm: u64,
 }
 
 impl MetricsSnapshot {
@@ -69,6 +89,11 @@ impl MetricsSnapshot {
             self.flops_total as f64 / self.exec_ns_total as f64
         }
     }
+
+    /// Total wire requests shed across all QoS classes.
+    pub fn ingress_shed_total(&self) -> u64 {
+        self.ingress_shed.iter().sum()
+    }
 }
 
 impl Metrics {
@@ -87,6 +112,11 @@ impl Metrics {
             registered: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
             retired: AtomicU64::new(0),
+            ingress_accepted: AtomicU64::new(0),
+            ingress_shed: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            ingress_connections: AtomicU64::new(0),
+            ingress_active_connections: AtomicU64::new(0),
+            ingress_queue_hwm: AtomicU64::new(0),
         }
     }
 
@@ -127,6 +157,27 @@ impl Metrics {
         self.retired.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_ingress_accepted(&self) {
+        self.ingress_accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_ingress_shed(&self, class: QosClass) {
+        self.ingress_shed[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_conn_opened(&self) {
+        self.ingress_connections.fetch_add(1, Ordering::Relaxed);
+        self.ingress_active_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_conn_closed(&self) {
+        self.ingress_active_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn record_ingress_depth(&self, depth: u64) {
+        self.ingress_queue_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -142,6 +193,15 @@ impl Metrics {
             registered: self.registered.load(Ordering::Relaxed),
             swaps: self.swaps.load(Ordering::Relaxed),
             retired: self.retired.load(Ordering::Relaxed),
+            ingress_accepted: self.ingress_accepted.load(Ordering::Relaxed),
+            ingress_shed: [
+                self.ingress_shed[0].load(Ordering::Relaxed),
+                self.ingress_shed[1].load(Ordering::Relaxed),
+                self.ingress_shed[2].load(Ordering::Relaxed),
+            ],
+            ingress_connections: self.ingress_connections.load(Ordering::Relaxed),
+            ingress_active_connections: self.ingress_active_connections.load(Ordering::Relaxed),
+            ingress_queue_hwm: self.ingress_queue_hwm.load(Ordering::Relaxed),
         }
     }
 }
@@ -178,6 +238,27 @@ mod tests {
         m.record_retired();
         let s = m.snapshot();
         assert_eq!((s.registered, s.swaps, s.retired), (2, 1, 1));
+    }
+
+    #[test]
+    fn ingress_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_conn_opened();
+        m.record_conn_opened();
+        m.record_conn_closed();
+        m.record_ingress_accepted();
+        m.record_ingress_shed(QosClass::Bulk);
+        m.record_ingress_shed(QosClass::Bulk);
+        m.record_ingress_shed(QosClass::Interactive);
+        m.record_ingress_depth(7);
+        m.record_ingress_depth(3); // high-water never regresses
+        let s = m.snapshot();
+        assert_eq!(s.ingress_connections, 2);
+        assert_eq!(s.ingress_active_connections, 1);
+        assert_eq!(s.ingress_accepted, 1);
+        assert_eq!(s.ingress_shed, [1, 0, 2]);
+        assert_eq!(s.ingress_shed_total(), 3);
+        assert_eq!(s.ingress_queue_hwm, 7);
     }
 
     #[test]

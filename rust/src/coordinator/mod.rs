@@ -67,7 +67,9 @@ mod batcher;
 mod metrics;
 mod registry;
 
-pub use batcher::{target_batch, AdaptiveBatchConfig, BatchPolicy, Batcher};
+pub use batcher::{
+    target_batch, target_batch_for_class, AdaptiveBatchConfig, BatchPolicy, Batcher,
+};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{FleetRefactorization, Registry, RegistryError};
 
@@ -207,10 +209,93 @@ impl CoordinatorConfig {
     }
 }
 
+/// Traffic class of a request: how tight its latency budget is.
+///
+/// Classes are served through class-separated batches — an interactive
+/// request never waits behind a bulk batch filling up — and each class
+/// feeds its own deadline budget into [`target_batch`]'s latency term
+/// (see [`target_batch_for_class`]), so batch sizing is traffic-class
+/// aware end to end:
+///
+/// - [`Interactive`](QosClass::Interactive): half the base budget —
+///   smaller batches, earlier flushes, tightest tail latency;
+/// - [`Standard`](QosClass::Standard): reproduces the class-less
+///   behavior exactly (the default for [`Client::apply`]);
+/// - [`Bulk`](QosClass::Bulk): throughput traffic — a wide budget lets
+///   batches grow toward the arena/flop caps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum QosClass {
+    Interactive = 0,
+    Standard = 1,
+    Bulk = 2,
+}
+
+impl QosClass {
+    /// All classes, in priority order (index == wire code).
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Standard, QosClass::Bulk];
+
+    /// Dense index for per-class counters (same as the wire code).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Decode a wire byte.
+    pub fn from_u8(b: u8) -> Option<QosClass> {
+        match b {
+            0 => Some(QosClass::Interactive),
+            1 => Some(QosClass::Standard),
+            2 => Some(QosClass::Bulk),
+            _ => None,
+        }
+    }
+
+    /// Lower-case class name (CLI flags, metrics keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Bulk => "bulk",
+        }
+    }
+
+    /// The class's end-to-end deadline budget, scaled from the service's
+    /// base budget (`2 × latency_cap` under adaptive sizing — so standard
+    /// reproduces the class-less [`target_batch`] exactly).
+    pub fn deadline_budget(self, base: Duration) -> Duration {
+        match self {
+            QosClass::Interactive => base / 2,
+            QosClass::Standard => base * 2,
+            QosClass::Bulk => base * 20,
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for QosClass {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "interactive" => Ok(QosClass::Interactive),
+            "standard" => Ok(QosClass::Standard),
+            "bulk" => Ok(QosClass::Bulk),
+            other => Err(format!("unknown QoS class '{other}' (interactive|standard|bulk)")),
+        }
+    }
+}
+
 /// One in-flight request.
 struct Request {
     op: String,
     x: Vec<f64>,
+    class: QosClass,
+    /// Caller-supplied deadline override; `None` uses the class budget.
+    deadline: Option<Duration>,
     enqueued: Instant,
     resp: SyncSender<Result<Vec<f64>, ServeError>>,
 }
@@ -290,17 +375,44 @@ pub struct Client {
 }
 
 impl Client {
-    /// Blocking single matvec through the service.
+    /// Blocking single matvec through the service (standard class).
     pub fn apply(&self, op: &str, x: Vec<f64>) -> Result<Vec<f64>, ServeError> {
-        let rx = self.submit(op, x)?;
+        self.apply_class(op, x, QosClass::Standard, None)
+    }
+
+    /// Blocking single matvec with an explicit QoS class and optional
+    /// per-request deadline override.
+    pub fn apply_class(
+        &self,
+        op: &str,
+        x: Vec<f64>,
+        class: QosClass,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<f64>, ServeError> {
+        let rx = self.submit_class(op, x, class, deadline)?;
         rx.recv().map_err(|_| ServeError::ShuttingDown)?
     }
 
-    /// Submit without blocking on the result; returns the response channel.
+    /// Submit without blocking on the result; returns the response
+    /// channel. Standard class — [`Client::apply`]'s non-blocking form.
     pub fn submit(
         &self,
         op: &str,
         x: Vec<f64>,
+    ) -> Result<Receiver<Result<Vec<f64>, ServeError>>, ServeError> {
+        self.submit_class(op, x, QosClass::Standard, None)
+    }
+
+    /// Submit with an explicit QoS class and optional deadline override.
+    /// The class selects the batch the request joins (classes never mix
+    /// in one batch) and scales its flush deadline; an explicit
+    /// `deadline` tightens — never extends — the class budget.
+    pub fn submit_class(
+        &self,
+        op: &str,
+        x: Vec<f64>,
+        class: QosClass,
+        deadline: Option<Duration>,
     ) -> Result<Receiver<Result<Vec<f64>, ServeError>>, ServeError> {
         let handle = self
             .registry
@@ -310,7 +422,14 @@ impl Client {
             return Err(ServeError::WrongDimension { expected: handle.cols(), got: x.len() });
         }
         let (rtx, rrx) = sync_channel(1);
-        let req = Request { op: op.to_string(), x, enqueued: Instant::now(), resp: rtx };
+        let req = Request {
+            op: op.to_string(),
+            x,
+            class,
+            deadline,
+            enqueued: Instant::now(),
+            resp: rtx,
+        };
         match self.tx.try_send(req) {
             Ok(()) => {
                 self.metrics.record_submitted();
@@ -333,6 +452,12 @@ impl Client {
     /// retire operators without stopping the service).
     pub fn registry(&self) -> &Arc<Registry> {
         &self.registry
+    }
+
+    /// Shared metrics handle for subsystems that record into the same
+    /// counters (the ingress server's admission controller).
+    pub(crate) fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 }
 
@@ -371,9 +496,20 @@ impl Coordinator {
         let r_metrics = metrics.clone();
         let r_stop = stop.clone();
         let policy = BatchPolicy { max_batch: cfg.max_batch, timeout: cfg.batch_timeout };
+        // Base deadline budget the QoS classes scale from: the adaptive
+        // latency cap when plan-aware sizing is on, else a multiple of
+        // the flush timeout (standard's budget is 2× the base, so the
+        // fixed-mode standard deadline stays well clear of the timeout).
+        let base_budget = cfg
+            .adaptive
+            .as_ref()
+            .map(|a| a.latency_cap)
+            .unwrap_or(cfg.batch_timeout * 4);
         let router = std::thread::Builder::new()
             .name("faust-router".into())
-            .spawn(move || router_loop(rx, r_registry, r_jobs, r_metrics, policy, r_stop))
+            .spawn(move || {
+                router_loop(rx, r_registry, r_jobs, r_metrics, policy, base_budget, r_stop)
+            })
             .expect("spawn router");
 
         // Worker pool.
@@ -424,49 +560,63 @@ fn router_loop(
     jobs: Arc<JobQueue>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
+    base_budget: Duration,
     stop: Arc<AtomicBool>,
 ) {
-    let mut batcher: Batcher<Request> = Batcher::new(policy.clone());
-    // Per-operator flush threshold, re-resolved on every request so a
-    // registry swap that changes the plan re-sizes batches immediately.
-    let limit_for = |registry: &Registry, key: &str| {
-        registry.batch_limit(key).unwrap_or(policy.max_batch)
+    // Batches are keyed by (operator, class): classes never mix in one
+    // batch, so an interactive request is never held hostage by a bulk
+    // batch filling toward a wide target.
+    let mut batcher: Batcher<(String, QosClass), Request> = Batcher::new(policy.clone());
+    // Per-(operator, class) flush threshold, re-resolved on every request
+    // so a registry swap that changes the plan re-sizes batches
+    // immediately.
+    let limit_for = |registry: &Registry, key: &(String, QosClass)| {
+        registry
+            .batch_limit_class(&key.0, key.1)
+            .unwrap_or(policy.max_batch)
+    };
+    // A request's flush timeout: the policy deadline, tightened (never
+    // extended) by the request's effective deadline budget — a quarter
+    // of it, leaving the rest for queueing + execution.
+    let timeout_for = |req: &Request| {
+        let budget = req
+            .deadline
+            .unwrap_or_else(|| req.class.deadline_budget(base_budget));
+        policy.timeout.min(budget / 4)
+    };
+    let route = |batcher: &mut Batcher<(String, QosClass), Request>, req: Request| {
+        let key = (req.op.clone(), req.class);
+        let limit = limit_for(&registry, &key);
+        let timeout = timeout_for(&req);
+        if let Some((key, reqs)) = batcher.add_with_timeout(key, req, limit, timeout) {
+            flush(&registry, &jobs, &metrics, key.0, reqs, limit);
+        }
     };
     loop {
         let timeout = batcher
             .next_deadline_in()
             .unwrap_or(Duration::from_millis(5));
         match rx.recv_timeout(timeout) {
-            Ok(req) => {
-                let key = req.op.clone();
-                let limit = limit_for(&registry, &key);
-                if let Some((op_name, reqs)) = batcher.add(key, req, limit) {
-                    flush(&registry, &jobs, &metrics, op_name, reqs, limit);
-                }
-            }
+            Ok(req) => route(&mut batcher, req),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
         }
-        for (op_name, reqs) in batcher.take_expired() {
-            let limit = limit_for(&registry, &op_name);
-            flush(&registry, &jobs, &metrics, op_name, reqs, limit);
+        for (key, reqs) in batcher.take_expired() {
+            let limit = limit_for(&registry, &key);
+            flush(&registry, &jobs, &metrics, key.0, reqs, limit);
         }
         if stop.load(Ordering::Acquire) {
             // Drain anything still in the channel, then stop.
             while let Ok(req) = rx.try_recv() {
-                let key = req.op.clone();
-                let limit = limit_for(&registry, &key);
-                if let Some((op_name, reqs)) = batcher.add(key, req, limit) {
-                    flush(&registry, &jobs, &metrics, op_name, reqs, limit);
-                }
+                route(&mut batcher, req);
             }
             break;
         }
     }
     // Drain remaining partial batches on shutdown.
-    for (op_name, reqs) in batcher.drain() {
-        let limit = limit_for(&registry, &op_name);
-        flush(&registry, &jobs, &metrics, op_name, reqs, limit);
+    for (key, reqs) in batcher.drain() {
+        let limit = limit_for(&registry, &key);
+        flush(&registry, &jobs, &metrics, key.0, reqs, limit);
     }
 }
 

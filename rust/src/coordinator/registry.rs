@@ -26,9 +26,9 @@
 //! swap to a differently-shaped *plan* (same matrix shape, different
 //! sparsity) immediately re-sizes its batches.
 
-use super::batcher::{target_batch, AdaptiveBatchConfig};
+use super::batcher::{target_batch_for_class, AdaptiveBatchConfig};
 use super::metrics::Metrics;
-use super::BatchOp;
+use super::{BatchOp, QosClass};
 use crate::engine::FleetCtx;
 use crate::faust::Faust;
 use crate::hierarchical::{factorize_fleet_traced_with_ctx, HierarchicalConfig};
@@ -77,9 +77,10 @@ struct Entry {
     op: Arc<dyn BatchOp>,
     /// Epoch this generation of the operator was published at.
     epoch: u64,
-    /// Flush threshold derived from the operator's cost profile
+    /// Per-QoS-class flush thresholds derived from the operator's cost
+    /// profile, indexed by [`QosClass::index`]
     /// (None ⇒ no profile / fixed sizing ⇒ the policy default applies).
-    target_batch: Option<usize>,
+    target_batch: Option<[usize; 3]>,
 }
 
 /// Concurrent name → operator map with epoch-stamped hot swap.
@@ -111,7 +112,9 @@ impl Registry {
 
     fn entry_for(&self, op: Arc<dyn BatchOp>, epoch: u64) -> Entry {
         let target_batch = match (&self.adaptive, op.cost_profile()) {
-            (Some(cfg), Some(p)) => Some(target_batch(&p, cfg)),
+            (Some(cfg), Some(p)) => {
+                Some(QosClass::ALL.map(|c| target_batch_for_class(&p, cfg, c)))
+            }
             _ => None,
         };
         Entry { op, epoch, target_batch }
@@ -177,10 +180,22 @@ impl Registry {
         self.ops.read().unwrap().get(name).map(|e| e.op.clone())
     }
 
-    /// The flush threshold for `name`'s current generation, if adaptive
-    /// sizing derived one.
+    /// The standard-class flush threshold for `name`'s current
+    /// generation, if adaptive sizing derived one (identical to the
+    /// class-less [`target_batch`](super::target_batch) of the profile).
     pub fn batch_limit(&self, name: &str) -> Option<usize> {
-        self.ops.read().unwrap().get(name).and_then(|e| e.target_batch)
+        self.batch_limit_class(name, QosClass::Standard)
+    }
+
+    /// The flush threshold for `name` as seen by one QoS `class`, if
+    /// adaptive sizing derived one: each class feeds its own deadline
+    /// budget into the latency term of the target-batch model.
+    pub fn batch_limit_class(&self, name: &str, class: QosClass) -> Option<usize> {
+        self.ops
+            .read()
+            .unwrap()
+            .get(name)
+            .and_then(|e| e.target_batch.map(|t| t[class.index()]))
     }
 
     /// Epoch `name`'s current generation was published at.
@@ -425,9 +440,17 @@ mod tests {
         r.register("m", op(64, 64)).unwrap();
         let t = r.batch_limit("m").expect("dense op has a profile");
         assert!(t >= 1);
+        // Per-class limits order with the class deadline budgets, and
+        // batch_limit is exactly the standard class.
+        let ti = r.batch_limit_class("m", QosClass::Interactive).unwrap();
+        let ts = r.batch_limit_class("m", QosClass::Standard).unwrap();
+        let tb = r.batch_limit_class("m", QosClass::Bulk).unwrap();
+        assert_eq!(ts, t);
+        assert!(ti <= ts && ts <= tb, "class limits out of order: {ti} {ts} {tb}");
         // Fixed-mode registry never derives targets.
         let fixed = Registry::new(None);
         fixed.register("m", op(64, 64)).unwrap();
         assert_eq!(fixed.batch_limit("m"), None);
+        assert_eq!(fixed.batch_limit_class("m", QosClass::Bulk), None);
     }
 }

@@ -33,10 +33,17 @@
 //! - **L3-serve ([`coordinator`])**: live operator registry
 //!   (register / hot-swap / retire with epoch draining, plus
 //!   `Registry::refactorize_fleet` — re-learn a whole served fleet
-//!   concurrently and swap each operator as it finishes) + plan-aware
-//!   adaptive batcher (per-operator batch widths from each plan's
-//!   flop/byte [`engine::CostProfile`]) + worker pool turning planned
-//!   operators into a matvec service.
+//!   concurrently and swap each operator as it finishes) + plan-aware,
+//!   traffic-class-aware adaptive batcher (per-operator, per-QoS-class
+//!   batch widths from each plan's flop/byte [`engine::CostProfile`])
+//!   + worker pool turning planned operators into a matvec service.
+//! - **L3-ingress ([`server`])**: std-only TCP front end over the
+//!   coordinator — length-prefixed binary wire protocol
+//!   ([`server::wire`]), admission control shedding load *before* the
+//!   batcher ([`server::admission`]), per-connection reader/writer
+//!   threads, QoS deadline classes end to end, graceful drain on
+//!   shutdown, and an open-loop Poisson load generator
+//!   ([`bench_util::open_loop_load`]).
 //! - **L2/L1 (python/, build-time only)**: JAX palm4MSA step + Pallas
 //!   gradient kernel, AOT-lowered to HLO text loaded by the `runtime`
 //!   module (feature `pjrt`, off by default so the crate builds offline).
@@ -73,6 +80,7 @@ pub mod prox;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod solvers;
 pub mod sparse;
 pub mod testutil;

@@ -1,11 +1,12 @@
 //! `faust` CLI — drive every subsystem of the reproduction from one binary.
 
-use faust::bench_util::{fmt, Table};
+use faust::bench_util::{fmt, open_loop_load, OpenLoopConfig, Table};
 use faust::cli::{Args, USAGE};
 use faust::coordinator::{
     engine_ops, AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig,
-    RegistryError,
+    QosClass, RegistryError,
 };
+use faust::server::{Server, ServerConfig};
 use faust::dictlearn::{faust_dictionary_learning_with_ctx, KsvdConfig};
 use faust::engine::{ApplyEngine, EngineConfig, ExecCtx, FleetCtx, PlanConfig};
 use faust::hierarchical::{factorize_with_ctx, HierarchicalConfig};
@@ -51,6 +52,7 @@ fn main() {
         Some("localize") => cmd_localize(&args),
         Some("denoise") => cmd_denoise(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("engine") => cmd_engine(&args),
         Some("runtime") => cmd_runtime(&args),
         Some("help") | None => {
@@ -463,10 +465,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // `--listen ADDR` puts the TCP ingress front end (wire protocol +
+    // admission control + QoS classes) in front of the coordinator; it
+    // serves remote `faust client` traffic alongside the local load.
+    let ingress = match args.get_str("listen") {
+        Some(addr) => {
+            let server = Server::start(
+                coord.client(),
+                ServerConfig { addr: addr.to_string(), ..ServerConfig::default() },
+            )
+            .map_err(|e| err(format!("bind {addr}: {e}")))?;
+            println!("ingress listening on {}", server.local_addr());
+            Some(server)
+        }
+        None => None,
+    };
     if args.flag("repl") {
         // The swapper (if any) publishes into the same live registry while
         // the console runs; it finishes on its own.
-        return serve_repl(coord, &engine);
+        return serve_repl(coord, ingress, &engine);
     }
     let client = coord.client();
     let mut table =
@@ -519,6 +536,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.join()
             .map_err(|_| err("fleet refactorization thread panicked"))?;
     }
+    if let Some(server) = ingress {
+        server.shutdown();
+    }
     let snap = coord.shutdown();
     let em = engine.metrics();
     println!(
@@ -526,11 +546,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
          registered={} swaps={}",
         em.applies, em.arena_reuses, em.arena_allocs, snap.registered, snap.swaps
     );
+    if snap.ingress_connections > 0 {
+        println!(
+            "ingress: accepted={} shed=[interactive={} standard={} bulk={}] \
+             connections={} hwm={}",
+            snap.ingress_accepted,
+            snap.ingress_shed[0],
+            snap.ingress_shed[1],
+            snap.ingress_shed[2],
+            snap.ingress_connections,
+            snap.ingress_queue_hwm
+        );
+    }
     Ok(())
 }
 
 /// Interactive operator console on a live coordinator (`serve --repl`).
-fn serve_repl(coord: Coordinator, engine: &Arc<ApplyEngine>) -> Result<()> {
+fn serve_repl(
+    coord: Coordinator,
+    ingress: Option<Server>,
+    engine: &Arc<ApplyEngine>,
+) -> Result<()> {
     use std::io::BufRead;
     let client = coord.client();
     let registry = coord.registry();
@@ -631,11 +667,92 @@ fn serve_repl(coord: Coordinator, engine: &Arc<ApplyEngine>) -> Result<()> {
                     s.swaps,
                     s.retired,
                 );
+                println!(
+                    "  ingress: accepted={} shed=[interactive={} standard={} bulk={}] \
+                     connections={} active={} hwm={}",
+                    s.ingress_accepted,
+                    s.ingress_shed[0],
+                    s.ingress_shed[1],
+                    s.ingress_shed[2],
+                    s.ingress_connections,
+                    s.ingress_active_connections,
+                    s.ingress_queue_hwm,
+                );
             }
             _ => println!("unknown command (ops | ops add/swap/rm | apply | stats | quit)"),
         }
     }
+    if let Some(server) = ingress {
+        server.shutdown();
+    }
     coord.shutdown();
+    Ok(())
+}
+
+/// Open-loop load client against a running `serve --listen` ingress:
+/// Poisson arrivals per QoS class over the wire protocol, reporting
+/// per-class latency percentiles and shed rates.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args
+        .get_str("addr")
+        .ok_or_else(|| err("client needs --addr HOST:PORT (see serve --listen)"))?;
+    let op = args.get_str("op").unwrap_or("faust").to_string();
+    let n: usize = args.get("n", 64);
+    let rate: f64 = args.get("rate", 5_000.0);
+    let requests: usize = args.get("requests", 20_000);
+    let seed: u64 = args.get("seed", 42);
+    let class_arg = args.get_str("class").unwrap_or("all");
+    // `--class all` splits the aggregate ~30/40/30 like the latency
+    // bench; a single class name sends one stream.
+    let streams: Vec<(QosClass, f64)> = if class_arg == "all" {
+        vec![
+            (QosClass::Interactive, 0.3),
+            (QosClass::Standard, 0.4),
+            (QosClass::Bulk, 0.3),
+        ]
+    } else {
+        vec![(class_arg.parse::<QosClass>().map_err(err)?, 1.0)]
+    };
+    println!(
+        "open-loop client → {addr} op='{op}' n={n} rate={rate} req/s \
+         requests={requests} classes={}",
+        streams.len()
+    );
+    let mut handles = Vec::new();
+    for (k, (class, share)) in streams.iter().enumerate() {
+        let cfg = OpenLoopConfig {
+            addr: addr.to_string(),
+            op: op.clone(),
+            class: *class,
+            rate_hz: rate * share,
+            requests: (requests as f64 * share).round() as usize,
+            dim: n,
+            seed: seed.wrapping_add(k as u64),
+        };
+        handles.push(std::thread::spawn(move || open_loop_load(&cfg, None)));
+    }
+    let mut table = Table::new(&[
+        "class", "sent", "ok", "shed", "errors", "p50_us", "p99_us", "p999_us",
+    ]);
+    let mut failures = 0usize;
+    for h in handles {
+        let r = h.join().map_err(|_| err("load thread panicked"))?.map_err(err)?;
+        failures += r.misrouted + r.protocol_errors;
+        table.row(&[
+            r.class.name().to_string(),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            (r.other_errors + r.protocol_errors + r.misrouted).to_string(),
+            fmt(r.latency.p50_us),
+            fmt(r.latency.p99_us),
+            fmt(r.latency.p999_us),
+        ]);
+    }
+    table.print();
+    if failures > 0 {
+        return Err(err(format!("{failures} misrouted/protocol failures")));
+    }
     Ok(())
 }
 

@@ -1,0 +1,202 @@
+//! Admission control: shed load *before* it reaches the batcher.
+//!
+//! The coordinator's bounded request queue is the last line of defense;
+//! by the time it fills, every queued request is already paying the
+//! backlog's latency. The admission controller sits at the wire instead
+//! and bounds two things:
+//!
+//! - **depth**: how many wire requests may be in flight at once
+//!   (submitted but not yet answered);
+//! - **modeled cost**: the summed flops of in-flight requests, so one
+//!   batch of huge-operator columns cannot crowd out thousands of cheap
+//!   interactive matvecs behind an innocent-looking depth number.
+//!
+//! Watermarks are **per class**: each QoS class sees only a fraction of
+//! the global budget ([`AdmissionConfig::class_headroom`]), ordered so
+//! bulk sheds first and interactive last. A rejected request surfaces to
+//! the client as the typed [`ErrorCode::Overloaded`]
+//! (see [`super::wire`]) and bumps the per-class shed counter in
+//! [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) — shedding
+//! is never a dropped connection or a silent stall.
+//!
+//! Accounting is add-then-check: a permit optimistically reserves its
+//! depth/cost, checks the class watermark, and backs out on rejection.
+//! Two racing requests can thus each see the other's reservation — the
+//! controller may shed a request that would *just* have fit, never
+//! admit one over budget. Release is RAII ([`Permit`]), so an IO error
+//! or panic on the connection path cannot leak budget.
+
+use crate::coordinator::{Metrics, QosClass};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Watermarks for the admission controller.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Global cap on in-flight wire requests.
+    pub max_inflight: u64,
+    /// Global cap on the summed modeled cost (flops per matvec × cols)
+    /// of in-flight requests.
+    pub max_inflight_cost: u64,
+    /// Per-class fraction of the global budgets, indexed by
+    /// [`QosClass::index`]. Bulk's headroom is lowest so it sheds
+    /// first; interactive keeps admitting until the global cap.
+    pub class_headroom: [f64; 3],
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_inflight: 4096,
+            max_inflight_cost: 1 << 32,
+            class_headroom: [1.0, 0.85, 0.6],
+        }
+    }
+}
+
+/// The typed rejection: this request was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Overloaded;
+
+/// Shared admission state (one per server, shared by all connections).
+pub struct Admission {
+    cfg: AdmissionConfig,
+    inflight: AtomicU64,
+    inflight_cost: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig, metrics: Arc<Metrics>) -> Self {
+        Admission {
+            cfg,
+            inflight: AtomicU64::new(0),
+            inflight_cost: AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// Current in-flight depth (tests / introspection).
+    pub fn depth(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+/// Try to admit a request of modeled `cost` under `class`. On success
+/// the returned [`Permit`] holds the reservation until dropped; on
+/// rejection the per-class shed counter is bumped and nothing is held.
+pub fn try_admit(
+    admission: &Arc<Admission>,
+    class: QosClass,
+    cost: u64,
+) -> Result<Permit, Overloaded> {
+    let a = admission;
+    let depth = a.inflight.fetch_add(1, Ordering::AcqRel) + 1;
+    let total = a.inflight_cost.fetch_add(cost, Ordering::AcqRel) + cost;
+    let h = a.cfg.class_headroom[class.index()].clamp(0.0, 1.0);
+    let depth_cap = (a.cfg.max_inflight as f64 * h) as u64;
+    let cost_cap = (a.cfg.max_inflight_cost as f64 * h) as u64;
+    if depth > depth_cap.max(1) || total > cost_cap.max(cost) {
+        a.inflight.fetch_sub(1, Ordering::AcqRel);
+        a.inflight_cost.fetch_sub(cost, Ordering::AcqRel);
+        a.metrics.record_ingress_shed(class);
+        return Err(Overloaded);
+    }
+    a.metrics.record_ingress_accepted();
+    a.metrics.record_ingress_depth(depth);
+    Ok(Permit { admission: a.clone(), cost })
+}
+
+/// RAII reservation: releases its depth and cost on drop.
+pub struct Permit {
+    admission: Arc<Admission>,
+    cost: u64,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.admission.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.admission.inflight_cost.fetch_sub(self.cost, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admission(max_inflight: u64, max_cost: u64) -> Arc<Admission> {
+        Arc::new(Admission::new(
+            AdmissionConfig {
+                max_inflight,
+                max_inflight_cost: max_cost,
+                ..AdmissionConfig::default()
+            },
+            Arc::new(Metrics::new()),
+        ))
+    }
+
+    #[test]
+    fn depth_watermark_sheds_and_releases() {
+        let a = admission(2, u64::MAX / 2);
+        let p1 = try_admit(&a, QosClass::Interactive, 1).unwrap();
+        let p2 = try_admit(&a, QosClass::Interactive, 1).unwrap();
+        assert_eq!(a.depth(), 2);
+        // Full: the third is shed (typed, counted).
+        assert!(matches!(try_admit(&a, QosClass::Interactive, 1), Err(Overloaded)));
+        assert_eq!(a.metrics.snapshot().ingress_shed, [1, 0, 0]);
+        // A release frees the slot.
+        drop(p1);
+        let _p3 = try_admit(&a, QosClass::Interactive, 1).unwrap();
+        drop(p2);
+        assert_eq!(a.depth(), 1);
+        let s = a.metrics.snapshot();
+        assert_eq!(s.ingress_accepted, 3);
+        assert_eq!(s.ingress_queue_hwm, 2);
+    }
+
+    #[test]
+    fn cost_watermark_sheds_expensive_load() {
+        let a = admission(1000, 100);
+        let _p = try_admit(&a, QosClass::Interactive, 90).unwrap();
+        // Depth is fine but the summed cost would blow the budget.
+        assert!(matches!(try_admit(&a, QosClass::Interactive, 50), Err(Overloaded)));
+        // A cheap request still fits.
+        let _q = try_admit(&a, QosClass::Interactive, 5).unwrap();
+        // A single over-budget request on an idle controller is still
+        // admitted (cost_cap.max(cost)): nothing smaller could ever run
+        // otherwise, and depth still bounds it.
+        let b = admission(1000, 10);
+        assert!(try_admit(&b, QosClass::Interactive, 50).is_ok());
+    }
+
+    #[test]
+    fn bulk_sheds_before_interactive() {
+        // Headroom [1.0, 0.85, 0.6] over max_inflight 10: bulk is cut
+        // off at 6 while interactive still admits.
+        let a = admission(10, u64::MAX / 2);
+        let mut permits = Vec::new();
+        for _ in 0..6 {
+            permits.push(try_admit(&a, QosClass::Bulk, 1).unwrap());
+        }
+        assert!(matches!(try_admit(&a, QosClass::Bulk, 1), Err(Overloaded)));
+        let p = try_admit(&a, QosClass::Interactive, 1).unwrap();
+        assert_eq!(a.depth(), 7);
+        drop(p);
+        drop(permits);
+        assert_eq!(a.depth(), 0);
+        assert_eq!(a.metrics.snapshot().ingress_shed, [0, 0, 1]);
+    }
+
+    #[test]
+    fn failed_admission_leaks_no_budget() {
+        let a = admission(1, u64::MAX / 2);
+        let p = try_admit(&a, QosClass::Standard, 1).unwrap();
+        for _ in 0..100 {
+            assert!(try_admit(&a, QosClass::Standard, 1).is_err());
+        }
+        // The 100 rejections backed out their reservations.
+        drop(p);
+        assert_eq!(a.depth(), 0);
+        assert!(try_admit(&a, QosClass::Standard, 1).is_ok());
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal `std`-only client side of the wire protocol: connect, send
+//! framed requests, read framed responses. Used by the CLI `client`
+//! subcommand, the open-loop load generator
+//! ([`crate::bench_util::open_loop_load`]) and the loopback tests.
+
+use super::wire::{self, WireError, WireRequest, WireResponse};
+use crate::coordinator::QosClass;
+use std::net::TcpStream;
+
+/// A blocking client connection.
+pub struct ServeConn {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl ServeConn {
+    pub fn connect(addr: &str) -> std::io::Result<ServeConn> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(ServeConn { stream, next_id: 0 })
+    }
+
+    /// Send one request without waiting for its response (pipelining);
+    /// returns the request id. Responses arrive in request order.
+    pub fn send(
+        &mut self,
+        op: &str,
+        class: QosClass,
+        deadline_us: u32,
+        rows: usize,
+        cols: usize,
+        data: Vec<f64>,
+    ) -> Result<u64, WireError> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        let req =
+            WireRequest { req_id, op: op.to_string(), class, deadline_us, rows, cols, data };
+        wire::write_frame(&mut self.stream, &wire::encode_request(&req))?;
+        Ok(req_id)
+    }
+
+    /// Read the next response (FIFO). A clean peer close surfaces as
+    /// [`WireError::Truncated`].
+    pub fn recv(&mut self) -> Result<WireResponse, WireError> {
+        let body = wire::read_frame(&mut self.stream)?.ok_or(WireError::Truncated)?;
+        wire::decode_response(&body)
+    }
+
+    /// Blocking single matvec: send one column, wait for its response.
+    pub fn apply(
+        &mut self,
+        op: &str,
+        class: QosClass,
+        x: Vec<f64>,
+    ) -> Result<WireResponse, WireError> {
+        let rows = x.len();
+        self.send(op, class, 0, rows, 1, x)?;
+        self.recv()
+    }
+
+    /// Split into independently-usable halves: open-loop load
+    /// generation paces sends by the clock on one thread while another
+    /// drains responses.
+    pub fn split(self) -> std::io::Result<(ServeSender, ServeReceiver)> {
+        let read_half = self.stream.try_clone()?;
+        Ok((
+            ServeSender { stream: self.stream, next_id: self.next_id },
+            ServeReceiver { stream: read_half },
+        ))
+    }
+}
+
+/// Write half of a split [`ServeConn`].
+pub struct ServeSender {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl ServeSender {
+    /// Same contract as [`ServeConn::send`].
+    pub fn send(
+        &mut self,
+        op: &str,
+        class: QosClass,
+        deadline_us: u32,
+        rows: usize,
+        cols: usize,
+        data: Vec<f64>,
+    ) -> Result<u64, WireError> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        let req =
+            WireRequest { req_id, op: op.to_string(), class, deadline_us, rows, cols, data };
+        wire::write_frame(&mut self.stream, &wire::encode_request(&req))?;
+        Ok(req_id)
+    }
+}
+
+/// Read half of a split [`ServeConn`].
+pub struct ServeReceiver {
+    stream: TcpStream,
+}
+
+impl ServeReceiver {
+    /// Same contract as [`ServeConn::recv`].
+    pub fn recv(&mut self) -> Result<WireResponse, WireError> {
+        let body = wire::read_frame(&mut self.stream)?.ok_or(WireError::Truncated)?;
+        wire::decode_response(&body)
+    }
+}

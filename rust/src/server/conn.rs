@@ -1,0 +1,292 @@
+//! Per-connection plumbing: a reader on the accepting thread and a
+//! dedicated writer thread, joined by a bounded queue.
+//!
+//! The reader parses frames, runs admission, fans a request's columns
+//! into the coordinator and pushes a [`Pending`] ticket into the writer
+//! queue. The writer resolves tickets **in order**, so responses leave
+//! the connection in request order (FIFO) — the invariant that makes
+//! misrouting impossible without any per-request bookkeeping on the
+//! client. The bounded queue is intake backpressure: a client that
+//! pipelines faster than it reads its responses eventually blocks its
+//! own reader instead of ballooning server memory.
+//!
+//! Error discipline: a malformed-but-delimited body gets a typed
+//! [`ErrorCode::Malformed`] response and the connection stays up; an
+//! error that breaks framing (bad magic, oversized announcement,
+//! truncation) closes the connection. Neither path ever panics a
+//! connection thread.
+
+use super::admission::{self, Admission, Permit};
+use super::wire::{self, ErrorCode, WireError, WireRequest, WireResponse};
+use crate::coordinator::{Client, ServeError};
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A ticket in the writer queue: either an already-resolved response or
+/// the per-column response channels of an admitted request.
+enum Pending {
+    Ready(WireResponse),
+    InFlight {
+        req_id: u64,
+        /// Registry epoch of the generation resolved at submit time.
+        epoch: u64,
+        rows: usize,
+        cols: usize,
+        rxs: Vec<Receiver<Result<Vec<f64>, ServeError>>>,
+        /// Admission reservation, released when the ticket resolves.
+        _permit: Permit,
+    },
+}
+
+/// Serve one accepted connection to completion. Returns when the peer
+/// closes, framing breaks, or `stop` is observed; in-flight requests
+/// are drained (their responses written) before the connection closes.
+pub(crate) fn serve_conn(
+    stream: TcpStream,
+    client: Client,
+    admission: Arc<Admission>,
+    queue_bound: usize,
+    read_timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let metrics = client.metrics_handle();
+    metrics.record_conn_opened();
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(read_timeout.max(Duration::from_millis(1))));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            metrics.record_conn_closed();
+            return;
+        }
+    };
+    let (tx, rx) = sync_channel::<Pending>(queue_bound.max(1));
+    let writer = std::thread::Builder::new()
+        .name("faust-conn-writer".into())
+        .spawn(move || writer_loop(write_half, rx));
+    match writer {
+        Ok(writer) => {
+            reader_loop(stream, &client, &admission, &tx, &stop);
+            // Closing the queue lets the writer drain every in-flight
+            // ticket (graceful drain), then exit.
+            drop(tx);
+            let _ = writer.join();
+        }
+        Err(_) => drop(tx),
+    }
+    metrics.record_conn_closed();
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    client: &Client,
+    admission: &Arc<Admission>,
+    tx: &SyncSender<Pending>,
+    stop: &AtomicBool,
+) {
+    loop {
+        let body = match read_frame_polling(&mut stream, stop) {
+            Ok(Some(b)) => b,
+            // Clean close, stop observed, or broken framing: either way
+            // the read side is done.
+            Ok(None) | Err(_) => return,
+        };
+        let ticket = match wire::decode_request(&body) {
+            Ok(req) => handle_request(client, admission, req),
+            Err(e) if !e.breaks_framing() => Pending::Ready(WireResponse::Err {
+                req_id: peek_req_id(&body),
+                code: ErrorCode::Malformed,
+                msg: e.to_string(),
+            }),
+            Err(_) => return,
+        };
+        if tx.send(ticket).is_err() {
+            return; // writer gone (peer closed its read side)
+        }
+    }
+}
+
+/// Best-effort req_id extraction from a body that failed to decode, so
+/// even a Malformed response correlates when the prefix was intact.
+fn peek_req_id(body: &[u8]) -> u64 {
+    if body.len() >= 12 {
+        let mut x = [0u8; 8];
+        x.copy_from_slice(&body[4..12]);
+        u64::from_le_bytes(x)
+    } else {
+        0
+    }
+}
+
+/// Admission + submission for one decoded request.
+fn handle_request(client: &Client, admission: &Arc<Admission>, req: WireRequest) -> Pending {
+    let req_id = req.req_id;
+    let ready_err = |code: ErrorCode, msg: String| {
+        Pending::Ready(WireResponse::Err { req_id, code, msg })
+    };
+    let handle = match client.registry().get(&req.op) {
+        Some(h) => h,
+        None => {
+            let e = ServeError::UnknownOperator(req.op.clone());
+            return ready_err(ErrorCode::UnknownOperator, e.to_string());
+        }
+    };
+    if req.rows != handle.cols() {
+        let e = ServeError::WrongDimension { expected: handle.cols(), got: req.rows };
+        return ready_err(ErrorCode::WrongDimension, e.to_string());
+    }
+    let epoch = client.registry().epoch_of(&req.op).unwrap_or(0);
+    if req.cols == 0 {
+        return Pending::Ready(WireResponse::Ok {
+            req_id,
+            epoch,
+            rows: handle.rows(),
+            cols: 0,
+            data: Vec::new(),
+        });
+    }
+    let cost = handle.flops_per_matvec() as u64 * req.cols as u64;
+    let permit = match admission::try_admit(admission, req.class, cost) {
+        Ok(p) => p,
+        Err(_) => return ready_err(ErrorCode::Overloaded, "shed by admission control".into()),
+    };
+    let deadline = if req.deadline_us == 0 {
+        None
+    } else {
+        Some(Duration::from_micros(req.deadline_us as u64))
+    };
+    let mut rxs = Vec::with_capacity(req.cols);
+    for c in 0..req.cols {
+        let x = req.data[c * req.rows..(c + 1) * req.rows].to_vec();
+        match client.submit_class(&req.op, x, req.class, deadline) {
+            Ok(rx) => rxs.push(rx),
+            // One column failing to submit fails the whole request with
+            // the mapped typed code (QueueFull → Overloaded); responses
+            // of already-submitted columns are discarded.
+            Err(e) => return ready_err(ErrorCode::from_serve_error(&e), e.to_string()),
+        }
+    }
+    Pending::InFlight { req_id, epoch, rows: handle.rows(), cols: req.cols, rxs, _permit: permit }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Pending>) {
+    while let Ok(ticket) = rx.recv() {
+        let resp = match ticket {
+            Pending::Ready(r) => r,
+            Pending::InFlight { req_id, epoch, rows, cols, rxs, _permit } => {
+                let mut data = vec![0.0; rows * cols];
+                let mut failure: Option<ServeError> = None;
+                for (c, crx) in rxs.into_iter().enumerate() {
+                    match crx.recv() {
+                        Ok(Ok(y)) if y.len() == rows => {
+                            data[c * rows..(c + 1) * rows].copy_from_slice(&y);
+                        }
+                        // A reshape (retire + register) resolved this
+                        // column against a different-shape generation.
+                        Ok(Ok(y)) => {
+                            failure.get_or_insert(ServeError::WrongDimension {
+                                expected: rows,
+                                got: y.len(),
+                            });
+                        }
+                        Ok(Err(e)) => {
+                            failure.get_or_insert(e);
+                        }
+                        Err(_) => {
+                            failure.get_or_insert(ServeError::ShuttingDown);
+                        }
+                    }
+                }
+                match failure {
+                    None => WireResponse::Ok { req_id, epoch, rows, cols, data },
+                    Some(e) => WireResponse::Err {
+                        req_id,
+                        code: ErrorCode::from_serve_error(&e),
+                        msg: e.to_string(),
+                    },
+                }
+            }
+        };
+        if wire::write_frame(&mut stream, &wire::encode_response(&resp)).is_err() {
+            // Peer is gone: drop the remaining tickets (their permits
+            // release on drop) and let the reader notice on its side.
+            return;
+        }
+    }
+}
+
+/// [`wire::read_frame`] adapted to a socket with a read timeout: the
+/// timeout only polls for the *start* of a frame (checking `stop` while
+/// idle); once a frame has begun, reads continue through timeouts so a
+/// slow sender cannot desynchronize framing. If `stop` is raised
+/// mid-frame the reader allows a bounded grace (~20 poll intervals) for
+/// the frame to complete, then gives up.
+fn read_frame_polling(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> Result<Option<Vec<u8>>, WireError> {
+    const STOP_GRACE_POLLS: u32 = 20;
+    let mut stop_polls = 0u32;
+    let mut timed_out = |mid_frame: bool| -> bool {
+        // Returns true when the caller should abort the read.
+        if stop.load(Ordering::Acquire) {
+            if !mid_frame {
+                return true;
+            }
+            stop_polls += 1;
+            return stop_polls > STOP_GRACE_POLLS;
+        }
+        false
+    };
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) => {
+                return if got == 0 { Ok(None) } else { Err(WireError::Truncated) };
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if timed_out(got > 0) {
+                    return if got == 0 { Ok(None) } else { Err(WireError::Truncated) };
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    let body_len = u32::from_le_bytes(len);
+    if body_len > wire::MAX_FRAME {
+        return Err(WireError::Oversized(body_len));
+    }
+    let mut body = vec![0u8; body_len as usize];
+    let mut at = 0usize;
+    while at < body.len() {
+        match stream.read(&mut body[at..]) {
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => at += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if timed_out(true) {
+                    return Err(WireError::Truncated);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    Ok(Some(body))
+}

@@ -1,0 +1,290 @@
+//! Network ingress: a `std`-only TCP serving front end over the
+//! coordinator.
+//!
+//! This is the L3-ingress layer of the serving pipeline — the full path
+//! a request travels is now
+//!
+//! ```text
+//! wire → admission → batcher → registry → engine
+//! ```
+//!
+//! - [`wire`]: a compact length-prefixed binary protocol (format spec in
+//!   the module docs) with typed error responses;
+//! - [`admission`]: load shedding *before* the batcher — depth and
+//!   modeled-cost watermarks with per-QoS-class headroom, typed
+//!   `Overloaded` rejections, per-class shed counters in
+//!   [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot);
+//! - per-connection reader/writer threads with a bounded ticket queue
+//!   ([`conn`](self)): responses leave each connection in request order
+//!   (FIFO), so misrouting is structurally impossible;
+//! - QoS classes ([`QosClass`](crate::coordinator::QosClass)) ride the
+//!   wire into the coordinator's class-keyed batcher, making batch
+//!   sizing traffic-class-aware end to end;
+//! - graceful lifecycle: [`Server::shutdown`] stops accepting, signals
+//!   every reader, drains in-flight responses and joins all threads.
+//!   Registry swaps
+//!   ([`swap_epoch`](crate::coordinator::Registry::swap_epoch)) remain
+//!   safe mid-connection — in-flight batches drain on their
+//!   generation's `Arc`, and each OK response reports the epoch that
+//!   served it.
+//!
+//! tokio is not available offline; like the coordinator, the front end
+//! is `std::thread` + blocking sockets with timeouts — a compute-bound
+//! matvec service saturates on worker flops long before thread-per-
+//! connection ingress becomes the bottleneck.
+//!
+//! ```no_run
+//! use faust::coordinator::{Coordinator, CoordinatorConfig, BatchOp, QosClass};
+//! use faust::server::{Server, ServerConfig, ServeConn};
+//! use faust::transforms::hadamard;
+//! use std::sync::Arc;
+//!
+//! let n = 16;
+//! let coord = Coordinator::start(
+//!     vec![("h".to_string(), Arc::new(hadamard(n)) as Arc<dyn BatchOp>)],
+//!     CoordinatorConfig::default(),
+//! );
+//! let server = Server::start(coord.client(), ServerConfig::default()).unwrap();
+//! let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+//! let _resp = conn.apply("h", QosClass::Interactive, vec![1.0; n]).unwrap();
+//! server.shutdown();
+//! coord.shutdown();
+//! ```
+
+pub mod admission;
+mod client;
+mod conn;
+pub mod wire;
+
+pub use admission::{try_admit, Admission, AdmissionConfig, Overloaded, Permit};
+pub use client::{ServeConn, ServeReceiver, ServeSender};
+
+use crate::coordinator::Client;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Ingress server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Listen address; port 0 picks an ephemeral port (see
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Admission-controller watermarks.
+    pub admission: AdmissionConfig,
+    /// Bound of each connection's reader → writer ticket queue: a
+    /// client that pipelines faster than it drains responses blocks its
+    /// own reader instead of ballooning server memory.
+    pub conn_queue: usize,
+    /// Socket read timeout — how often an idle reader polls the stop
+    /// flag; latency of graceful shutdown, not of requests.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            admission: AdmissionConfig::default(),
+            conn_queue: 256,
+            read_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// The running ingress server: accept loop + per-connection threads.
+pub struct Server {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start serving `client`'s coordinator.
+    pub fn start(client: Client, cfg: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        // Non-blocking accept so the loop can poll the stop flag
+        // without a signal mechanism.
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let admission = Arc::new(Admission::new(cfg.admission.clone(), client.metrics_handle()));
+        let a_stop = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("faust-accept".into())
+            .spawn(move || accept_loop(listener, client, admission, cfg, a_stop))
+            .expect("spawn accept loop");
+        Ok(Server { local_addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `addr:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful shutdown: stop accepting, signal every connection
+    /// reader, drain in-flight responses to their clients, join all
+    /// threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    client: Client,
+    admission: Arc<Admission>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let c = client.clone();
+                let a = admission.clone();
+                let s = stop.clone();
+                let queue = cfg.conn_queue;
+                let rt = cfg.read_timeout;
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("faust-conn".into())
+                    .spawn(move || conn::serve_conn(stream, c, a, queue, rt, s))
+                {
+                    conns.push(h);
+                }
+                // Spawn failure: the stream drops (connection refused at
+                // the TCP level); nothing to clean up.
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+                // Reap finished connection threads so a long-lived
+                // server does not accumulate handles.
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(_) => break,
+        }
+    }
+    // Drain: every reader observes `stop` within its read timeout, its
+    // writer flushes in-flight responses, then the thread exits.
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchOp, Coordinator, CoordinatorConfig, QosClass};
+    use crate::server::wire::{ErrorCode, WireResponse};
+    use crate::transforms::hadamard;
+    use std::io::Write;
+
+    fn start_service() -> (Coordinator, Server, crate::linalg::Mat) {
+        let n = 16;
+        let h = hadamard(n);
+        let coord = Coordinator::start(
+            vec![("h".to_string(), Arc::new(h.clone()) as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let server = Server::start(coord.client(), ServerConfig::default()).unwrap();
+        (coord, server, h)
+    }
+
+    #[test]
+    fn serves_a_matvec_over_loopback() {
+        let (coord, server, h) = start_service();
+        let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+        let x: Vec<f64> = (0..16).map(|i| i as f64 - 7.5).collect();
+        let want = h.matvec(&x);
+        match conn.apply("h", QosClass::Interactive, x).unwrap() {
+            WireResponse::Ok { epoch, rows, cols, data, .. } => {
+                assert_eq!((rows, cols), (16, 1));
+                assert!(epoch >= 1);
+                for i in 0..16 {
+                    assert!((data[i] - want[i]).abs() < 1e-12);
+                }
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        server.shutdown();
+        let snap = coord.shutdown();
+        assert_eq!(snap.ingress_accepted, 1);
+        assert_eq!(snap.ingress_connections, 1);
+        assert_eq!(snap.ingress_active_connections, 0);
+    }
+
+    #[test]
+    fn unknown_operator_is_a_typed_response_not_a_close() {
+        let (coord, server, h) = start_service();
+        let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+        match conn.apply("ghost", QosClass::Standard, vec![0.0; 16]).unwrap() {
+            WireResponse::Err { code, .. } => assert_eq!(code, ErrorCode::UnknownOperator),
+            other => panic!("unexpected response: {other:?}"),
+        }
+        // The connection survived the error.
+        let x = vec![1.0; 16];
+        let want = h.matvec(&x);
+        match conn.apply("h", QosClass::Standard, x).unwrap() {
+            WireResponse::Ok { data, .. } => {
+                assert!((data[0] - want[0]).abs() < 1e-12);
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        server.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn garbage_framing_closes_only_the_offending_connection() {
+        let (coord, server, h) = start_service();
+        let addr = server.local_addr().to_string();
+        // A connection that speaks garbage (bad magic in the body).
+        let mut bad = std::net::TcpStream::connect(&addr).unwrap();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&26u32.to_le_bytes());
+        frame.extend_from_slice(&[0u8; 26]); // magic 0x0000: framing breaker
+        bad.write_all(&frame).unwrap();
+        // The server closes it; a well-behaved connection still works.
+        let mut good = ServeConn::connect(&addr).unwrap();
+        let x = vec![1.0; 16];
+        let want = h.matvec(&x);
+        match good.apply("h", QosClass::Bulk, x).unwrap() {
+            WireResponse::Ok { data, .. } => assert!((data[0] - want[0]).abs() < 1e-12),
+            other => panic!("unexpected response: {other:?}"),
+        }
+        server.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_inflight_responses() {
+        let (coord, server, h) = start_service();
+        let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+        // Pipeline a burst, then shut the server down before reading.
+        let x: Vec<f64> = (0..16).map(|i| (i as f64).sin()).collect();
+        let want = h.matvec(&x);
+        for _ in 0..8 {
+            conn.send("h", QosClass::Standard, 0, 16, 1, x.clone()).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        server.shutdown();
+        // Every pipelined request was answered before the close.
+        for _ in 0..8 {
+            match conn.recv().unwrap() {
+                WireResponse::Ok { data, .. } => {
+                    assert!((data[3] - want[3]).abs() < 1e-12);
+                }
+                other => panic!("request lost in shutdown: {other:?}"),
+            }
+        }
+        coord.shutdown();
+    }
+}

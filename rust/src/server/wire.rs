@@ -1,0 +1,617 @@
+//! Wire protocol of the ingress server: a compact little-endian binary
+//! framing, `std`-only on both ends.
+//!
+//! # Frame layout
+//!
+//! Every message (either direction) is one *frame*:
+//!
+//! ```text
+//! u32  body_len            length of the body that follows
+//! [u8; body_len]           the body
+//! ```
+//!
+//! `body_len` is capped at [`MAX_FRAME`] (16 MiB); a larger
+//! announcement is rejected as [`WireError::Oversized`] before any
+//! allocation, so a hostile peer cannot balloon server memory.
+//!
+//! # Request body (client → server)
+//!
+//! ```text
+//! u16  magic               0xFA57
+//! u8   version             1
+//! u8   kind                0 = request
+//! u64  req_id              caller-chosen correlation id, echoed back
+//! u8   class               QoS class: 0 interactive, 1 standard, 2 bulk
+//! u8   name_len            operator-name length in bytes
+//! u32  deadline_us         per-request deadline override in µs
+//!                          (0 ⇒ use the class's default budget)
+//! u32  rows                input rows (must equal the operator's cols)
+//! u32  cols                number of input columns in this request
+//! [u8; name_len]           operator name (UTF-8)
+//! [f64; rows*cols]         payload, little-endian, column-major
+//! ```
+//!
+//! `body_len` must equal `26 + name_len + 8·rows·cols` *exactly*;
+//! anything else is [`WireError::LengthMismatch`]. A decode failure on a
+//! well-delimited frame is answered with a typed
+//! [`ErrorCode::Malformed`] response and the connection stays up; a
+//! failure that breaks framing itself (bad magic/version, oversized
+//! announcement, short read) closes the connection.
+//!
+//! # Response body (server → client)
+//!
+//! ```text
+//! u16  magic               0xFA57
+//! u8   version             1
+//! u8   kind                1 = ok, 2 = error
+//! u64  req_id              echoed from the request
+//! -- kind = 1 (ok) --
+//! u64  epoch               registry epoch of the operator generation
+//!                          that served this request
+//! u32  rows                output rows
+//! u32  cols                output columns (== request cols)
+//! [f64; rows*cols]         result, little-endian, column-major
+//! -- kind = 2 (error) --
+//! u8   code                see [`ErrorCode`]
+//! u16  msg_len             diagnostic-message length
+//! [u8; msg_len]            human-readable diagnostic (UTF-8)
+//! ```
+//!
+//! Responses on one connection are written in request order (FIFO), so
+//! `req_id` is a convenience for pipelining clients, not a requirement
+//! for correlation.
+
+use crate::coordinator::{QosClass, ServeError};
+use std::io::{Read, Write};
+
+/// Protocol magic: the first two body bytes of every message.
+pub const MAGIC: u16 = 0xFA57;
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Hard cap on one frame's body length (16 MiB).
+pub const MAX_FRAME: u32 = 1 << 24;
+
+/// Fixed-size prefix of a request body, before name and payload.
+const REQ_HEADER: usize = 26;
+/// Fixed-size prefix of every response body (magic/version/kind/req_id).
+const RESP_HEADER: usize = 12;
+
+/// Message kinds (`kind` byte).
+const KIND_REQUEST: u8 = 0;
+const KIND_OK: u8 = 1;
+const KIND_ERR: u8 = 2;
+
+/// A decoded request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub req_id: u64,
+    pub op: String,
+    pub class: QosClass,
+    /// Per-request deadline override in µs; 0 means "class default".
+    pub deadline_us: u32,
+    pub rows: usize,
+    pub cols: usize,
+    /// Column-major `rows × cols` payload.
+    pub data: Vec<f64>,
+}
+
+/// Typed error codes carried in error responses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    UnknownOperator = 1,
+    WrongDimension = 2,
+    /// Shed by the admission controller (or the coordinator's bounded
+    /// queue) — the *only* way load shedding surfaces to a client.
+    Overloaded = 3,
+    ShuttingDown = 4,
+    /// The frame was well-delimited but its body failed to decode.
+    Malformed = 5,
+}
+
+impl ErrorCode {
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::UnknownOperator),
+            2 => Some(ErrorCode::WrongDimension),
+            3 => Some(ErrorCode::Overloaded),
+            4 => Some(ErrorCode::ShuttingDown),
+            5 => Some(ErrorCode::Malformed),
+            _ => None,
+        }
+    }
+
+    /// Map a coordinator error onto its wire code. `QueueFull` is
+    /// deliberately `Overloaded`: to a client, shedding at the admission
+    /// controller and shedding at the coordinator's bounded queue are
+    /// the same typed condition.
+    pub fn from_serve_error(e: &ServeError) -> ErrorCode {
+        match e {
+            ServeError::UnknownOperator(_) => ErrorCode::UnknownOperator,
+            ServeError::WrongDimension { .. } => ErrorCode::WrongDimension,
+            ServeError::QueueFull => ErrorCode::Overloaded,
+            ServeError::ShuttingDown => ErrorCode::ShuttingDown,
+        }
+    }
+}
+
+/// A decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    Ok {
+        req_id: u64,
+        /// Registry epoch of the operator generation that served this.
+        epoch: u64,
+        rows: usize,
+        cols: usize,
+        /// Column-major `rows × cols` result.
+        data: Vec<f64>,
+    },
+    Err {
+        req_id: u64,
+        code: ErrorCode,
+        msg: String,
+    },
+}
+
+impl WireResponse {
+    pub fn req_id(&self) -> u64 {
+        match self {
+            WireResponse::Ok { req_id, .. } | WireResponse::Err { req_id, .. } => *req_id,
+        }
+    }
+}
+
+/// Decode/IO errors. [`Truncated`](WireError::Truncated),
+/// [`Oversized`](WireError::Oversized), [`BadMagic`](WireError::BadMagic)
+/// and [`BadVersion`](WireError::BadVersion) break framing and close the
+/// connection; the remaining decode variants are answered with a typed
+/// [`ErrorCode::Malformed`] response on a connection that stays up.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Stream ended (or a read failed) mid-frame.
+    Truncated,
+    /// Announced body length exceeds [`MAX_FRAME`].
+    Oversized(u32),
+    BadMagic(u16),
+    BadVersion(u8),
+    BadKind(u8),
+    BadClass(u8),
+    /// `body_len` disagrees with the lengths the header announces.
+    LengthMismatch { announced: usize, expected: usize },
+    /// Operator name is not UTF-8.
+    BadName,
+    /// Underlying socket error.
+    Io(std::io::ErrorKind),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "stream truncated mid-frame"),
+            WireError::Oversized(n) => {
+                write!(f, "frame body of {n} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            WireError::BadMagic(m) => write!(f, "bad magic 0x{m:04X} (want 0x{MAGIC:04X})"),
+            WireError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            WireError::BadKind(k) => write!(f, "unexpected message kind {k}"),
+            WireError::BadClass(c) => write!(f, "unknown QoS class byte {c}"),
+            WireError::LengthMismatch { announced, expected } => {
+                write!(f, "body length {announced} != expected {expected}")
+            }
+            WireError::BadName => write!(f, "operator name is not UTF-8"),
+            WireError::Io(k) => write!(f, "socket error: {k:?}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl WireError {
+    /// Whether this error breaks framing (connection must close) rather
+    /// than being answerable with a typed `Malformed` response.
+    pub fn breaks_framing(&self) -> bool {
+        matches!(
+            self,
+            WireError::Truncated
+                | WireError::Oversized(_)
+                | WireError::BadMagic(_)
+                | WireError::BadVersion(_)
+                | WireError::Io(_)
+        )
+    }
+}
+
+// ---- little-endian cursor helpers ---------------------------------------
+
+fn get_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(x)
+}
+
+// ---- encode --------------------------------------------------------------
+
+/// Encode a request into one frame (length prefix included).
+///
+/// # Panics
+/// If `data.len() != rows * cols` or the operator name exceeds 255
+/// bytes — both are caller bugs, not wire conditions.
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    assert_eq!(req.data.len(), req.rows * req.cols, "payload/shape mismatch");
+    assert!(req.op.len() <= u8::MAX as usize, "operator name too long");
+    let body_len = REQ_HEADER + req.op.len() + 8 * req.data.len();
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(KIND_REQUEST);
+    out.extend_from_slice(&req.req_id.to_le_bytes());
+    out.push(req.class as u8);
+    out.push(req.op.len() as u8);
+    out.extend_from_slice(&req.deadline_us.to_le_bytes());
+    out.extend_from_slice(&(req.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(req.cols as u32).to_le_bytes());
+    out.extend_from_slice(req.op.as_bytes());
+    for v in &req.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode a response into one frame (length prefix included).
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    match resp {
+        WireResponse::Ok { req_id, epoch, rows, cols, data } => {
+            assert_eq!(data.len(), rows * cols, "payload/shape mismatch");
+            let body_len = RESP_HEADER + 16 + 8 * data.len();
+            let mut out = Vec::with_capacity(4 + body_len);
+            out.extend_from_slice(&(body_len as u32).to_le_bytes());
+            out.extend_from_slice(&MAGIC.to_le_bytes());
+            out.push(VERSION);
+            out.push(KIND_OK);
+            out.extend_from_slice(&req_id.to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&(*rows as u32).to_le_bytes());
+            out.extend_from_slice(&(*cols as u32).to_le_bytes());
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        WireResponse::Err { req_id, code, msg } => {
+            let msg = &msg.as_bytes()[..msg.len().min(u16::MAX as usize)];
+            let body_len = RESP_HEADER + 3 + msg.len();
+            let mut out = Vec::with_capacity(4 + body_len);
+            out.extend_from_slice(&(body_len as u32).to_le_bytes());
+            out.extend_from_slice(&MAGIC.to_le_bytes());
+            out.push(VERSION);
+            out.push(KIND_ERR);
+            out.extend_from_slice(&req_id.to_le_bytes());
+            out.push(*code as u8);
+            out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+            out.extend_from_slice(msg);
+            out
+        }
+    }
+}
+
+// ---- decode --------------------------------------------------------------
+
+/// Decode one request body (the frame's payload, length prefix already
+/// stripped by [`read_frame`]).
+pub fn decode_request(body: &[u8]) -> Result<WireRequest, WireError> {
+    if body.len() < REQ_HEADER {
+        return Err(WireError::LengthMismatch { announced: body.len(), expected: REQ_HEADER });
+    }
+    let magic = get_u16(body, 0);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if body[2] != VERSION {
+        return Err(WireError::BadVersion(body[2]));
+    }
+    if body[3] != KIND_REQUEST {
+        return Err(WireError::BadKind(body[3]));
+    }
+    let req_id = get_u64(body, 4);
+    let class = QosClass::from_u8(body[12]).ok_or(WireError::BadClass(body[12]))?;
+    let name_len = body[13] as usize;
+    let deadline_us = get_u32(body, 14);
+    let rows = get_u32(body, 18) as usize;
+    let cols = get_u32(body, 22) as usize;
+    let n_vals = rows
+        .checked_mul(cols)
+        .filter(|&n| n <= (MAX_FRAME as usize) / 8)
+        .ok_or(WireError::LengthMismatch { announced: body.len(), expected: usize::MAX })?;
+    let expected = REQ_HEADER + name_len + 8 * n_vals;
+    if body.len() != expected {
+        return Err(WireError::LengthMismatch { announced: body.len(), expected });
+    }
+    let op = std::str::from_utf8(&body[REQ_HEADER..REQ_HEADER + name_len])
+        .map_err(|_| WireError::BadName)?
+        .to_string();
+    let mut data = Vec::with_capacity(n_vals);
+    let mut at = REQ_HEADER + name_len;
+    for _ in 0..n_vals {
+        let mut x = [0u8; 8];
+        x.copy_from_slice(&body[at..at + 8]);
+        data.push(f64::from_le_bytes(x));
+        at += 8;
+    }
+    Ok(WireRequest { req_id, op, class, deadline_us, rows, cols, data })
+}
+
+/// Decode one response body.
+pub fn decode_response(body: &[u8]) -> Result<WireResponse, WireError> {
+    if body.len() < RESP_HEADER {
+        return Err(WireError::LengthMismatch { announced: body.len(), expected: RESP_HEADER });
+    }
+    let magic = get_u16(body, 0);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if body[2] != VERSION {
+        return Err(WireError::BadVersion(body[2]));
+    }
+    let req_id = get_u64(body, 4);
+    match body[3] {
+        KIND_OK => {
+            if body.len() < RESP_HEADER + 16 {
+                return Err(WireError::LengthMismatch {
+                    announced: body.len(),
+                    expected: RESP_HEADER + 16,
+                });
+            }
+            let epoch = get_u64(body, RESP_HEADER);
+            let rows = get_u32(body, RESP_HEADER + 8) as usize;
+            let cols = get_u32(body, RESP_HEADER + 12) as usize;
+            let n_vals = rows
+                .checked_mul(cols)
+                .filter(|&n| n <= (MAX_FRAME as usize) / 8)
+                .ok_or(WireError::LengthMismatch {
+                    announced: body.len(),
+                    expected: usize::MAX,
+                })?;
+            let expected = RESP_HEADER + 16 + 8 * n_vals;
+            if body.len() != expected {
+                return Err(WireError::LengthMismatch { announced: body.len(), expected });
+            }
+            let mut data = Vec::with_capacity(n_vals);
+            let mut at = RESP_HEADER + 16;
+            for _ in 0..n_vals {
+                let mut x = [0u8; 8];
+                x.copy_from_slice(&body[at..at + 8]);
+                data.push(f64::from_le_bytes(x));
+                at += 8;
+            }
+            Ok(WireResponse::Ok { req_id, epoch, rows, cols, data })
+        }
+        KIND_ERR => {
+            if body.len() < RESP_HEADER + 3 {
+                return Err(WireError::LengthMismatch {
+                    announced: body.len(),
+                    expected: RESP_HEADER + 3,
+                });
+            }
+            let code =
+                ErrorCode::from_u8(body[RESP_HEADER]).ok_or(WireError::BadKind(body[RESP_HEADER]))?;
+            let msg_len = get_u16(body, RESP_HEADER + 1) as usize;
+            let expected = RESP_HEADER + 3 + msg_len;
+            if body.len() != expected {
+                return Err(WireError::LengthMismatch { announced: body.len(), expected });
+            }
+            let msg = String::from_utf8_lossy(&body[RESP_HEADER + 3..]).into_owned();
+            Ok(WireResponse::Err { req_id, code, msg })
+        }
+        k => Err(WireError::BadKind(k)),
+    }
+}
+
+// ---- framed IO -----------------------------------------------------------
+
+/// Read one frame's body from `r`. Returns `Ok(None)` on a clean close
+/// (EOF exactly at a frame boundary); EOF mid-frame is
+/// [`WireError::Truncated`]. An oversized length announcement is
+/// rejected *before* allocating the body.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) => {
+                return if got == 0 { Ok(None) } else { Err(WireError::Truncated) };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    let body_len = u32::from_le_bytes(len);
+    if body_len > MAX_FRAME {
+        return Err(WireError::Oversized(body_len));
+    }
+    let mut body = vec![0u8; body_len as usize];
+    let mut at = 0;
+    while at < body.len() {
+        match r.read(&mut body[at..]) {
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => at += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    Ok(Some(body))
+}
+
+/// Write one pre-encoded frame (as produced by the `encode_*` fns).
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> Result<(), WireError> {
+    w.write_all(frame).map_err(|e| WireError::Io(e.kind()))?;
+    w.flush().map_err(|e| WireError::Io(e.kind()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(rows: usize, cols: usize, class: QosClass) -> WireRequest {
+        WireRequest {
+            req_id: 42,
+            op: "h".to_string(),
+            class,
+            deadline_us: 150,
+            rows,
+            cols,
+            data: (0..rows * cols).map(|i| i as f64 * 0.5 - 3.0).collect(),
+        }
+    }
+
+    #[test]
+    fn request_round_trips() {
+        for class in QosClass::ALL {
+            let r = req(4, 3, class);
+            let frame = encode_request(&r);
+            let announced = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+            assert_eq!(announced, frame.len() - 4);
+            let back = decode_request(&frame[4..]).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let ok = WireResponse::Ok {
+            req_id: 7,
+            epoch: 3,
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, -2.5, 3.25, 0.0],
+        };
+        let frame = encode_response(&ok);
+        assert_eq!(decode_response(&frame[4..]).unwrap(), ok);
+
+        let err = WireResponse::Err {
+            req_id: 9,
+            code: ErrorCode::Overloaded,
+            msg: "shed".to_string(),
+        };
+        let frame = encode_response(&err);
+        assert_eq!(decode_response(&frame[4..]).unwrap(), err);
+    }
+
+    #[test]
+    fn framed_io_round_trips_over_a_buffer() {
+        let r = req(3, 2, QosClass::Bulk);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &encode_request(&r)).unwrap();
+        write_frame(&mut buf, &encode_request(&r)).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        for _ in 0..2 {
+            let body = read_frame(&mut cur).unwrap().expect("frame present");
+            assert_eq!(decode_request(&body).unwrap(), r);
+        }
+        // Clean close at the boundary.
+        assert_eq!(read_frame(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn truncation_is_typed_never_a_panic() {
+        let frame = encode_request(&req(4, 4, QosClass::Standard));
+        // Cut the stream at every byte offset: mid-prefix and mid-body
+        // are Truncated; offset 0 is a clean close.
+        for cut in 0..frame.len() {
+            let mut cur = std::io::Cursor::new(frame[..cut].to_vec());
+            match read_frame(&mut cur) {
+                Ok(None) => assert_eq!(cut, 0, "clean close only at offset 0"),
+                Err(WireError::Truncated) => assert!(cut > 0),
+                other => panic!("cut at {cut}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_announcement_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur), Err(WireError::Oversized(MAX_FRAME + 1)));
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_errors() {
+        let good = encode_request(&req(2, 2, QosClass::Interactive));
+        let body = &good[4..];
+
+        // Bad magic.
+        let mut b = body.to_vec();
+        b[0] ^= 0xFF;
+        assert!(matches!(decode_request(&b), Err(WireError::BadMagic(_))));
+
+        // Bad version.
+        let mut b = body.to_vec();
+        b[2] = 99;
+        assert_eq!(decode_request(&b), Err(WireError::BadVersion(99)));
+
+        // Bad class byte.
+        let mut b = body.to_vec();
+        b[12] = 7;
+        assert_eq!(decode_request(&b), Err(WireError::BadClass(7)));
+
+        // Body shorter than the header announces.
+        let b = &body[..body.len() - 1];
+        assert!(matches!(decode_request(b), Err(WireError::LengthMismatch { .. })));
+
+        // Shape whose payload would overflow the frame cap.
+        let mut b = body.to_vec();
+        b[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
+        b[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_request(&b), Err(WireError::LengthMismatch { .. })));
+
+        // Non-UTF-8 operator name.
+        let mut r = req(1, 1, QosClass::Standard);
+        r.op = "ab".to_string();
+        let mut frame = encode_request(&r);
+        frame[4 + 26] = 0xFF; // first name byte
+        frame[4 + 27] = 0xFE;
+        assert_eq!(decode_request(&frame[4..]), Err(WireError::BadName));
+    }
+
+    #[test]
+    fn framing_breakers_vs_answerable_errors() {
+        assert!(WireError::Truncated.breaks_framing());
+        assert!(WireError::Oversized(0).breaks_framing());
+        assert!(WireError::BadMagic(0).breaks_framing());
+        assert!(!WireError::BadClass(9).breaks_framing());
+        assert!(!WireError::LengthMismatch { announced: 0, expected: 1 }.breaks_framing());
+        assert!(!WireError::BadName.breaks_framing());
+    }
+
+    #[test]
+    fn serve_errors_map_onto_wire_codes() {
+        assert_eq!(
+            ErrorCode::from_serve_error(&ServeError::QueueFull),
+            ErrorCode::Overloaded
+        );
+        assert_eq!(
+            ErrorCode::from_serve_error(&ServeError::UnknownOperator("x".into())),
+            ErrorCode::UnknownOperator
+        );
+        assert_eq!(
+            ErrorCode::from_serve_error(&ServeError::WrongDimension { expected: 2, got: 3 }),
+            ErrorCode::WrongDimension
+        );
+        assert_eq!(
+            ErrorCode::from_serve_error(&ServeError::ShuttingDown),
+            ErrorCode::ShuttingDown
+        );
+    }
+}

@@ -544,3 +544,112 @@ fn prop_rc_accounting_matches_counts() {
         ensure(f.flops_per_matvec() == 2 * nnz_total, "flops mismatch")
     });
 }
+
+// ISSUE 6: wire-protocol properties (server::wire).
+
+#[test]
+fn prop_wire_request_roundtrips_across_shapes_and_classes() {
+    use faust::coordinator::QosClass;
+    use faust::server::wire::{self, WireRequest};
+    check("wire request roundtrip", &cfg(120), |rng| {
+        let rows = rng.below(33); // 0 rows is a legal (degenerate) shape
+        let cols = rng.below(9);
+        let name_len = 1 + rng.below(24);
+        let op: String = (0..name_len)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect();
+        let class = QosClass::from_u8(rng.below(3) as u8).unwrap();
+        let req = WireRequest {
+            req_id: rng.below(1 << 30) as u64,
+            op,
+            class,
+            deadline_us: rng.below(1 << 20) as u32,
+            rows,
+            cols,
+            data: rng.gauss_vec(rows * cols),
+        };
+        let body = wire::encode_request(&req);
+        let back = wire::decode_request(&body).map_err(|e| format!("decode: {e}"))?;
+        ensure(back == req, "request did not roundtrip")?;
+        // And through framed IO.
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, &body).map_err(|e| format!("write: {e}"))?;
+        let mut cur = std::io::Cursor::new(buf);
+        let read = wire::read_frame(&mut cur)
+            .map_err(|e| format!("read: {e}"))?
+            .ok_or("unexpected EOF")?;
+        ensure(read == body, "framed body mismatch")
+    });
+}
+
+#[test]
+fn prop_wire_truncation_is_a_typed_rejection_never_a_panic() {
+    use faust::coordinator::QosClass;
+    use faust::server::wire::{self, WireRequest};
+    check("wire truncation typed", &cfg(80), |rng| {
+        let rows = 1 + rng.below(8);
+        let cols = 1 + rng.below(4);
+        let req = WireRequest {
+            req_id: 7,
+            op: "op".to_string(),
+            class: QosClass::from_u8(rng.below(3) as u8).unwrap(),
+            deadline_us: 0,
+            rows,
+            cols,
+            data: rng.gauss_vec(rows * cols),
+        };
+        let body = wire::encode_request(&req);
+        // Any strict prefix of the body must decode to a typed error.
+        let cut = rng.below(body.len());
+        ensure(
+            wire::decode_request(&body[..cut]).is_err(),
+            format!("prefix of {cut} bytes decoded"),
+        )?;
+        // A frame cut mid-stream surfaces as a typed read error (or a
+        // clean EOF when nothing was sent), never a panic.
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &body).map_err(|e| format!("write: {e}"))?;
+        let fcut = rng.below(framed.len()); // strictly before the last byte
+        let mut cur = std::io::Cursor::new(&framed[..fcut]);
+        match wire::read_frame(&mut cur) {
+            Ok(None) => ensure(fcut == 0, "EOF only legal at a frame boundary")?,
+            Ok(Some(_)) => return Err("truncated frame returned a body".into()),
+            Err(e) => ensure(!format!("{e}").is_empty(), "error displays")?,
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_response_roundtrips() {
+    use faust::server::wire::{self, ErrorCode, WireResponse};
+    check("wire response roundtrip", &cfg(80), |rng| {
+        let resp = if rng.uniform() < 0.5 {
+            let rows = rng.below(16);
+            let cols = rng.below(4);
+            WireResponse::Ok {
+                req_id: rng.below(1 << 30) as u64,
+                epoch: rng.below(1 << 20) as u64,
+                rows,
+                cols,
+                data: rng.gauss_vec(rows * cols),
+            }
+        } else {
+            let codes = [
+                ErrorCode::UnknownOperator,
+                ErrorCode::WrongDimension,
+                ErrorCode::Overloaded,
+                ErrorCode::ShuttingDown,
+                ErrorCode::Malformed,
+            ];
+            WireResponse::Err {
+                req_id: rng.below(1 << 30) as u64,
+                code: codes[rng.below(codes.len())],
+                msg: format!("case {}", rng.below(1000)),
+            }
+        };
+        let body = wire::encode_response(&resp);
+        let back = wire::decode_response(&body).map_err(|e| format!("decode: {e}"))?;
+        ensure(back == resp, "response did not roundtrip")
+    });
+}

@@ -1,0 +1,144 @@
+//! ISSUE 6 integration: the TCP ingress soak, scaled for the test suite
+//! (the full 100k-request run is `cargo bench --bench serve_latency`).
+//!
+//! Three open-loop Poisson streams — one per QoS class — drive loopback
+//! TCP through the full `wire → admission → batcher → registry →
+//! engine` path while the live operator is epoch-swapped between its
+//! dense and FAμST backends mid-traffic. Every OK payload is verified
+//! against the dense reference, so the assertions below are the
+//! subsystem's contract: zero misrouted responses, zero protocol
+//! errors, sheds only as the typed `Overloaded` code, and the swap
+//! visible as multiple epochs in the responses.
+
+use faust::bench_util::{open_loop_load, ClassLoadReport, OpenLoopConfig};
+use faust::coordinator::{
+    AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig, QosClass,
+};
+use faust::server::{AdmissionConfig, Server, ServerConfig};
+use faust::transforms::{hadamard, hadamard_faust};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start_service(n: usize, admission: AdmissionConfig) -> (Coordinator, Server) {
+    let coord = Coordinator::start(
+        vec![("h".to_string(), Arc::new(hadamard(n)) as Arc<dyn BatchOp>)],
+        CoordinatorConfig {
+            max_batch: 32,
+            batch_timeout: Duration::from_micros(200),
+            n_workers: 2,
+            queue_capacity: 8192,
+            adaptive: Some(AdaptiveBatchConfig::default()),
+        },
+    );
+    let server = Server::start(
+        coord.client(),
+        ServerConfig { admission, ..ServerConfig::default() },
+    )
+    .expect("bind loopback");
+    (coord, server)
+}
+
+#[test]
+fn open_loop_soak_across_classes_with_mid_traffic_swaps() {
+    let n = 32;
+    let (coord, server) = start_service(n, AdmissionConfig::default());
+    let addr = server.local_addr().to_string();
+    let dense = hadamard(n);
+    let requests_per_class = 1200usize;
+    let rate = 2400.0; // per class ⇒ ~0.5 s of traffic each
+
+    // Swap the live operator dense → FAμST → dense while traffic flows.
+    let registry = coord.registry();
+    let swapper = std::thread::spawn(move || {
+        let mut swapped = 0usize;
+        for k in 0..2 {
+            std::thread::sleep(Duration::from_millis(150));
+            let op: Arc<dyn BatchOp> = if k % 2 == 0 {
+                Arc::new(hadamard_faust(n))
+            } else {
+                Arc::new(hadamard(n))
+            };
+            if registry.swap_epoch("h", op).is_ok() {
+                swapped += 1;
+            }
+        }
+        swapped
+    });
+
+    let mut handles = Vec::new();
+    for (k, class) in QosClass::ALL.iter().enumerate() {
+        let cfg = OpenLoopConfig {
+            addr: addr.clone(),
+            op: "h".to_string(),
+            class: *class,
+            rate_hz: rate,
+            requests: requests_per_class,
+            dim: n,
+            seed: 0xD00D + k as u64,
+        };
+        let verify = dense.clone();
+        handles.push(std::thread::spawn(move || open_loop_load(&cfg, Some(&verify))));
+    }
+    let reports: Vec<ClassLoadReport> = handles
+        .into_iter()
+        .map(|h| h.join().expect("stream thread").expect("stream ran"))
+        .collect();
+    let swapped = swapper.join().expect("swap thread");
+    assert_eq!(swapped, 2, "both mid-traffic swaps published");
+    server.shutdown();
+    let snap = coord.shutdown();
+
+    let mut epochs = std::collections::BTreeSet::new();
+    for r in &reports {
+        assert_eq!(r.sent, requests_per_class, "{}: open loop sent everything", r.class);
+        assert_eq!(r.misrouted, 0, "{}: misrouted/corrupted responses", r.class);
+        assert_eq!(r.protocol_errors, 0, "{}: protocol errors", r.class);
+        assert_eq!(r.other_errors, 0, "{}: unexpected typed errors", r.class);
+        // Every request was answered: verified-OK or typed shed.
+        assert_eq!(r.ok + r.shed, r.sent, "{}: request went unanswered", r.class);
+        epochs.extend(r.epochs.iter().copied());
+    }
+    // Initial registration + 2 swaps, all visible in served responses.
+    assert!(
+        epochs.len() >= 2,
+        "mid-traffic swaps never surfaced in responses: {epochs:?}"
+    );
+    assert_eq!(snap.swaps, 2);
+    assert!(snap.ingress_accepted > 0);
+    assert_eq!(snap.ingress_active_connections, 0, "connections drained");
+}
+
+#[test]
+fn overload_sheds_typed_and_loses_nothing() {
+    let n = 16;
+    // A deliberately tiny admission budget: most of the burst must shed.
+    let (coord, server) = start_service(
+        n,
+        AdmissionConfig { max_inflight: 2, ..AdmissionConfig::default() },
+    );
+    let addr = server.local_addr().to_string();
+    let dense = hadamard(n);
+    let cfg = OpenLoopConfig {
+        addr,
+        op: "h".to_string(),
+        class: QosClass::Standard,
+        rate_hz: 50_000.0, // far beyond the 2-deep admission budget
+        requests: 2000,
+        dim: n,
+        seed: 99,
+    };
+    let r = open_loop_load(&cfg, Some(&dense)).expect("stream ran");
+    server.shutdown();
+    let snap = coord.shutdown();
+    assert_eq!(r.sent, 2000);
+    assert_eq!(r.misrouted, 0);
+    assert_eq!(r.protocol_errors, 0);
+    assert_eq!(r.other_errors, 0, "sheds must be the typed Overloaded code");
+    assert_eq!(r.ok + r.shed, r.sent, "every request answered even under overload");
+    assert!(r.shed > 0, "this load must actually shed");
+    assert_eq!(
+        snap.ingress_shed[QosClass::Standard.index()],
+        r.shed as u64,
+        "per-class shed counter matches the client's view"
+    );
+}

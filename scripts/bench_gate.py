@@ -142,6 +142,26 @@ def self_check():
         ("gated metric missing from results", result("bench_a", {"ratio": 1.5, "err": 1e-9}), 1),
         ("bench renamed away from its baseline entry", result("bench_b", {"ratio": 1.5}), 1),
     ]
+    # Percentile-band rules (serve_latency style): one rule carrying both
+    # a min and a max must enforce BOTH sides — the min rejects a
+    # degenerate ~0 measurement (broken latency pairing), the max is the
+    # runner-noise-aware ceiling — and a shed-rate ceiling must trip.
+    band_baseline = {
+        "serve_bench": {
+            "p99_us": {"min": 50.0, "max": 100000.0},
+            "shed_rate": {"max": 0.05},
+        },
+    }
+    band_scenarios = [
+        ("p99 inside its band, shed under ceiling",
+         result("serve_bench", {"p99_us": 850.0, "shed_rate": 0.001}), 0),
+        ("p99 below the band min (degenerate measurement)",
+         result("serve_bench", {"p99_us": 0.0, "shed_rate": 0.001}), 1),
+        ("p99 above the band max (latency regression)",
+         result("serve_bench", {"p99_us": 250000.0, "shed_rate": 0.001}), 1),
+        ("shed rate over its ceiling",
+         result("serve_bench", {"p99_us": 850.0, "shed_rate": 0.2}), 1),
+    ]
     # A rule whose bound key is misspelled must fail, not silently pass.
     typo_baseline = {"bench_a": {"ratio": {"mn": 1.25}}}
     ran = 0
@@ -154,6 +174,17 @@ def self_check():
             with open(res_path, "w") as f:
                 json.dump(res, f)
             got = main(["bench_gate.py", base_path, res_path])
+            assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
+            ran += 1
+
+        band_path = os.path.join(td, "band_baseline.json")
+        with open(band_path, "w") as f:
+            json.dump(band_baseline, f)
+        for desc, res, want in band_scenarios:
+            res_path = os.path.join(td, "BENCH_band.json")
+            with open(res_path, "w") as f:
+                json.dump(res, f)
+            got = main(["bench_gate.py", band_path, res_path])
             assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
             ran += 1
 
