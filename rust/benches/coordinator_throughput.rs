@@ -81,6 +81,7 @@ fn config(mode: Mode, workers: usize) -> CoordinatorConfig {
             Mode::Fixed(_) => None,
             Mode::Adaptive => Some(AdaptiveBatchConfig::default()),
         },
+        ..CoordinatorConfig::default()
     }
 }
 

@@ -10,10 +10,14 @@
 //!
 //! With `--json` the run emits `BENCH_engine_scaling.json` (planned
 //! speedup + steady-state allocs at the acceptance point, dense-stage
-//! scalar/tiled timings); CI uploads it and gates it against
-//! `benches/baseline.json` alongside the factorize smoke.
+//! scalar/tiled timings, and the f32-vs-f64 precision-tier comparison of
+//! ISSUE 7 — gated with an in-bench ≥1.4× assertion on AVX2+); CI
+//! uploads it and gates it against `benches/baseline.json` alongside the
+//! factorize smoke.
 
-use faust::bench_util::{compare_scalar_vs_tiled, fmt, time_auto, BenchReport, Table};
+use faust::bench_util::{
+    compare_apply_f32_vs_f64, compare_scalar_vs_tiled, fmt, time_auto, BenchReport, Table,
+};
 use faust::cli::Args;
 use faust::engine::{kernel, ApplyEngine};
 use faust::faust::Faust;
@@ -121,6 +125,62 @@ fn main() {
         cmp.tiled.median_us(),
     );
 
+    // f32 serving tier (ISSUE 7): the same 512-dim dense stage, f64
+    // tiled vs f32 tiled — element width is the only variable, so this
+    // isolates what the precision tier buys (half the bytes, twice the
+    // lanes per SIMD op).
+    let mut prng = Rng::new(0xF32E);
+    let a64 = Mat::randn(sd, sd, &mut prng);
+    let b64 = Mat::randn(sd, sb, &mut prng);
+    let (a32, b32) = (a64.to_f32(), b64.to_f32());
+    let mut out64 = vec![0.0f64; sd * sb];
+    let mut out32 = vec![0.0f32; sd * sb];
+    let t64 = time_auto(ms, || {
+        kernel::gemm_tiled_rows(&a64, b64.data(), sb, 0, sd, &mut out64);
+        black_box(&mut out64);
+    });
+    let t32 = time_auto(ms, || {
+        kernel::gemm_tiled_rows(&a32, b32.data(), sb, 0, sd, &mut out32);
+        black_box(&mut out32);
+    });
+    let f32_dense_stage_speedup = t64.median_ns / t32.median_ns;
+    println!(
+        "\n# f32 dense stage {sd}x{sd} @ batch {sb}: f64={:.1}us f32={:.1}us \
+         speedup={f32_dense_stage_speedup:.2}x ({}-lane f32 chunks)",
+        t64.median_us(),
+        t32.median_us(),
+        kernel::lane_width_of::<f32>(),
+    );
+
+    // End-to-end 512-dim apply through the full plan/arena machinery:
+    // f64 master plan vs its quantized f32 serving plan (shared
+    // bench_util protocol — error checked against the declared bound).
+    let dense_512 = Faust::from_dense_factors(
+        &[Mat::randn(sd, sd, &mut prng)],
+        1.0,
+    );
+    let (pcmp, pbound) = compare_apply_f32_vs_f64(&dense_512, sb, ms, 0xF32A);
+    let f32_apply_speedup = pcmp.speedup();
+    println!(
+        "# f32 plan apply {sd}-dim @ batch {sb}: f64={:.1}us f32={:.1}us \
+         speedup={f32_apply_speedup:.2}x rel_err={:.2e} (declared {:.2e})",
+        pcmp.t64.median_us(),
+        pcmp.t32.median_us(),
+        pcmp.max_rel_err,
+        pbound.declared_rel_err,
+    );
+    // The headline claim is asserted in-bench on hardware that can back
+    // it: with AVX2+ lane chunks the f32 tier must beat the f64 tiled
+    // path by >=1.4x on the 512-dim apply. Portable builds only report.
+    let lvl = kernel::simd_level();
+    if matches!(lvl, kernel::SimdLevel::Avx2 | kernel::SimdLevel::Avx512) {
+        assert!(
+            f32_apply_speedup >= 1.4,
+            "f32 512-dim apply must be >=1.4x the f64 tiled path on {lvl:?}: \
+             got {f32_apply_speedup:.2}x"
+        );
+    }
+
     if let Some((speedup, allocs)) = acceptance {
         let speed_ok = speedup >= 2.0;
         let alloc_ok = allocs == 0;
@@ -139,6 +199,9 @@ fn main() {
         report.push("dense_stage_scalar_us", cmp.scalar.median_us());
         report.push("dense_stage_tiled_us", cmp.tiled.median_us());
         report.push("dense_stage_tiled_speedup", dense_stage_speedup);
+        report.push("f32_dense_stage_speedup", f32_dense_stage_speedup);
+        report.push("f32_apply_speedup", f32_apply_speedup);
+        report.push("f32_max_rel_err", pcmp.max_rel_err);
         if let Some((speedup, allocs)) = acceptance {
             report.push("planned_speedup_b32t4", speedup);
             report.push("steady_allocs_b32t4", allocs as f64);

@@ -12,7 +12,13 @@
 //! counted failure, not a silent wrong answer.
 //!
 //! Default shape is the CI soak: 100k requests at 25k req/s aggregate
-//! (~4-5 s wall), split ~30/40/30 across interactive/standard/bulk.
+//! (~4-5 s wall), split ~30/40/30 across interactive/standard/bulk,
+//! served under `--precision auto:1e-3` (ISSUE 7) so the registry's
+//! per-operator precision selection — and its interaction with
+//! mid-traffic epoch swaps — is what the soak exercises. After the main
+//! soak a paired pair of mini streams (identical load, f64 vs f32 wire
+//! dtype) measures the f32 tier's tail latency, gated in
+//! `baseline.json` by an f32-not-slower ratio rule.
 //! With `--json` the per-class p50/p99/p999 and shed rates land in
 //! `BENCH_serve_latency.json`, gated by `scripts/bench_gate.py` against
 //! `benches/baseline.json`; the bench exits non-zero on any misrouted
@@ -20,8 +26,9 @@
 
 use faust::bench_util::{fmt, open_loop_load, BenchReport, ClassLoadReport, OpenLoopConfig, Table};
 use faust::coordinator::{
-    AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig, QosClass,
+    AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig, Precision, QosClass,
 };
+use faust::server::wire::Dtype;
 use faust::server::{Server, ServerConfig};
 use faust::transforms::{hadamard, hadamard_faust};
 use std::sync::Arc;
@@ -34,6 +41,7 @@ struct Args {
     swaps: usize,
     workers: usize,
     seed: u64,
+    precision: Precision,
     json: bool,
     json_dir: String,
 }
@@ -46,6 +54,7 @@ fn parse_args() -> Args {
         swaps: 2,
         workers: 4,
         seed: 42,
+        precision: Precision::Auto(1e-3),
         json: false,
         json_dir: ".".to_string(),
     };
@@ -66,6 +75,7 @@ fn parse_args() -> Args {
             "--swaps" => a.swaps = take(&mut i).parse().expect("--swaps"),
             "--workers" => a.workers = take(&mut i).parse().expect("--workers"),
             "--seed" => a.seed = take(&mut i).parse().expect("--seed"),
+            "--precision" => a.precision = take(&mut i).parse().expect("--precision"),
             "--json" => a.json = true,
             "--json-dir" => a.json_dir = take(&mut i),
             "--bench" => {} // ignore libtest's flag when invoked via cargo bench
@@ -73,7 +83,7 @@ fn parse_args() -> Args {
                 eprintln!(
                     "unknown arg {other}\nusage: serve_latency [--n D] [--rate R] \
                      [--requests N] [--swaps S] [--workers W] [--seed S] \
-                     [--json] [--json-dir DIR]"
+                     [--precision f64|f32|auto[:EPS]] [--json] [--json-dir DIR]"
                 );
                 std::process::exit(2);
             }
@@ -88,9 +98,19 @@ fn main() {
     let n = args.n;
     println!(
         "# serve_latency — open-loop Poisson load over loopback TCP\n\
-         # n={n} rate={} req/s requests={} swaps={} workers={}\n",
-        args.rate, args.requests, args.swaps, args.workers
+         # n={n} rate={} req/s requests={} swaps={} workers={} precision={}\n",
+        args.rate, args.requests, args.swaps, args.workers, args.precision
     );
+
+    // Under f32/auto serving the FAμST generations may execute in f32,
+    // so payload verification against the dense f64 reference needs a
+    // tolerance that absorbs the declared quantization error; pure-f64
+    // serving keeps the historical tight bound.
+    let precision_tol = if matches!(args.precision, Precision::F64) {
+        1e-6
+    } else {
+        1e-3
+    };
 
     let dense = hadamard(n);
     let coord = Coordinator::start(
@@ -101,6 +121,7 @@ fn main() {
             n_workers: args.workers,
             queue_capacity: 8192,
             adaptive: Some(AdaptiveBatchConfig::default()),
+            precision: args.precision,
         },
     );
     let server = Server::start(coord.client(), ServerConfig::default()).expect("bind loopback");
@@ -152,6 +173,8 @@ fn main() {
             requests,
             dim: n,
             seed: args.seed.wrapping_add(k as u64),
+            dtype: Dtype::F64,
+            verify_tol: precision_tol,
         };
         let verify = dense.clone();
         handles.push(std::thread::spawn(move || open_loop_load(&cfg, Some(&verify))));
@@ -161,6 +184,36 @@ fn main() {
         .map(|h| h.join().expect("load thread").expect("load stream"))
         .collect();
     let swaps_done = swap_thread.join().expect("swap thread");
+
+    // Paired mini streams (ISSUE 7): identical sequential load, first on
+    // the f64 wire dtype then on f32, against the now-quiet server. The
+    // f32 tier halves payload bytes each way, so its tail must not be
+    // slower than f64's beyond noise — gated by the f32-not-slower ratio
+    // rule on {f64,f32}_mini_p99_us in baseline.json.
+    let mini_requests = (args.requests / 10).clamp(1_000, 20_000);
+    let mut mini: Vec<ClassLoadReport> = Vec::new();
+    for (j, dtype) in [Dtype::F64, Dtype::F32].into_iter().enumerate() {
+        let cfg = OpenLoopConfig {
+            addr: addr.clone(),
+            op: "h".to_string(),
+            class: QosClass::Standard,
+            rate_hz: args.rate * 0.4,
+            requests: mini_requests,
+            dim: n,
+            seed: args.seed.wrapping_add(0x11D + j as u64),
+            dtype,
+            // f32 wire quantization costs up to ~1e-4 absolute at these
+            // magnitudes, on top of whatever the serving tier allows.
+            verify_tol: precision_tol.max(if dtype == Dtype::F32 { 1e-4 } else { 0.0 }),
+        };
+        let r = open_loop_load(&cfg, Some(&dense)).expect("mini stream");
+        println!(
+            "# mini dtype={dtype}: sent={} ok={} shed={} p99={:.1}us",
+            r.sent, r.ok, r.shed, r.latency.p99_us
+        );
+        mini.push(r);
+    }
+
     server.shutdown();
     let snap = coord.shutdown();
 
@@ -208,8 +261,13 @@ fn main() {
     );
 
     // The soak contract: every response routed to its request, every
-    // shed typed; anything else fails the bench outright.
-    let clean = misrouted == 0 && protocol_errors == 0 && ok + shed + other == sent;
+    // shed typed; anything else fails the bench outright. The dtype mini
+    // streams are held to the same contract.
+    let mini_clean = mini.iter().all(|r| {
+        r.misrouted == 0 && r.protocol_errors == 0 && r.ok + r.shed + r.other_errors == r.sent
+    });
+    let clean =
+        misrouted == 0 && protocol_errors == 0 && ok + shed + other == sent && mini_clean;
     println!(
         "# soak: {} (zero misrouted, zero protocol errors, every request answered)",
         if clean { "PASS" } else { "FAIL" }
@@ -224,6 +282,12 @@ fn main() {
             rep.push(&format!("{c}_p999_us"), r.latency.p999_us);
             rep.push(&format!("{c}_shed_rate"), r.shed_rate());
         }
+        rep.push("f64_mini_p99_us", mini[0].latency.p99_us);
+        rep.push("f32_mini_p99_us", mini[1].latency.p99_us);
+        rep.push(
+            "f32_mini_p99_ratio",
+            mini[1].latency.p99_us / mini[0].latency.p99_us.max(1e-9),
+        );
         rep.push("requests", sent as f64);
         rep.push("shed_rate_total", shed_rate_total);
         rep.push("misrouted", misrouted as f64);

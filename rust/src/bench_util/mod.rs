@@ -264,6 +264,90 @@ pub fn compare_scalar_vs_tiled(
     KernelComparison { scalar, tiled, max_rel_dev, lanes: kernel::lane_width() }
 }
 
+/// Result of the shared f64-vs-f32 plan-apply comparison
+/// ([`compare_apply_f32_vs_f64`]) — consumed by `engine_scaling`, so the
+/// gated precision metrics and the in-bench speedup claim measure one
+/// protocol (identical plan structure, identical shapes, one thread).
+pub struct PrecisionComparison {
+    /// f64 master-plan timing (tiled kernels — the strongest baseline).
+    pub t64: Timing,
+    /// Quantized f32 serving-plan timing on the identical shape.
+    pub t32: Timing,
+    /// Worst per-column relative ℓ2 error of the f32 outputs against the
+    /// f64 reference (asserted ≤ the declared bound before returning).
+    pub max_rel_err: f64,
+    /// f32 lane-chunk width of the kernel build (16/8/8 by SIMD level).
+    pub lanes_f32: usize,
+}
+
+impl PrecisionComparison {
+    /// f64-over-f32 median ratio (> 1 ⇒ the f32 tier won).
+    pub fn speedup(&self) -> f64 {
+        self.t64.median_ns / self.t32.median_ns
+    }
+}
+
+/// Time one operator's compiled f64 plan against its quantized f32
+/// serving plan on a seeded `cols×bcols` batch, single thread on both
+/// sides so the ratio isolates element width (bytes moved + SIMD lanes),
+/// not scheduling. The f32 outputs are checked against the f64 master
+/// within the conversion's declared error bound; panics on divergence —
+/// a speedup bought with accuracy outside the declared envelope would be
+/// a lie, so the comparison refuses to report one.
+pub fn compare_apply_f32_vs_f64(
+    f: &crate::faust::Faust,
+    bcols: usize,
+    min_ms: f64,
+    seed: u64,
+) -> (PrecisionComparison, crate::engine::F32Bound) {
+    use crate::engine::{kernel, ApplyPlan, Arena, PlanConfig, ThreadPool};
+    use std::hint::black_box;
+    let pool = ThreadPool::new(1);
+    let plan = ApplyPlan::compile(f, &PlanConfig::default());
+    let (plan32, bound) = plan.to_f32_with_bound(&pool);
+    let mut rng = crate::rng::Rng::new(seed);
+    let x64 = rng.gauss_vec(f.cols() * bcols);
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let rows = f.rows();
+    let mut y64 = vec![0.0f64; rows * bcols];
+    let mut y32 = vec![0.0f32; rows * bcols];
+    let mut a64 = Arena::<f64>::new();
+    let mut a32 = Arena::<f32>::new();
+    let t64 = time_auto(min_ms, || {
+        plan.execute_batch_into(&pool, &mut a64, black_box(&x64), bcols, &mut y64);
+        black_box(&mut y64);
+    });
+    let t32 = time_auto(min_ms, || {
+        plan32.execute_batch_into(&pool, &mut a32, black_box(&x32), bcols, &mut y32);
+        black_box(&mut y32);
+    });
+    let mut max_rel_err = 0.0f64;
+    for j in 0..bcols {
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for i in 0..rows {
+            let w = y64[i * bcols + j];
+            let d = y32[i * bcols + j] as f64 - w;
+            err2 += d * d;
+            ref2 += w * w;
+        }
+        if ref2 > 0.0 {
+            max_rel_err = max_rel_err.max((err2 / ref2).sqrt());
+        }
+    }
+    assert!(
+        max_rel_err <= bound.declared_rel_err,
+        "f32 serving plan diverged beyond its declared bound: {max_rel_err:.3e} > {:.3e}",
+        bound.declared_rel_err
+    );
+    let cmp = PrecisionComparison {
+        t64,
+        t32,
+        max_rel_err,
+        lanes_f32: kernel::lane_width_of::<f32>(),
+    };
+    (cmp, bound)
+}
+
 /// Machine-readable bench results: named float metrics serialized to
 /// `BENCH_<name>.json` (hand-rolled writer — no serde in the offline
 /// vendor set). Benches call [`BenchReport::write`] when invoked with
@@ -362,6 +446,13 @@ pub struct OpenLoopConfig {
     pub dim: usize,
     /// Seed of the arrival process and the per-request inputs.
     pub seed: u64,
+    /// Payload element type on the wire (f32 halves payload bytes both
+    /// ways; values quantize in transit and the server echoes the dtype).
+    pub dtype: crate::server::wire::Dtype,
+    /// Absolute per-element tolerance of the response verification. f64
+    /// streams use 1e-6; f32 streams need headroom for the wire
+    /// quantization of both the input and the result.
+    pub verify_tol: f64,
 }
 
 /// Outcome of one open-loop stream.
@@ -420,7 +511,8 @@ fn request_input(seed: u64, req_id: u64, dim: usize) -> Vec<f64> {
 /// connection are FIFO, so each is matched to its send timestamp in
 /// order; an out-of-order `req_id` counts as misrouted. When `verify` is
 /// given, each OK payload is checked against `verify · x` for the
-/// deterministically regenerated input `x` (1e-6 absolute) — a swap to
+/// deterministically regenerated input `x` (`cfg.verify_tol` absolute,
+/// sized to the stream's wire dtype) — a swap to
 /// a same-operator new generation must not change results, so this is
 /// the end-to-end no-corruption check the soak gates on.
 pub fn open_loop_load(
@@ -432,12 +524,15 @@ pub fn open_loop_load(
     use crate::server::ServeConn;
     use std::sync::mpsc;
 
-    let conn = ServeConn::connect(&cfg.addr).map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    let mut conn =
+        ServeConn::connect(&cfg.addr).map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    conn.set_dtype(cfg.dtype);
     let (mut tx_half, mut rx_half) = conn.split().map_err(|e| format!("split: {e}"))?;
     let (ts_tx, ts_rx) = mpsc::channel::<(u64, Instant)>();
     let class: QosClass = cfg.class;
     let dim = cfg.dim;
     let seed = cfg.seed;
+    let verify_tol = cfg.verify_tol;
     let verify = verify.cloned();
 
     let t_start = Instant::now();
@@ -476,7 +571,7 @@ pub fn open_loop_load(
                                 && data
                                     .iter()
                                     .zip(&want)
-                                    .all(|(y, w)| (y - w).abs() < 1e-6);
+                                    .all(|(y, w)| (y - w).abs() < verify_tol);
                         }
                         if good {
                             ok += 1;
@@ -599,6 +694,27 @@ mod tests {
         assert!(cmp.max_rel_err < 1e-6);
         assert!(cmp.seq_s > 0.0 && cmp.fleet_s > 0.0);
         assert!(cmp.speedup() > 0.0);
+    }
+
+    #[test]
+    fn precision_comparison_stays_within_declared_bound() {
+        let f = fleet_test_op();
+        let (cmp, bound) = compare_apply_f32_vs_f64(&f, 8, 1.0, 99);
+        assert!(cmp.max_rel_err <= bound.declared_rel_err);
+        assert!(bound.declared_rel_err > 0.0);
+        assert!(cmp.lanes_f32 == 8 || cmp.lanes_f32 == 16);
+        assert!(cmp.speedup() > 0.0);
+        assert!(cmp.t64.median_ns > 0.0 && cmp.t32.median_ns > 0.0);
+    }
+
+    /// Small mixed sparse/dense operator for the precision comparison.
+    fn fleet_test_op() -> crate::faust::Faust {
+        let mut rng = crate::rng::Rng::new(3);
+        let mats = vec![
+            crate::linalg::Mat::randn(24, 16, &mut rng),
+            crate::linalg::Mat::randn(24, 24, &mut rng),
+        ];
+        crate::faust::Faust::from_dense_factors(&mats, 1.5)
     }
 
     #[test]

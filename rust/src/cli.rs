@@ -100,10 +100,16 @@ SUBCOMMANDS:
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
               [--threads 2] [--adaptive-batch] [--factorize]
               [--factorize-fleet N] [--listen HOST:PORT] [--repl]
+              [--precision f64|f32|auto[:EPS]]
               run the operator-serving coordinator on a Hadamard FAuST,
               planned + parallelized by the apply engine.
               --adaptive-batch sizes each operator's batches from its
               plan's flop/byte profile instead of the fixed --batch;
+              --precision selects the serving tier: f64 (default,
+              bitwise-stable master), f32 (serve every operator's
+              quantized generation when it has one), or auto[:EPS]
+              (serve f32 per operator only when its measured probe
+              error fits the budget; bare auto means auto:1e-6);
               --factorize starts serving the reference butterfly, then
               refactorizes on-line on the serving engine's ctx and
               hot-swaps the learned operator in mid-traffic (registry
@@ -120,10 +126,12 @@ SUBCOMMANDS:
                 ops | ops add <name> <n> | ops swap <name> |
                 ops rm <name> | apply <name> | stats | quit
               (stats includes the ingress accepted/shed-per-class/
-              connection counters when --listen is active)
+              connection counters when --listen is active, plus
+              per-precision apply counts and each operator's serving
+              precision with its measured f32 error)
   client      --addr HOST:PORT [--op faust] [--n 64] [--rate 5000]
               [--requests 20000] [--class all|interactive|standard|bulk]
-              [--seed 42]
+              [--seed 42] [--dtype f64|f32]
               open-loop Poisson load client against a serve --listen
               ingress: paces sends by an absolute arrival schedule
               (never waits for responses), reports per-class p50/p99/

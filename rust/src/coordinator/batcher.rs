@@ -19,7 +19,7 @@
 //! behind a bulk batch filling up.
 
 use super::QosClass;
-use crate::engine::{Arena, CostProfile};
+use crate::engine::{footprint_for_elem, CostProfile};
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::time::{Duration, Instant};
@@ -49,7 +49,8 @@ pub struct AdaptiveBatchConfig {
     /// latency a request can pay for riding in a wide batch.
     pub latency_cap: Duration,
     /// Cap on the arena ping-pong footprint a batch may pin
-    /// (`2 × 8 × max_dim × b` bytes).
+    /// (`2 × elem_bytes × max_dim × b` bytes — the profile's element
+    /// width, 8 for f64 plans and 4 for f32).
     pub max_arena_bytes: usize,
     /// Hard ceiling regardless of what the model asks for.
     pub max_batch: usize,
@@ -79,8 +80,10 @@ impl Default for AdaptiveBatchConfig {
 /// 1. **latency**: modeled batch execution time stays under
 ///    `latency_cap` at the configured `cost_rate_per_ns`;
 /// 2. **arena**: the batch's ping-pong scratch footprint
-///    (`2·8·max_dim·b`) stays under `max_arena_bytes`, so adaptive
-///    sizing can never silently break the zero-alloc steady state;
+///    (`2·elem_bytes·max_dim·b` — the profile's own element width, so an
+///    f32 plan batches twice as wide under the same cap) stays under
+///    `max_arena_bytes`, so adaptive sizing can never silently break the
+///    zero-alloc steady state;
 /// 3. the hard `max_batch` ceiling.
 pub fn target_batch(p: &CostProfile, cfg: &AdaptiveBatchConfig) -> usize {
     let col = p.col_cost(cfg.beta).max(1.0);
@@ -88,7 +91,8 @@ pub fn target_batch(p: &CostProfile, cfg: &AdaptiveBatchConfig) -> usize {
     let b_amort = (fixed / (cfg.overhead_frac.max(1e-9) * col)).ceil() as usize;
     let budget = cfg.latency_cap.as_nanos() as f64 * cfg.cost_rate_per_ns;
     let b_latency = (((budget - fixed) / col).floor().max(1.0)) as usize;
-    let b_arena = (cfg.max_arena_bytes / Arena::footprint_for(p.max_dim.max(1))).max(1);
+    let per_col = footprint_for_elem(p.max_dim.max(1), p.elem_bytes);
+    let b_arena = (cfg.max_arena_bytes / per_col).max(1);
     b_amort.clamp(1, b_latency.min(b_arena).min(cfg.max_batch.max(1)))
 }
 
@@ -388,14 +392,34 @@ mod tests {
         assert_eq!(target_batch(&p, &tight), 1);
         // Tight arena cap bounds the pinned footprint.
         let small = AdaptiveBatchConfig {
-            max_arena_bytes: Arena::footprint_for(p.max_dim) * 4,
+            max_arena_bytes: footprint_for_elem(p.max_dim, p.elem_bytes) * 4,
             ..AdaptiveBatchConfig::default()
         };
         let t = target_batch(&p, &small);
-        assert!(Arena::footprint_for(p.max_dim * t) <= small.max_arena_bytes);
+        assert!(footprint_for_elem(p.max_dim * t, p.elem_bytes) <= small.max_arena_bytes);
         // Hard ceiling always wins.
         let capped = AdaptiveBatchConfig { max_batch: 3, ..AdaptiveBatchConfig::default() };
         assert!(target_batch(&p, &capped) <= 3);
+    }
+
+    #[test]
+    fn f32_profiles_batch_wider_under_an_arena_bound_cap() {
+        // Same operator, same cap: when the arena term binds, the f32
+        // plan's 4-byte columns fit twice as many per batch.
+        let f = crate::transforms::hadamard_faust(64);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let p64 = plan.profile();
+        let p32 = plan.to_f32().profile();
+        assert_eq!(p32.elem_bytes, 4);
+        let cfg = AdaptiveBatchConfig {
+            max_arena_bytes: footprint_for_elem(p64.max_dim, 8) * 4,
+            overhead_frac: 1e-9, // force b_amort huge so the caps decide
+            ..AdaptiveBatchConfig::default()
+        };
+        let t64 = target_batch(&p64, &cfg);
+        let t32 = target_batch(&p32, &cfg);
+        assert_eq!(t64, 4);
+        assert_eq!(t32, 8, "f32 batches should double under the arena cap");
     }
 
     #[test]
@@ -412,10 +436,10 @@ mod tests {
         assert!(ti <= ts && ts <= tb, "class targets out of order: {ti} {ts} {tb}");
         // Bulk's wide budget still cannot stretch the arena cap.
         let small = AdaptiveBatchConfig {
-            max_arena_bytes: Arena::footprint_for(p.max_dim) * 4,
+            max_arena_bytes: footprint_for_elem(p.max_dim, p.elem_bytes) * 4,
             ..AdaptiveBatchConfig::default()
         };
         let t = target_batch_for_class(&p, &small, QosClass::Bulk);
-        assert!(Arena::footprint_for(p.max_dim * t) <= small.max_arena_bytes);
+        assert!(footprint_for_elem(p.max_dim * t, p.elem_bytes) <= small.max_arena_bytes);
     }
 }

@@ -5,7 +5,7 @@
 //! intake-queue high-water) recorded by the TCP front end's admission
 //! controller (see [`crate::server`]).
 
-use super::QosClass;
+use super::{QosClass, ServedPrecision};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Atomic counters updated on the hot path.
@@ -28,6 +28,8 @@ pub struct Metrics {
     ingress_connections: AtomicU64,
     ingress_active_connections: AtomicU64,
     ingress_queue_hwm: AtomicU64,
+    applies_f64: AtomicU64,
+    applies_f32: AtomicU64,
 }
 
 /// Point-in-time copy of the metrics.
@@ -60,6 +62,10 @@ pub struct MetricsSnapshot {
     pub ingress_active_connections: u64,
     /// High-water mark of the admission controller's in-flight depth.
     pub ingress_queue_hwm: u64,
+    /// Requests executed on an f64 generation (precision tier).
+    pub applies_f64: u64,
+    /// Requests executed on a quantized f32 generation.
+    pub applies_f32: u64,
 }
 
 impl MetricsSnapshot {
@@ -94,6 +100,17 @@ impl MetricsSnapshot {
     pub fn ingress_shed_total(&self) -> u64 {
         self.ingress_shed.iter().sum()
     }
+
+    /// Share of executed requests served by f32 generations (0 when
+    /// nothing has executed yet).
+    pub fn f32_apply_frac(&self) -> f64 {
+        let total = self.applies_f64 + self.applies_f32;
+        if total == 0 {
+            0.0
+        } else {
+            self.applies_f32 as f64 / total as f64
+        }
+    }
 }
 
 impl Metrics {
@@ -117,6 +134,8 @@ impl Metrics {
             ingress_connections: AtomicU64::new(0),
             ingress_active_connections: AtomicU64::new(0),
             ingress_queue_hwm: AtomicU64::new(0),
+            applies_f64: AtomicU64::new(0),
+            applies_f32: AtomicU64::new(0),
         }
     }
 
@@ -178,6 +197,14 @@ impl Metrics {
         self.ingress_queue_hwm.fetch_max(depth, Ordering::Relaxed);
     }
 
+    /// Count `n` requests executed at `precision` (one call per batch).
+    pub fn record_precision_applies(&self, precision: ServedPrecision, n: u64) {
+        match precision {
+            ServedPrecision::F64 => self.applies_f64.fetch_add(n, Ordering::Relaxed),
+            ServedPrecision::F32 => self.applies_f32.fetch_add(n, Ordering::Relaxed),
+        };
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -202,6 +229,8 @@ impl Metrics {
             ingress_connections: self.ingress_connections.load(Ordering::Relaxed),
             ingress_active_connections: self.ingress_active_connections.load(Ordering::Relaxed),
             ingress_queue_hwm: self.ingress_queue_hwm.load(Ordering::Relaxed),
+            applies_f64: self.applies_f64.load(Ordering::Relaxed),
+            applies_f32: self.applies_f32.load(Ordering::Relaxed),
         }
     }
 }
@@ -259,6 +288,19 @@ mod tests {
         assert_eq!(s.ingress_shed, [1, 0, 2]);
         assert_eq!(s.ingress_shed_total(), 3);
         assert_eq!(s.ingress_queue_hwm, 7);
+    }
+
+    #[test]
+    fn precision_apply_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_precision_applies(ServedPrecision::F64, 3);
+        m.record_precision_applies(ServedPrecision::F32, 5);
+        m.record_precision_applies(ServedPrecision::F32, 4);
+        let s = m.snapshot();
+        assert_eq!((s.applies_f64, s.applies_f32), (3, 9));
+        assert!((s.f32_apply_frac() - 0.75).abs() < 1e-12);
+        // An all-f64 deployment reports a zero fraction, not NaN.
+        assert_eq!(Metrics::new().snapshot().f32_apply_frac(), 0.0);
     }
 
     #[test]

@@ -25,6 +25,22 @@
 //!   cache-friendlier and amortizes dispatch. Bounded queues give
 //!   backpressure; metrics are lock-free atomics.
 //!
+//! **Precision selection (ROADMAP item j).** The registry stores, next
+//! to every operator's f64 master generation, an optional f32 serving
+//! generation built by [`BatchOp::to_f32_op`] at register/swap time —
+//! factors quantize once, and the f32-vs-f64 relative error is measured
+//! right then on a deterministic probe ("measured at swap", so the bound
+//! always describes the exact generation being served). Which generation
+//! a batch executes on is the [`CoordinatorConfig::precision`] policy:
+//! [`Precision::F64`] (default, bitwise identical to the pre-tier
+//! coordinator), [`Precision::F32`] (serve f32 wherever one exists), or
+//! [`Precision::Auto`]`(budget)` — serve f32 iff the generation's
+//! *measured* error is within the accuracy budget. Batches are sized
+//! from the *serving* generation's [`CostProfile`] (f32 profiles report
+//! `elem_bytes = 4`, halving the arena price per column), and
+//! per-precision apply counts land in [`MetricsSnapshot`]. Factorization
+//! never runs in f32 — precision is strictly a serving-tier choice.
+//!
 //! Operators are best registered as [`EngineOp`]s (see [`engine_ops`]):
 //! the batch a worker executes then runs through the engine's cost-modeled
 //! plan, row-parallel pooled spmm, and zero-alloc arena. A deployment
@@ -73,7 +89,7 @@ pub use batcher::{
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{FleetRefactorization, Registry, RegistryError};
 
-use crate::engine::{ApplyEngine, CostProfile, EngineOp};
+use crate::engine::{ApplyEngine, CostProfile, EngineOp, EngineOpF32};
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -81,6 +97,99 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Serving precision policy, applied per request by the [`Registry`]
+/// (see the module docs' precision-selection section). Factorization is
+/// always f64; this only chooses which *serving generation* executes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Precision {
+    /// Always serve the f64 master generation (the default — bitwise
+    /// identical to the pre-precision-tier coordinator).
+    F64,
+    /// Serve the f32 generation of every operator that publishes one
+    /// (operators without one fall back to f64).
+    F32,
+    /// Accuracy-budgeted: serve f32 iff the generation's *measured*
+    /// relative error (probe-calibrated at register/swap time) is within
+    /// the budget; anything that can't prove it stays f64.
+    Auto(f64),
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::F64
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Precision::F64 => f.write_str("f64"),
+            Precision::F32 => f.write_str("f32"),
+            Precision::Auto(eps) => write!(f, "auto:{eps:.0e}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f64" => Ok(Precision::F64),
+            "f32" => Ok(Precision::F32),
+            "auto" => Ok(Precision::Auto(1e-6)),
+            other => match other.strip_prefix("auto:") {
+                Some(eps) => eps
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|e| e.is_finite() && *e > 0.0)
+                    .map(Precision::Auto)
+                    .ok_or_else(|| format!("bad accuracy budget '{eps}' in '{other}'")),
+                None => Err(format!(
+                    "unknown precision '{other}' (f64|f32|auto|auto:EPS)"
+                )),
+            },
+        }
+    }
+}
+
+/// Which element type actually executed a request's batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServedPrecision {
+    F64,
+    F32,
+}
+
+impl ServedPrecision {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServedPrecision::F64 => "f64",
+            ServedPrecision::F32 => "f32",
+        }
+    }
+}
+
+impl std::fmt::Display for ServedPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A published f32 serving generation: the quantized op plus the error
+/// calibration the registry's precision policy decides with. Built by
+/// [`BatchOp::to_f32_op`] when a generation is registered or swapped in
+/// ("measured at swap" — the bound always describes the exact factors
+/// being served, not some earlier generation).
+#[derive(Clone)]
+pub struct F32Serving {
+    /// The quantized operator (f64 edges, f32 chain).
+    pub op: Arc<dyn BatchOp>,
+    /// Probe-measured f32-vs-f64 relative error (what `auto` budgets
+    /// compare against, and what metrics report).
+    pub measured_rel_err: f64,
+    /// Declared headroom-padded bound (what tests hold outputs to).
+    pub declared_rel_err: f64,
+}
 
 /// A batched linear operator servable by the coordinator.
 pub trait BatchOp: Send + Sync {
@@ -93,6 +202,12 @@ pub trait BatchOp: Send + Sync {
     /// Flop/byte profile for adaptive batch sizing; `None` opts the
     /// operator out (it then batches at the policy's fixed default).
     fn cost_profile(&self) -> Option<CostProfile> {
+        None
+    }
+    /// Build this operator's f32 serving generation, if it supports one.
+    /// `None` (the default) keeps the operator f64-only — the registry
+    /// then serves it at f64 under every precision policy.
+    fn to_f32_op(&self) -> Option<F32Serving> {
         None
     }
 }
@@ -133,6 +248,16 @@ impl BatchOp for Faust {
     fn cost_profile(&self) -> Option<CostProfile> {
         Some(self.plan().profile())
     }
+    /// The Faust's cached quantized plan, wrapped as a global-engine op
+    /// (quantization + probe run at most once per operator).
+    fn to_f32_op(&self) -> Option<F32Serving> {
+        let (plan, bound) = self.plan_f32();
+        Some(F32Serving {
+            op: Arc::new(crate::engine::global().op_f32(plan, bound)),
+            measured_rel_err: bound.measured_rel_err,
+            declared_rel_err: bound.declared_rel_err,
+        })
+    }
 }
 
 impl BatchOp for EngineOp {
@@ -151,6 +276,37 @@ impl BatchOp for EngineOp {
     }
     fn cost_profile(&self) -> Option<CostProfile> {
         Some(EngineOp::profile(self))
+    }
+    /// Quantize the plan and calibrate the bound on this op's own pool.
+    fn to_f32_op(&self) -> Option<F32Serving> {
+        let op32 = EngineOp::to_f32(self);
+        let bound = op32.bound();
+        Some(F32Serving {
+            op: Arc::new(op32),
+            measured_rel_err: bound.measured_rel_err,
+            declared_rel_err: bound.declared_rel_err,
+        })
+    }
+}
+
+impl BatchOp for EngineOpF32 {
+    fn rows(&self) -> usize {
+        EngineOpF32::rows(self)
+    }
+    fn cols(&self) -> usize {
+        EngineOpF32::cols(self)
+    }
+    /// f64 edges, f32 chain (see [`EngineOpF32::apply_batch`]).
+    fn apply_batch(&self, x: &Mat) -> Mat {
+        EngineOpF32::apply_batch(self, x)
+    }
+    fn flops_per_matvec(&self) -> usize {
+        EngineOpF32::flops_per_matvec(self)
+    }
+    /// f32 profile: `elem_bytes = 4`, so the adaptive batcher prices the
+    /// arena at half the f64 footprint (wider batches fit the same cap).
+    fn cost_profile(&self) -> Option<CostProfile> {
+        Some(EngineOpF32::profile(self))
     }
 }
 
@@ -188,6 +344,9 @@ pub struct CoordinatorConfig {
     /// threshold from each operator's [`CostProfile`] (see
     /// [`target_batch`]); `None` keeps the fixed `max_batch` for all.
     pub adaptive: Option<AdaptiveBatchConfig>,
+    /// Serving precision policy (see [`Precision`]); `F64` — the default
+    /// — reproduces the pre-precision-tier coordinator bitwise.
+    pub precision: Precision,
 }
 
 impl Default for CoordinatorConfig {
@@ -198,6 +357,7 @@ impl Default for CoordinatorConfig {
             n_workers: 2,
             queue_capacity: 1024,
             adaptive: None,
+            precision: Precision::F64,
         }
     }
 }
@@ -303,6 +463,9 @@ struct Request {
 /// A batch ready for execution.
 struct Job {
     op: Arc<dyn BatchOp>,
+    /// Element type of the serving generation `op` resolved to (for
+    /// per-precision metrics).
+    precision: ServedPrecision,
     reqs: Vec<Request>,
 }
 
@@ -480,7 +643,11 @@ impl Coordinator {
     /// [`Registry::swap_epoch`] to replace an operator).
     pub fn start(ops: Vec<(String, Arc<dyn BatchOp>)>, cfg: CoordinatorConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let registry = Arc::new(Registry::with_metrics(cfg.adaptive.clone(), metrics.clone()));
+        let registry = Arc::new(Registry::with_metrics(
+            cfg.adaptive.clone(),
+            cfg.precision,
+            metrics.clone(),
+        ));
         for (name, op) in ops {
             registry
                 .register(name, op)
@@ -632,14 +799,14 @@ fn flush(
     mut reqs: Vec<Request>,
     limit: usize,
 ) {
-    match registry.get(&op_name) {
-        Some(op) => {
+    match registry.get_serving(&op_name) {
+        Some((op, precision)) => {
             let limit = limit.max(1);
             while !reqs.is_empty() {
                 let rest = reqs.split_off(reqs.len().min(limit));
                 let batch = std::mem::replace(&mut reqs, rest);
                 metrics.record_batch(batch.len());
-                jobs.push(Job { op: op.clone(), reqs: batch });
+                jobs.push(Job { op: op.clone(), precision, reqs: batch });
             }
         }
         None => {
@@ -682,6 +849,7 @@ fn worker_loop(jobs: Arc<JobQueue>, metrics: Arc<Metrics>) {
         let y = job.op.apply_batch(&x);
         let exec_ns = t0.elapsed().as_nanos() as u64;
         metrics.record_exec(b, exec_ns, job.op.flops_per_matvec() as u64 * b as u64);
+        metrics.record_precision_applies(job.precision, b as u64);
         for (c, r) in reqs.into_iter().enumerate() {
             let latency = r.enqueued.elapsed().as_nanos() as u64;
             metrics.record_completed(latency);
@@ -957,7 +1125,7 @@ mod tests {
         // arena was budgeted for.
         let n = 64;
         let acfg = AdaptiveBatchConfig {
-            max_arena_bytes: crate::engine::Arena::footprint_for(n) * 6,
+            max_arena_bytes: crate::engine::Arena::<f64>::footprint_for(n) * 6,
             ..AdaptiveBatchConfig::default()
         };
         let engine = crate::engine::ApplyEngine::with_threads(2);
@@ -993,9 +1161,94 @@ mod tests {
         );
         // And the batch width the batcher chose fits the arena budget.
         assert!(
-            crate::engine::Arena::footprint_for(profile.max_dim * target)
+            crate::engine::Arena::<f64>::footprint_for(profile.max_dim * target)
                 <= acfg.max_arena_bytes
         );
+    }
+
+    #[test]
+    fn auto_precision_serves_f32_within_budget_end_to_end() {
+        // The full path: policy parses from a flag string, the registry
+        // quantizes at register time, the router resolves the f32
+        // generation, workers count per-precision applies, and responses
+        // stay within the accuracy budget of the f64 truth.
+        let n = 64;
+        let h = crate::transforms::hadamard(n);
+        let hf = crate::transforms::hadamard_faust(n);
+        let cfg = CoordinatorConfig {
+            precision: "auto:1e-3".parse().expect("flag syntax"),
+            ..CoordinatorConfig::default()
+        };
+        assert_eq!(cfg.precision, Precision::Auto(1e-3));
+        let coord = Coordinator::start(
+            vec![("h".to_string(), Arc::new(hf) as Arc<dyn BatchOp>)],
+            cfg,
+        );
+        assert_eq!(
+            coord.registry().serving_of("h"),
+            Some(ServedPrecision::F32),
+            "hadamard quantizes well under a 1e-3 budget"
+        );
+        let client = coord.client();
+        let mut rng = Rng::new(41);
+        for _ in 0..12 {
+            let x = rng.gauss_vec(n);
+            let y = client.apply("h", x.clone()).unwrap();
+            let want = h.matvec(&x);
+            let mut err2 = 0.0;
+            let mut ref2 = 0.0;
+            for i in 0..n {
+                err2 += (y[i] - want[i]) * (y[i] - want[i]);
+                ref2 += want[i] * want[i];
+            }
+            assert!(
+                (err2 / ref2).sqrt() < 1e-3,
+                "f32 response outside the accuracy budget"
+            );
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.applies_f32, 12, "f32 applies uncounted");
+        assert_eq!(snap.applies_f64, 0);
+        assert_eq!(snap.f32_apply_frac(), 1.0);
+    }
+
+    #[test]
+    fn default_precision_stays_f64_and_counts_as_such() {
+        let (op, a) = dense_op(6, 6, 167);
+        let coord = Coordinator::start(
+            vec![("m".to_string(), op as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let client = coord.client();
+        let x = vec![1.0, -2.0, 3.0, 0.5, -0.25, 4.0];
+        let y = client.apply("m", x.clone()).unwrap();
+        let want = a.matvec(&x);
+        // The default policy runs the pre-tier f64 path.
+        for i in 0..6 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.applies_f64, 1);
+        assert_eq!(snap.applies_f32, 0);
+        assert_eq!(snap.f32_apply_frac(), 0.0);
+    }
+
+    #[test]
+    fn precision_flag_round_trips_and_rejects_garbage() {
+        for (s, want) in [
+            ("f64", Precision::F64),
+            ("f32", Precision::F32),
+            ("auto", Precision::Auto(1e-6)),
+            ("auto:5e-4", Precision::Auto(5e-4)),
+        ] {
+            assert_eq!(s.parse::<Precision>().unwrap(), want);
+        }
+        assert_eq!(Precision::F64.to_string(), "f64");
+        assert_eq!(Precision::Auto(1e-6).to_string(), "auto:1e-6");
+        assert!("single".parse::<Precision>().is_err());
+        assert!("auto:-1".parse::<Precision>().is_err());
+        assert!("auto:nan".parse::<Precision>().is_err());
+        assert!("auto:".parse::<Precision>().is_err());
     }
 
     #[test]

@@ -25,10 +25,19 @@
 //! on every publish, so a
 //! swap to a differently-shaped *plan* (same matrix shape, different
 //! sparsity) immediately re-sizes its batches.
+//!
+//! **Precision tier.** Under a non-default [`Precision`] policy every
+//! publish also builds the operator's f32 serving generation (via
+//! [`BatchOp::to_f32_op`]) and calibrates its error bound right then —
+//! "measured at swap". [`Registry::get_serving`] resolves the generation
+//! the policy selects per flush; batch targets derive from the *serving*
+//! generation's profile, so f32 entries batch wider under the same arena
+//! cap. [`Registry::get`] keeps returning the f64 master (same shape),
+//! which is what dimension checks and shape guards want.
 
 use super::batcher::{target_batch_for_class, AdaptiveBatchConfig};
 use super::metrics::Metrics;
-use super::{BatchOp, QosClass};
+use super::{BatchOp, F32Serving, Precision, QosClass, ServedPrecision};
 use crate::engine::FleetCtx;
 use crate::faust::Faust;
 use crate::hierarchical::{factorize_fleet_traced_with_ctx, HierarchicalConfig};
@@ -75,10 +84,16 @@ impl std::error::Error for RegistryError {}
 
 struct Entry {
     op: Arc<dyn BatchOp>,
+    /// f32 serving generation built (and error-calibrated) at publish
+    /// time — `None` under the `f64` policy or when the operator cannot
+    /// quantize ([`BatchOp::to_f32_op`] returned `None`).
+    f32_gen: Option<F32Serving>,
+    /// Which generation the precision policy selected for this entry.
+    serving: ServedPrecision,
     /// Epoch this generation of the operator was published at.
     epoch: u64,
-    /// Per-QoS-class flush thresholds derived from the operator's cost
-    /// profile, indexed by [`QosClass::index`]
+    /// Per-QoS-class flush thresholds derived from the **serving**
+    /// generation's cost profile, indexed by [`QosClass::index`]
     /// (None ⇒ no profile / fixed sizing ⇒ the policy default applies).
     target_batch: Option<[usize; 3]>,
 }
@@ -88,36 +103,73 @@ pub struct Registry {
     ops: RwLock<HashMap<String, Entry>>,
     epoch: AtomicU64,
     adaptive: Option<AdaptiveBatchConfig>,
+    precision: Precision,
     metrics: Arc<Metrics>,
 }
 
 impl Registry {
-    /// Empty registry. `adaptive = Some(_)` turns on plan-aware batch
-    /// sizing for every operator published with a cost profile.
+    /// Empty registry serving everything in f64. `adaptive = Some(_)`
+    /// turns on plan-aware batch sizing for every operator published
+    /// with a cost profile.
     pub fn new(adaptive: Option<AdaptiveBatchConfig>) -> Self {
-        Self::with_metrics(adaptive, Arc::new(Metrics::new()))
+        Self::with_metrics(adaptive, Precision::F64, Arc::new(Metrics::new()))
+    }
+
+    /// Empty registry with an explicit precision policy.
+    pub fn with_precision(
+        adaptive: Option<AdaptiveBatchConfig>,
+        precision: Precision,
+    ) -> Self {
+        Self::with_metrics(adaptive, precision, Arc::new(Metrics::new()))
     }
 
     pub(crate) fn with_metrics(
         adaptive: Option<AdaptiveBatchConfig>,
+        precision: Precision,
         metrics: Arc<Metrics>,
     ) -> Self {
         Registry {
             ops: RwLock::new(HashMap::new()),
             epoch: AtomicU64::new(0),
             adaptive,
+            precision,
             metrics,
         }
     }
 
+    /// The precision policy every publish is evaluated under.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     fn entry_for(&self, op: Arc<dyn BatchOp>, epoch: u64) -> Entry {
-        let target_batch = match (&self.adaptive, op.cost_profile()) {
+        // Quantize + calibrate only when the policy can ever serve f32:
+        // under `f64` a publish must stay bitwise-free of new work.
+        let f32_gen = match self.precision {
+            Precision::F64 => None,
+            Precision::F32 | Precision::Auto(_) => op.to_f32_op(),
+        };
+        let serving = match (self.precision, &f32_gen) {
+            (Precision::F32, Some(_)) => ServedPrecision::F32,
+            (Precision::Auto(budget), Some(s)) if s.measured_rel_err <= budget => {
+                ServedPrecision::F32
+            }
+            _ => ServedPrecision::F64,
+        };
+        // Batch targets price the generation that actually executes:
+        // an f32 generation's 4-byte elements batch wider under the
+        // same arena cap.
+        let profile = match (serving, &f32_gen) {
+            (ServedPrecision::F32, Some(s)) => s.op.cost_profile(),
+            _ => op.cost_profile(),
+        };
+        let target_batch = match (&self.adaptive, profile) {
             (Some(cfg), Some(p)) => {
                 Some(QosClass::ALL.map(|c| target_batch_for_class(&p, cfg, c)))
             }
             _ => None,
         };
-        Entry { op, epoch, target_batch }
+        Entry { op, f32_gen, serving, epoch, target_batch }
     }
 
     /// Publish a new operator under `name`. Errors if the name is live.
@@ -175,9 +227,45 @@ impl Registry {
         Ok(entry.op)
     }
 
-    /// Resolve an operator (a cheap read-lock + `Arc` clone).
+    /// Resolve an operator (a cheap read-lock + `Arc` clone). Always the
+    /// f64 master — shape checks and swap guards key off it.
     pub fn get(&self, name: &str) -> Option<Arc<dyn BatchOp>> {
         self.ops.read().unwrap().get(name).map(|e| e.op.clone())
+    }
+
+    /// Resolve the generation the precision policy selected at publish
+    /// time, plus which element type it executes in. Same cost as
+    /// [`Registry::get`]: a read-lock and an `Arc` clone.
+    pub fn get_serving(&self, name: &str) -> Option<(Arc<dyn BatchOp>, ServedPrecision)> {
+        self.ops.read().unwrap().get(name).map(|e| match (e.serving, &e.f32_gen) {
+            (ServedPrecision::F32, Some(s)) => (s.op.clone(), ServedPrecision::F32),
+            _ => (e.op.clone(), ServedPrecision::F64),
+        })
+    }
+
+    /// Which precision `name`'s current generation serves in.
+    pub fn serving_of(&self, name: &str) -> Option<ServedPrecision> {
+        self.ops.read().unwrap().get(name).map(|e| e.serving)
+    }
+
+    /// Per-operator precision report, sorted by name: `(name, serving
+    /// precision, measured f32 relative error if a quantized generation
+    /// was built)`. The error is the swap-time probe measurement — the
+    /// number `auto` budgets are compared against.
+    pub fn precision_report(&self) -> Vec<(String, ServedPrecision, Option<f64>)> {
+        let g = self.ops.read().unwrap();
+        let mut v: Vec<(String, ServedPrecision, Option<f64>)> = g
+            .iter()
+            .map(|(n, e)| {
+                (
+                    n.clone(),
+                    e.serving,
+                    e.f32_gen.as_ref().map(|s| s.measured_rel_err),
+                )
+            })
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// The standard-class flush threshold for `name`'s current
@@ -452,5 +540,105 @@ mod tests {
         fixed.register("m", op(64, 64)).unwrap();
         assert_eq!(fixed.batch_limit("m"), None);
         assert_eq!(fixed.batch_limit_class("m", QosClass::Bulk), None);
+    }
+
+    #[test]
+    fn f64_policy_never_builds_a_quantized_generation() {
+        use crate::transforms::hadamard_faust;
+        let r = Registry::new(None);
+        r.register("h", Arc::new(hadamard_faust(8)) as Arc<dyn BatchOp>)
+            .unwrap();
+        let (served, prec) = r.get_serving("h").unwrap();
+        assert_eq!(prec, ServedPrecision::F64);
+        assert_eq!(served.rows(), 8);
+        assert_eq!(r.serving_of("h"), Some(ServedPrecision::F64));
+        // No probe ran, so the report carries no measured error.
+        assert_eq!(r.precision_report(), vec![("h".to_string(), ServedPrecision::F64, None)]);
+    }
+
+    #[test]
+    fn f32_policy_serves_quantized_generation_and_falls_back_per_op() {
+        use crate::transforms::hadamard_faust;
+        let r = Registry::with_precision(None, Precision::F32);
+        // A Faust quantizes; a plain dense Mat does not (to_f32_op =
+        // None) — the same registry serves them at different precisions.
+        r.register("h", Arc::new(hadamard_faust(8)) as Arc<dyn BatchOp>)
+            .unwrap();
+        r.register("m", op(8, 8)).unwrap();
+        let (served, prec) = r.get_serving("h").unwrap();
+        assert_eq!(prec, ServedPrecision::F32);
+        assert_eq!((served.rows(), served.cols()), (8, 8));
+        assert_eq!(r.serving_of("m"), Some(ServedPrecision::F64));
+        // `get` still resolves the f64 master for shape checks.
+        let master = r.get("h").unwrap();
+        assert_eq!((master.rows(), master.cols()), (8, 8));
+        // The quantized generation really computes the operator: compare
+        // a batch against the f64 master within the measured-err report.
+        let x = Mat::from_vec(8, 2, (0..16).map(|i| (i as f64).sin()).collect());
+        let y32 = served.apply_batch(&x);
+        let y64 = master.apply_batch(&x);
+        let mut err2 = 0.0;
+        let mut ref2 = 0.0;
+        for (a, b) in y32.data().iter().zip(y64.data().iter()) {
+            err2 += (a - b) * (a - b);
+            ref2 += b * b;
+        }
+        let rel = (err2 / ref2).sqrt();
+        assert!(rel < 1e-3, "f32 generation far from f64 master: rel={rel:e}");
+        let report = r.precision_report();
+        assert_eq!(report.len(), 2);
+        assert_eq!(report[0].0, "h");
+        assert_eq!(report[0].1, ServedPrecision::F32);
+        assert!(report[0].2.unwrap() >= 0.0);
+        assert_eq!(report[1], ("m".to_string(), ServedPrecision::F64, None));
+    }
+
+    #[test]
+    fn auto_policy_selects_by_measured_error_budget() {
+        use crate::transforms::hadamard_faust;
+        // A Hadamard FAμST quantizes exactly (±1 factors); its probe
+        // error is tiny, so a sane budget admits it…
+        let loose = Registry::with_precision(None, Precision::Auto(1e-6));
+        loose
+            .register("h", Arc::new(hadamard_faust(16)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(loose.serving_of("h"), Some(ServedPrecision::F32));
+        // …while an absurdly tight budget (below f32 input-quantization
+        // noise) rejects the same operator back to f64.
+        let tight = Registry::with_precision(None, Precision::Auto(1e-13));
+        tight
+            .register("h", Arc::new(hadamard_faust(16)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(tight.serving_of("h"), Some(ServedPrecision::F64));
+        // The rejected entry still reports the measured error it was
+        // judged on.
+        let rep = tight.precision_report();
+        assert!(rep[0].2.unwrap() > 1e-13);
+    }
+
+    #[test]
+    fn swap_recalibrates_and_f32_batches_at_four_byte_prices() {
+        use crate::transforms::hadamard_faust;
+        let cfg = AdaptiveBatchConfig::default();
+        let r64 = Registry::new(Some(cfg.clone()));
+        let r32 = Registry::with_precision(Some(cfg), Precision::F32);
+        r64.register("h", Arc::new(hadamard_faust(32)) as Arc<dyn BatchOp>)
+            .unwrap();
+        r32.register("h", Arc::new(hadamard_faust(32)) as Arc<dyn BatchOp>)
+            .unwrap();
+        let t64 = r64.batch_limit("h").expect("faust exposes a profile");
+        let t32 = r32.batch_limit("h").expect("f32 generation exposes a profile");
+        // Same operator, same arena cap: 4-byte elements can never batch
+        // narrower than 8-byte ones.
+        assert!(t32 >= t64, "f32 batch target {t32} narrower than f64 {t64}");
+        // A swap re-quantizes and re-selects: the successor generation is
+        // served in f32 too, at a fresh epoch.
+        let e1 = r32.epoch_of("h").unwrap();
+        let e2 = r32
+            .swap_epoch("h", Arc::new(hadamard_faust(32)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert!(e2 > e1);
+        assert_eq!(r32.serving_of("h"), Some(ServedPrecision::F32));
+        assert!(r32.precision_report()[0].2.is_some());
     }
 }

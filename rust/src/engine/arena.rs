@@ -5,20 +5,28 @@
 //! and grows monotonically, so after the first call at a given size every
 //! subsequent apply reuses the same heap blocks — the reuse/alloc counters
 //! make that claim checkable from benches and metrics instead of folklore.
+//!
+//! Generic over the engine's [`Scalar`] element type (default `f64`), so
+//! the f32 serving tier gets its own arenas at half the footprint — the
+//! byte accounting below derives from `size_of::<S>()`, never a
+//! hardcoded 8 (an f32 batch would otherwise be priced 2× too large by
+//! the adaptive batcher and undersized).
+
+use super::kernel::Scalar;
 
 /// Two reusable scratch buffers plus reuse accounting.
 #[derive(Debug, Default)]
-pub struct Arena {
-    ping: Vec<f64>,
-    pong: Vec<f64>,
+pub struct Arena<S = f64> {
+    ping: Vec<S>,
+    pong: Vec<S>,
     allocs: u64,
     reuses: u64,
 }
 
-impl Arena {
+impl<S: Scalar> Arena<S> {
     /// Empty arena; first acquire allocates.
     pub fn new() -> Self {
-        Arena::default()
+        Arena { ping: Vec::new(), pong: Vec::new(), allocs: 0, reuses: 0 }
     }
 
     /// Arena pre-sized for `n`-element scratch buffers.
@@ -31,8 +39,8 @@ impl Arena {
     /// Ensure both buffers hold at least `n` elements.
     fn reserve(&mut self, n: usize) {
         if self.ping.len() < n {
-            self.ping.resize(n, 0.0);
-            self.pong.resize(n, 0.0);
+            self.ping.resize(n, S::ZERO);
+            self.pong.resize(n, S::ZERO);
             self.allocs += 1;
         } else {
             self.reuses += 1;
@@ -41,7 +49,7 @@ impl Arena {
 
     /// Borrow both scratch buffers at length `n`, growing if needed.
     /// Counts one reuse when the capacity was already sufficient.
-    pub fn acquire(&mut self, n: usize) -> (&mut [f64], &mut [f64]) {
+    pub fn acquire(&mut self, n: usize) -> (&mut [S], &mut [S]) {
         self.reserve(n);
         (&mut self.ping[..n], &mut self.pong[..n])
     }
@@ -63,17 +71,27 @@ impl Arena {
 
     /// Total heap footprint of the ping-pong pair in bytes — what the
     /// coordinator's adaptive batch sizing bounds when it caps a batch
-    /// width (`2 buffers × 8 bytes × capacity`).
+    /// width (`2 buffers × size_of::<S>() × capacity`).
     pub fn footprint_bytes(&self) -> usize {
-        16 * self.capacity()
+        2 * S::BYTES * self.capacity()
     }
 
     /// Footprint a scratch request of `n` elements would pin (the
     /// adaptive batcher checks this *before* sizing a batch, so the
-    /// zero-alloc steady state is preserved by construction).
+    /// zero-alloc steady state is preserved by construction). For the
+    /// element size of a specific *plan* rather than a monomorphized
+    /// arena, use [`footprint_for_elem`].
     pub fn footprint_for(n: usize) -> usize {
-        16 * n
+        footprint_for_elem(n, S::BYTES)
     }
+}
+
+/// Ping-pong footprint of an `n`-element scratch request at a given
+/// element size in bytes — the form the adaptive batcher uses, since it
+/// prices plans whose precision is only known at runtime (via
+/// [`super::CostProfile::elem_bytes`]).
+pub fn footprint_for_elem(n: usize, elem_bytes: usize) -> usize {
+    2 * elem_bytes * n
 }
 
 #[cfg(test)]
@@ -82,7 +100,7 @@ mod tests {
 
     #[test]
     fn grows_then_reuses() {
-        let mut a = Arena::new();
+        let mut a = Arena::<f64>::new();
         {
             let (p, q) = a.acquire(100);
             assert_eq!(p.len(), 100);
@@ -106,7 +124,7 @@ mod tests {
 
     #[test]
     fn with_capacity_prewarms() {
-        let mut a = Arena::with_capacity(64);
+        let mut a = Arena::<f64>::with_capacity(64);
         assert_eq!(a.allocs(), 1);
         let _ = a.acquire(64);
         assert_eq!(a.allocs(), 1);
@@ -115,15 +133,28 @@ mod tests {
 
     #[test]
     fn footprint_counts_both_buffers() {
-        let mut a = Arena::new();
+        let mut a = Arena::<f64>::new();
         let _ = a.acquire(32);
         assert_eq!(a.footprint_bytes(), 2 * 8 * 32);
-        assert_eq!(Arena::footprint_for(32), a.footprint_bytes());
+        assert_eq!(Arena::<f64>::footprint_for(32), a.footprint_bytes());
+    }
+
+    #[test]
+    fn f32_footprint_is_half_of_f64() {
+        let mut a = Arena::<f32>::new();
+        let _ = a.acquire(32);
+        assert_eq!(a.footprint_bytes(), 2 * 4 * 32);
+        assert_eq!(Arena::<f32>::footprint_for(32), a.footprint_bytes());
+        assert_eq!(
+            2 * Arena::<f32>::footprint_for(32),
+            Arena::<f64>::footprint_for(32)
+        );
+        assert_eq!(footprint_for_elem(32, 4), a.footprint_bytes());
     }
 
     #[test]
     fn buffers_are_disjoint() {
-        let mut a = Arena::new();
+        let mut a = Arena::<f64>::new();
         let (p, q) = a.acquire(4);
         p[0] = 1.0;
         q[0] = 2.0;

@@ -1,5 +1,5 @@
 //! SIMD-width-aware dense microkernels — the register-tiled, cache-blocked
-//! GEMM layer every dense hot path bottoms out in (ROADMAP item d).
+//! GEMM layer every dense hot path bottoms out in (ROADMAP items d and j).
 //!
 //! The engine's previous dense kernels streamed the output row through
 //! memory once per `k` step and leaned entirely on auto-vectorization.
@@ -21,17 +21,27 @@
 //! `B`. Rows beyond the last full tile and columns beyond the last full
 //! stripe take a scalar edge path.
 //!
-//! **Lane-width selection.** The stripe width NR is picked from the
-//! machine's f64 SIMD level — 8 on AVX-512 hardware, 4 on AVX2 and on
-//! the portable fallback (pairs of SSE2/NEON lanes) — detected once per
-//! process ([`simd_level`]), exposed on every [`super::ExecCtx`] and
-//! recorded in every [`super::CostProfile`]. The microkernel
-//! body is monomorphized per width and entered through
-//! `#[target_feature(enable = "avx2")]` wrappers (256-bit codegen: the
-//! widest width every supported stable toolchain can emit, and the
-//! preferred width on most AVX-512 silicon — there the 8-lane chunk
-//! lands as two 256-bit ops, doubling the register tile and halving
-//! loop overhead per flop), with no unstable intrinsics anywhere.
+//! **Lane-width selection.** The whole layer is generic over the
+//! [`Scalar`] element type (`f64` for factorization and the default
+//! serving tier, `f32` for the quantized serving tier — ROADMAP item j),
+//! and the stripe width NR is picked per scalar from the machine's SIMD
+//! level, detected once per process ([`simd_level`]):
+//!
+//! | level      | f64 lanes | f32 lanes |
+//! |------------|-----------|-----------|
+//! | `Avx512`   | 8         | 16        |
+//! | `Avx2`     | 4         | 8         |
+//! | `Portable` | 4         | 8         |
+//!
+//! The microkernel body is monomorphized per scalar × width and entered
+//! through `#[target_feature(enable = "avx2")]` wrappers (256-bit
+//! codegen: the widest width every supported stable toolchain can emit,
+//! and the preferred width on most AVX-512 silicon — there the widest
+//! chunk lands as two 256-bit ops, doubling the register tile and
+//! halving loop overhead per flop), with no unstable intrinsics
+//! anywhere. f32 doubles the elements per 256-bit op *and* halves the
+//! bytes streamed per packed-panel walk — the two levers that make the
+//! f32 serving tier faster than f64 on the same silicon.
 //!
 //! **Determinism contract.** Every output element accumulates its `k`
 //! terms in ascending-`k` order with a single accumulator, and tile
@@ -40,7 +50,9 @@
 //! The lane width only changes how independent output elements are
 //! *grouped*, never the per-element operation sequence, so results are
 //! bitwise identical across thread counts, across the solo/fleet
-//! dispatch routes, and even across machines with different SIMD levels.
+//! dispatch routes, and even across machines with different SIMD levels
+//! — separately *within each scalar type* (f32 results are bitwise
+//! thread-invariant too; they are of course not bitwise equal to f64).
 //! The one deliberate deviation from the scalar reference
 //! ([`gemm_scalar_rows`]) is the zero-skip: the tiled kernel skips a `k`
 //! step only when *all* [`MR`] rows of the tile are zero there, which
@@ -68,18 +80,20 @@ const MIN_TILED_BCOLS: usize = 4;
 /// [`super::CostProfile`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdLevel {
-    /// AVX-512F hardware: 8-wide f64 lane chunks (emitted as pairs of
-    /// 256-bit ops — see the module docs on width selection).
+    /// AVX-512F hardware: 8-wide f64 / 16-wide f32 lane chunks (emitted
+    /// as pairs of 256-bit ops — see the module docs on width selection).
     Avx512,
-    /// AVX2: 4 × f64 lane chunks.
+    /// AVX2: 4 × f64 / 8 × f32 lane chunks.
     Avx2,
-    /// Portable fallback: 4-wide chunks compiled for the baseline target
+    /// Portable fallback: chunks compiled for the baseline target
     /// (pairs of SSE2 lanes on x86-64, NEON on aarch64).
     Portable,
 }
 
 impl SimdLevel {
-    /// Width of one explicit f64 lane chunk (the NR of the microkernel).
+    /// Width of one explicit **f64** lane chunk (the NR of the f64
+    /// microkernel). For the per-scalar width use [`Scalar::lanes`] /
+    /// [`lane_width_of`].
     pub fn lane_width(self) -> usize {
         match self {
             SimdLevel::Avx512 => 8,
@@ -115,6 +129,214 @@ pub fn lane_width() -> usize {
     simd_level().lane_width()
 }
 
+/// The selected lane-chunk width for scalar type `S` (f64: 4 or 8;
+/// f32: 8 or 16).
+pub fn lane_width_of<S: Scalar>() -> usize {
+    S::lanes(simd_level())
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// The element types the kernel/pool/plan/arena stack is generic over:
+/// exactly `f64` and `f32` (sealed). Carries the per-type SIMD lane
+/// count, the conversions the quantized serving tier is built from, and
+/// the width-dispatch hooks that route each monomorphization to its
+/// `#[target_feature]` microkernel build.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Send
+    + Sync
+    + Default
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + 'static
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Bytes per element (the plan cost model's `elem_bytes`).
+    const BYTES: usize;
+    /// Display name ("f64" / "f32") for stats and wire dtype labels.
+    const NAME: &'static str;
+
+    /// Lane-chunk width (microkernel NR) at a given SIMD level — the
+    /// per-type lane table in the module docs.
+    fn lanes(level: SimdLevel) -> usize;
+
+    /// Quantize from the f64 reference representation.
+    fn from_f64(v: f64) -> Self;
+    /// Widen back to f64 (exact for both types).
+    fn to_f64(self) -> f64;
+
+    /// Hand `f` this thread's reusable pack buffer for `Self`.
+    #[doc(hidden)]
+    fn with_pack_buf<R>(f: impl FnOnce(&mut Vec<Self>) -> R) -> R;
+    /// Pack one stripe set at this type's process lane width.
+    #[doc(hidden)]
+    fn pack_panel(b: &[Self], ktot: usize, bcols: usize, buf: &mut [Self]);
+    /// Width-dispatched tiled GEMM over rows `[rs, re)` (see
+    /// [`gemm_panel_rows`]).
+    #[doc(hidden)]
+    fn dispatch_gemm_panel(
+        a: &Mat<Self>,
+        panel: &[Self],
+        bcols: usize,
+        rs: usize,
+        re: usize,
+        out: &mut [Self],
+    );
+    /// Width-dispatched tiled transposed-matvec stripe (see
+    /// [`gemv_t_tiled_cols`]).
+    #[doc(hidden)]
+    fn dispatch_gemv_t(a: &Mat<Self>, x: &[Self], s: usize, e: usize, chunk: &mut [Self]);
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 8;
+    const NAME: &'static str = "f64";
+
+    fn lanes(level: SimdLevel) -> usize {
+        match level {
+            SimdLevel::Avx512 => 8,
+            SimdLevel::Avx2 | SimdLevel::Portable => 4,
+        }
+    }
+
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    fn with_pack_buf<R>(f: impl FnOnce(&mut Vec<Self>) -> R) -> R {
+        PACK_BUF.with(|cell| f(&mut cell.borrow_mut()))
+    }
+
+    fn pack_panel(b: &[Self], ktot: usize, bcols: usize, buf: &mut [Self]) {
+        match Self::lanes(simd_level()) {
+            8 => pack_b::<f64, 8>(b, ktot, bcols, buf),
+            _ => pack_b::<f64, 4>(b, ktot, bcols, buf),
+        }
+    }
+
+    fn dispatch_gemm_panel(
+        a: &Mat<Self>,
+        panel: &[Self],
+        bcols: usize,
+        rs: usize,
+        re: usize,
+        out: &mut [Self],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        match simd_level() {
+            // SAFETY: avx2 was verified present by `detect()` (avx512f
+            // implies avx2 on every shipping CPU and in the detection
+            // order).
+            SimdLevel::Avx512 => unsafe { gemm_panel_range_w8(a, panel, bcols, rs, re, out) },
+            SimdLevel::Avx2 => unsafe { gemm_panel_range_w4(a, panel, bcols, rs, re, out) },
+            SimdLevel::Portable => gemm_panel_range::<f64, 4>(a, panel, bcols, rs, re, out),
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        gemm_panel_range::<f64, 4>(a, panel, bcols, rs, re, out)
+    }
+
+    fn dispatch_gemv_t(a: &Mat<Self>, x: &[Self], s: usize, e: usize, chunk: &mut [Self]) {
+        #[cfg(target_arch = "x86_64")]
+        match simd_level() {
+            // SAFETY: avx2 verified present by `detect()` for both
+            // non-portable levels.
+            SimdLevel::Avx512 => unsafe { gemv_t_range_w8(a, x, s, e, chunk) },
+            SimdLevel::Avx2 => unsafe { gemv_t_range_w4(a, x, s, e, chunk) },
+            SimdLevel::Portable => gemv_t_range::<f64, 4>(a, x, s, e, chunk),
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        gemv_t_range::<f64, 4>(a, x, s, e, chunk)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 4;
+    const NAME: &'static str = "f32";
+
+    fn lanes(level: SimdLevel) -> usize {
+        match level {
+            SimdLevel::Avx512 => 16,
+            SimdLevel::Avx2 | SimdLevel::Portable => 8,
+        }
+    }
+
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    fn with_pack_buf<R>(f: impl FnOnce(&mut Vec<Self>) -> R) -> R {
+        PACK_BUF_F32.with(|cell| f(&mut cell.borrow_mut()))
+    }
+
+    fn pack_panel(b: &[Self], ktot: usize, bcols: usize, buf: &mut [Self]) {
+        match Self::lanes(simd_level()) {
+            16 => pack_b::<f32, 16>(b, ktot, bcols, buf),
+            _ => pack_b::<f32, 8>(b, ktot, bcols, buf),
+        }
+    }
+
+    fn dispatch_gemm_panel(
+        a: &Mat<Self>,
+        panel: &[Self],
+        bcols: usize,
+        rs: usize,
+        re: usize,
+        out: &mut [Self],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        match simd_level() {
+            // SAFETY: avx2 verified present by `detect()` (see the f64
+            // dispatch above).
+            SimdLevel::Avx512 => unsafe { gemm_panel_range_f32_w16(a, panel, bcols, rs, re, out) },
+            SimdLevel::Avx2 => unsafe { gemm_panel_range_f32_w8(a, panel, bcols, rs, re, out) },
+            SimdLevel::Portable => gemm_panel_range::<f32, 8>(a, panel, bcols, rs, re, out),
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        gemm_panel_range::<f32, 8>(a, panel, bcols, rs, re, out)
+    }
+
+    fn dispatch_gemv_t(a: &Mat<Self>, x: &[Self], s: usize, e: usize, chunk: &mut [Self]) {
+        #[cfg(target_arch = "x86_64")]
+        match simd_level() {
+            // SAFETY: as above.
+            SimdLevel::Avx512 => unsafe { gemv_t_range_f32_w16(a, x, s, e, chunk) },
+            SimdLevel::Avx2 => unsafe { gemv_t_range_f32_w8(a, x, s, e, chunk) },
+            SimdLevel::Portable => gemv_t_range::<f32, 8>(a, x, s, e, chunk),
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        gemv_t_range::<f32, 8>(a, x, s, e, chunk)
+    }
+}
+
 /// Does the tiled path apply to an `m`-row, `bcols`-column product?
 /// Deterministic in the shape alone, so the solo and fleet routes always
 /// agree on the kernel choice.
@@ -123,10 +345,12 @@ pub(crate) fn tiled_applies(m: usize, bcols: usize) -> bool {
 }
 
 thread_local! {
-    /// Reusable pack buffer: packing allocates only until the buffer has
-    /// grown to the deployment's largest operand (the serving plans'
+    /// Reusable f64 pack buffer: packing allocates only until the buffer
+    /// has grown to the deployment's largest operand (the serving plans'
     /// zero-alloc steady state keeps holding).
     static PACK_BUF: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+    /// f32 twin of [`PACK_BUF`] for the quantized serving tier.
+    static PACK_BUF_F32: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 
 /// Number of NR-wide column stripes covering `bcols` columns.
@@ -137,7 +361,7 @@ fn n_stripes(bcols: usize, nr: usize) -> usize {
 /// Pack row-major `b` (`ktot × bcols`) into NR-column stripes,
 /// stripe-major then `k`-major, zero-padded to the lane width:
 /// `buf[(s·ktot + k)·NR + l] = b[k][s·NR + l]`.
-fn pack_b<const NR: usize>(b: &[f64], ktot: usize, bcols: usize, buf: &mut [f64]) {
+fn pack_b<S: Scalar, const NR: usize>(b: &[S], ktot: usize, bcols: usize, buf: &mut [S]) {
     let stripes = n_stripes(bcols, NR);
     debug_assert_eq!(buf.len(), stripes * ktot * NR);
     for (k, brow) in b.chunks_exact(bcols).enumerate() {
@@ -146,34 +370,28 @@ fn pack_b<const NR: usize>(b: &[f64], ktot: usize, bcols: usize, buf: &mut [f64]
             let w = NR.min(bcols - j0);
             let dst = &mut buf[(s * ktot + k) * NR..][..NR];
             dst[..w].copy_from_slice(&brow[j0..j0 + w]);
-            dst[w..].fill(0.0);
+            dst[w..].fill(S::ZERO);
         }
     }
 }
 
-/// Pack `b` into this thread's reusable panel buffer at the process lane
-/// width and hand the packed panel to `f`. The panel is plain `&[f64]`,
-/// safe to share read-only with pool workers for the duration of the
-/// call — "packed once, reused across row chunks".
-pub(crate) fn with_pack_panel<R>(
-    b: &[f64],
+/// Pack `b` into this thread's reusable panel buffer at the scalar's
+/// process lane width and hand the packed panel to `f`. The panel is a
+/// plain slice, safe to share read-only with pool workers for the
+/// duration of the call — "packed once, reused across row chunks".
+pub(crate) fn with_pack_panel<S: Scalar, R>(
+    b: &[S],
     ktot: usize,
     bcols: usize,
-    f: impl FnOnce(&[f64]) -> R,
+    f: impl FnOnce(&[S]) -> R,
 ) -> R {
-    let nr = lane_width();
+    let nr = S::lanes(simd_level());
     let len = n_stripes(bcols, nr) * ktot * nr;
-    PACK_BUF.with(|cell| {
-        let mut buf = cell.borrow_mut();
+    S::with_pack_buf(|buf| {
         if buf.len() < len {
-            buf.resize(len, 0.0);
+            buf.resize(len, S::ZERO);
         }
-        match simd_level() {
-            SimdLevel::Avx512 => pack_b::<8>(b, ktot, bcols, &mut buf[..len]),
-            SimdLevel::Avx2 | SimdLevel::Portable => {
-                pack_b::<4>(b, ktot, bcols, &mut buf[..len])
-            }
-        }
+        S::pack_panel(b, ktot, bcols, &mut buf[..len]);
         f(&buf[..len])
     })
 }
@@ -185,20 +403,20 @@ pub(crate) fn with_pack_panel<R>(
 /// the determinism contract.
 #[inline(always)]
 #[allow(clippy::needless_range_loop)]
-fn mr_tile<const NR: usize>(
-    a0: &[f64],
-    a1: &[f64],
-    a2: &[f64],
-    a3: &[f64],
-    panel: &[f64],
-    acc: &mut [[f64; NR]; MR],
+fn mr_tile<S: Scalar, const NR: usize>(
+    a0: &[S],
+    a1: &[S],
+    a2: &[S],
+    a3: &[S],
+    panel: &[S],
+    acc: &mut [[S; NR]; MR],
 ) {
     let it = panel.chunks_exact(NR).zip(a0).zip(a1).zip(a2).zip(a3);
     for ((((bv, &v0), &v1), &v2), &v3) in it {
-        if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+        if v0 == S::ZERO && v1 == S::ZERO && v2 == S::ZERO && v3 == S::ZERO {
             continue;
         }
-        let bv: &[f64; NR] = bv.try_into().expect("stripe chunk is NR wide");
+        let bv: &[S; NR] = bv.try_into().expect("stripe chunk is NR wide");
         for l in 0..NR {
             acc[0][l] += v0 * bv[l];
             acc[1][l] += v1 * bv[l];
@@ -212,12 +430,12 @@ fn mr_tile<const NR: usize>(
 /// zero-skip, same as the scalar reference).
 #[inline(always)]
 #[allow(clippy::needless_range_loop)]
-fn row_tile<const NR: usize>(arow: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
+fn row_tile<S: Scalar, const NR: usize>(arow: &[S], panel: &[S], acc: &mut [S; NR]) {
     for (bv, &av) in panel.chunks_exact(NR).zip(arow) {
-        if av == 0.0 {
+        if av == S::ZERO {
             continue;
         }
-        let bv: &[f64; NR] = bv.try_into().expect("stripe chunk is NR wide");
+        let bv: &[S; NR] = bv.try_into().expect("stripe chunk is NR wide");
         for l in 0..NR {
             acc[l] += av * bv[l];
         }
@@ -234,13 +452,13 @@ fn row_tile<const NR: usize>(arow: &[f64], panel: &[f64], acc: &mut [f64; NR]) {
 /// chunks are actually emitted as AVX ops — out-of-line it would compile
 /// once for the baseline target and the dispatch would be cosmetic.
 #[inline(always)]
-fn gemm_panel_range<const NR: usize>(
-    a: &Mat,
-    panel: &[f64],
+fn gemm_panel_range<S: Scalar, const NR: usize>(
+    a: &Mat<S>,
+    panel: &[S],
     bcols: usize,
     rs: usize,
     re: usize,
-    out: &mut [f64],
+    out: &mut [S],
 ) {
     let ktot = a.cols();
     let stripes = n_stripes(bcols, NR);
@@ -252,8 +470,8 @@ fn gemm_panel_range<const NR: usize>(
         let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
         for s in 0..stripes {
             let stripe = &panel[s * ktot * NR..][..ktot * NR];
-            let mut acc = [[0.0f64; NR]; MR];
-            mr_tile::<NR>(a0, a1, a2, a3, stripe, &mut acc);
+            let mut acc = [[S::ZERO; NR]; MR];
+            mr_tile::<S, NR>(a0, a1, a2, a3, stripe, &mut acc);
             let j0 = s * NR;
             let w = NR.min(bcols - j0);
             for (r, accr) in acc.iter().enumerate() {
@@ -267,8 +485,8 @@ fn gemm_panel_range<const NR: usize>(
         let arow = a.row(row);
         for s in 0..stripes {
             let stripe = &panel[s * ktot * NR..][..ktot * NR];
-            let mut acc = [0.0f64; NR];
-            row_tile::<NR>(arow, stripe, &mut acc);
+            let mut acc = [S::ZERO; NR];
+            row_tile::<S, NR>(arow, stripe, &mut acc);
             let j0 = s * NR;
             let w = NR.min(bcols - j0);
             out[(row - rs) * bcols + j0..][..w].copy_from_slice(&acc[..w]);
@@ -279,7 +497,7 @@ fn gemm_panel_range<const NR: usize>(
 // The width-specialized builds are compiled under `avx2` (stable as a
 // `target_feature` since Rust 1.27) rather than `avx512f` (stable only
 // in much newer toolchains): 256-bit is the preferred vector width LLVM
-// picks on most AVX-512 silicon anyway, so the 8-lane chunk lands as two
+// picks on most AVX-512 silicon anyway, so the widest chunk lands as two
 // 256-bit ops — wider register tiles, halved loop overhead per flop —
 // while the crate keeps building on every supported stable toolchain.
 
@@ -293,7 +511,7 @@ unsafe fn gemm_panel_range_w8(
     re: usize,
     out: &mut [f64],
 ) {
-    gemm_panel_range::<8>(a, panel, bcols, rs, re, out)
+    gemm_panel_range::<f64, 8>(a, panel, bcols, rs, re, out)
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -306,40 +524,47 @@ unsafe fn gemm_panel_range_w4(
     re: usize,
     out: &mut [f64],
 ) {
-    gemm_panel_range::<4>(a, panel, bcols, rs, re, out)
+    gemm_panel_range::<f64, 4>(a, panel, bcols, rs, re, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_panel_range_f32_w16(
+    a: &Mat<f32>,
+    panel: &[f32],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f32],
+) {
+    gemm_panel_range::<f32, 16>(a, panel, bcols, rs, re, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_panel_range_f32_w8(
+    a: &Mat<f32>,
+    panel: &[f32],
+    bcols: usize,
+    rs: usize,
+    re: usize,
+    out: &mut [f32],
+) {
+    gemm_panel_range::<f32, 8>(a, panel, bcols, rs, re, out)
 }
 
 /// Run the tiled kernel for rows `[rs, re)` of `a · B` against a packed
-/// panel, dispatched to the microkernel build selected at process start.
-#[cfg(target_arch = "x86_64")]
-pub(crate) fn gemm_panel_rows(
-    a: &Mat,
-    panel: &[f64],
+/// panel, dispatched to the microkernel build selected at process start
+/// for the scalar type.
+pub(crate) fn gemm_panel_rows<S: Scalar>(
+    a: &Mat<S>,
+    panel: &[S],
     bcols: usize,
     rs: usize,
     re: usize,
-    out: &mut [f64],
+    out: &mut [S],
 ) {
-    match simd_level() {
-        // SAFETY: avx2 was verified present by `detect()` (avx512f
-        // implies avx2 on every shipping CPU and in the detection order).
-        SimdLevel::Avx512 => unsafe { gemm_panel_range_w8(a, panel, bcols, rs, re, out) },
-        SimdLevel::Avx2 => unsafe { gemm_panel_range_w4(a, panel, bcols, rs, re, out) },
-        SimdLevel::Portable => gemm_panel_range::<4>(a, panel, bcols, rs, re, out),
-    }
-}
-
-/// Portable build of [`gemm_panel_rows`] for non-x86-64 targets.
-#[cfg(not(target_arch = "x86_64"))]
-pub(crate) fn gemm_panel_rows(
-    a: &Mat,
-    panel: &[f64],
-    bcols: usize,
-    rs: usize,
-    re: usize,
-    out: &mut [f64],
-) {
-    gemm_panel_range::<4>(a, panel, bcols, rs, re, out)
+    S::dispatch_gemm_panel(a, panel, bcols, rs, re, out)
 }
 
 /// Scalar reference GEMM over an output row range (the engine's
@@ -347,22 +572,22 @@ pub(crate) fn gemm_panel_rows(
 /// zero-skip, output row streamed through memory each `k` step. This is
 /// the baseline the kernel proptests and the scalar-vs-tiled benches
 /// compare against.
-pub fn gemm_scalar_rows(
-    a: &Mat,
-    b: &[f64],
+pub fn gemm_scalar_rows<S: Scalar>(
+    a: &Mat<S>,
+    b: &[S],
     bcols: usize,
     start: usize,
     end: usize,
-    out: &mut [f64],
+    out: &mut [S],
 ) {
     debug_assert_eq!(out.len(), (end - start) * bcols);
     let k = a.cols();
     for i in start..end {
         let orow = &mut out[(i - start) * bcols..(i - start + 1) * bcols];
-        orow.fill(0.0);
+        orow.fill(S::ZERO);
         let arow = a.row(i);
         for (kk, &av) in arow.iter().enumerate().take(k) {
-            if av == 0.0 {
+            if av == S::ZERO {
                 continue;
             }
             let brow = &b[kk * bcols..][..bcols];
@@ -383,13 +608,13 @@ pub fn gemm_scalar_rows(
 /// the bitwise identity with full-range/tile-chunked calls. Produces
 /// the same bits as the pooled path at any thread count — the fleet's
 /// fused per-operator jobs call this directly.
-pub fn gemm_tiled_rows(
-    a: &Mat,
-    b: &[f64],
+pub fn gemm_tiled_rows<S: Scalar>(
+    a: &Mat<S>,
+    b: &[S],
     bcols: usize,
     start: usize,
     end: usize,
-    out: &mut [f64],
+    out: &mut [S],
 ) {
     let off_grid = start % MR != 0 || (end % MR != 0 && end != a.rows());
     if !tiled_applies(a.rows(), bcols) || off_grid {
@@ -412,16 +637,22 @@ pub fn gemm_tiled_rows(
 /// wrappers so the lane chunks compile as AVX ops.
 #[inline(always)]
 #[allow(clippy::needless_range_loop)]
-fn gemv_t_range<const NR: usize>(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+fn gemv_t_range<S: Scalar, const NR: usize>(
+    a: &Mat<S>,
+    x: &[S],
+    s: usize,
+    e: usize,
+    chunk: &mut [S],
+) {
     debug_assert_eq!(chunk.len(), e - s);
     let mut j = s;
     while j + NR <= e {
-        let mut acc = [0.0f64; NR];
+        let mut acc = [S::ZERO; NR];
         for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
+            if xi == S::ZERO {
                 continue;
             }
-            let row: &[f64; NR] = a.row(i)[j..j + NR]
+            let row: &[S; NR] = a.row(i)[j..j + NR]
                 .try_into()
                 .expect("column chunk is NR wide");
             for l in 0..NR {
@@ -433,9 +664,9 @@ fn gemv_t_range<const NR: usize>(a: &Mat, x: &[f64], s: usize, e: usize, chunk: 
     }
     if j < e {
         let tail = &mut chunk[j - s..];
-        tail.fill(0.0);
+        tail.fill(S::ZERO);
         for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
+            if xi == S::ZERO {
                 continue;
             }
             let row = &a.row(i)[j..e];
@@ -449,42 +680,41 @@ fn gemv_t_range<const NR: usize>(a: &Mat, x: &[f64], s: usize, e: usize, chunk: 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn gemv_t_range_w8(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
-    gemv_t_range::<8>(a, x, s, e, chunk)
+    gemv_t_range::<f64, 8>(a, x, s, e, chunk)
 }
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn gemv_t_range_w4(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
-    gemv_t_range::<4>(a, x, s, e, chunk)
+    gemv_t_range::<f64, 4>(a, x, s, e, chunk)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_t_range_f32_w16(a: &Mat<f32>, x: &[f32], s: usize, e: usize, chunk: &mut [f32]) {
+    gemv_t_range::<f32, 16>(a, x, s, e, chunk)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_t_range_f32_w8(a: &Mat<f32>, x: &[f32], s: usize, e: usize, chunk: &mut [f32]) {
+    gemv_t_range::<f32, 8>(a, x, s, e, chunk)
 }
 
 /// Serial `chunk = (Aᵀ x)[s..e)` through the width-dispatched tiled
 /// kernel — the per-chunk routine of the pooled transposed matvec and
 /// the fleet's fused power iterations.
-#[cfg(target_arch = "x86_64")]
-pub fn gemv_t_tiled_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
-    match simd_level() {
-        // SAFETY: avx2 was verified present by `detect()` for both
-        // non-portable levels.
-        SimdLevel::Avx512 => unsafe { gemv_t_range_w8(a, x, s, e, chunk) },
-        SimdLevel::Avx2 => unsafe { gemv_t_range_w4(a, x, s, e, chunk) },
-        SimdLevel::Portable => gemv_t_range::<4>(a, x, s, e, chunk),
-    }
-}
-
-/// Portable build of [`gemv_t_tiled_cols`] for non-x86-64 targets.
-#[cfg(not(target_arch = "x86_64"))]
-pub fn gemv_t_tiled_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
-    gemv_t_range::<4>(a, x, s, e, chunk)
+pub fn gemv_t_tiled_cols<S: Scalar>(a: &Mat<S>, x: &[S], s: usize, e: usize, chunk: &mut [S]) {
+    S::dispatch_gemv_t(a, x, s, e, chunk)
 }
 
 /// Scalar reference for the transposed matvec stripe (the pre-kernel
 /// inner loop, kept as the comparison baseline).
-pub fn gemv_t_scalar_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+pub fn gemv_t_scalar_cols<S: Scalar>(a: &Mat<S>, x: &[S], s: usize, e: usize, chunk: &mut [S]) {
     debug_assert_eq!(chunk.len(), e - s);
-    chunk.fill(0.0);
+    chunk.fill(S::ZERO);
     for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
+        if xi == S::ZERO {
             continue;
         }
         let row = &a.row(i)[s..e];
@@ -516,11 +746,31 @@ mod tests {
     }
 
     #[test]
+    fn f32_lane_width_doubles_f64() {
+        assert_eq!(lane_width_of::<f32>(), 2 * lane_width_of::<f64>());
+        assert_eq!(lane_width_of::<f64>(), lane_width());
+        let w = lane_width_of::<f32>();
+        assert!(w == 8 || w == 16, "unexpected f32 lane width {w}");
+    }
+
+    #[test]
+    fn scalar_consts_and_conversions() {
+        assert_eq!(f64::BYTES, 8);
+        assert_eq!(f32::BYTES, 4);
+        assert_eq!(f64::NAME, "f64");
+        assert_eq!(f32::NAME, "f32");
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        let lossy = f32::from_f64(0.1);
+        assert!((lossy.to_f64() - 0.1).abs() < 1e-8);
+        assert_ne!(lossy.to_f64(), 0.1); // quantization is real
+    }
+
+    #[test]
     fn pack_b_stripes_and_pads() {
         // 3×5 matrix packed at NR=4: two stripes, second padded.
         let b: Vec<f64> = (1..=15).map(|v| v as f64).collect();
         let mut buf = vec![-1.0; 2 * 3 * 4];
-        pack_b::<4>(&b, 3, 5, &mut buf);
+        pack_b::<f64, 4>(&b, 3, 5, &mut buf);
         // Stripe 0, k=0 holds b[0][0..4]; stripe 1, k=2 holds b[2][4] + pad
         // at offset (s·ktot + k)·NR = (3 + 2)·4.
         assert_eq!(&buf[0..4], &[1.0, 2.0, 3.0, 4.0]);
@@ -559,6 +809,38 @@ mod tests {
     }
 
     #[test]
+    fn f32_tiled_matches_f32_scalar_across_edge_shapes() {
+        let mut rng = Rng::new(905);
+        // Same shape sweep as the f64 test, on the f32 monomorphization
+        // (16-lane stripes on AVX-512 exercise wider remainders).
+        let shapes = [
+            (12usize, 9usize, 8usize),
+            (13, 7, 9),
+            (4, 5, 4),
+            (3, 6, 8),
+            (17, 1, 5),
+            (9, 4, 3),
+            (5, 0, 6),
+            (21, 11, 17),
+            (19, 6, 15), // bcols between the f64 and f32 stripe widths
+        ];
+        for &(m, k, n) in &shapes {
+            let a = sparse_mat(&mut rng, m, k, (m * k) / 2 + 1).to_f32();
+            let b = Mat::randn(k, n, &mut rng).to_f32();
+            let mut want = vec![0.0f32; m * n];
+            gemm_scalar_rows(&a, b.data(), n, 0, m, &mut want);
+            let mut got = vec![1.0f32; m * n];
+            gemm_tiled_rows(&a, b.data(), n, 0, m, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "({m},{k},{n}): {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn tiled_chunked_at_tile_boundaries_is_bitwise_identical_to_full_range() {
         let mut rng = Rng::new(902);
         let (m, k, n) = (23usize, 14usize, 11usize);
@@ -574,6 +856,27 @@ mod tests {
             gemm_tiled_rows(&a, b.data(), n, 0, mid, &mut lo);
             gemm_tiled_rows(&a, b.data(), n, mid, m, &mut hi);
             let stitched: Vec<f64> = lo.into_iter().chain(hi).collect();
+            for (s, f) in stitched.iter().zip(&full) {
+                assert_eq!(s.to_bits(), f.to_bits(), "split at row {mid}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_tiled_chunked_at_tile_boundaries_is_bitwise_identical() {
+        let mut rng = Rng::new(906);
+        let (m, k, n) = (23usize, 14usize, 11usize);
+        let a = sparse_mat(&mut rng, m, k, 150).to_f32();
+        let b = Mat::randn(k, n, &mut rng).to_f32();
+        let mut full = vec![0.0f32; m * n];
+        gemm_tiled_rows(&a, b.data(), n, 0, m, &mut full);
+        for split_tile in 1..m.div_ceil(MR) {
+            let mid = split_tile * MR;
+            let mut lo = vec![0.0f32; mid * n];
+            let mut hi = vec![0.0f32; (m - mid) * n];
+            gemm_tiled_rows(&a, b.data(), n, 0, mid, &mut lo);
+            gemm_tiled_rows(&a, b.data(), n, mid, m, &mut hi);
+            let stitched: Vec<f32> = lo.into_iter().chain(hi).collect();
             for (s, f) in stitched.iter().zip(&full) {
                 assert_eq!(s.to_bits(), f.to_bits(), "split at row {mid}");
             }
@@ -604,6 +907,22 @@ mod tests {
                 for (s, w) in stitched.iter().zip(&want) {
                     assert_eq!(s.to_bits(), w.to_bits(), "split {split} ({m},{n})");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gemv_t_tiled_matches_scalar_bitwise() {
+        let mut rng = Rng::new(907);
+        for &(m, n) in &[(15usize, 13usize), (40, 6), (7, 32), (9, 3), (11, 21)] {
+            let a = Mat::randn(m, n, &mut rng).to_f32();
+            let x: Vec<f32> = rng.gauss_vec(m).iter().map(|&v| v as f32).collect();
+            let mut want = vec![0.0f32; n];
+            gemv_t_scalar_cols(&a, &x, 0, n, &mut want);
+            let mut got = vec![0.0f32; n];
+            gemv_t_tiled_cols(&a, &x, 0, n, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{n})");
             }
         }
     }

@@ -60,11 +60,11 @@ pub mod kernel;
 pub mod plan;
 pub mod pool;
 
-pub use arena::Arena;
+pub use arena::{footprint_for_elem, Arena};
 pub use ctx::ExecCtx;
 pub use fleet::{FleetConfig, FleetCtx, FleetMetricsSnapshot};
-pub use kernel::SimdLevel;
-pub use plan::{ApplyPlan, CostProfile, PlanConfig, Stage, StageKernel};
+pub use kernel::{Scalar, SimdLevel};
+pub use plan::{ApplyPlan, CostProfile, F32Bound, PlanConfig, Stage, StageKernel};
 pub use pool::{
     par_gemm_into, par_gemv_into, par_gemv_t_into, par_map_jobs, par_spmm_into,
     par_spmv_into, ThreadPool,
@@ -81,11 +81,20 @@ thread_local! {
     /// workers sharing one [`EngineOp`]) never serialize on a lock, and
     /// each thread's buffers stay warm across calls.
     static THREAD_ARENA: RefCell<Arena> = RefCell::new(Arena::new());
+    /// f32 twin of [`THREAD_ARENA`]: the f32 serving tier keeps separate
+    /// per-thread scratch so mixed-precision workers never thrash one
+    /// buffer between element types.
+    static THREAD_ARENA_F32: RefCell<Arena<f32>> = RefCell::new(Arena::new());
 }
 
 /// Run `f` with this thread's reusable scratch arena.
 pub fn with_thread_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
     THREAD_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Run `f` with this thread's reusable f32 scratch arena.
+pub fn with_thread_arena_f32<R>(f: impl FnOnce(&mut Arena<f32>) -> R) -> R {
+    THREAD_ARENA_F32.with(|a| f(&mut a.borrow_mut()))
 }
 
 /// Engine configuration: thread count + plan tuning.
@@ -223,6 +232,20 @@ impl ApplyEngine {
         EngineOp { plan, pool: self.pool.clone(), metrics: self.metrics.clone() }
     }
 
+    /// Wrap an already-compiled plan as a servable op on this engine's
+    /// pool (no recompilation — for plans cached elsewhere, e.g.
+    /// [`Faust::plan`]).
+    pub fn op_from_plan(&self, plan: Arc<ApplyPlan>) -> EngineOp {
+        EngineOp { plan, pool: self.pool.clone(), metrics: self.metrics.clone() }
+    }
+
+    /// Wrap an already-quantized f32 plan and its calibrated bound as a
+    /// servable op (no re-quantization, no fresh probe — for cached
+    /// conversions, e.g. [`Faust::plan_f32`]).
+    pub fn op_f32(&self, plan: Arc<ApplyPlan<f32>>, bound: F32Bound) -> EngineOpF32 {
+        EngineOpF32 { plan, bound, pool: self.pool.clone(), metrics: self.metrics.clone() }
+    }
+
     /// Engine-wide metrics snapshot (covers all ops of this engine).
     pub fn metrics(&self) -> EngineMetricsSnapshot {
         self.metrics.snapshot()
@@ -333,6 +356,103 @@ impl EngineOp {
     pub fn metrics(&self) -> EngineMetricsSnapshot {
         self.metrics.snapshot()
     }
+
+    /// Quantized f32 serving twin of this op: same pool and engine
+    /// metrics, plan converted via [`ApplyPlan::to_f32_with_bound`] (so
+    /// the returned op carries its calibrated error bound). The f64 op
+    /// is untouched — precision is a per-generation serving choice, not
+    /// a property of the operator.
+    pub fn to_f32(&self) -> EngineOpF32 {
+        let (plan32, bound) = self.plan.to_f32_with_bound(&self.pool);
+        EngineOpF32 {
+            plan: Arc::new(plan32),
+            bound,
+            pool: self.pool.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+}
+
+/// The f32 serving tier of an [`EngineOp`]: a quantized plan plus its
+/// calibrated [`F32Bound`]. Inputs/outputs stay `f64` at the API edge —
+/// the op quantizes the batch on entry and widens on exit, so callers
+/// (coordinator workers, wire handlers) are precision-agnostic; only the
+/// chain arithmetic, operand storage, and arena scratch are f32.
+pub struct EngineOpF32 {
+    plan: Arc<ApplyPlan<f32>>,
+    bound: F32Bound,
+    pool: Arc<ThreadPool>,
+    metrics: Arc<EngineMetrics>,
+}
+
+impl EngineOpF32 {
+    pub fn plan(&self) -> &ApplyPlan<f32> {
+        &self.plan
+    }
+
+    pub fn rows(&self) -> usize {
+        self.plan.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.plan.cols()
+    }
+
+    /// The probe-calibrated f32-vs-f64 error bound measured at
+    /// conversion time ("measured at swap" — the registry converts when
+    /// a generation is registered or swapped in).
+    pub fn bound(&self) -> F32Bound {
+        self.bound
+    }
+
+    /// Batch apply with f64 edges: quantize → f32 chain → widen.
+    pub fn apply_batch(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.cols(), "engine op f32: x rows mismatch");
+        let bcols = x.cols();
+        let x32: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+        let mut y32 = vec![0.0f32; self.rows() * bcols];
+        with_thread_arena_f32(|arena| {
+            let (a0, r0) = (arena.allocs(), arena.reuses());
+            self.plan
+                .execute_batch_into(&self.pool, arena, &x32, bcols, &mut y32);
+            self.metrics.applies.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .arena_allocs
+                .fetch_add(arena.allocs() - a0, Ordering::Relaxed);
+            self.metrics
+                .arena_reuses
+                .fetch_add(arena.reuses() - r0, Ordering::Relaxed);
+        });
+        let mut out = Mat::zeros(self.rows(), bcols);
+        for (o, &v) in out.data_mut().iter_mut().zip(&y32) {
+            *o = v as f64;
+        }
+        out
+    }
+
+    /// Single-vector apply with f64 edges.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols(), "engine op f32: apply dim mismatch");
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y32 = vec![0.0f32; self.rows()];
+        with_thread_arena_f32(|arena| {
+            self.plan.execute_into(&self.pool, arena, &x32, &mut y32);
+            self.metrics.applies.fetch_add(1, Ordering::Relaxed);
+        });
+        y32.iter().map(|&v| v as f64).collect()
+    }
+
+    /// Flops of one planned matvec (same chain structure as the f64 op).
+    pub fn flops_per_matvec(&self) -> usize {
+        self.plan.planned_flops()
+    }
+
+    /// The f32 plan's [`CostProfile`] (`elem_bytes = 4`, f32 lane width)
+    /// — the adaptive batcher prices f32 generations from this, halving
+    /// the arena footprint per batch column vs the f64 profile.
+    pub fn profile(&self) -> CostProfile {
+        self.plan.profile()
+    }
 }
 
 /// Process-wide shared engine: threads from `FAUST_THREADS` (default:
@@ -439,6 +559,30 @@ mod tests {
         let op = eng.op(&f);
         let y = op.apply(&[1.0; 8]);
         assert_eq!(y.len(), 8);
+    }
+
+    #[test]
+    fn f32_op_matches_f64_within_bound_and_counts_applies() {
+        let n = 64;
+        let f = hadamard_faust(n);
+        let eng = ApplyEngine::with_threads(2);
+        let op = eng.op(&f);
+        let op32 = op.to_f32();
+        assert_eq!((op32.rows(), op32.cols()), (n, n));
+        assert_eq!(op32.profile().elem_bytes, 4);
+        let mut rng = Rng::new(605);
+        let x = Mat::randn(n, 5, &mut rng);
+        let y64 = op.apply_batch(&x);
+        let y32 = op32.apply_batch(&x);
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for (a, b) in y32.data().iter().zip(y64.data()) {
+            err2 += (a - b) * (a - b);
+            ref2 += b * b;
+        }
+        let rel = (err2 / ref2.max(1e-300)).sqrt();
+        assert!(rel <= op32.bound().declared_rel_err, "rel={rel:e}");
+        // f32 applies land in the shared engine counters.
+        assert!(eng.metrics().applies >= 2);
     }
 
     #[test]

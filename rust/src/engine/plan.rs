@@ -22,8 +22,19 @@
 //!
 //! λ is folded into the last stage at compile time, removing the final
 //! scale pass from the hot loop.
+//!
+//! **Precision tier (ROADMAP item j).** Plans are generic over the
+//! engine's [`Scalar`] element type. Compilation always happens at `f64`
+//! ([`ApplyPlan::compile`]); the f32 serving tier is derived from a
+//! compiled f64 plan by [`ApplyPlan::to_f32_with_bound`], which
+//! quantizes every stage operand *once* (post-fusion, post-λ-fold, so
+//! the f32 chain is structurally identical) and calibrates an
+//! [`F32Bound`] — the measured f32-vs-f64 relative error on a
+//! deterministic probe batch plus the declared (headroom-padded) bound
+//! the registry's accuracy budget and the proptests check against.
 
 use super::arena::Arena;
+use super::kernel::Scalar;
 use super::pool::{par_gemm_into, par_spmm_into, ThreadPool};
 use crate::faust::Faust;
 use crate::linalg::Mat;
@@ -59,27 +70,27 @@ impl Default for PlanConfig {
 
 /// Kernel variant chosen for one stage.
 #[derive(Clone, Debug)]
-pub enum StageKernel {
+pub enum StageKernel<S = f64> {
     /// Row-parallel CSR spmm. Unfused factors share the owning
     /// [`Faust`]'s `Arc<Csr>` — compiling a plan for an already-sparse
     /// operator copies no factor data (fused products, transposed chains,
-    /// and λ-folded stages own fresh allocations).
-    Sparse(Arc<Csr>),
+    /// λ-folded stages, and f32 serving copies own fresh allocations).
+    Sparse(Arc<Csr<S>>),
     /// Row-parallel dense GEMM over the densified factor, executed on
     /// the register-tiled [`super::kernel`] microkernels.
-    Dense(Mat),
+    Dense(Mat<S>),
 }
 
 /// One executable layer of the plan (possibly several fused factors).
 #[derive(Clone, Debug)]
-pub struct Stage {
-    kernel: StageKernel,
+pub struct Stage<S = f64> {
+    kernel: StageKernel<S>,
     /// Half-open range of original factor indices covered (len > 1 ⇒
     /// fused). Indices refer to the rightmost-first factor order.
     factor_range: (usize, usize),
 }
 
-impl Stage {
+impl<S: Scalar> Stage<S> {
     pub fn rows(&self) -> usize {
         match &self.kernel {
             StageKernel::Sparse(s) => s.rows(),
@@ -119,16 +130,8 @@ impl Stage {
         self.factor_range
     }
 
-    /// Cost-model score: `flops + β·bytes`.
-    fn cost(&self, beta: f64) -> f64 {
-        match &self.kernel {
-            StageKernel::Sparse(s) => sparse_cost(s.nnz(), s.rows(), s.cols(), beta),
-            StageKernel::Dense(m) => dense_cost(m.rows(), m.cols(), beta),
-        }
-    }
-
     /// Execute: `out = K · input` with `input ∈ R^{cols×bcols}` row-major.
-    fn run(&self, pool: &ThreadPool, input: &[f64], bcols: usize, out: &mut [f64]) {
+    fn run(&self, pool: &ThreadPool, input: &[S], bcols: usize, out: &mut [S]) {
         match &self.kernel {
             StageKernel::Sparse(s) => par_spmm_into(pool, s, input, bcols, out),
             StageKernel::Dense(m) => par_gemm_into(pool, m, input, bcols, out),
@@ -137,19 +140,53 @@ impl Stage {
 
     /// Operand bytes streamed once per batch, independent of the batch
     /// width: the kernel's own storage (CSR vals + indices + row pointers,
-    /// or the full dense block).
+    /// or the full dense block) at this stage's element size.
     pub fn operand_bytes(&self) -> usize {
         match &self.kernel {
-            StageKernel::Sparse(s) => 12 * s.nnz() + 4 * (s.rows() + 1),
-            StageKernel::Dense(m) => 8 * m.rows() * m.cols(),
+            StageKernel::Sparse(s) => (S::BYTES + 4) * s.nnz() + 4 * (s.rows() + 1),
+            StageKernel::Dense(m) => S::BYTES * m.rows() * m.cols(),
+        }
+    }
+
+    /// Longest per-output-element accumulation through this stage (max
+    /// row nnz for CSR, the full inner dimension for dense) — the term
+    /// count the f32 error model's structural floor sums over.
+    fn max_terms(&self) -> usize {
+        match &self.kernel {
+            StageKernel::Sparse(s) => (0..s.rows())
+                .map(|r| (s.indptr[r + 1] - s.indptr[r]) as usize)
+                .max()
+                .unwrap_or(0),
+            StageKernel::Dense(m) => m.cols(),
         }
     }
 
     /// Transposed copy of this stage (kernel materialized transposed).
-    fn transposed(&self) -> Stage {
+    fn transposed(&self) -> Stage<S> {
         let kernel = match &self.kernel {
             StageKernel::Sparse(s) => StageKernel::Sparse(Arc::new(s.transpose())),
             StageKernel::Dense(m) => StageKernel::Dense(m.t()),
+        };
+        Stage { kernel, factor_range: self.factor_range }
+    }
+}
+
+impl Stage {
+    /// Cost-model score: `flops + β·bytes` (compile-time decisions are
+    /// always made on the f64 master plan).
+    fn cost(&self, beta: f64) -> f64 {
+        match &self.kernel {
+            StageKernel::Sparse(s) => sparse_cost(s.nnz(), s.rows(), s.cols(), beta),
+            StageKernel::Dense(m) => dense_cost(m.rows(), m.cols(), beta),
+        }
+    }
+
+    /// Quantized serving copy of this stage (fresh storage, never aliases
+    /// the f64 factor).
+    fn to_f32(&self) -> Stage<f32> {
+        let kernel = match &self.kernel {
+            StageKernel::Sparse(s) => StageKernel::Sparse(Arc::new(s.to_f32())),
+            StageKernel::Dense(m) => StageKernel::Dense(m.to_f32()),
         };
         Stage { kernel, factor_range: self.factor_range }
     }
@@ -207,13 +244,18 @@ pub struct CostProfile {
     /// (the plan's fixed cost the batcher amortizes).
     pub fixed_bytes: usize,
     /// Largest intermediate dimension — ties a batch width to its arena
-    /// ping-pong footprint (`2 · 8 · max_dim · b` bytes).
+    /// ping-pong footprint (`2 · elem_bytes · max_dim · b` bytes).
     pub max_dim: usize,
-    /// f64 lane-chunk width of the dense microkernels this profile's
-    /// stages execute on (4 or 8, runtime-selected once per process —
-    /// see [`super::kernel::lane_width`]). Recorded so serving metrics
+    /// Lane-chunk width of the dense microkernels this profile's stages
+    /// execute on at the plan's element type (f64: 4/8, f32: 8/16;
+    /// runtime-selected once per process — see
+    /// [`super::kernel::lane_width_of`]). Recorded so serving metrics
     /// and bench artifacts state which kernel build produced them.
     pub simd_lanes: usize,
+    /// Bytes per scratch/vector element (8 for f64 plans, 4 for f32) —
+    /// the adaptive batcher prices arena footprints with this instead of
+    /// a hardcoded 8, so f32 batches are not overestimated 2×.
+    pub elem_bytes: usize,
 }
 
 impl CostProfile {
@@ -236,18 +278,38 @@ impl CostProfile {
             fixed_bytes: 8 * rows * cols,
             max_dim: rows.max(cols),
             simd_lanes: super::kernel::lane_width(),
+            elem_bytes: 8,
         }
     }
 }
 
+/// Measured + declared f32-vs-f64 error bound of a quantized serving
+/// plan, calibrated at conversion time by [`ApplyPlan::to_f32_with_bound`].
+///
+/// `measured_rel_err` is what the registry's `auto` accuracy budget
+/// compares against (the honest probe number, reported in metrics);
+/// `declared_rel_err` is the headroom-padded bound the proptests and the
+/// in-bench assertion hold arbitrary inputs to.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F32Bound {
+    /// Max per-column relative ℓ2 error observed on the deterministic
+    /// gaussian probe batch (f32 output vs the f64 master plan).
+    pub measured_rel_err: f64,
+    /// Declared bound: `max(64 × measured, structural floor)` where the
+    /// structural floor is `16 · ε_f32 · Σ_stages (max_terms + 1)` —
+    /// covers near-exact probes (e.g. operators with exactly
+    /// representable entries) without ever under-promising.
+    pub declared_rel_err: f64,
+}
+
 /// Compiled execution plan for one FAμST operator.
 #[derive(Clone, Debug)]
-pub struct ApplyPlan {
+pub struct ApplyPlan<S = f64> {
     /// Forward chain, applied first-to-last (`stages[0]` consumes x).
-    stages: Vec<Stage>,
+    stages: Vec<Stage<S>>,
     /// Transpose chain, applied first-to-last (pre-transposed kernels),
     /// built lazily on the first transpose apply.
-    t_stages: OnceLock<Vec<Stage>>,
+    t_stages: OnceLock<Vec<Stage<S>>>,
     rows: usize,
     cols: usize,
     /// Largest intermediate dimension (scratch sizing).
@@ -332,9 +394,74 @@ impl ApplyPlan {
         }
     }
 
+    /// Quantized f32 serving copy of this compiled plan. Structure is
+    /// inherited verbatim — fusion, CSR/dense strategy, and the folded λ
+    /// were all decided on the f64 master, so the f32 chain differs only
+    /// in element type. Use [`ApplyPlan::to_f32_with_bound`] to also
+    /// calibrate the error bound the serving tier needs.
+    pub fn to_f32(&self) -> ApplyPlan<f32> {
+        ApplyPlan {
+            stages: self.stages.iter().map(Stage::to_f32).collect(),
+            t_stages: OnceLock::new(),
+            rows: self.rows,
+            cols: self.cols,
+            max_dim: self.max_dim,
+            lambda: self.lambda,
+            n_factors: self.n_factors,
+            naive_flops: self.naive_flops,
+        }
+    }
+
+    /// Quantize to f32 and calibrate the [`F32Bound`] by pushing a
+    /// deterministic seeded gaussian probe batch through both plans and
+    /// taking the worst per-column relative ℓ2 error. Both executions use
+    /// `pool`, which is sound because plan outputs are bitwise
+    /// thread-count-invariant within each scalar type.
+    pub fn to_f32_with_bound(&self, pool: &ThreadPool) -> (ApplyPlan<f32>, F32Bound) {
+        let plan32 = self.to_f32();
+        const PROBE_COLS: usize = 8;
+        let mut rng = crate::rng::Rng::new(0xF32B0021);
+        let x64 = rng.gauss_vec(self.cols * PROBE_COLS);
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+
+        let mut arena64 = Arena::<f64>::new();
+        let mut y64 = vec![0.0f64; self.rows * PROBE_COLS];
+        self.execute_batch_into(pool, &mut arena64, &x64, PROBE_COLS, &mut y64);
+
+        let mut arena32 = Arena::<f32>::new();
+        let mut y32 = vec![0.0f32; self.rows * PROBE_COLS];
+        plan32.execute_batch_into(pool, &mut arena32, &x32, PROBE_COLS, &mut y32);
+
+        // Worst per-column relative ℓ2 error (row-major layout: column j
+        // lives at stride PROBE_COLS).
+        let mut measured = 0.0f64;
+        for j in 0..PROBE_COLS {
+            let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+            for i in 0..self.rows {
+                let w = y64[i * PROBE_COLS + j];
+                let d = y32[i * PROBE_COLS + j] as f64 - w;
+                err2 += d * d;
+                ref2 += w * w;
+            }
+            if ref2 > 0.0 {
+                measured = measured.max((err2 / ref2).sqrt());
+            }
+        }
+
+        // Structural floor: quantization plus one rounding per
+        // accumulation term along the chain, so exactly-representable
+        // operators (measured ≈ 0) still declare an honest nonzero bound.
+        let terms: usize = self.stages.iter().map(|s| s.max_terms() + 1).sum();
+        let structural = 16.0 * f32::EPSILON as f64 * terms as f64;
+        let declared = (64.0 * measured).max(structural);
+        (plan32, F32Bound { measured_rel_err: measured, declared_rel_err: declared })
+    }
+}
+
+impl<S: Scalar> ApplyPlan<S> {
     /// The transpose chain, materialized on first use (forward-only
     /// operators never pay for the transposed copies).
-    fn t_chain(&self) -> &[Stage] {
+    fn t_chain(&self) -> &[Stage<S>] {
         self.t_stages
             .get_or_init(|| self.stages.iter().rev().map(Stage::transposed).collect())
     }
@@ -355,7 +482,7 @@ impl ApplyPlan {
         self.stages.len()
     }
 
-    pub fn stages(&self) -> &[Stage] {
+    pub fn stages(&self) -> &[Stage<S>] {
         &self.stages
     }
 
@@ -379,11 +506,12 @@ impl ApplyPlan {
     pub fn profile(&self) -> CostProfile {
         CostProfile {
             flops_per_col: self.planned_flops(),
-            bytes_per_col: 8
+            bytes_per_col: S::BYTES
                 * (self.cols + self.stages.iter().map(Stage::rows).sum::<usize>()),
             fixed_bytes: self.stages.iter().map(Stage::operand_bytes).sum(),
             max_dim: self.max_dim,
-            simd_lanes: super::kernel::lane_width(),
+            simd_lanes: super::kernel::lane_width_of::<S>(),
+            elem_bytes: S::BYTES,
         }
     }
 
@@ -398,10 +526,10 @@ impl ApplyPlan {
     pub fn execute_batch_into(
         &self,
         pool: &ThreadPool,
-        arena: &mut Arena,
-        x: &[f64],
+        arena: &mut Arena<S>,
+        x: &[S],
         bcols: usize,
-        out: &mut [f64],
+        out: &mut [S],
     ) {
         assert_eq!(x.len(), self.cols * bcols, "plan execute: x dim mismatch");
         assert_eq!(out.len(), self.rows * bcols, "plan execute: out dim mismatch");
@@ -412,10 +540,10 @@ impl ApplyPlan {
     pub fn execute_t_batch_into(
         &self,
         pool: &ThreadPool,
-        arena: &mut Arena,
-        x: &[f64],
+        arena: &mut Arena<S>,
+        x: &[S],
         bcols: usize,
-        out: &mut [f64],
+        out: &mut [S],
     ) {
         assert_eq!(x.len(), self.rows * bcols, "plan execute_t: x dim mismatch");
         assert_eq!(out.len(), self.cols * bcols, "plan execute_t: out dim mismatch");
@@ -423,15 +551,17 @@ impl ApplyPlan {
     }
 
     /// Single-vector forward apply (`bcols = 1`).
-    pub fn execute_into(&self, pool: &ThreadPool, arena: &mut Arena, x: &[f64], y: &mut [f64]) {
+    pub fn execute_into(&self, pool: &ThreadPool, arena: &mut Arena<S>, x: &[S], y: &mut [S]) {
         self.execute_batch_into(pool, arena, x, 1, y);
     }
 
     /// Single-vector transpose apply.
-    pub fn execute_t_into(&self, pool: &ThreadPool, arena: &mut Arena, x: &[f64], y: &mut [f64]) {
+    pub fn execute_t_into(&self, pool: &ThreadPool, arena: &mut Arena<S>, x: &[S], y: &mut [S]) {
         self.execute_t_batch_into(pool, arena, x, 1, y);
     }
+}
 
+impl ApplyPlan {
     /// Human-readable plan dump (the CLI's `--plan dump`).
     pub fn dump(&self, cfg: &PlanConfig) -> String {
         let mut out = String::new();
@@ -472,14 +602,14 @@ impl ApplyPlan {
 }
 
 /// Shared chain runner: ping-pong through arena scratch.
-fn run_chain(
-    stages: &[Stage],
+fn run_chain<S: Scalar>(
+    stages: &[Stage<S>],
     pool: &ThreadPool,
-    arena: &mut Arena,
+    arena: &mut Arena<S>,
     scratch_len: usize,
-    x: &[f64],
+    x: &[S],
     bcols: usize,
-    out: &mut [f64],
+    out: &mut [S],
 ) {
     if stages.len() == 1 {
         stages[0].run(pool, x, bcols, out);
@@ -714,8 +844,88 @@ mod tests {
         assert_eq!(p.fixed_bytes, per_stage * f.n_factors());
         assert_eq!(p.max_dim, n);
         assert_eq!(p.simd_lanes, crate::engine::kernel::lane_width());
+        assert_eq!(p.elem_bytes, 8);
         assert!(p.col_cost(0.25) > p.flops_per_col as f64);
         assert!(p.fixed_cost(0.25) > 0.0);
+    }
+
+    #[test]
+    fn f32_profile_reports_four_byte_elements_and_wider_lanes() {
+        let f = crate::transforms::hadamard_faust(32);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let p64 = plan.profile();
+        let p32 = plan.to_f32().profile();
+        assert_eq!(p32.elem_bytes, 4);
+        assert_eq!(p32.flops_per_col, p64.flops_per_col);
+        assert_eq!(p32.bytes_per_col, p64.bytes_per_col / 2);
+        // Sparse stage operands: (4+4)·nnz + 4·(rows+1) vs (8+4)·nnz + ….
+        assert!(p32.fixed_bytes < p64.fixed_bytes);
+        assert_eq!(p32.max_dim, p64.max_dim);
+        assert_eq!(p32.simd_lanes, crate::engine::kernel::lane_width_of::<f32>());
+        assert_eq!(p32.simd_lanes, 2 * p64.simd_lanes);
+    }
+
+    #[test]
+    fn f32_plan_matches_f64_within_declared_bound() {
+        let mut rng = Rng::new(509);
+        let pool = ThreadPool::new(2);
+        for (dims, fill, lambda) in [
+            (vec![17, 11, 9, 13], 0.2, 1.7),
+            (vec![33, 33, 33], 0.1, 0.9),
+            (vec![6, 21], 0.5, 2.5),
+        ] {
+            let (f, _) = chain(&mut rng, &dims, fill, lambda);
+            let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+            let (plan32, bound) = plan.to_f32_with_bound(&pool);
+            assert!(bound.measured_rel_err <= bound.declared_rel_err);
+            assert!(bound.declared_rel_err > 0.0, "structural floor must be nonzero");
+            assert!(bound.declared_rel_err < 1e-3, "bound uselessly loose");
+            // Fresh input (not the probe): still within the declared bound.
+            let x64 = rng.gauss_vec(plan.cols());
+            let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+            let mut a64 = Arena::<f64>::new();
+            let mut a32 = Arena::<f32>::new();
+            let mut y64 = vec![0.0f64; plan.rows()];
+            let mut y32 = vec![0.0f32; plan.rows()];
+            plan.execute_into(&pool, &mut a64, &x64, &mut y64);
+            plan32.execute_into(&pool, &mut a32, &x32, &mut y32);
+            let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+            for i in 0..plan.rows() {
+                let d = y32[i] as f64 - y64[i];
+                err2 += d * d;
+                ref2 += y64[i] * y64[i];
+            }
+            let rel = (err2 / ref2.max(1e-300)).sqrt();
+            assert!(
+                rel <= bound.declared_rel_err,
+                "rel={rel:e} declared={:e} dims={dims:?}",
+                bound.declared_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn exactly_representable_operator_still_declares_structural_floor() {
+        // Hadamard entries are ±1 — f32 quantization is exact, so the
+        // probe measures ~0 error and the declared bound must come from
+        // the structural floor, not collapse to zero.
+        let f = crate::transforms::hadamard_faust(64);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let pool = ThreadPool::serial();
+        let (_, bound) = plan.to_f32_with_bound(&pool);
+        let terms: usize = plan.stages.iter().map(|s| s.max_terms() + 1).sum();
+        let floor = 16.0 * f32::EPSILON as f64 * terms as f64;
+        assert!(bound.declared_rel_err >= floor);
+    }
+
+    #[test]
+    fn f32_plan_shares_no_storage_with_f64_factors() {
+        let mut rng = Rng::new(510);
+        let (f, _) = chain(&mut rng, &[8, 8, 8], 0.3, 1.0);
+        let before = crate::testutil::faust_fingerprint(&f);
+        let plan = ApplyPlan::compile(&f, &PlanConfig::default());
+        let _ = plan.to_f32();
+        assert_eq!(crate::testutil::faust_fingerprint(&f), before);
     }
 
     #[test]
@@ -726,6 +936,7 @@ mod tests {
         assert_eq!(p.bytes_per_col, 8 * 15);
         assert_eq!(p.max_dim, 9);
         assert_eq!(p.simd_lanes, crate::engine::kernel::lane_width());
+        assert_eq!(p.elem_bytes, 8);
     }
 
     #[test]

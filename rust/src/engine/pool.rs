@@ -16,6 +16,7 @@
 //! and hands each chunk the shared read-only panel.
 
 use super::kernel;
+use super::kernel::Scalar;
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 use std::collections::VecDeque;
@@ -214,18 +215,30 @@ fn worker_loop(queue: Arc<TaskQueue>) {
 
 /// Raw output pointer that may cross thread boundaries; every user hands
 /// each thread a disjoint row range, so aliased writes cannot occur.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+struct SendPtr<S>(*mut S);
+unsafe impl<S> Send for SendPtr<S> {}
+unsafe impl<S> Sync for SendPtr<S> {}
+impl<S> Clone for SendPtr<S> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<S> Copy for SendPtr<S> {}
 
 /// Serial CSR spmm over an output row range, slice layout (row-major,
 /// `bcols` columns). `out` holds exactly rows `[start, end)`.
-fn spmm_rows(a: &Csr, b: &[f64], bcols: usize, start: usize, end: usize, out: &mut [f64]) {
+fn spmm_rows<S: Scalar>(
+    a: &Csr<S>,
+    b: &[S],
+    bcols: usize,
+    start: usize,
+    end: usize,
+    out: &mut [S],
+) {
     debug_assert_eq!(out.len(), (end - start) * bcols);
     for i in start..end {
         let orow = &mut out[(i - start) * bcols..(i - start + 1) * bcols];
-        orow.fill(0.0);
+        orow.fill(S::ZERO);
         let lo = a.indptr[i] as usize;
         let hi = a.indptr[i + 1] as usize;
         for k in lo..hi {
@@ -244,13 +257,13 @@ fn spmm_rows(a: &Csr, b: &[f64], bcols: usize, start: usize, end: usize, out: &m
 /// [`super::kernel`] microkernels over the same absolute tile grid, so
 /// every output element accumulates in the same order — the
 /// bitwise-invariance contract.
-pub(crate) fn gemm_rows(
-    a: &Mat,
-    b: &[f64],
+pub(crate) fn gemm_rows<S: Scalar>(
+    a: &Mat<S>,
+    b: &[S],
     bcols: usize,
     start: usize,
     end: usize,
-    out: &mut [f64],
+    out: &mut [S],
 ) {
     kernel::gemm_tiled_rows(a, b, bcols, start, end, out);
 }
@@ -264,7 +277,13 @@ fn grain_rows(total_flops: usize, rows: usize) -> usize {
 
 /// Row-parallel sparse × dense (slice layout): `out = A · B`,
 /// `B ∈ R^{A.cols × bcols}`, `out ∈ R^{A.rows × bcols}`.
-pub fn par_spmm_into(pool: &ThreadPool, a: &Csr, b: &[f64], bcols: usize, out: &mut [f64]) {
+pub fn par_spmm_into<S: Scalar>(
+    pool: &ThreadPool,
+    a: &Csr<S>,
+    b: &[S],
+    bcols: usize,
+    out: &mut [S],
+) {
     assert_eq!(b.len(), a.cols() * bcols, "par_spmm b dim mismatch");
     assert_eq!(out.len(), a.rows() * bcols, "par_spmm out dim mismatch");
     let min_rows = grain_rows(2 * a.nnz() * bcols, a.rows());
@@ -283,7 +302,13 @@ pub fn par_spmm_into(pool: &ThreadPool, a: &Csr, b: &[f64], bcols: usize, out: &
 /// tile boundaries, so the tile grid (and every output bit) is the same
 /// at any thread count; narrow products fall back to the scalar
 /// reference chunked by rows.
-pub fn par_gemm_into(pool: &ThreadPool, a: &Mat, b: &[f64], bcols: usize, out: &mut [f64]) {
+pub fn par_gemm_into<S: Scalar>(
+    pool: &ThreadPool,
+    a: &Mat<S>,
+    b: &[S],
+    bcols: usize,
+    out: &mut [S],
+) {
     assert_eq!(b.len(), a.cols() * bcols, "par_gemm b dim mismatch");
     assert_eq!(out.len(), a.rows() * bcols, "par_gemm out dim mismatch");
     let m = a.rows();
@@ -318,12 +343,12 @@ pub fn par_gemm_into(pool: &ThreadPool, a: &Mat, b: &[f64], bcols: usize, out: &
 }
 
 /// Row-parallel sparse matvec: `y = A x` (the `bcols = 1` case).
-pub fn par_spmv_into(pool: &ThreadPool, a: &Csr, x: &[f64], y: &mut [f64]) {
+pub fn par_spmv_into<S: Scalar>(pool: &ThreadPool, a: &Csr<S>, x: &[S], y: &mut [S]) {
     par_spmm_into(pool, a, x, 1, y);
 }
 
 /// Row-parallel dense matvec: `y = A x`.
-pub fn par_gemv_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
+pub fn par_gemv_into<S: Scalar>(pool: &ThreadPool, a: &Mat<S>, x: &[S], y: &mut [S]) {
     par_gemm_into(pool, a, x, 1, y);
 }
 
@@ -333,7 +358,7 @@ pub fn par_gemv_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
 /// element accumulates its terms in row order regardless of the thread
 /// count — results are bitwise thread-invariant, which the ExecCtx's
 /// pooled power iterations rely on for deterministic factorization.
-pub fn par_gemv_t_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
+pub fn par_gemv_t_into<S: Scalar>(pool: &ThreadPool, a: &Mat<S>, x: &[S], y: &mut [S]) {
     assert_eq!(x.len(), a.rows(), "par_gemv_t x dim mismatch");
     assert_eq!(y.len(), a.cols(), "par_gemv_t y dim mismatch");
     let min_cols = grain_rows(2 * a.rows() * a.cols(), a.cols());
@@ -352,7 +377,7 @@ pub fn par_gemv_t_into(pool: &ThreadPool, a: &Mat, x: &[f64], y: &mut [f64]) {
 /// accumulation order (ascending rows, `x[i] == 0` skipped) is unchanged
 /// from the scalar reference, so any column chunking yields the same
 /// bits.
-pub(crate) fn gemv_t_cols(a: &Mat, x: &[f64], s: usize, e: usize, chunk: &mut [f64]) {
+pub(crate) fn gemv_t_cols<S: Scalar>(a: &Mat<S>, x: &[S], s: usize, e: usize, chunk: &mut [S]) {
     kernel::gemv_t_tiled_cols(a, x, s, e, chunk);
 }
 

@@ -18,7 +18,7 @@
 //! (§V, served through [`crate::coordinator`]), and the fig12 denoising
 //! dictionary (§VI, via [`crate::dictlearn`]).
 
-use crate::engine::{self, ApplyPlan, PlanConfig};
+use crate::engine::{self, ApplyPlan, F32Bound, PlanConfig};
 use crate::linalg::{spectral_norm_iter, Mat};
 use crate::rng::Rng;
 use crate::sparse::{Coo, Csr};
@@ -39,6 +39,10 @@ pub struct Faust {
     lambda: f64,
     /// Lazily-compiled engine plan shared by all apply paths.
     plan: OnceLock<Arc<ApplyPlan>>,
+    /// Lazily-quantized f32 serving plan + its probe-calibrated error
+    /// bound (ROADMAP item j). Factors quantize exactly once per
+    /// operator; factorization itself never touches f32.
+    plan_f32: OnceLock<(Arc<ApplyPlan<f32>>, F32Bound)>,
 }
 
 impl Faust {
@@ -59,13 +63,25 @@ impl Faust {
                 "factor chain dimension mismatch"
             );
         }
-        Faust { factors, lambda, plan: OnceLock::new() }
+        Faust { factors, lambda, plan: OnceLock::new(), plan_f32: OnceLock::new() }
     }
 
     /// The compiled execution plan (built on first use, then cached).
     pub fn plan(&self) -> Arc<ApplyPlan> {
         self.plan
             .get_or_init(|| Arc::new(ApplyPlan::compile(self, &PlanConfig::default())))
+            .clone()
+    }
+
+    /// The quantized f32 serving plan and its calibrated error bound,
+    /// derived from [`Faust::plan`] on first use and cached — repeated
+    /// epoch swaps of the same operator never re-quantize.
+    pub fn plan_f32(&self) -> (Arc<ApplyPlan<f32>>, F32Bound) {
+        self.plan_f32
+            .get_or_init(|| {
+                let (p, b) = self.plan().to_f32_with_bound(engine::global().pool());
+                (Arc::new(p), b)
+            })
             .clone()
     }
 

@@ -1,23 +1,32 @@
-//! Dense row-major `f64` matrix with the operations the FAuST stack needs.
+//! Dense row-major matrix with the operations the FAuST stack needs,
+//! generic over the engine's [`Scalar`] element type (default `f64`).
 //!
 //! This is deliberately a small, dependency-free dense kernel set: GEMM in
 //! the four transpose variants (blocked, written so the inner loops are
 //! auto-vectorizable), axpy-style updates, norms, and slicing. The heavy
 //! lifting in the library (palm4MSA gradients, K-SVD, OMP Gram updates)
-//! bottoms out here.
+//! bottoms out here. The structural accessors (rows, slicing, transpose)
+//! are generic so the f32 serving tier ([`Mat<f32>`], ROADMAP item j) can
+//! run the same register-tiled kernels; the factorization math stays
+//! `f64`-only — quantization happens once per plan build, never inside a
+//! solver.
 
+use crate::engine::kernel::Scalar;
 use crate::rng::Rng;
 use std::fmt;
 
-/// Dense row-major matrix of `f64`.
+/// Dense row-major matrix of [`Scalar`] elements (`f64` by default).
 #[derive(Clone, PartialEq)]
-pub struct Mat {
+pub struct Mat<S = f64> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<S>,
 }
 
-impl fmt::Debug for Mat {
+// Bounded on `S: Debug` (not `Scalar`) so `#[derive(Debug)]` on
+// containers of `Mat<S>` — whose derived impls only add per-type-param
+// `Debug` bounds — stays well-formed.
+impl<S: fmt::Debug> fmt::Debug for Mat<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
         let rmax = self.rows.min(6);
@@ -25,7 +34,7 @@ impl fmt::Debug for Mat {
         for i in 0..rmax {
             write!(f, "  ")?;
             for j in 0..cmax {
-                write!(f, "{:>10.4} ", self.at(i, j))?;
+                write!(f, "{:>10.4?} ", self.data[i * self.cols + j])?;
             }
             writeln!(f, "{}", if cmax < self.cols { "…" } else { "" })?;
         }
@@ -36,12 +45,141 @@ impl fmt::Debug for Mat {
     }
 }
 
-impl Mat {
+impl<S: Scalar> Mat<S> {
     /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: vec![S::ZERO; rows * cols] }
     }
 
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> S {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: S) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[S] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[S] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<S> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[S]) {
+        assert_eq!(v.len(), self.rows);
+        for (i, &x) in v.iter().enumerate() {
+            self.set(i, j, x);
+        }
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat<S> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big operators.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm (accumulated in f64 for both element types).
+    pub fn fro(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|x| {
+                let v = x.to_f64();
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Number of non-zero entries (`‖·‖₀`).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|x| **x != S::ZERO).count()
+    }
+
+    /// Quantize/convert every entry to another scalar type (f64 → f32
+    /// rounds to nearest; f32 → f64 is exact).
+    pub fn convert<T: Scalar>(&self) -> Mat<T> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
+}
+
+impl Mat<f64> {
+    /// Quantized f32 copy (the serving tier's one-time plan-build
+    /// conversion).
+    pub fn to_f32(&self) -> Mat<f32> {
+        self.convert()
+    }
+}
+
+impl Mat<f32> {
+    /// Exact widening back to the f64 reference representation.
+    pub fn to_f64(&self) -> Mat<f64> {
+        self.convert()
+    }
+}
+
+impl Mat {
     /// Rectangular identity: ones on the main diagonal, zeros elsewhere
     /// (the paper's default initialization for factors `j >= 2`).
     pub fn eye(rows: usize, cols: usize) -> Self {
@@ -63,109 +201,14 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
-    /// Wrap an existing row-major buffer.
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
-        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
-        Mat { rows, cols, data }
-    }
-
     /// iid standard-Gaussian matrix.
     pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
         Mat { rows, cols, data: rng.gauss_vec(rows * cols) }
     }
 
-    #[inline]
-    pub fn rows(&self) -> usize {
-        self.rows
-    }
-
-    #[inline]
-    pub fn cols(&self) -> usize {
-        self.cols
-    }
-
-    /// `(rows, cols)` pair.
-    #[inline]
-    pub fn shape(&self) -> (usize, usize) {
-        (self.rows, self.cols)
-    }
-
-    #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
-        debug_assert!(i < self.rows && j < self.cols);
-        self.data[i * self.cols + j]
-    }
-
-    #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f64) {
-        debug_assert!(i < self.rows && j < self.cols);
-        self.data[i * self.cols + j] = v;
-    }
-
-    #[inline]
-    pub fn data(&self) -> &[f64] {
-        &self.data
-    }
-
-    #[inline]
-    pub fn data_mut(&mut self) -> &mut [f64] {
-        &mut self.data
-    }
-
-    /// Borrow row `i` as a slice.
-    #[inline]
-    pub fn row(&self, i: usize) -> &[f64] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
-    }
-
-    #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
-    }
-
-    /// Copy of column `j`.
-    pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self.at(i, j)).collect()
-    }
-
-    /// Overwrite column `j`.
-    pub fn set_col(&mut self, j: usize, v: &[f64]) {
-        assert_eq!(v.len(), self.rows);
-        for (i, &x) in v.iter().enumerate() {
-            self.set(i, j, x);
-        }
-    }
-
-    /// Transposed copy.
-    pub fn t(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        // Blocked transpose for cache friendliness on big operators.
-        const B: usize = 32;
-        for ib in (0..self.rows).step_by(B) {
-            for jb in (0..self.cols).step_by(B) {
-                for i in ib..(ib + B).min(self.rows) {
-                    for j in jb..(jb + B).min(self.cols) {
-                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
-                    }
-                }
-            }
-        }
-        out
-    }
-
-    /// Frobenius norm.
-    pub fn fro(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
-    }
-
     /// Squared Frobenius norm.
     pub fn fro2(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>()
-    }
-
-    /// Number of non-zero entries (`‖·‖₀`).
-    pub fn nnz(&self) -> usize {
-        self.data.iter().filter(|x| **x != 0.0).count()
     }
 
     /// Scale in place.

@@ -4,8 +4,9 @@ use faust::bench_util::{fmt, open_loop_load, OpenLoopConfig, Table};
 use faust::cli::{Args, USAGE};
 use faust::coordinator::{
     engine_ops, AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig,
-    QosClass, RegistryError,
+    Precision, QosClass, RegistryError,
 };
+use faust::server::wire::Dtype;
 use faust::server::{Server, ServerConfig};
 use faust::dictlearn::{faust_dictionary_learning_with_ctx, KsvdConfig};
 use faust::engine::{ApplyEngine, EngineConfig, ExecCtx, FleetCtx, PlanConfig};
@@ -358,12 +359,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers: usize = args.get("workers", 2);
     let threads: usize = args.get("threads", 2);
     let adaptive = args.flag("adaptive-batch");
+    // `--precision f64|f32|auto[:EPS]` picks the serving tier; the
+    // default keeps the bitwise-f64 contract of every earlier PR.
+    let precision: Precision = match args.get_str("precision") {
+        Some(s) => s.parse().map_err(err)?,
+        None => Precision::F64,
+    };
     let h = hadamard(n);
     let engine = Arc::new(ApplyEngine::with_threads(threads));
     let hf = hadamard_faust(n);
     println!(
         "serving {n}x{n} operator: dense + FAuST (RCG={:.1}), engine threads={threads}, \
-         batching={}",
+         batching={}, precision={precision}",
         hf.rcg(),
         if adaptive { "adaptive (plan-aware)" } else { "fixed" }
     );
@@ -386,6 +393,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_workers: workers,
         queue_capacity: 4096,
         adaptive: if adaptive { Some(AdaptiveBatchConfig::default()) } else { None },
+        precision,
     };
     let coord = Coordinator::start(ops, cfg);
     let registry = coord.registry();
@@ -393,6 +401,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for name in registry.names() {
             if let Some(t) = registry.batch_limit(&name) {
                 println!("  adaptive batch target for '{name}': {t} cols");
+            }
+        }
+    }
+    if precision != Precision::F64 {
+        for (name, served, err) in registry.precision_report() {
+            match err {
+                Some(e) => println!(
+                    "  '{name}' serves {} (measured f32 rel err {e:.2e})",
+                    served.name()
+                ),
+                None => println!("  '{name}' serves {} (no f32 generation)", served.name()),
             }
         }
     }
@@ -539,12 +558,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(server) = ingress {
         server.shutdown();
     }
+    let precision_lines: Vec<String> = registry
+        .precision_report()
+        .iter()
+        .map(|(name, served, err)| match err {
+            Some(e) => format!("{name}={} (f32 rel err {e:.1e})", served.name()),
+            None => format!("{name}={}", served.name()),
+        })
+        .collect();
     let snap = coord.shutdown();
     let em = engine.metrics();
     println!(
         "engine: applies={} arena_reuses={} arena_allocs={} | registry: \
          registered={} swaps={}",
         em.applies, em.arena_reuses, em.arena_allocs, snap.registered, snap.swaps
+    );
+    println!(
+        "precision: applies_f64={} applies_f32={} (f32 fraction {:.0}%) | {}",
+        snap.applies_f64,
+        snap.applies_f32,
+        snap.f32_apply_frac() * 100.0,
+        precision_lines.join(" ")
     );
     if snap.ingress_connections > 0 {
         println!(
@@ -586,7 +620,7 @@ fn serve_repl(
                 for name in registry.names() {
                     let op = registry.get(&name).expect("listed name resolves");
                     println!(
-                        "  {name}: {}x{} epoch={} target_batch={}",
+                        "  {name}: {}x{} epoch={} target_batch={} precision={}",
                         op.rows(),
                         op.cols(),
                         registry.epoch_of(&name).unwrap_or(0),
@@ -594,6 +628,10 @@ fn serve_repl(
                             .batch_limit(&name)
                             .map(|t| t.to_string())
                             .unwrap_or_else(|| "fixed".into()),
+                        registry
+                            .serving_of(&name)
+                            .map(|s| s.name())
+                            .unwrap_or("f64"),
                     );
                 }
             }
@@ -678,6 +716,21 @@ fn serve_repl(
                     s.ingress_active_connections,
                     s.ingress_queue_hwm,
                 );
+                println!(
+                    "  precision: applies_f64={} applies_f32={} (f32 fraction {:.0}%)",
+                    s.applies_f64,
+                    s.applies_f32,
+                    s.f32_apply_frac() * 100.0,
+                );
+                for (name, served, err) in registry.precision_report() {
+                    match err {
+                        Some(e) => println!(
+                            "    {name}: serving {} (measured f32 rel err {e:.2e})",
+                            served.name()
+                        ),
+                        None => println!("    {name}: serving {}", served.name()),
+                    }
+                }
             }
             _ => println!("unknown command (ops | ops add/swap/rm | apply | stats | quit)"),
         }
@@ -701,6 +754,12 @@ fn cmd_client(args: &Args) -> Result<()> {
     let rate: f64 = args.get("rate", 5_000.0);
     let requests: usize = args.get("requests", 20_000);
     let seed: u64 = args.get("seed", 42);
+    // `--dtype f32` rides the v2 wire tier: payload bytes halve both
+    // ways and values quantize in transit.
+    let dtype: Dtype = match args.get_str("dtype") {
+        Some(s) => s.parse().map_err(err)?,
+        None => Dtype::F64,
+    };
     let class_arg = args.get_str("class").unwrap_or("all");
     // `--class all` splits the aggregate ~30/40/30 like the latency
     // bench; a single class name sends one stream.
@@ -715,7 +774,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     };
     println!(
         "open-loop client → {addr} op='{op}' n={n} rate={rate} req/s \
-         requests={requests} classes={}",
+         requests={requests} classes={} dtype={dtype}",
         streams.len()
     );
     let mut handles = Vec::new();
@@ -728,6 +787,8 @@ fn cmd_client(args: &Args) -> Result<()> {
             requests: (requests as f64 * share).round() as usize,
             dim: n,
             seed: seed.wrapping_add(k as u64),
+            dtype,
+            verify_tol: if dtype == Dtype::F32 { 1e-4 } else { 1e-6 },
         };
         handles.push(std::thread::spawn(move || open_loop_load(&cfg, None)));
     }

@@ -3,21 +3,29 @@
 //! subcommand, the open-loop load generator
 //! ([`crate::bench_util::open_loop_load`]) and the loopback tests.
 
-use super::wire::{self, WireError, WireRequest, WireResponse};
+use super::wire::{self, Dtype, WireError, WireRequest, WireResponse};
 use crate::coordinator::QosClass;
 use std::net::TcpStream;
 
-/// A blocking client connection.
+/// A blocking client connection. Payloads travel as f64 unless
+/// [`ServeConn::set_dtype`] selects the f32 wire tier (half the payload
+/// bytes each way; values quantize to f32 in transit).
 pub struct ServeConn {
     stream: TcpStream,
     next_id: u64,
+    dtype: Dtype,
 }
 
 impl ServeConn {
     pub fn connect(addr: &str) -> std::io::Result<ServeConn> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(ServeConn { stream, next_id: 0 })
+        Ok(ServeConn { stream, next_id: 0, dtype: Dtype::F64 })
+    }
+
+    /// Select the payload element type for every subsequent send.
+    pub fn set_dtype(&mut self, dtype: Dtype) {
+        self.dtype = dtype;
     }
 
     /// Send one request without waiting for its response (pipelining);
@@ -33,8 +41,17 @@ impl ServeConn {
     ) -> Result<u64, WireError> {
         let req_id = self.next_id;
         self.next_id += 1;
-        let req =
-            WireRequest { req_id, op: op.to_string(), class, deadline_us, rows, cols, data };
+        let req = WireRequest {
+            req_id,
+            op: op.to_string(),
+            class,
+            deadline_us,
+            dtype: self.dtype,
+            version: wire::VERSION,
+            rows,
+            cols,
+            data,
+        };
         wire::write_frame(&mut self.stream, &wire::encode_request(&req))?;
         Ok(req_id)
     }
@@ -64,16 +81,17 @@ impl ServeConn {
     pub fn split(self) -> std::io::Result<(ServeSender, ServeReceiver)> {
         let read_half = self.stream.try_clone()?;
         Ok((
-            ServeSender { stream: self.stream, next_id: self.next_id },
+            ServeSender { stream: self.stream, next_id: self.next_id, dtype: self.dtype },
             ServeReceiver { stream: read_half },
         ))
     }
 }
 
-/// Write half of a split [`ServeConn`].
+/// Write half of a split [`ServeConn`] (inherits the conn's dtype).
 pub struct ServeSender {
     stream: TcpStream,
     next_id: u64,
+    dtype: Dtype,
 }
 
 impl ServeSender {
@@ -89,8 +107,17 @@ impl ServeSender {
     ) -> Result<u64, WireError> {
         let req_id = self.next_id;
         self.next_id += 1;
-        let req =
-            WireRequest { req_id, op: op.to_string(), class, deadline_us, rows, cols, data };
+        let req = WireRequest {
+            req_id,
+            op: op.to_string(),
+            class,
+            deadline_us,
+            dtype: self.dtype,
+            version: wire::VERSION,
+            rows,
+            cols,
+            data,
+        };
         wire::write_frame(&mut self.stream, &wire::encode_request(&req))?;
         Ok(req_id)
     }

@@ -17,7 +17,7 @@
 //! connection thread.
 
 use super::admission::{self, Admission, Permit};
-use super::wire::{self, ErrorCode, WireError, WireRequest, WireResponse};
+use super::wire::{self, Dtype, ErrorCode, WireError, WireRequest, WireResponse};
 use crate::coordinator::{Client, ServeError};
 use std::io::Read;
 use std::net::TcpStream;
@@ -27,15 +27,22 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// A ticket in the writer queue: either an already-resolved response or
-/// the per-column response channels of an admitted request.
+/// the per-column response channels of an admitted request. Every ticket
+/// remembers the request's protocol version so the writer answers each
+/// client in the layout it speaks (v1 clients get dtype-less f64
+/// responses, whatever tier served them).
 enum Pending {
-    Ready(WireResponse),
+    Ready(WireResponse, u8),
     InFlight {
         req_id: u64,
         /// Registry epoch of the generation resolved at submit time.
         epoch: u64,
         rows: usize,
         cols: usize,
+        /// Payload dtype the response travels as (echoes the request).
+        dtype: Dtype,
+        /// Protocol version the request arrived at.
+        version: u8,
         rxs: Vec<Receiver<Result<Vec<f64>, ServeError>>>,
         /// Admission reservation, released when the ticket resolves.
         _permit: Permit,
@@ -97,11 +104,14 @@ fn reader_loop(
         };
         let ticket = match wire::decode_request(&body) {
             Ok(req) => handle_request(client, admission, req),
-            Err(e) if !e.breaks_framing() => Pending::Ready(WireResponse::Err {
-                req_id: peek_req_id(&body),
-                code: ErrorCode::Malformed,
-                msg: e.to_string(),
-            }),
+            Err(e) if !e.breaks_framing() => Pending::Ready(
+                WireResponse::Err {
+                    req_id: peek_req_id(&body),
+                    code: ErrorCode::Malformed,
+                    msg: e.to_string(),
+                },
+                peek_version(&body),
+            ),
             Err(_) => return,
         };
         if tx.send(ticket).is_err() {
@@ -122,11 +132,21 @@ fn peek_req_id(body: &[u8]) -> u64 {
     }
 }
 
+/// Best-effort protocol version of a body that failed to decode, so the
+/// Malformed response is written in a layout the peer can parse.
+fn peek_version(body: &[u8]) -> u8 {
+    match body.get(2) {
+        Some(&v) if (wire::MIN_VERSION..=wire::VERSION).contains(&v) => v,
+        _ => wire::VERSION,
+    }
+}
+
 /// Admission + submission for one decoded request.
 fn handle_request(client: &Client, admission: &Arc<Admission>, req: WireRequest) -> Pending {
     let req_id = req.req_id;
+    let version = req.version;
     let ready_err = |code: ErrorCode, msg: String| {
-        Pending::Ready(WireResponse::Err { req_id, code, msg })
+        Pending::Ready(WireResponse::Err { req_id, code, msg }, version)
     };
     let handle = match client.registry().get(&req.op) {
         Some(h) => h,
@@ -141,13 +161,17 @@ fn handle_request(client: &Client, admission: &Arc<Admission>, req: WireRequest)
     }
     let epoch = client.registry().epoch_of(&req.op).unwrap_or(0);
     if req.cols == 0 {
-        return Pending::Ready(WireResponse::Ok {
-            req_id,
-            epoch,
-            rows: handle.rows(),
-            cols: 0,
-            data: Vec::new(),
-        });
+        return Pending::Ready(
+            WireResponse::Ok {
+                req_id,
+                epoch,
+                rows: handle.rows(),
+                cols: 0,
+                dtype: req.dtype,
+                data: Vec::new(),
+            },
+            version,
+        );
     }
     let cost = handle.flops_per_matvec() as u64 * req.cols as u64;
     let permit = match admission::try_admit(admission, req.class, cost) {
@@ -170,14 +194,23 @@ fn handle_request(client: &Client, admission: &Arc<Admission>, req: WireRequest)
             Err(e) => return ready_err(ErrorCode::from_serve_error(&e), e.to_string()),
         }
     }
-    Pending::InFlight { req_id, epoch, rows: handle.rows(), cols: req.cols, rxs, _permit: permit }
+    Pending::InFlight {
+        req_id,
+        epoch,
+        rows: handle.rows(),
+        cols: req.cols,
+        dtype: req.dtype,
+        version,
+        rxs,
+        _permit: permit,
+    }
 }
 
 fn writer_loop(mut stream: TcpStream, rx: Receiver<Pending>) {
     while let Ok(ticket) = rx.recv() {
-        let resp = match ticket {
-            Pending::Ready(r) => r,
-            Pending::InFlight { req_id, epoch, rows, cols, rxs, _permit } => {
+        let (resp, version) = match ticket {
+            Pending::Ready(r, version) => (r, version),
+            Pending::InFlight { req_id, epoch, rows, cols, dtype, version, rxs, _permit } => {
                 let mut data = vec![0.0; rows * cols];
                 let mut failure: Option<ServeError> = None;
                 for (c, crx) in rxs.into_iter().enumerate() {
@@ -201,17 +234,18 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Pending>) {
                         }
                     }
                 }
-                match failure {
-                    None => WireResponse::Ok { req_id, epoch, rows, cols, data },
+                let resp = match failure {
+                    None => WireResponse::Ok { req_id, epoch, rows, cols, dtype, data },
                     Some(e) => WireResponse::Err {
                         req_id,
                         code: ErrorCode::from_serve_error(&e),
                         msg: e.to_string(),
                     },
-                }
+                };
+                (resp, version)
             }
         };
-        if wire::write_frame(&mut stream, &wire::encode_response(&resp)).is_err() {
+        if wire::write_frame(&mut stream, &wire::encode_response(&resp, version)).is_err() {
             // Peer is gone: drop the remaining tickets (their permits
             // release on drop) and let the reader notice on its side.
             return;

@@ -222,6 +222,66 @@ mod tests {
     }
 
     #[test]
+    fn f32_wire_tier_serves_over_loopback_and_echoes_dtype() {
+        use crate::server::wire::Dtype;
+        let (coord, server, h) = start_service();
+        let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+        conn.set_dtype(Dtype::F32);
+        // Half-integer inputs are exactly representable in f32, so only
+        // the operator's own f64 arithmetic separates the two tiers.
+        let x: Vec<f64> = (0..16).map(|i| i as f64 * 0.5 - 4.0).collect();
+        let want = h.matvec(&x);
+        match conn.apply("h", QosClass::Standard, x).unwrap() {
+            WireResponse::Ok { dtype, rows, cols, data, .. } => {
+                assert_eq!(dtype, Dtype::F32, "response must echo the request dtype");
+                assert_eq!((rows, cols), (16, 1));
+                for i in 0..16 {
+                    let rel = (data[i] - want[i]).abs() / want[i].abs().max(1.0);
+                    assert!(rel < 1e-6, "f32 wire tier drifted: {} vs {}", data[i], want[i]);
+                }
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        server.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn v1_client_negotiates_down_to_f64_frames() {
+        use crate::server::wire::{self, Dtype, WireRequest};
+        let (coord, server, h) = start_service();
+        let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+        let x: Vec<f64> = (0..16).map(|i| (i as f64).cos()).collect();
+        let want = h.matvec(&x);
+        let req = WireRequest {
+            req_id: 77,
+            op: "h".to_string(),
+            class: QosClass::Standard,
+            deadline_us: 0,
+            dtype: Dtype::F64,
+            version: 1,
+            rows: 16,
+            cols: 1,
+            data: x,
+        };
+        wire::write_frame(&mut stream, &wire::encode_request(&req)).unwrap();
+        let body = wire::read_frame(&mut stream).unwrap().expect("response frame");
+        assert_eq!(body[2], 1, "server must answer a v1 client at version 1");
+        match wire::decode_response(&body).unwrap() {
+            WireResponse::Ok { req_id, dtype, data, .. } => {
+                assert_eq!(req_id, 77);
+                assert_eq!(dtype, Dtype::F64);
+                for i in 0..16 {
+                    assert!((data[i] - want[i]).abs() < 1e-12);
+                }
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        server.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
     fn unknown_operator_is_a_typed_response_not_a_close() {
         let (coord, server, h) = start_service();
         let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();

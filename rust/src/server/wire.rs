@@ -14,35 +14,43 @@
 //! announcement is rejected as [`WireError::Oversized`] before any
 //! allocation, so a hostile peer cannot balloon server memory.
 //!
-//! # Request body (client → server)
+//! # Request body (client → server), version 2
 //!
 //! ```text
 //! u16  magic               0xFA57
-//! u8   version             1
+//! u8   version             2
 //! u8   kind                0 = request
 //! u64  req_id              caller-chosen correlation id, echoed back
 //! u8   class               QoS class: 0 interactive, 1 standard, 2 bulk
+//! u8   dtype               payload element type: 0 = f64, 1 = f32
 //! u8   name_len            operator-name length in bytes
 //! u32  deadline_us         per-request deadline override in µs
 //!                          (0 ⇒ use the class's default budget)
 //! u32  rows                input rows (must equal the operator's cols)
 //! u32  cols                number of input columns in this request
 //! [u8; name_len]           operator name (UTF-8)
-//! [f64; rows*cols]         payload, little-endian, column-major
+//! [dtype; rows*cols]       payload, little-endian, column-major
 //! ```
 //!
-//! `body_len` must equal `26 + name_len + 8·rows·cols` *exactly*;
-//! anything else is [`WireError::LengthMismatch`]. A decode failure on a
-//! well-delimited frame is answered with a typed
-//! [`ErrorCode::Malformed`] response and the connection stays up; a
-//! failure that breaks framing itself (bad magic/version, oversized
-//! announcement, short read) closes the connection.
+//! `body_len` must equal `27 + name_len + elem·rows·cols` *exactly*
+//! (`elem` = 8 for f64, 4 for f32); anything else is
+//! [`WireError::LengthMismatch`]. A decode failure on a well-delimited
+//! frame is answered with a typed [`ErrorCode::Malformed`] response and
+//! the connection stays up; a failure that breaks framing itself (bad
+//! magic/version, oversized announcement, short read) closes the
+//! connection.
 //!
-//! # Response body (server → client)
+//! **Version 1** (the PR 6 protocol) has no `dtype` byte — its header is
+//! 26 bytes and its payload always f64. Both ends still speak it: a v1
+//! request is decoded as [`Dtype::F64`] and answered with a v1 response,
+//! so old clients transparently negotiate down to the f64 tier. An f32
+//! request halves payload bytes in both directions.
+//!
+//! # Response body (server → client), version 2
 //!
 //! ```text
 //! u16  magic               0xFA57
-//! u8   version             1
+//! u8   version             2 (echoes the request's version)
 //! u8   kind                1 = ok, 2 = error
 //! u64  req_id              echoed from the request
 //! -- kind = 1 (ok) --
@@ -50,12 +58,16 @@
 //!                          that served this request
 //! u32  rows                output rows
 //! u32  cols                output columns (== request cols)
-//! [f64; rows*cols]         result, little-endian, column-major
+//! u8   dtype               payload element type (echoes the request)
+//! [dtype; rows*cols]       result, little-endian, column-major
 //! -- kind = 2 (error) --
 //! u8   code                see [`ErrorCode`]
 //! u16  msg_len             diagnostic-message length
 //! [u8; msg_len]            human-readable diagnostic (UTF-8)
 //! ```
+//!
+//! Version-1 ok responses carry no `dtype` byte (payload f64 at offset
+//! 28); error responses have the same layout at both versions.
 //!
 //! Responses on one connection are written in request order (FIFO), so
 //! `req_id` is a convenience for pipelining clients, not a requirement
@@ -66,13 +78,18 @@ use std::io::{Read, Write};
 
 /// Protocol magic: the first two body bytes of every message.
 pub const MAGIC: u16 = 0xFA57;
-/// Protocol version this build speaks.
-pub const VERSION: u8 = 1;
+/// Newest protocol version this build speaks (and the version
+/// [`encode_request`] emits by default).
+pub const VERSION: u8 = 2;
+/// Oldest protocol version still accepted (the dtype-less PR 6 layout).
+pub const MIN_VERSION: u8 = 1;
 /// Hard cap on one frame's body length (16 MiB).
 pub const MAX_FRAME: u32 = 1 << 24;
 
-/// Fixed-size prefix of a request body, before name and payload.
-const REQ_HEADER: usize = 26;
+/// Fixed-size prefix of a v1 request body, before name and payload.
+const REQ_HEADER_V1: usize = 26;
+/// Fixed-size prefix of a v2 request body (v1 plus the dtype byte).
+const REQ_HEADER_V2: usize = 27;
 /// Fixed-size prefix of every response body (magic/version/kind/req_id).
 const RESP_HEADER: usize = 12;
 
@@ -80,6 +97,57 @@ const RESP_HEADER: usize = 12;
 const KIND_REQUEST: u8 = 0;
 const KIND_OK: u8 = 1;
 const KIND_ERR: u8 = 2;
+
+/// Payload element type carried on the wire (version ≥ 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Dtype {
+    F64 = 0,
+    F32 = 1,
+}
+
+impl Dtype {
+    pub fn from_u8(b: u8) -> Option<Dtype> {
+        match b {
+            0 => Some(Dtype::F64),
+            1 => Some(Dtype::F32),
+            _ => None,
+        }
+    }
+
+    /// Bytes per payload element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            Dtype::F64 => 8,
+            Dtype::F32 => 4,
+        }
+    }
+
+    /// Lower-case name (CLI flags, metrics keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F64 => "f64",
+            Dtype::F32 => "f32",
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f64" => Ok(Dtype::F64),
+            "f32" => Ok(Dtype::F32),
+            other => Err(format!("unknown dtype '{other}' (f64|f32)")),
+        }
+    }
+}
 
 /// A decoded request frame.
 #[derive(Clone, Debug, PartialEq)]
@@ -89,9 +157,15 @@ pub struct WireRequest {
     pub class: QosClass,
     /// Per-request deadline override in µs; 0 means "class default".
     pub deadline_us: u32,
+    /// Payload element type (always [`Dtype::F64`] on v1 frames). The
+    /// response payload is encoded at the same dtype.
+    pub dtype: Dtype,
+    /// Protocol version the frame was (or will be) encoded at; responses
+    /// echo it so old clients never see a layout they can't parse.
+    pub version: u8,
     pub rows: usize,
     pub cols: usize,
-    /// Column-major `rows × cols` payload.
+    /// Column-major `rows × cols` payload, widened to f64 on decode.
     pub data: Vec<f64>,
 }
 
@@ -144,7 +218,10 @@ pub enum WireResponse {
         epoch: u64,
         rows: usize,
         cols: usize,
-        /// Column-major `rows × cols` result.
+        /// Element type the payload travels as (echoes the request;
+        /// [`Dtype::F64`] on v1 frames).
+        dtype: Dtype,
+        /// Column-major `rows × cols` result, widened to f64 on decode.
         data: Vec<f64>,
     },
     Err {
@@ -177,6 +254,8 @@ pub enum WireError {
     BadVersion(u8),
     BadKind(u8),
     BadClass(u8),
+    /// Unknown payload element type byte (v2 frames).
+    BadDtype(u8),
     /// `body_len` disagrees with the lengths the header announces.
     LengthMismatch { announced: usize, expected: usize },
     /// Operator name is not UTF-8.
@@ -196,6 +275,7 @@ impl std::fmt::Display for WireError {
             WireError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
             WireError::BadKind(k) => write!(f, "unexpected message kind {k}"),
             WireError::BadClass(c) => write!(f, "unknown QoS class byte {c}"),
+            WireError::BadDtype(d) => write!(f, "unknown dtype byte {d}"),
             WireError::LengthMismatch { announced, expected } => {
                 write!(f, "body length {announced} != expected {expected}")
             }
@@ -238,53 +318,132 @@ fn get_u64(b: &[u8], at: usize) -> u64 {
     u64::from_le_bytes(x)
 }
 
+// ---- payload helpers -----------------------------------------------------
+
+/// Append `data` to `out` at `dtype` width (f32 narrows on the way out).
+fn push_payload(out: &mut Vec<u8>, data: &[f64], dtype: Dtype) {
+    match dtype {
+        Dtype::F64 => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::F32 => {
+            for v in data {
+                out.extend_from_slice(&(*v as f32).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Read `n_vals` elements at `dtype` width starting at `at`, widening to
+/// f64. The caller has already length-checked the slice.
+fn read_payload(body: &[u8], at: usize, n_vals: usize, dtype: Dtype) -> Vec<f64> {
+    let mut data = Vec::with_capacity(n_vals);
+    let mut at = at;
+    match dtype {
+        Dtype::F64 => {
+            for _ in 0..n_vals {
+                let mut x = [0u8; 8];
+                x.copy_from_slice(&body[at..at + 8]);
+                data.push(f64::from_le_bytes(x));
+                at += 8;
+            }
+        }
+        Dtype::F32 => {
+            for _ in 0..n_vals {
+                let x = [body[at], body[at + 1], body[at + 2], body[at + 3]];
+                data.push(f32::from_le_bytes(x) as f64);
+                at += 4;
+            }
+        }
+    }
+    data
+}
+
+/// Shared `rows·cols` overflow/frame-cap guard.
+fn checked_vals(
+    rows: usize,
+    cols: usize,
+    elem: usize,
+    announced: usize,
+) -> Result<usize, WireError> {
+    rows.checked_mul(cols)
+        .filter(|&n| n <= (MAX_FRAME as usize) / elem)
+        .ok_or(WireError::LengthMismatch { announced, expected: usize::MAX })
+}
+
 // ---- encode --------------------------------------------------------------
 
-/// Encode a request into one frame (length prefix included).
+/// Encode a request into one frame (length prefix included), at the
+/// request's own `version` (v1 frames carry no dtype byte and must be
+/// [`Dtype::F64`]).
 ///
 /// # Panics
-/// If `data.len() != rows * cols` or the operator name exceeds 255
-/// bytes — both are caller bugs, not wire conditions.
+/// If `data.len() != rows * cols`, the operator name exceeds 255 bytes,
+/// the version is unsupported, or a v1 request asks for f32 — all
+/// caller bugs, not wire conditions.
 pub fn encode_request(req: &WireRequest) -> Vec<u8> {
     assert_eq!(req.data.len(), req.rows * req.cols, "payload/shape mismatch");
     assert!(req.op.len() <= u8::MAX as usize, "operator name too long");
-    let body_len = REQ_HEADER + req.op.len() + 8 * req.data.len();
+    assert!(
+        (MIN_VERSION..=VERSION).contains(&req.version),
+        "unsupported request version {}",
+        req.version
+    );
+    assert!(
+        req.version >= 2 || req.dtype == Dtype::F64,
+        "v1 frames cannot carry f32 payloads"
+    );
+    let header = if req.version == 1 { REQ_HEADER_V1 } else { REQ_HEADER_V2 };
+    let body_len = header + req.op.len() + req.dtype.elem_bytes() * req.data.len();
     let mut out = Vec::with_capacity(4 + body_len);
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
     out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.push(VERSION);
+    out.push(req.version);
     out.push(KIND_REQUEST);
     out.extend_from_slice(&req.req_id.to_le_bytes());
     out.push(req.class as u8);
+    if req.version >= 2 {
+        out.push(req.dtype as u8);
+    }
     out.push(req.op.len() as u8);
     out.extend_from_slice(&req.deadline_us.to_le_bytes());
     out.extend_from_slice(&(req.rows as u32).to_le_bytes());
     out.extend_from_slice(&(req.cols as u32).to_le_bytes());
     out.extend_from_slice(req.op.as_bytes());
-    for v in &req.data {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
+    push_payload(&mut out, &req.data, req.dtype);
     out
 }
 
-/// Encode a response into one frame (length prefix included).
-pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+/// Encode a response into one frame (length prefix included), at the
+/// `version` the request arrived at — a v1 client is answered with the
+/// v1 layout (f64 payload, no dtype byte) regardless of the Ok variant's
+/// dtype, so old clients transparently negotiate down.
+pub fn encode_response(resp: &WireResponse, version: u8) -> Vec<u8> {
+    assert!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported response version {version}"
+    );
     match resp {
-        WireResponse::Ok { req_id, epoch, rows, cols, data } => {
+        WireResponse::Ok { req_id, epoch, rows, cols, dtype, data } => {
             assert_eq!(data.len(), rows * cols, "payload/shape mismatch");
-            let body_len = RESP_HEADER + 16 + 8 * data.len();
+            let dtype = if version == 1 { Dtype::F64 } else { *dtype };
+            let tail = if version == 1 { 16 } else { 17 };
+            let body_len = RESP_HEADER + tail + dtype.elem_bytes() * data.len();
             let mut out = Vec::with_capacity(4 + body_len);
             out.extend_from_slice(&(body_len as u32).to_le_bytes());
             out.extend_from_slice(&MAGIC.to_le_bytes());
-            out.push(VERSION);
+            out.push(version);
             out.push(KIND_OK);
             out.extend_from_slice(&req_id.to_le_bytes());
             out.extend_from_slice(&epoch.to_le_bytes());
             out.extend_from_slice(&(*rows as u32).to_le_bytes());
             out.extend_from_slice(&(*cols as u32).to_le_bytes());
-            for v in data {
-                out.extend_from_slice(&v.to_le_bytes());
+            if version >= 2 {
+                out.push(dtype as u8);
             }
+            push_payload(&mut out, data, dtype);
             out
         }
         WireResponse::Err { req_id, code, msg } => {
@@ -293,7 +452,7 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
             let mut out = Vec::with_capacity(4 + body_len);
             out.extend_from_slice(&(body_len as u32).to_le_bytes());
             out.extend_from_slice(&MAGIC.to_le_bytes());
-            out.push(VERSION);
+            out.push(version);
             out.push(KIND_ERR);
             out.extend_from_slice(&req_id.to_le_bytes());
             out.push(*code as u8);
@@ -307,50 +466,59 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
 // ---- decode --------------------------------------------------------------
 
 /// Decode one request body (the frame's payload, length prefix already
-/// stripped by [`read_frame`]).
+/// stripped by [`read_frame`]). Accepts versions [`MIN_VERSION`] through
+/// [`VERSION`]; v1 bodies decode with `dtype = F64`.
 pub fn decode_request(body: &[u8]) -> Result<WireRequest, WireError> {
-    if body.len() < REQ_HEADER {
-        return Err(WireError::LengthMismatch { announced: body.len(), expected: REQ_HEADER });
+    if body.len() < REQ_HEADER_V1 {
+        return Err(WireError::LengthMismatch {
+            announced: body.len(),
+            expected: REQ_HEADER_V1,
+        });
     }
     let magic = get_u16(body, 0);
     if magic != MAGIC {
         return Err(WireError::BadMagic(magic));
     }
-    if body[2] != VERSION {
-        return Err(WireError::BadVersion(body[2]));
+    let version = body[2];
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(WireError::BadVersion(version));
     }
     if body[3] != KIND_REQUEST {
         return Err(WireError::BadKind(body[3]));
     }
     let req_id = get_u64(body, 4);
     let class = QosClass::from_u8(body[12]).ok_or(WireError::BadClass(body[12]))?;
-    let name_len = body[13] as usize;
-    let deadline_us = get_u32(body, 14);
-    let rows = get_u32(body, 18) as usize;
-    let cols = get_u32(body, 22) as usize;
-    let n_vals = rows
-        .checked_mul(cols)
-        .filter(|&n| n <= (MAX_FRAME as usize) / 8)
-        .ok_or(WireError::LengthMismatch { announced: body.len(), expected: usize::MAX })?;
-    let expected = REQ_HEADER + name_len + 8 * n_vals;
+    let (header, dtype) = if version == 1 {
+        (REQ_HEADER_V1, Dtype::F64)
+    } else {
+        if body.len() < REQ_HEADER_V2 {
+            return Err(WireError::LengthMismatch {
+                announced: body.len(),
+                expected: REQ_HEADER_V2,
+            });
+        }
+        (REQ_HEADER_V2, Dtype::from_u8(body[13]).ok_or(WireError::BadDtype(body[13]))?)
+    };
+    // v1: name_len at 13, deadline at 14; v2: shifted one byte by dtype.
+    let off = header - REQ_HEADER_V1;
+    let name_len = body[13 + off] as usize;
+    let deadline_us = get_u32(body, 14 + off);
+    let rows = get_u32(body, 18 + off) as usize;
+    let cols = get_u32(body, 22 + off) as usize;
+    let n_vals = checked_vals(rows, cols, dtype.elem_bytes(), body.len())?;
+    let expected = header + name_len + dtype.elem_bytes() * n_vals;
     if body.len() != expected {
         return Err(WireError::LengthMismatch { announced: body.len(), expected });
     }
-    let op = std::str::from_utf8(&body[REQ_HEADER..REQ_HEADER + name_len])
+    let op = std::str::from_utf8(&body[header..header + name_len])
         .map_err(|_| WireError::BadName)?
         .to_string();
-    let mut data = Vec::with_capacity(n_vals);
-    let mut at = REQ_HEADER + name_len;
-    for _ in 0..n_vals {
-        let mut x = [0u8; 8];
-        x.copy_from_slice(&body[at..at + 8]);
-        data.push(f64::from_le_bytes(x));
-        at += 8;
-    }
-    Ok(WireRequest { req_id, op, class, deadline_us, rows, cols, data })
+    let data = read_payload(body, header + name_len, n_vals, dtype);
+    Ok(WireRequest { req_id, op, class, deadline_us, dtype, version, rows, cols, data })
 }
 
-/// Decode one response body.
+/// Decode one response body (either version; v1 ok bodies decode with
+/// `dtype = F64`).
 pub fn decode_response(body: &[u8]) -> Result<WireResponse, WireError> {
     if body.len() < RESP_HEADER {
         return Err(WireError::LengthMismatch { announced: body.len(), expected: RESP_HEADER });
@@ -359,41 +527,36 @@ pub fn decode_response(body: &[u8]) -> Result<WireResponse, WireError> {
     if magic != MAGIC {
         return Err(WireError::BadMagic(magic));
     }
-    if body[2] != VERSION {
-        return Err(WireError::BadVersion(body[2]));
+    let version = body[2];
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(WireError::BadVersion(version));
     }
     let req_id = get_u64(body, 4);
     match body[3] {
         KIND_OK => {
-            if body.len() < RESP_HEADER + 16 {
+            let tail = if version == 1 { 16 } else { 17 };
+            if body.len() < RESP_HEADER + tail {
                 return Err(WireError::LengthMismatch {
                     announced: body.len(),
-                    expected: RESP_HEADER + 16,
+                    expected: RESP_HEADER + tail,
                 });
             }
             let epoch = get_u64(body, RESP_HEADER);
             let rows = get_u32(body, RESP_HEADER + 8) as usize;
             let cols = get_u32(body, RESP_HEADER + 12) as usize;
-            let n_vals = rows
-                .checked_mul(cols)
-                .filter(|&n| n <= (MAX_FRAME as usize) / 8)
-                .ok_or(WireError::LengthMismatch {
-                    announced: body.len(),
-                    expected: usize::MAX,
-                })?;
-            let expected = RESP_HEADER + 16 + 8 * n_vals;
+            let dtype = if version == 1 {
+                Dtype::F64
+            } else {
+                Dtype::from_u8(body[RESP_HEADER + 16])
+                    .ok_or(WireError::BadDtype(body[RESP_HEADER + 16]))?
+            };
+            let n_vals = checked_vals(rows, cols, dtype.elem_bytes(), body.len())?;
+            let expected = RESP_HEADER + tail + dtype.elem_bytes() * n_vals;
             if body.len() != expected {
                 return Err(WireError::LengthMismatch { announced: body.len(), expected });
             }
-            let mut data = Vec::with_capacity(n_vals);
-            let mut at = RESP_HEADER + 16;
-            for _ in 0..n_vals {
-                let mut x = [0u8; 8];
-                x.copy_from_slice(&body[at..at + 8]);
-                data.push(f64::from_le_bytes(x));
-                at += 8;
-            }
-            Ok(WireResponse::Ok { req_id, epoch, rows, cols, data })
+            let data = read_payload(body, RESP_HEADER + tail, n_vals, dtype);
+            Ok(WireResponse::Ok { req_id, epoch, rows, cols, dtype, data })
         }
         KIND_ERR => {
             if body.len() < RESP_HEADER + 3 {
@@ -468,6 +631,8 @@ mod tests {
             op: "h".to_string(),
             class,
             deadline_us: 150,
+            dtype: Dtype::F64,
+            version: VERSION,
             rows,
             cols,
             data: (0..rows * cols).map(|i| i as f64 * 0.5 - 3.0).collect(),
@@ -487,24 +652,112 @@ mod tests {
     }
 
     #[test]
+    fn v1_request_round_trips_as_f64() {
+        // The PR 6 layout: no dtype byte, 26-byte header. It must keep
+        // decoding (old clients negotiate down to the f64 tier).
+        let mut r = req(4, 3, QosClass::Standard);
+        r.version = 1;
+        let frame = encode_request(&r);
+        // Header really is one byte shorter than v2's.
+        assert_eq!(frame.len(), 4 + 26 + 1 + 8 * 12);
+        let back = decode_request(&frame[4..]).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.dtype, Dtype::F64);
+        assert_eq!(back.version, 1);
+    }
+
+    #[test]
+    fn f32_request_halves_payload_bytes_and_quantizes() {
+        let mut r64 = req(16, 4, QosClass::Bulk);
+        let mut r32 = r64.clone();
+        r32.dtype = Dtype::F32;
+        let f64_frame = encode_request(&r64);
+        let f32_frame = encode_request(&r32);
+        assert_eq!(
+            f64_frame.len() - f32_frame.len(),
+            4 * 16 * 4,
+            "f32 payload should save 4 bytes per element"
+        );
+        let back = decode_request(&f32_frame[4..]).unwrap();
+        assert_eq!(back.dtype, Dtype::F32);
+        for (a, b) in back.data.iter().zip(r32.data.iter()) {
+            assert_eq!(*a, *b as f32 as f64, "decode must widen the quantized value");
+        }
+        // Values representable in f32 (halves) survive exactly.
+        r64.data = vec![0.5; 64];
+        r32.data = vec![0.5; 64];
+        let back = decode_request(&encode_request(&r32)[4..]).unwrap();
+        assert_eq!(back.data, r64.data);
+    }
+
+    #[test]
     fn responses_round_trip() {
         let ok = WireResponse::Ok {
             req_id: 7,
             epoch: 3,
             rows: 2,
             cols: 2,
+            dtype: Dtype::F64,
             data: vec![1.0, -2.5, 3.25, 0.0],
         };
-        let frame = encode_response(&ok);
+        let frame = encode_response(&ok, VERSION);
         assert_eq!(decode_response(&frame[4..]).unwrap(), ok);
+
+        // f32 payload round-trips (values exactly representable).
+        let ok32 = WireResponse::Ok {
+            req_id: 8,
+            epoch: 3,
+            rows: 2,
+            cols: 1,
+            dtype: Dtype::F32,
+            data: vec![1.5, -0.25],
+        };
+        let frame32 = encode_response(&ok32, VERSION);
+        assert!(frame32.len() < frame.len());
+        assert_eq!(decode_response(&frame32[4..]).unwrap(), ok32);
 
         let err = WireResponse::Err {
             req_id: 9,
             code: ErrorCode::Overloaded,
             msg: "shed".to_string(),
         };
-        let frame = encode_response(&err);
+        let frame = encode_response(&err, VERSION);
         assert_eq!(decode_response(&frame[4..]).unwrap(), err);
+    }
+
+    #[test]
+    fn v1_response_negotiates_down_to_f64() {
+        // A server holding an f32 result answers a v1 client with the v1
+        // layout: version byte 1, no dtype byte, widened f64 payload.
+        let ok = WireResponse::Ok {
+            req_id: 5,
+            epoch: 2,
+            rows: 2,
+            cols: 1,
+            dtype: Dtype::F32,
+            data: vec![0.5, -1.25],
+        };
+        let frame = encode_response(&ok, 1);
+        assert_eq!(frame[4 + 2], 1, "version byte must echo the request");
+        assert_eq!(frame.len(), 4 + 12 + 16 + 8 * 2);
+        match decode_response(&frame[4..]).unwrap() {
+            WireResponse::Ok { dtype, data, .. } => {
+                assert_eq!(dtype, Dtype::F64);
+                assert_eq!(data, vec![0.5, -1.25]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Error responses share one layout across versions.
+        let err = WireResponse::Err {
+            req_id: 9,
+            code: ErrorCode::ShuttingDown,
+            msg: "bye".to_string(),
+        };
+        let f1 = encode_response(&err, 1);
+        let f2 = encode_response(&err, 2);
+        assert_eq!(f1.len(), f2.len());
+        assert_eq!(decode_response(&f1[4..]).unwrap(), err);
+        assert_eq!(decode_response(&f2[4..]).unwrap(), err);
     }
 
     #[test]
@@ -566,22 +819,27 @@ mod tests {
         b[12] = 7;
         assert_eq!(decode_request(&b), Err(WireError::BadClass(7)));
 
+        // Bad dtype byte (v2 frames only).
+        let mut b = body.to_vec();
+        b[13] = 9;
+        assert_eq!(decode_request(&b), Err(WireError::BadDtype(9)));
+
         // Body shorter than the header announces.
         let b = &body[..body.len() - 1];
         assert!(matches!(decode_request(b), Err(WireError::LengthMismatch { .. })));
 
         // Shape whose payload would overflow the frame cap.
         let mut b = body.to_vec();
-        b[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
-        b[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+        b[19..23].copy_from_slice(&u32::MAX.to_le_bytes());
+        b[23..27].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(decode_request(&b), Err(WireError::LengthMismatch { .. })));
 
         // Non-UTF-8 operator name.
         let mut r = req(1, 1, QosClass::Standard);
         r.op = "ab".to_string();
         let mut frame = encode_request(&r);
-        frame[4 + 26] = 0xFF; // first name byte
-        frame[4 + 27] = 0xFE;
+        frame[4 + 27] = 0xFF; // first name byte (27-byte v2 header)
+        frame[4 + 28] = 0xFE;
         assert_eq!(decode_request(&frame[4..]), Err(WireError::BadName));
     }
 
@@ -591,6 +849,7 @@ mod tests {
         assert!(WireError::Oversized(0).breaks_framing());
         assert!(WireError::BadMagic(0).breaks_framing());
         assert!(!WireError::BadClass(9).breaks_framing());
+        assert!(!WireError::BadDtype(9).breaks_framing());
         assert!(!WireError::LengthMismatch { announced: 0, expected: 1 }.breaks_framing());
         assert!(!WireError::BadName.breaks_framing());
     }

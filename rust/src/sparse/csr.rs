@@ -1,11 +1,18 @@
 //! Compressed sparse row format — the FAμST apply hot path.
+//!
+//! Generic over the engine's [`Scalar`] value type (default `f64`): the
+//! structural accessors and `transpose` work for both precisions, while
+//! construction, factorization arithmetic, and spgemm stay `f64`-only —
+//! an f32 CSR only ever comes from quantizing a learned f64 factor via
+//! [`Csr::to_f32`] at plan-build time.
 
 use super::coo::Coo;
+use crate::engine::kernel::Scalar;
 use crate::linalg::Mat;
 
-/// CSR sparse matrix.
+/// CSR sparse matrix with [`Scalar`] values (`f64` by default).
 #[derive(Clone, Debug)]
-pub struct Csr {
+pub struct Csr<S = f64> {
     rows: usize,
     cols: usize,
     /// Row pointers, length `rows + 1`.
@@ -13,10 +20,91 @@ pub struct Csr {
     /// Column indices, length `nnz`.
     pub indices: Vec<u32>,
     /// Values, length `nnz`.
-    pub vals: Vec<f64>,
+    pub vals: Vec<S>,
+}
+
+impl<S: Scalar> Csr<S> {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Mat<S> {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                m.set(i, self.indices[k] as usize, self.vals[k]);
+            }
+        }
+        m
+    }
+
+    /// Sparse transpose (CSR → CSR of the transpose; counting sort, O(nnz)).
+    pub fn transpose(&self) -> Csr<S> {
+        let nnz = self.nnz();
+        let mut counts = vec![0u32; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut next = counts;
+        let mut indices = vec![0u32; nnz];
+        let mut vals = vec![S::ZERO; nnz];
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                let c = self.indices[k] as usize;
+                let pos = next[c] as usize;
+                indices[pos] = i as u32;
+                vals[pos] = self.vals[k];
+                next[c] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, vals }
+    }
+
+    /// Fill fraction `nnz / (rows·cols)`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    /// Flops for one `spmv` (one multiply + one add per stored entry).
+    pub fn flops_per_matvec(&self) -> usize {
+        2 * self.nnz()
+    }
 }
 
 impl Csr {
+    /// Quantized f32 copy with identical sparsity structure — the serving
+    /// tier's one-time plan-build conversion (values round to nearest;
+    /// indices/indptr are copied verbatim, so structure and flop counts
+    /// match the f64 original exactly).
+    pub fn to_f32(&self) -> Csr<f32> {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            vals: self.vals.iter().map(|&v| v as f32).collect(),
+        }
+    }
     /// Build from COO (entries need not be sorted; duplicates are summed).
     pub fn from_coo(coo: &Coo) -> Self {
         let rows = coo.rows();
@@ -149,32 +237,6 @@ impl Csr {
         self.vals = new_vals;
     }
 
-    #[inline]
-    pub fn rows(&self) -> usize {
-        self.rows
-    }
-
-    #[inline]
-    pub fn cols(&self) -> usize {
-        self.cols
-    }
-
-    #[inline]
-    pub fn nnz(&self) -> usize {
-        self.vals.len()
-    }
-
-    /// Densify.
-    pub fn to_dense(&self) -> Mat {
-        let mut m = Mat::zeros(self.rows, self.cols);
-        for i in 0..self.rows {
-            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
-                m.set(i, self.indices[k] as usize, self.vals[k]);
-            }
-        }
-        m
-    }
-
     /// Convert to COO.
     pub fn to_coo(&self) -> Coo {
         let mut coo = Coo::new(self.rows, self.cols);
@@ -184,32 +246,6 @@ impl Csr {
             }
         }
         coo
-    }
-
-    /// Sparse transpose (CSR → CSR of the transpose; counting sort, O(nnz)).
-    pub fn transpose(&self) -> Csr {
-        let nnz = self.nnz();
-        let mut counts = vec![0u32; self.cols + 1];
-        for &c in &self.indices {
-            counts[c as usize + 1] += 1;
-        }
-        for i in 0..self.cols {
-            counts[i + 1] += counts[i];
-        }
-        let indptr = counts.clone();
-        let mut next = counts;
-        let mut indices = vec![0u32; nnz];
-        let mut vals = vec![0.0; nnz];
-        for i in 0..self.rows {
-            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
-                let c = self.indices[k] as usize;
-                let pos = next[c] as usize;
-                indices[pos] = i as u32;
-                vals[pos] = self.vals[k];
-                next[c] += 1;
-            }
-        }
-        Csr { rows: self.cols, cols: self.rows, indptr, indices, vals }
     }
 
     /// Sparse matrix × dense vector: `y = A x` — O(nnz).
@@ -352,15 +388,6 @@ impl Csr {
         Csr { rows: self.rows, cols: n, indptr, indices, vals }
     }
 
-    /// Fill fraction `nnz / (rows·cols)`.
-    pub fn density(&self) -> f64 {
-        if self.rows == 0 || self.cols == 0 {
-            0.0
-        } else {
-            self.nnz() as f64 / (self.rows * self.cols) as f64
-        }
-    }
-
     /// Frobenius norm.
     pub fn fro(&self) -> f64 {
         self.vals.iter().map(|v| v * v).sum::<f64>().sqrt()
@@ -371,10 +398,5 @@ impl Csr {
         for v in &mut self.vals {
             *v *= s;
         }
-    }
-
-    /// Flops for one `spmv` (one multiply + one add per stored entry).
-    pub fn flops_per_matvec(&self) -> usize {
-        2 * self.nnz()
     }
 }

@@ -50,6 +50,7 @@ fn factorize_then_serve_through_coordinator() {
             n_workers: 2,
             queue_capacity: 256,
             adaptive: None,
+            ..CoordinatorConfig::default()
         },
     );
     let client = coord.client();

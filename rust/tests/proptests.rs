@@ -564,21 +564,25 @@ fn prop_wire_request_roundtrips_across_shapes_and_classes() {
             op,
             class,
             deadline_us: rng.below(1 << 20) as u32,
+            dtype: wire::Dtype::F64,
+            version: wire::VERSION,
             rows,
             cols,
             data: rng.gauss_vec(rows * cols),
         };
-        let body = wire::encode_request(&req);
-        let back = wire::decode_request(&body).map_err(|e| format!("decode: {e}"))?;
+        // encode_* returns the full frame (length prefix included);
+        // decode_* takes the body with the prefix already stripped.
+        let frame = wire::encode_request(&req);
+        let back = wire::decode_request(&frame[4..]).map_err(|e| format!("decode: {e}"))?;
         ensure(back == req, "request did not roundtrip")?;
-        // And through framed IO.
+        // And through framed IO: read_frame strips the prefix back off.
         let mut buf = Vec::new();
-        wire::write_frame(&mut buf, &body).map_err(|e| format!("write: {e}"))?;
+        wire::write_frame(&mut buf, &frame).map_err(|e| format!("write: {e}"))?;
         let mut cur = std::io::Cursor::new(buf);
         let read = wire::read_frame(&mut cur)
             .map_err(|e| format!("read: {e}"))?
             .ok_or("unexpected EOF")?;
-        ensure(read == body, "framed body mismatch")
+        ensure(read == frame[4..], "framed body mismatch")
     });
 }
 
@@ -594,11 +598,14 @@ fn prop_wire_truncation_is_a_typed_rejection_never_a_panic() {
             op: "op".to_string(),
             class: QosClass::from_u8(rng.below(3) as u8).unwrap(),
             deadline_us: 0,
+            dtype: wire::Dtype::F64,
+            version: wire::VERSION,
             rows,
             cols,
             data: rng.gauss_vec(rows * cols),
         };
-        let body = wire::encode_request(&req);
+        let framed = wire::encode_request(&req);
+        let body = &framed[4..]; // length prefix stripped, as read_frame would
         // Any strict prefix of the body must decode to a typed error.
         let cut = rng.below(body.len());
         ensure(
@@ -607,8 +614,6 @@ fn prop_wire_truncation_is_a_typed_rejection_never_a_panic() {
         )?;
         // A frame cut mid-stream surfaces as a typed read error (or a
         // clean EOF when nothing was sent), never a panic.
-        let mut framed = Vec::new();
-        wire::write_frame(&mut framed, &body).map_err(|e| format!("write: {e}"))?;
         let fcut = rng.below(framed.len()); // strictly before the last byte
         let mut cur = std::io::Cursor::new(&framed[..fcut]);
         match wire::read_frame(&mut cur) {
@@ -632,6 +637,7 @@ fn prop_wire_response_roundtrips() {
                 epoch: rng.below(1 << 20) as u64,
                 rows,
                 cols,
+                dtype: wire::Dtype::F64,
                 data: rng.gauss_vec(rows * cols),
             }
         } else {
@@ -648,8 +654,167 @@ fn prop_wire_response_roundtrips() {
                 msg: format!("case {}", rng.below(1000)),
             }
         };
-        let body = wire::encode_response(&resp);
-        let back = wire::decode_response(&body).map_err(|e| format!("decode: {e}"))?;
+        // f64 responses round-trip identically under both wire versions
+        // (v1 has no dtype byte and implies f64).
+        let version = 1 + rng.below(2) as u8;
+        let frame = wire::encode_response(&resp, version);
+        let back = wire::decode_response(&frame[4..]).map_err(|e| format!("decode: {e}"))?;
         ensure(back == resp, "response did not roundtrip")
+    });
+}
+
+// ISSUE 7: f32 mixed-precision serving tier properties.
+
+#[test]
+fn prop_f32_plan_within_declared_bound_and_bitwise_thread_invariant() {
+    use faust::engine::Arena;
+    check("f32 plan bound + thread invariance", &cfg(25), |rng| {
+        // Chain shapes deliberately straddle the f32 lane widths (16/8/8)
+        // so remainder loops are exercised alongside full lane chunks.
+        let d0 = 1 + rng.below(37);
+        let d1 = 1 + rng.below(37);
+        let d2 = 1 + rng.below(37);
+        let mats = vec![
+            gen::sparse_mat(rng, d1, d0, 1 + rng.below(d1 * d0)),
+            gen::sparse_mat(rng, d2, d1, 1 + rng.below(d2 * d1)),
+        ];
+        let f = Faust::from_dense_factors(&mats, 1.0 + rng.uniform());
+        let plan = faust::engine::ApplyPlan::compile(&f, &PlanConfig::default());
+        let pool1 = ThreadPool::new(1);
+        let (plan32, bound) = plan.to_f32_with_bound(&pool1);
+        ensure(bound.declared_rel_err > 0.0, "declared bound must be positive")?;
+        ensure(
+            bound.measured_rel_err <= bound.declared_rel_err,
+            "measured exceeds declared",
+        )?;
+
+        let bcols = 1 + rng.below(3);
+        let x64 = rng.gauss_vec(d0 * bcols);
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let mut y64 = vec![0.0f64; d2 * bcols];
+        let mut a64 = Arena::<f64>::new();
+        plan.execute_batch_into(&pool1, &mut a64, &x64, bcols, &mut y64);
+
+        let mut base32: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut a32 = Arena::<f32>::new();
+            let mut y32 = vec![0.0f32; d2 * bcols];
+            plan32.execute_batch_into(&pool, &mut a32, &x32, bcols, &mut y32);
+            match &base32 {
+                None => base32 = Some(y32.clone()),
+                Some(b) => {
+                    for (i, (got, want)) in y32.iter().zip(b).enumerate() {
+                        ensure(
+                            got.to_bits() == want.to_bits(),
+                            format!("{threads} threads changed f32 bits at {i}"),
+                        )?;
+                    }
+                }
+            }
+            // Per-column relative l2 error against the f64 master stays
+            // within the declared (headroom-padded) bound.
+            for j in 0..bcols {
+                let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+                for i in 0..d2 {
+                    let w = y64[i * bcols + j];
+                    let d = y32[i * bcols + j] as f64 - w;
+                    err2 += d * d;
+                    ref2 += w * w;
+                }
+                if ref2 > 0.0 {
+                    ensure(
+                        (err2 / ref2).sqrt() <= bound.declared_rel_err,
+                        format!(
+                            "col {j} rel err {:.3e} > declared {:.3e}",
+                            (err2 / ref2).sqrt(),
+                            bound.declared_rel_err
+                        ),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_dtype_roundtrips_including_v1_frames() {
+    use faust::coordinator::QosClass;
+    use faust::server::wire::{self, Dtype, WireRequest, WireResponse};
+    check("wire dtype roundtrip", &cfg(100), |rng| {
+        let rows = rng.below(17);
+        let cols = rng.below(5);
+        let data = rng.gauss_vec(rows * cols);
+        let version = 1 + rng.below(2) as u8;
+        // v1 frames cannot carry f32 — the encoder asserts that — so the
+        // dtype draw is conditioned on the negotiated version.
+        let dtype = if version >= 2 && rng.uniform() < 0.5 { Dtype::F32 } else { Dtype::F64 };
+        let req = WireRequest {
+            req_id: rng.below(1 << 30) as u64,
+            op: "dtype_prop".to_string(),
+            class: QosClass::from_u8(rng.below(3) as u8).unwrap(),
+            deadline_us: rng.below(1 << 16) as u32,
+            dtype,
+            version,
+            rows,
+            cols,
+            data: data.clone(),
+        };
+        let frame = wire::encode_request(&req);
+        // Payload bytes follow the dtype: f32 halves them (frame = 4-byte
+        // length prefix + header + name + payload).
+        let header = if version == 1 { 26 } else { 27 };
+        ensure(
+            frame.len() == 4 + header + req.op.len() + dtype.elem_bytes() * rows * cols,
+            format!("unexpected frame len {}", frame.len()),
+        )?;
+        let back = wire::decode_request(&frame[4..]).map_err(|e| format!("decode: {e}"))?;
+        ensure(back.version == version, "version mismatch")?;
+        ensure(back.dtype == dtype, "dtype mismatch")?;
+        for (i, (got, want)) in back.data.iter().zip(&data).enumerate() {
+            // f64 travels exactly; f32 round-trips as quantize-then-widen.
+            let expect = match dtype {
+                Dtype::F64 => *want,
+                Dtype::F32 => *want as f32 as f64,
+            };
+            ensure(
+                got.to_bits() == expect.to_bits(),
+                format!("payload byte-exactness broken at {i}"),
+            )?;
+        }
+
+        // Responses: encoded at the request's version; v1 forces f64 even
+        // when an f32 tier served the job, so the dtype draw here is
+        // independent of the request's.
+        let resp_dtype = if rng.uniform() < 0.5 { Dtype::F32 } else { Dtype::F64 };
+        let resp = WireResponse::Ok {
+            req_id: req.req_id,
+            epoch: rng.below(1 << 10) as u64,
+            rows,
+            cols,
+            dtype: resp_dtype,
+            data: data.clone(),
+        };
+        let rframe = wire::encode_response(&resp, version);
+        let rback = wire::decode_response(&rframe[4..]).map_err(|e| format!("decode resp: {e}"))?;
+        match rback {
+            WireResponse::Ok { dtype: got_dtype, data: got_data, .. } => {
+                let want_dtype = if version == 1 { Dtype::F64 } else { resp_dtype };
+                ensure(got_dtype == want_dtype, "response dtype mismatch")?;
+                for (i, (got, want)) in got_data.iter().zip(&data).enumerate() {
+                    let expect = match want_dtype {
+                        Dtype::F64 => *want,
+                        Dtype::F32 => *want as f32 as f64,
+                    };
+                    ensure(
+                        got.to_bits() == expect.to_bits(),
+                        format!("response payload mismatch at {i}"),
+                    )?;
+                }
+            }
+            _ => return Err("Ok response decoded as Err".into()),
+        }
+        Ok(())
     });
 }

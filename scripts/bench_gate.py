@@ -25,6 +25,10 @@ disarm itself is a loud failure instead:
     would otherwise skip its own rules);
   - a rule naming no recognized bound key (a min/max/value typo would
     otherwise vacuously pass);
+  - a result emitting a precision-suffixed metric (an f32/f64 path
+    component, e.g. f32_apply_speedup or f64_mini_p99_us) that has no
+    baseline rule — the mixed-precision serving tier must never grow an
+    ungated metric;
   - a run in which nothing was checked at all.
 
 `--self-check` runs a built-in pytest-free scenario suite (temp files,
@@ -34,8 +38,14 @@ Exits non-zero on any failure.
 
 import json
 import os
+import re
 import sys
 import tempfile
+
+# A metric whose name carries an f32/f64 path component belongs to the
+# mixed-precision serving tier and MUST be gated (matches f32_apply_speedup,
+# f64_mini_p99_us, foo_f32 — not gemm512_tiled_speedup).
+PRECISION_METRIC = re.compile(r"(^|_)f(32|64)(_|$)")
 
 
 def check_metric(name, key, value, rule):
@@ -106,6 +116,11 @@ def main(argv):
             print(f"[gate] {'ok  ' if ok else 'FAIL'} {desc}")
             if not ok:
                 failures.append(desc)
+        for key in sorted(metrics):
+            if PRECISION_METRIC.search(key) and key not in rules:
+                msg = f"{name}.{key}: precision-tier metric has no baseline rule"
+                failures.append(msg)
+                print(f"[gate] FAIL {msg}")
     if checked == 0 and not failures:
         print("[gate] nothing was checked — missing bench results?", file=sys.stderr)
         return 1
@@ -162,6 +177,31 @@ def self_check():
         ("shed rate over its ceiling",
          result("serve_bench", {"p99_us": 850.0, "shed_rate": 0.2}), 1),
     ]
+    # Precision-tier metrics (ISSUE 7): any emitted metric with an
+    # f32/f64 path component must have a baseline rule — gated when it
+    # does, loud failure when it does not, and names that merely contain
+    # digits (gemm512) must not trip the detector.
+    prec_baseline = {
+        "prec_bench": {
+            "f32_apply_speedup": {"min": 1.0},
+            "f64_mini_p99_us": {"min": 50.0, "max": 200000.0},
+            "gemm512_tiled_speedup": {"min": 1.25},
+        },
+    }
+    prec_scenarios = [
+        ("every precision metric ruled",
+         result("prec_bench", {"f32_apply_speedup": 1.6, "f64_mini_p99_us": 900.0,
+                               "gemm512_tiled_speedup": 1.4}), 0),
+        ("precision metric emitted with no baseline rule",
+         result("prec_bench", {"f32_apply_speedup": 1.6, "f64_mini_p99_us": 900.0,
+                               "gemm512_tiled_speedup": 1.4, "f32_max_rel_err": 1e-6}), 1),
+        ("suffix-position precision component also caught",
+         result("prec_bench", {"f32_apply_speedup": 1.6, "f64_mini_p99_us": 900.0,
+                               "gemm512_tiled_speedup": 1.4, "speedup_f32": 1.6}), 1),
+    ]
+    assert not PRECISION_METRIC.search("gemm512_tiled_speedup")
+    assert PRECISION_METRIC.search("f32_apply_speedup")
+    assert PRECISION_METRIC.search("speedup_f64")
     # A rule whose bound key is misspelled must fail, not silently pass.
     typo_baseline = {"bench_a": {"ratio": {"mn": 1.25}}}
     ran = 0
@@ -185,6 +225,17 @@ def self_check():
             with open(res_path, "w") as f:
                 json.dump(res, f)
             got = main(["bench_gate.py", band_path, res_path])
+            assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
+            ran += 1
+
+        prec_path = os.path.join(td, "prec_baseline.json")
+        with open(prec_path, "w") as f:
+            json.dump(prec_baseline, f)
+        for desc, res, want in prec_scenarios:
+            res_path = os.path.join(td, "BENCH_prec.json")
+            with open(res_path, "w") as f:
+                json.dump(res, f)
+            got = main(["bench_gate.py", prec_path, res_path])
             assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
             ran += 1
 
