@@ -1,0 +1,123 @@
+//! Restart economics of the durable operator store (ROADMAP item l).
+//!
+//! Cold start pays the full hierarchical PALM factorization for every
+//! operator in the fleet before it can serve; warm start replays the
+//! store directory instead. This bench measures both paths on the same
+//! fleet and proves the warm path never touches the solver: the
+//! process-wide PALM iteration counter must not move during restore.
+//!
+//! CI runs the 2-op smoke (`-- --ops 2 --n 32 --json`) and gates
+//! `BENCH_recovery.json` against `benches/baseline.json` — the headline
+//! ceiling is `warm_start_ms` (restore must stay under the budget) and
+//! `warm_palm_iters` (exactly zero re-factorization).
+
+use faust::bench_util::{fmt, BenchReport, Table};
+use faust::cli::Args;
+use faust::coordinator::{BatchOp, Registry};
+use faust::engine::ApplyEngine;
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::palm::iterations_total;
+use faust::transforms::hadamard;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let n: usize = args.get("n", 64);
+    let ops: usize = args.get("ops", 4).max(1);
+    let threads: usize = args.get("threads", 2);
+    let dir = std::env::temp_dir().join(format!("faust_bench_recovery_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    println!("# store recovery — cold factorize vs warm restore (n={n}, ops={ops})\n");
+    let engine = ApplyEngine::with_threads(threads);
+    let h = hadamard(n);
+    let cfg = HierarchicalConfig::hadamard(n);
+
+    // ---- Cold path: learn the whole fleet, then snapshot it. ----
+    let iters0 = iterations_total();
+    let t_cold = Instant::now();
+    let registry = Registry::new(None);
+    for k in 0..ops {
+        let learned = factorize(&h, &cfg);
+        registry
+            .register(format!("op{k}"), Arc::new(engine.op(&learned)) as Arc<dyn BatchOp>)
+            .expect("fresh registry");
+    }
+    let report = registry.persist_all(&dir).expect("snapshot");
+    let cold_ms = t_cold.elapsed().as_secs_f64() * 1e3;
+    let cold_iters = iterations_total() - iters0;
+    assert_eq!(report.persisted.len(), ops);
+    assert!(cold_iters > 0, "cold start must run PALM");
+
+    let store_bytes: u64 = std::fs::read_dir(&dir)
+        .expect("store dir")
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.metadata().ok())
+        .map(|m| m.len())
+        .sum();
+
+    // ---- Warm path: a fresh registry restored from the store alone. ----
+    let iters1 = iterations_total();
+    let t_warm = Instant::now();
+    let warm = Registry::new(None);
+    let restore = warm
+        .load_store(&dir, |_, f| Arc::new(engine.op(f)) as Arc<dyn BatchOp>)
+        .expect("store readable");
+    let warm_ms = t_warm.elapsed().as_secs_f64() * 1e3;
+    let warm_iters = iterations_total() - iters1;
+    assert_eq!(restore.loaded.len(), ops, "every operator must restore");
+    assert!(restore.corrupt.is_empty());
+
+    // Restored generations must serve the cold fleet's exact bits.
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
+    for name in &restore.loaded {
+        let cold_op = registry.get_serving(name).expect("cold live");
+        let warm_op = warm.get_serving(name).expect("warm live");
+        let a = cold_op.0.apply_batch(&faust::linalg::Mat::from_vec(n, 1, x.clone()));
+        let b = warm_op.0.apply_batch(&faust::linalg::Mat::from_vec(n, 1, x.clone()));
+        for i in 0..n {
+            assert_eq!(
+                a.data()[i].to_bits(),
+                b.data()[i].to_bits(),
+                "{name}: warm restore changed bits at row {i}"
+            );
+        }
+    }
+
+    let mut table = Table::new(&["path", "ms", "palm_iters", "ops", "store_bytes"]);
+    table.row(&[
+        "cold".to_string(),
+        fmt(cold_ms),
+        cold_iters.to_string(),
+        ops.to_string(),
+        store_bytes.to_string(),
+    ]);
+    table.row(&[
+        "warm".to_string(),
+        fmt(warm_ms),
+        warm_iters.to_string(),
+        restore.loaded.len().to_string(),
+        "-".to_string(),
+    ]);
+    table.print();
+    println!(
+        "\n# warm restore is {}x faster than cold factorization and runs zero PALM iterations",
+        fmt(cold_ms / warm_ms.max(1e-9))
+    );
+
+    if args.flag("json") {
+        let mut rep = BenchReport::new("recovery");
+        rep.push("cold_start_ms", cold_ms);
+        rep.push("warm_start_ms", warm_ms);
+        rep.push("cold_palm_iters", cold_iters as f64);
+        rep.push("warm_palm_iters", warm_iters as f64);
+        rep.push("ops_restored", restore.loaded.len() as f64);
+        rep.push("store_bytes", store_bytes as f64);
+        match rep.write(args.get_str("json-dir").unwrap_or(".")) {
+            Ok(p) => println!("# wrote {p}"),
+            Err(e) => eprintln!("# json write failed: {e}"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -122,6 +122,7 @@ fn main() {
             queue_capacity: 8192,
             adaptive: Some(AdaptiveBatchConfig::default()),
             precision: args.precision,
+            n_shards: 1,
         },
     );
     let server = Server::start(coord.client(), ServerConfig::default()).expect("bind loopback");

@@ -98,9 +98,9 @@ SUBCOMMANDS:
   denoise     --size 128 --sigma 30 --atoms 128 [--stride 2] [--threads N]
               FAuST vs K-SVD vs DCT image denoising (paper Fig. 12, scaled)
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
-              [--threads 2] [--adaptive-batch] [--factorize]
-              [--factorize-fleet N] [--listen HOST:PORT] [--repl]
-              [--precision f64|f32|auto[:EPS]]
+              [--threads 2] [--shards 1] [--store DIR] [--adaptive-batch]
+              [--factorize] [--factorize-fleet N] [--listen HOST:PORT]
+              [--repl] [--precision f64|f32|auto[:EPS]]
               run the operator-serving coordinator on a Hadamard FAuST,
               planned + parallelized by the apply engine.
               --adaptive-batch sizes each operator's batches from its
@@ -110,6 +110,16 @@ SUBCOMMANDS:
               quantized generation when it has one), or auto[:EPS]
               (serve f32 per operator only when its measured probe
               error fits the budget; bare auto means auto:1e-6);
+              --shards N splits the coordinator into N independent
+              worker pools: the registry pins each operator to a shard
+              (cost-balanced, rebalanced on retire) and idle shards
+              steal whole flush jobs — bitwise identical to --shards 1
+              by the engine's thread-invariance contract;
+              --store DIR makes the fleet durable: snapshots present in
+              DIR warm-restore at startup (zero re-factorization), an
+              empty DIR gets a cold snapshot, and shutdown writes a
+              final one (CRC-sealed versioned files, torn/corrupt
+              snapshots are skipped with a typed report — see store);
               --factorize starts serving the reference butterfly, then
               refactorizes on-line on the serving engine's ctx and
               hot-swaps the learned operator in mid-traffic (registry

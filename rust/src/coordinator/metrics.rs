@@ -30,6 +30,10 @@ pub struct Metrics {
     ingress_queue_hwm: AtomicU64,
     applies_f64: AtomicU64,
     applies_f32: AtomicU64,
+    jobs_donated: AtomicU64,
+    store_persisted: AtomicU64,
+    store_loaded: AtomicU64,
+    store_skipped: AtomicU64,
 }
 
 /// Point-in-time copy of the metrics.
@@ -66,6 +70,15 @@ pub struct MetricsSnapshot {
     pub applies_f64: u64,
     /// Requests executed on a quantized f32 generation.
     pub applies_f32: u64,
+    /// Whole flush jobs stolen by an idle shard's worker from a sibling
+    /// shard's queue (work donation; 0 on a single-shard coordinator).
+    pub jobs_donated: u64,
+    /// Operator snapshots written by `Registry::persist_all`.
+    pub store_persisted: u64,
+    /// Operator snapshots restored by `Registry::load_store`.
+    pub store_loaded: u64,
+    /// Store files skipped as torn/corrupt during a restore.
+    pub store_skipped: u64,
 }
 
 impl MetricsSnapshot {
@@ -136,6 +149,10 @@ impl Metrics {
             ingress_queue_hwm: AtomicU64::new(0),
             applies_f64: AtomicU64::new(0),
             applies_f32: AtomicU64::new(0),
+            jobs_donated: AtomicU64::new(0),
+            store_persisted: AtomicU64::new(0),
+            store_loaded: AtomicU64::new(0),
+            store_skipped: AtomicU64::new(0),
         }
     }
 
@@ -197,6 +214,23 @@ impl Metrics {
         self.ingress_queue_hwm.fetch_max(depth, Ordering::Relaxed);
     }
 
+    /// One whole job stolen across shards (work donation).
+    pub fn record_job_donated(&self) {
+        self.jobs_donated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_store_persisted(&self) {
+        self.store_persisted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_store_loaded(&self) {
+        self.store_loaded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_store_skipped(&self) {
+        self.store_skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Count `n` requests executed at `precision` (one call per batch).
     pub fn record_precision_applies(&self, precision: ServedPrecision, n: u64) {
         match precision {
@@ -231,6 +265,10 @@ impl Metrics {
             ingress_queue_hwm: self.ingress_queue_hwm.load(Ordering::Relaxed),
             applies_f64: self.applies_f64.load(Ordering::Relaxed),
             applies_f32: self.applies_f32.load(Ordering::Relaxed),
+            jobs_donated: self.jobs_donated.load(Ordering::Relaxed),
+            store_persisted: self.store_persisted.load(Ordering::Relaxed),
+            store_loaded: self.store_loaded.load(Ordering::Relaxed),
+            store_skipped: self.store_skipped.load(Ordering::Relaxed),
         }
     }
 }
@@ -301,6 +339,24 @@ mod tests {
         assert!((s.f32_apply_frac() - 0.75).abs() < 1e-12);
         // An all-f64 deployment reports a zero fraction, not NaN.
         assert_eq!(Metrics::new().snapshot().f32_apply_frac(), 0.0);
+    }
+
+    #[test]
+    fn shard_and_store_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_job_donated();
+        m.record_job_donated();
+        m.record_store_persisted();
+        m.record_store_loaded();
+        m.record_store_loaded();
+        m.record_store_loaded();
+        m.record_store_skipped();
+        let s = m.snapshot();
+        assert_eq!(s.jobs_donated, 2);
+        assert_eq!(
+            (s.store_persisted, s.store_loaded, s.store_skipped),
+            (1, 3, 1)
+        );
     }
 
     #[test]

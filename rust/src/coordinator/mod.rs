@@ -41,6 +41,26 @@
 //! per-precision apply counts land in [`MetricsSnapshot`]. Factorization
 //! never runs in f32 — precision is strictly a serving-tier choice.
 //!
+//! **Sharding (ROADMAP item l).** With
+//! [`CoordinatorConfig::n_shards`]` > 1` the coordinator runs N
+//! independent [`ShardSet`] pools instead of one: the registry pins each
+//! operator to a shard at register time (greedy cost-model placement from
+//! its [`CostProfile`], rebalanced on retire), the router pushes each
+//! `(operator, class)` batch onto its owning shard's job queue, and a
+//! shard whose own queue runs dry steals whole flush jobs from its
+//! siblings (**work donation**). Because every engine kernel is bitwise
+//! thread-invariant, moving a job between shards moves only *where* the
+//! flops run — the shard-invariance proptests below hold results bitwise
+//! identical to the single-pool seed path across shard counts {1, 2, 4},
+//! donation included. `n_shards = 1` (the default) is exactly the seed
+//! coordinator: no rebinding, no routing, no stealing.
+//!
+//! **Durability (ROADMAP item l, [`crate::store`]).**
+//! [`Registry::persist_all`] snapshots every persistable operator
+//! (factors + λ + f32 bound + epoch) into a versioned, CRC-sealed store
+//! directory; [`Registry::load_store`] restores a whole fleet — warm
+//! restarts re-plan in milliseconds instead of re-running PALM.
+//!
 //! Operators are best registered as [`EngineOp`]s (see [`engine_ops`]):
 //! the batch a worker executes then runs through the engine's cost-modeled
 //! plan, row-parallel pooled spmm, and zero-alloc arena. A deployment
@@ -87,9 +107,11 @@ pub use batcher::{
     target_batch, target_batch_for_class, AdaptiveBatchConfig, BatchPolicy, Batcher,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use registry::{FleetRefactorization, Registry, RegistryError};
+pub use registry::{
+    FleetRefactorization, PersistReport, Registry, RegistryError, StoreRestore,
+};
 
-use crate::engine::{ApplyEngine, CostProfile, EngineOp, EngineOpF32};
+use crate::engine::{ApplyEngine, CostProfile, EngineOp, EngineOpF32, ShardSet, ThreadPool};
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -210,6 +232,19 @@ pub trait BatchOp: Send + Sync {
     fn to_f32_op(&self) -> Option<F32Serving> {
         None
     }
+    /// The learned FAμST behind this operator, if it carries durable
+    /// state worth snapshotting ([`crate::store`]). `None` (the default)
+    /// opts the operator out of [`Registry::persist_all`].
+    fn persist_source(&self) -> Option<Faust> {
+        None
+    }
+    /// Rebind this operator onto another engine pool (shard placement).
+    /// `None` (the default) means the operator is pool-free — it serves
+    /// unchanged from any shard. Implementations must be bitwise
+    /// result-preserving (guaranteed by engine thread invariance).
+    fn rebound_to(&self, _pool: &Arc<ThreadPool>) -> Option<Arc<dyn BatchOp>> {
+        None
+    }
 }
 
 impl BatchOp for Mat {
@@ -258,6 +293,10 @@ impl BatchOp for Faust {
             declared_rel_err: bound.declared_rel_err,
         })
     }
+    /// A bare Faust *is* its own durable state.
+    fn persist_source(&self) -> Option<Faust> {
+        Some(self.clone())
+    }
 }
 
 impl BatchOp for EngineOp {
@@ -287,6 +326,16 @@ impl BatchOp for EngineOp {
             declared_rel_err: bound.declared_rel_err,
         })
     }
+    /// The source factors the op was planned from (retained by
+    /// [`ApplyEngine::op`]; `None` for plan-only ops).
+    fn persist_source(&self) -> Option<Faust> {
+        EngineOp::source(self).map(|f| (**f).clone())
+    }
+    /// Same plan, same arenas, different pool — bitwise identical by
+    /// engine thread invariance.
+    fn rebound_to(&self, pool: &Arc<ThreadPool>) -> Option<Arc<dyn BatchOp>> {
+        Some(Arc::new(EngineOp::on_pool(self, pool.clone())))
+    }
 }
 
 impl BatchOp for EngineOpF32 {
@@ -307,6 +356,11 @@ impl BatchOp for EngineOpF32 {
     /// arena at half the f64 footprint (wider batches fit the same cap).
     fn cost_profile(&self) -> Option<CostProfile> {
         Some(EngineOpF32::profile(self))
+    }
+    /// Rebind the quantized generation onto a shard's pool, keeping the
+    /// swap-time calibrated bound.
+    fn rebound_to(&self, pool: &Arc<ThreadPool>) -> Option<Arc<dyn BatchOp>> {
+        Some(Arc::new(EngineOpF32::on_pool(self, pool.clone())))
     }
 }
 
@@ -347,6 +401,13 @@ pub struct CoordinatorConfig {
     /// Serving precision policy (see [`Precision`]); `F64` — the default
     /// — reproduces the pre-precision-tier coordinator bitwise.
     pub precision: Precision,
+    /// Independent engine-pool shards (clamped to ≥ 1). `1` — the
+    /// default — is exactly the seed single-pool coordinator; `> 1`
+    /// pins each operator to a shard (cost-balanced), routes its batches
+    /// there, spawns `n_workers` job workers *per shard*, and lets idle
+    /// shards steal whole jobs from busy ones (work donation). Results
+    /// are bitwise independent of the shard count.
+    pub n_shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -358,6 +419,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 1024,
             adaptive: None,
             precision: Precision::F64,
+            n_shards: 1,
         }
     }
 }
@@ -510,22 +572,51 @@ impl JobQueue {
         self.cv.notify_one();
     }
 
-    fn pop(&self) -> Option<Job> {
+    /// Pop, waiting at most `d` for a job (used by shard workers so an
+    /// idle shard periodically looks for donation work instead of
+    /// blocking forever on its own queue).
+    fn pop_timeout(&self, d: Duration) -> Option<Job> {
         let mut g = self.q.lock().unwrap();
-        loop {
-            if let Some(j) = g.pop() {
-                return Some(j);
-            }
-            if self.closed.load(Ordering::Acquire) {
-                return None;
-            }
-            g = self.cv.wait(g).unwrap();
+        if let Some(j) = g.pop() {
+            return Some(j);
         }
+        if self.closed.load(Ordering::Acquire) {
+            return None;
+        }
+        let (mut g, _) = self.cv.wait_timeout(g, d).unwrap();
+        g.pop()
+    }
+
+    /// Non-blocking pop — the donation path: a worker from another shard
+    /// lifts a whole job off this queue.
+    fn try_pop(&self) -> Option<Job> {
+        self.q.lock().unwrap().pop()
+    }
+
+    /// Closed and fully drained — nothing left for anyone to serve.
+    fn is_done(&self) -> bool {
+        self.closed.load(Ordering::Acquire) && self.q.lock().unwrap().is_empty()
     }
 
     fn close(&self) {
         self.closed.store(true, Ordering::Release);
         self.cv.notify_all();
+    }
+}
+
+/// One shard's serving state: its private job queue plus the
+/// busy-marking test hook the forced-donation tests flip.
+struct ShardRuntime {
+    jobs: JobQueue,
+    /// When set, this shard's workers stall (as if wedged on a long
+    /// batch); its queued jobs must be rescued by sibling donation.
+    /// Test hook only — never set in production paths.
+    busy: AtomicBool,
+}
+
+impl ShardRuntime {
+    fn new() -> Self {
+        ShardRuntime { jobs: JobQueue::new(), busy: AtomicBool::new(false) }
     }
 }
 
@@ -624,12 +715,12 @@ impl Client {
     }
 }
 
-/// The running coordinator: router + workers.
+/// The running coordinator: router + per-shard workers.
 pub struct Coordinator {
     client: Client,
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    jobs: Arc<JobQueue>,
+    shards: Arc<Vec<ShardRuntime>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -643,10 +734,25 @@ impl Coordinator {
     /// [`Registry::swap_epoch`] to replace an operator).
     pub fn start(ops: Vec<(String, Arc<dyn BatchOp>)>, cfg: CoordinatorConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let registry = Arc::new(Registry::with_metrics(
+        let n_shards = cfg.n_shards.max(1);
+        // One engine pool per shard. Thread budget divides the machine
+        // across shards; the bitwise thread-invariance contract makes the
+        // per-shard width a pure throughput knob, never a results knob.
+        let pools = if n_shards > 1 {
+            let avail = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1);
+            Arc::new(ShardSet::new(n_shards, (avail / n_shards).max(1)))
+        } else {
+            // Seed path: a placeholder single shard — the registry never
+            // rebinds on a one-shard set, so this pool is never used.
+            Arc::new(ShardSet::single(Arc::new(ThreadPool::new(1))))
+        };
+        let registry = Arc::new(Registry::with_shards(
             cfg.adaptive.clone(),
             cfg.precision,
             metrics.clone(),
+            pools,
         ));
         for (name, op) in ops {
             registry
@@ -654,12 +760,13 @@ impl Coordinator {
                 .expect("duplicate operator name at startup");
         }
         let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
-        let jobs = Arc::new(JobQueue::new());
+        let shards: Arc<Vec<ShardRuntime>> =
+            Arc::new((0..n_shards).map(|_| ShardRuntime::new()).collect());
         let stop = Arc::new(AtomicBool::new(false));
 
         // Router thread: drain the request channel, batch per op.
         let r_registry = registry.clone();
-        let r_jobs = jobs.clone();
+        let r_shards = shards.clone();
         let r_metrics = metrics.clone();
         let r_stop = stop.clone();
         let policy = BatchPolicy { max_batch: cfg.max_batch, timeout: cfg.batch_timeout };
@@ -675,25 +782,29 @@ impl Coordinator {
         let router = std::thread::Builder::new()
             .name("faust-router".into())
             .spawn(move || {
-                router_loop(rx, r_registry, r_jobs, r_metrics, policy, base_budget, r_stop)
+                router_loop(rx, r_registry, r_shards, r_metrics, policy, base_budget, r_stop)
             })
             .expect("spawn router");
 
-        // Worker pool.
-        let mut workers = Vec::with_capacity(cfg.n_workers);
-        for w in 0..cfg.n_workers.max(1) {
-            let w_jobs = jobs.clone();
-            let w_metrics = metrics.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("faust-worker-{w}"))
-                    .spawn(move || worker_loop(w_jobs, w_metrics))
-                    .expect("spawn worker"),
-            );
+        // Worker pool: `n_workers` job workers per shard, each bound to
+        // a home queue and free to donate cycles to any sibling's.
+        let per_shard = cfg.n_workers.max(1);
+        let mut workers = Vec::with_capacity(n_shards * per_shard);
+        for s in 0..n_shards {
+            for w in 0..per_shard {
+                let w_shards = shards.clone();
+                let w_metrics = metrics.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("faust-worker-{s}.{w}"))
+                        .spawn(move || worker_loop(s, w_shards, w_metrics))
+                        .expect("spawn worker"),
+                );
+            }
         }
 
         let client = Client { tx, registry, metrics };
-        Coordinator { client, router: Some(router), workers, jobs, stop }
+        Coordinator { client, router: Some(router), workers, shards, stop }
     }
 
     /// Get a submission handle.
@@ -707,13 +818,33 @@ impl Coordinator {
         self.client.registry.clone()
     }
 
+    /// Number of shards this coordinator runs (≥ 1).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Test hook: wedge (or un-wedge) shard `shard`'s workers so its
+    /// queued jobs can only complete via sibling donation. No-op
+    /// returning `false` on a single-shard coordinator (wedging the only
+    /// shard would deadlock) or an out-of-range index.
+    #[doc(hidden)]
+    pub fn debug_mark_shard_busy(&self, shard: usize, busy: bool) -> bool {
+        if self.shards.len() <= 1 || shard >= self.shards.len() {
+            return false;
+        }
+        self.shards[shard].busy.store(busy, Ordering::Release);
+        true
+    }
+
     /// Graceful shutdown: stop accepting, drain in-flight work, join.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.stop.store(true, Ordering::Release);
         if let Some(r) = self.router.take() {
             let _ = r.join();
         }
-        self.jobs.close();
+        for s in self.shards.iter() {
+            s.jobs.close();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -724,7 +855,7 @@ impl Coordinator {
 fn router_loop(
     rx: Receiver<Request>,
     registry: Arc<Registry>,
-    jobs: Arc<JobQueue>,
+    shards: Arc<Vec<ShardRuntime>>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
     base_budget: Duration,
@@ -756,7 +887,7 @@ fn router_loop(
         let limit = limit_for(&registry, &key);
         let timeout = timeout_for(&req);
         if let Some((key, reqs)) = batcher.add_with_timeout(key, req, limit, timeout) {
-            flush(&registry, &jobs, &metrics, key.0, reqs, limit);
+            flush(&registry, &shards, &metrics, key.0, reqs, limit);
         }
     };
     loop {
@@ -770,7 +901,7 @@ fn router_loop(
         }
         for (key, reqs) in batcher.take_expired() {
             let limit = limit_for(&registry, &key);
-            flush(&registry, &jobs, &metrics, key.0, reqs, limit);
+            flush(&registry, &shards, &metrics, key.0, reqs, limit);
         }
         if stop.load(Ordering::Acquire) {
             // Drain anything still in the channel, then stop.
@@ -783,30 +914,31 @@ fn router_loop(
     // Drain remaining partial batches on shutdown.
     for (key, reqs) in batcher.drain() {
         let limit = limit_for(&registry, &key);
-        flush(&registry, &jobs, &metrics, key.0, reqs, limit);
+        flush(&registry, &shards, &metrics, key.0, reqs, limit);
     }
 }
 
-/// Hand a batch to the workers, split into `limit`-sized jobs. The split
-/// is what upholds the adaptive arena cap even on paths where more than
-/// `limit` requests had already accumulated (timeout expiry, or a swap
-/// that lowered the operator's target mid-batch).
+/// Hand a batch to its owning shard's workers, split into `limit`-sized
+/// jobs. The split is what upholds the adaptive arena cap even on paths
+/// where more than `limit` requests had already accumulated (timeout
+/// expiry, or a swap that lowered the operator's target mid-batch).
 fn flush(
     registry: &Registry,
-    jobs: &Arc<JobQueue>,
+    shards: &Arc<Vec<ShardRuntime>>,
     metrics: &Arc<Metrics>,
     op_name: String,
     mut reqs: Vec<Request>,
     limit: usize,
 ) {
-    match registry.get_serving(&op_name) {
-        Some((op, precision)) => {
+    match registry.get_serving_routed(&op_name) {
+        Some((op, precision, shard)) => {
+            let queue = &shards[shard % shards.len()].jobs;
             let limit = limit.max(1);
             while !reqs.is_empty() {
                 let rest = reqs.split_off(reqs.len().min(limit));
                 let batch = std::mem::replace(&mut reqs, rest);
                 metrics.record_batch(batch.len());
-                jobs.push(Job { op: op.clone(), precision, reqs: batch });
+                queue.push(Job { op: op.clone(), precision, reqs: batch });
             }
         }
         None => {
@@ -819,42 +951,77 @@ fn flush(
     }
 }
 
-fn worker_loop(jobs: Arc<JobQueue>, metrics: Arc<Metrics>) {
-    while let Some(job) = jobs.pop() {
-        let n = job.op.cols();
-        // Re-validate dimensions against the operator that actually
-        // resolved: a retire + register under the same name can change
-        // the shape after a request was submit-checked (swap_epoch can't
-        // — it is shape-checked — but the worker must never panic on a
-        // stale request either way).
-        let (reqs, stale): (Vec<Request>, Vec<Request>) =
-            job.reqs.into_iter().partition(|r| r.x.len() == n);
-        for r in stale {
-            let _ = r
-                .resp
-                .send(Err(ServeError::WrongDimension { expected: n, got: r.x.len() }));
-        }
-        if reqs.is_empty() {
+/// Shard worker: serve the home queue; when it runs dry, donate cycles
+/// to any sibling with stranded jobs; exit once every queue is closed
+/// and drained. A stolen job executes exactly as it would have on its
+/// owner — its operator carries its own engine pool, so donation moves
+/// scheduling, never results.
+fn worker_loop(me: usize, shards: Arc<Vec<ShardRuntime>>, metrics: Arc<Metrics>) {
+    loop {
+        if shards[me].busy.load(Ordering::Acquire) {
+            // Wedged-shard test hook: stall until un-wedged or shutdown.
+            if shards.iter().all(|s| s.jobs.is_done()) {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(200));
             continue;
         }
-        let b = reqs.len();
-        // Assemble the column batch.
-        let mut x = Mat::zeros(n, b);
-        for (c, r) in reqs.iter().enumerate() {
-            for i in 0..n {
-                x.set(i, c, r.x[i]);
+        if let Some(job) = shards[me].jobs.pop_timeout(Duration::from_millis(1)) {
+            run_job(job, &metrics);
+            continue;
+        }
+        // Home queue idle: scan siblings for work to steal.
+        let mut stole = false;
+        for d in 1..shards.len() {
+            let k = (me + d) % shards.len();
+            if let Some(job) = shards[k].jobs.try_pop() {
+                metrics.record_job_donated();
+                run_job(job, &metrics);
+                stole = true;
+                break;
             }
         }
-        let t0 = Instant::now();
-        let y = job.op.apply_batch(&x);
-        let exec_ns = t0.elapsed().as_nanos() as u64;
-        metrics.record_exec(b, exec_ns, job.op.flops_per_matvec() as u64 * b as u64);
-        metrics.record_precision_applies(job.precision, b as u64);
-        for (c, r) in reqs.into_iter().enumerate() {
-            let latency = r.enqueued.elapsed().as_nanos() as u64;
-            metrics.record_completed(latency);
-            let _ = r.resp.send(Ok(y.col(c)));
+        if !stole && shards.iter().all(|s| s.jobs.is_done()) {
+            return;
         }
+    }
+}
+
+/// Execute one batch job and answer its requests.
+fn run_job(job: Job, metrics: &Arc<Metrics>) {
+    let n = job.op.cols();
+    // Re-validate dimensions against the operator that actually
+    // resolved: a retire + register under the same name can change
+    // the shape after a request was submit-checked (swap_epoch can't
+    // — it is shape-checked — but the worker must never panic on a
+    // stale request either way).
+    let (reqs, stale): (Vec<Request>, Vec<Request>) =
+        job.reqs.into_iter().partition(|r| r.x.len() == n);
+    for r in stale {
+        let _ = r
+            .resp
+            .send(Err(ServeError::WrongDimension { expected: n, got: r.x.len() }));
+    }
+    if reqs.is_empty() {
+        return;
+    }
+    let b = reqs.len();
+    // Assemble the column batch.
+    let mut x = Mat::zeros(n, b);
+    for (c, r) in reqs.iter().enumerate() {
+        for i in 0..n {
+            x.set(i, c, r.x[i]);
+        }
+    }
+    let t0 = Instant::now();
+    let y = job.op.apply_batch(&x);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    metrics.record_exec(b, exec_ns, job.op.flops_per_matvec() as u64 * b as u64);
+    metrics.record_precision_applies(job.precision, b as u64);
+    for (c, r) in reqs.into_iter().enumerate() {
+        let latency = r.enqueued.elapsed().as_nanos() as u64;
+        metrics.record_completed(latency);
+        let _ = r.resp.send(Ok(y.col(c)));
     }
 }
 
@@ -1307,6 +1474,163 @@ mod tests {
         let y = client.apply("s", vec![0.0; 2]).unwrap();
         assert_eq!(y.len(), 2);
         coord.shutdown();
+    }
+
+    #[test]
+    fn config_defaults_to_the_single_pool_seed_path() {
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.n_shards, 1);
+        let (op, _) = dense_op(4, 4, 171);
+        let coord = Coordinator::start(vec![("m".to_string(), op as Arc<dyn BatchOp>)], cfg);
+        assert_eq!(coord.n_shards(), 1);
+        // Wedging the only shard would deadlock, so the hook refuses.
+        assert!(!coord.debug_mark_shard_busy(0, true));
+        let y = coord.client().apply("m", vec![1.0; 4]).unwrap();
+        assert_eq!(y.len(), 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_coordinator_pins_operators_and_serves() {
+        let n = 16;
+        let engine = crate::engine::ApplyEngine::with_threads(2);
+        let h = crate::transforms::hadamard(n);
+        let ops = engine_ops(
+            &engine,
+            (0..4)
+                .map(|i| (format!("op{i}"), crate::transforms::hadamard_faust(n)))
+                .collect(),
+            4,
+        );
+        let cfg = CoordinatorConfig { n_shards: 2, ..CoordinatorConfig::default() };
+        let coord = Coordinator::start(ops, cfg);
+        assert_eq!(coord.n_shards(), 2);
+        let registry = coord.registry();
+        assert_eq!(registry.n_shards(), 2);
+        // Equal-cost ops spread across both shards, deterministically.
+        let shards: Vec<usize> = (0..4)
+            .map(|i| registry.shard_of(&format!("op{i}")).unwrap())
+            .collect();
+        assert!(shards.iter().any(|&s| s == 0) && shards.iter().any(|&s| s == 1));
+        let client = coord.client();
+        let mut rng = Rng::new(61);
+        for i in 0..8 {
+            let x = rng.gauss_vec(n);
+            let y = client.apply(&format!("op{}", i % 4), x.clone()).unwrap();
+            let want = h.matvec(&x);
+            for k in 0..n {
+                assert!((y[k] - want[k]).abs() < 1e-10);
+            }
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 8);
+    }
+
+    #[test]
+    fn shard_invariance_results_bitwise_match_single_pool() {
+        // The tentpole contract: random operator fleets served across
+        // shard counts {1, 2, 4} produce responses bitwise identical to
+        // the single-pool seed path. Requests are applied one at a time,
+        // so batch composition is fixed and any difference would come
+        // from sharding itself.
+        use crate::testutil::{check, ensure, PropConfig};
+        check(
+            "shard_invariance",
+            &PropConfig { cases: 6, base_seed: 0x5A4D0001 },
+            |rng| {
+                let sizes = [8usize, 16, 32];
+                let n_ops = 1 + rng.below(3);
+                let specs: Vec<(String, usize)> = (0..n_ops)
+                    .map(|i| (format!("op{i}"), sizes[rng.below(sizes.len())]))
+                    .collect();
+                let reqs: Vec<(usize, Vec<f64>)> = (0..10)
+                    .map(|_| {
+                        let k = rng.below(n_ops);
+                        let x = rng.gauss_vec(specs[k].1);
+                        (k, x)
+                    })
+                    .collect();
+                let run = |n_shards: usize| -> Vec<Vec<f64>> {
+                    let engine = crate::engine::ApplyEngine::with_threads(2);
+                    let ops: Vec<(String, Arc<dyn BatchOp>)> = specs
+                        .iter()
+                        .map(|(name, sz)| {
+                            let f = crate::transforms::hadamard_faust(*sz);
+                            (name.clone(), Arc::new(engine.op(&f)) as Arc<dyn BatchOp>)
+                        })
+                        .collect();
+                    let cfg =
+                        CoordinatorConfig { n_shards, ..CoordinatorConfig::default() };
+                    let coord = Coordinator::start(ops, cfg);
+                    let client = coord.client();
+                    let out = reqs
+                        .iter()
+                        .map(|(k, x)| client.apply(&specs[*k].0, x.clone()).unwrap())
+                        .collect();
+                    coord.shutdown();
+                    out
+                };
+                let want = run(1);
+                for n_shards in [2usize, 4] {
+                    let got = run(n_shards);
+                    for (w, g) in want.iter().zip(&got) {
+                        ensure(w.len() == g.len(), "response length changed")?;
+                        for (a, b) in w.iter().zip(g) {
+                            ensure(
+                                a.to_bits() == b.to_bits(),
+                                format!("{n_shards}-shard result differs bitwise"),
+                            )?;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn donation_rescues_a_wedged_shard_bitwise() {
+        // Wedge the shard that owns an operator: its flush jobs must be
+        // stolen and completed by the sibling shard's workers, with
+        // responses bitwise identical to an unsharded apply.
+        let n = 32;
+        let engine = crate::engine::ApplyEngine::with_threads(2);
+        let f = crate::transforms::hadamard_faust(n);
+        let reference = engine.op(&f);
+        let ops = engine_ops(
+            &engine,
+            vec![
+                ("a".to_string(), f.clone()),
+                ("b".to_string(), crate::transforms::hadamard_faust(n)),
+            ],
+            4,
+        );
+        let cfg = CoordinatorConfig { n_shards: 2, ..CoordinatorConfig::default() };
+        let coord = Coordinator::start(ops, cfg);
+        let owner = coord.registry().shard_of("a").unwrap();
+        assert!(coord.debug_mark_shard_busy(owner, true));
+        let client = coord.client();
+        let mut rng = Rng::new(0xD0A7);
+        for _ in 0..6 {
+            let x = rng.gauss_vec(n);
+            let y = client.apply("a", x.clone()).expect("donation never lost a request");
+            let want = reference.apply_batch(&Mat::from_vec(n, 1, x));
+            for i in 0..n {
+                assert_eq!(
+                    y[i].to_bits(),
+                    want.at(i, 0).to_bits(),
+                    "donated job changed bits"
+                );
+            }
+        }
+        assert!(coord.debug_mark_shard_busy(owner, false));
+        let snap = coord.shutdown();
+        assert!(
+            snap.jobs_donated >= 6,
+            "wedged shard's jobs were not donated (donated={})",
+            snap.jobs_donated
+        );
+        assert_eq!(snap.completed, 6);
     }
 
     #[test]

@@ -38,11 +38,13 @@
 use super::batcher::{target_batch_for_class, AdaptiveBatchConfig};
 use super::metrics::Metrics;
 use super::{BatchOp, F32Serving, Precision, QosClass, ServedPrecision};
-use crate::engine::FleetCtx;
+use crate::engine::{F32Bound, FleetCtx, ShardSet, ThreadPool};
 use crate::faust::Faust;
 use crate::hierarchical::{factorize_fleet_traced_with_ctx, HierarchicalConfig};
 use crate::linalg::Mat;
+use crate::store::{self, StoreError, StoredOp};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -96,6 +98,11 @@ struct Entry {
     /// generation's cost profile, indexed by [`QosClass::index`]
     /// (None ⇒ no profile / fixed sizing ⇒ the policy default applies).
     target_batch: Option<[usize; 3]>,
+    /// Shard this operator is pinned to (always 0 on a one-shard set).
+    shard: usize,
+    /// Placement weight: flops per served column from the serving
+    /// profile, falling back to `flops_per_matvec` for profile-less ops.
+    cost: f64,
 }
 
 /// Concurrent name → operator map with epoch-stamped hot swap.
@@ -105,6 +112,10 @@ pub struct Registry {
     adaptive: Option<AdaptiveBatchConfig>,
     precision: Precision,
     metrics: Arc<Metrics>,
+    /// Engine pools operators are pinned to. A one-shard set (the
+    /// default) disables pinning entirely: no rebinding, every entry on
+    /// shard 0 — bitwise the pre-sharding registry.
+    shards: Arc<ShardSet>,
 }
 
 impl Registry {
@@ -128,12 +139,26 @@ impl Registry {
         precision: Precision,
         metrics: Arc<Metrics>,
     ) -> Self {
+        // Placeholder one-shard set: with a single shard the registry
+        // never rebinds, so the pool is never touched (ThreadPool::new(1)
+        // spawns zero worker threads).
+        let single = Arc::new(ShardSet::single(Arc::new(ThreadPool::new(1))));
+        Self::with_shards(adaptive, precision, metrics, single)
+    }
+
+    pub(crate) fn with_shards(
+        adaptive: Option<AdaptiveBatchConfig>,
+        precision: Precision,
+        metrics: Arc<Metrics>,
+        shards: Arc<ShardSet>,
+    ) -> Self {
         Registry {
             ops: RwLock::new(HashMap::new()),
             epoch: AtomicU64::new(0),
             adaptive,
             precision,
             metrics,
+            shards,
         }
     }
 
@@ -142,7 +167,15 @@ impl Registry {
         self.precision
     }
 
-    fn entry_for(&self, op: Arc<dyn BatchOp>, epoch: u64) -> Entry {
+    fn entry_for(&self, op: Arc<dyn BatchOp>, epoch: u64, shard: usize) -> Entry {
+        // Pin the operator to its shard's pool. One-shard sets skip this
+        // entirely — the seed single-pool path stays untouched — and
+        // pool-free operators (`rebound_to` = None) serve from anywhere.
+        let op = if self.shards.len() > 1 {
+            op.rebound_to(self.shards.pool(shard)).unwrap_or(op)
+        } else {
+            op
+        };
         // Quantize + calibrate only when the policy can ever serve f32:
         // under `f64` a publish must stay bitwise-free of new work.
         let f32_gen = match self.precision {
@@ -169,7 +202,71 @@ impl Registry {
             }
             _ => None,
         };
-        Entry { op, f32_gen, serving, epoch, target_batch }
+        let cost = profile
+            .map(|p| p.flops_per_col as f64)
+            .unwrap_or(op.flops_per_matvec() as f64);
+        Entry { op, f32_gen, serving, epoch, target_batch, shard, cost }
+    }
+
+    /// Greedy placement: the shard with the least accumulated serving
+    /// cost gets the next operator (ties break to the lowest index, so
+    /// placement is deterministic).
+    fn place(&self, g: &HashMap<String, Entry>) -> usize {
+        if self.shards.len() <= 1 {
+            return 0;
+        }
+        let mut loads = vec![0.0f64; self.shards.len()];
+        for e in g.values() {
+            loads[e.shard] += e.cost;
+        }
+        let mut best = 0;
+        for k in 1..loads.len() {
+            if loads[k] < loads[best] {
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Re-balance after a retire: longest-processing-time greedy — sort
+    /// by cost descending (name-tiebroken, so the assignment is
+    /// deterministic), assign each to the least-loaded shard, and rebind
+    /// entries whose shard changed. Bounds kept — moving pools never
+    /// changes results (thread invariance), so no re-calibration.
+    fn rebalance(&self, g: &mut HashMap<String, Entry>) {
+        if self.shards.len() <= 1 {
+            return;
+        }
+        let mut items: Vec<(String, f64)> =
+            g.iter().map(|(n, e)| (n.clone(), e.cost)).collect();
+        items.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.cmp(&b.0))
+        });
+        let mut loads = vec![0.0f64; self.shards.len()];
+        for (name, cost) in items {
+            let mut best = 0;
+            for k in 1..loads.len() {
+                if loads[k] < loads[best] {
+                    best = k;
+                }
+            }
+            loads[best] += cost;
+            let e = g.get_mut(&name).expect("rebalance over live names");
+            if e.shard != best {
+                e.shard = best;
+                let pool = self.shards.pool(best);
+                if let Some(op) = e.op.rebound_to(pool) {
+                    e.op = op;
+                }
+                if let Some(s) = &mut e.f32_gen {
+                    if let Some(op) = s.op.rebound_to(pool) {
+                        s.op = op;
+                    }
+                }
+            }
+        }
     }
 
     /// Publish a new operator under `name`. Errors if the name is live.
@@ -185,7 +282,8 @@ impl Registry {
             return Err(RegistryError::AlreadyRegistered(name));
         }
         let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
-        g.insert(name, self.entry_for(op, epoch));
+        let shard = self.place(&g);
+        g.insert(name, self.entry_for(op, epoch, shard));
         self.metrics.record_registered();
         Ok(epoch)
     }
@@ -208,8 +306,11 @@ impl Registry {
         if expected != got {
             return Err(RegistryError::ShapeMismatch { expected, got });
         }
+        // A successor generation inherits its predecessor's shard:
+        // in-flight routing for this name stays valid across the swap.
+        let shard = cur.shard;
         let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
-        g.insert(name.to_string(), self.entry_for(op, epoch));
+        g.insert(name.to_string(), self.entry_for(op, epoch, shard));
         self.metrics.record_swap();
         Ok(epoch)
     }
@@ -224,6 +325,9 @@ impl Registry {
             .ok_or_else(|| RegistryError::UnknownOperator(name.to_string()))?;
         self.epoch.fetch_add(1, Ordering::AcqRel);
         self.metrics.record_retired();
+        // A departure can leave the shard loads skewed; re-spread the
+        // survivors (no-op on one-shard sets).
+        self.rebalance(&mut g);
         Ok(entry.op)
     }
 
@@ -241,6 +345,28 @@ impl Registry {
             (ServedPrecision::F32, Some(s)) => (s.op.clone(), ServedPrecision::F32),
             _ => (e.op.clone(), ServedPrecision::F64),
         })
+    }
+
+    /// [`Registry::get_serving`] plus the shard the operator is pinned
+    /// to — what the router needs to push a flush onto the right queue.
+    pub fn get_serving_routed(
+        &self,
+        name: &str,
+    ) -> Option<(Arc<dyn BatchOp>, ServedPrecision, usize)> {
+        self.ops.read().unwrap().get(name).map(|e| match (e.serving, &e.f32_gen) {
+            (ServedPrecision::F32, Some(s)) => (s.op.clone(), ServedPrecision::F32, e.shard),
+            _ => (e.op.clone(), ServedPrecision::F64, e.shard),
+        })
+    }
+
+    /// Which shard `name` is currently pinned to.
+    pub fn shard_of(&self, name: &str) -> Option<usize> {
+        self.ops.read().unwrap().get(name).map(|e| e.shard)
+    }
+
+    /// Number of shards this registry places over (1 ⇒ no sharding).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
     }
 
     /// Which precision `name`'s current generation serves in.
@@ -380,6 +506,114 @@ impl Registry {
             .map(|o| o.expect("every fleet member reports an outcome"))
             .collect()
     }
+
+    /// Snapshot every persistable live operator into `dir` as a
+    /// CRC-sealed [`crate::store`] file (factors + λ + f32 bound +
+    /// publish epoch), atomically per operator. Operators with no
+    /// durable state ([`BatchOp::persist_source`] = `None`, e.g. plain
+    /// dense `Mat`s) are reported in `skipped`, not errored.
+    ///
+    /// The op list is cloned out under a read lock and serialization
+    /// runs lock-free, so persisting never stalls serving; a swap that
+    /// lands mid-persist simply isn't in *this* snapshot.
+    pub fn persist_all(&self, dir: &Path) -> Result<PersistReport, StoreError> {
+        let mut snaps: Vec<(String, u64, Arc<dyn BatchOp>, Option<F32Bound>)> = {
+            let g = self.ops.read().unwrap();
+            g.iter()
+                .map(|(n, e)| {
+                    let bound = e.f32_gen.as_ref().map(|s| F32Bound {
+                        measured_rel_err: s.measured_rel_err,
+                        declared_rel_err: s.declared_rel_err,
+                    });
+                    (n.clone(), e.epoch, e.op.clone(), bound)
+                })
+                .collect()
+        };
+        snaps.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut report = PersistReport { persisted: Vec::new(), skipped: Vec::new() };
+        for (name, epoch, op, f32_bound) in snaps {
+            match op.persist_source() {
+                Some(faust) => {
+                    let stored = StoredOp { name: name.clone(), epoch, faust, f32_bound };
+                    store::save_op(dir, &stored)?;
+                    self.metrics.record_store_persisted();
+                    report.persisted.push(name);
+                }
+                None => report.skipped.push(name),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Restore a fleet from `dir`: every readable snapshot is wrapped by
+    /// `publish` (typically `|_, f| Arc::new(engine.op(f))`) and
+    /// register-or-swapped under its stored name — so a warm restart
+    /// over an already-cold-started registry upgrades in place. Stored
+    /// f32 bounds are preloaded into each FAμST's plan cache *before*
+    /// publishing, so no re-probe (and no PALM iteration) runs.
+    ///
+    /// Torn or corrupt files come back in
+    /// [`StoreRestore::corrupt`] — typed, skipped, never a panic, and
+    /// never silently served. The registry's global epoch is advanced to
+    /// at least the newest stored epoch, so every restored generation
+    /// publishes at an epoch `>` its snapshot.
+    pub fn load_store<F>(&self, dir: &Path, mut publish: F) -> Result<StoreRestore, StoreError>
+    where
+        F: FnMut(&str, &Faust) -> Arc<dyn BatchOp>,
+    {
+        let loaded = store::load_dir(dir)?;
+        let max_stored = loaded.ops.iter().map(|s| s.epoch).max().unwrap_or(0);
+        self.epoch.fetch_max(max_stored, Ordering::AcqRel);
+        let mut restore = StoreRestore {
+            loaded: Vec::new(),
+            rejected: Vec::new(),
+            corrupt: loaded.skipped,
+        };
+        for s in &loaded.ops {
+            if let Some(b) = s.f32_bound {
+                s.faust.preload_f32_bound(b);
+            }
+            let op = publish(&s.name, &s.faust);
+            let outcome = match self.register(s.name.clone(), op.clone()) {
+                Err(RegistryError::AlreadyRegistered(_)) => self.swap_epoch(&s.name, op),
+                other => other,
+            };
+            match outcome {
+                Ok(_) => {
+                    self.metrics.record_store_loaded();
+                    restore.loaded.push(s.name.clone());
+                }
+                Err(e) => restore.rejected.push((s.name.clone(), e)),
+            }
+        }
+        for _ in &restore.corrupt {
+            self.metrics.record_store_skipped();
+        }
+        Ok(restore)
+    }
+}
+
+/// Outcome of [`Registry::persist_all`].
+#[derive(Clone, Debug, Default)]
+pub struct PersistReport {
+    /// Names snapshotted to disk, sorted.
+    pub persisted: Vec<String>,
+    /// Live names with no durable state (not an error), sorted.
+    pub skipped: Vec<String>,
+}
+
+/// Outcome of [`Registry::load_store`].
+#[derive(Debug, Default)]
+pub struct StoreRestore {
+    /// Names restored and published (fresh register or in-place swap).
+    pub loaded: Vec<String>,
+    /// Readable snapshots the registry refused (e.g. a shape-changing
+    /// swap against a live operator), with the typed registry error.
+    pub rejected: Vec<(String, RegistryError)>,
+    /// Unreadable files: torn writes, bit flips, wrong magic — each with
+    /// its typed [`StoreError`]. Detected by checksum, skipped, served
+    /// never.
+    pub corrupt: Vec<(PathBuf, StoreError)>,
 }
 
 /// Per-operator outcome of [`Registry::refactorize_fleet`].
@@ -614,6 +848,172 @@ mod tests {
         // judged on.
         let rep = tight.precision_report();
         assert!(rep[0].2.unwrap() > 1e-13);
+    }
+
+    fn tmp_store_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("faust_registry_{}_{tag}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn sharded_registry_places_rebinds_and_rebalances() {
+        use crate::engine::{ApplyEngine, ShardSet};
+        use crate::transforms::hadamard_faust;
+        let engine = ApplyEngine::with_threads(1);
+        let shards = Arc::new(ShardSet::new(2, 1));
+        let r = Registry::with_shards(
+            None,
+            Precision::F64,
+            Arc::new(Metrics::new()),
+            shards,
+        );
+        assert_eq!(r.n_shards(), 2);
+        for i in 0..4 {
+            let op = Arc::new(engine.op(&hadamard_faust(16))) as Arc<dyn BatchOp>;
+            r.register(format!("op{i}"), op).unwrap();
+        }
+        // Equal-cost ops alternate: greedy argmin spreads 2/2.
+        let shard_of = |n: &str| r.shard_of(n).unwrap();
+        let count0 = (0..4).filter(|i| shard_of(&format!("op{i}")) == 0).count();
+        assert_eq!(count0, 2, "placement skewed: {count0}/4 on shard 0");
+        // Routed resolution reports the pinned shard.
+        let (_, _, s) = r.get_serving_routed("op0").unwrap();
+        assert_eq!(s, shard_of("op0"));
+        // A swap keeps its predecessor's shard.
+        let before = shard_of("op2");
+        r.swap_epoch("op2", Arc::new(engine.op(&hadamard_faust(16))) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(shard_of("op2"), before);
+        // Retiring both shard-0 ops forces a rebalance back to 1/1.
+        let on0: Vec<String> = (0..4)
+            .map(|i| format!("op{i}"))
+            .filter(|n| shard_of(n) == 0)
+            .collect();
+        for n in &on0 {
+            r.retire(n).unwrap();
+        }
+        let left: Vec<usize> = r.names().iter().map(|n| shard_of(n)).collect();
+        assert_eq!(left.len(), 2);
+        assert!(
+            left.contains(&0) && left.contains(&1),
+            "rebalance left both survivors on one shard: {left:?}"
+        );
+        // Rebound survivors still serve — bitwise equal to a fresh op.
+        let mut rng = crate::rng::Rng::new(77);
+        let x = Mat::randn(16, 3, &mut rng);
+        let want = engine.op(&hadamard_faust(16)).apply_batch(&x);
+        let (op, _, _) = r.get_serving_routed(&r.names()[0]).unwrap();
+        let got = op.apply_batch(&x);
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn single_shard_registry_never_rebinds() {
+        use crate::engine::ApplyEngine;
+        use crate::transforms::hadamard_faust;
+        let engine = ApplyEngine::with_threads(2);
+        let r = Registry::new(None);
+        assert_eq!(r.n_shards(), 1);
+        let op = Arc::new(engine.op(&hadamard_faust(8))) as Arc<dyn BatchOp>;
+        let keep = op.clone();
+        r.register("h", op).unwrap();
+        // The exact Arc registered is the one served — no rebinding.
+        let served = r.get("h").unwrap();
+        assert!(Arc::ptr_eq(&served, &keep), "single-shard registry rebound the op");
+        assert_eq!(r.shard_of("h"), Some(0));
+    }
+
+    #[test]
+    fn persist_all_and_load_store_round_trip_a_fleet() {
+        use crate::engine::ApplyEngine;
+        use crate::testutil::faust_fingerprint;
+        use crate::transforms::hadamard_faust;
+        let dir = tmp_store_dir("roundtrip");
+        let engine = ApplyEngine::with_threads(1);
+        let r = Registry::new(None);
+        let f8 = hadamard_faust(8);
+        let f16 = hadamard_faust(16);
+        r.register("h8", Arc::new(engine.op(&f8)) as Arc<dyn BatchOp>).unwrap();
+        r.register("h16", Arc::new(engine.op(&f16)) as Arc<dyn BatchOp>).unwrap();
+        // A plain dense Mat has no durable state: skipped, not an error.
+        r.register("dense", Arc::new(Mat::eye(4, 4)) as Arc<dyn BatchOp>).unwrap();
+        let snap_epoch = r.epoch();
+        let report = r.persist_all(&dir).unwrap();
+        assert_eq!(report.persisted, vec!["h16".to_string(), "h8".to_string()]);
+        assert_eq!(report.skipped, vec!["dense".to_string()]);
+
+        // Cold restore into a fresh registry.
+        let r2 = Registry::new(None);
+        let engine2 = ApplyEngine::with_threads(1);
+        let restore = r2
+            .load_store(&dir, |_, f| Arc::new(engine2.op(f)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(restore.loaded, vec!["h16".to_string(), "h8".to_string()]);
+        assert!(restore.rejected.is_empty() && restore.corrupt.is_empty());
+        // Restored factors are bitwise the persisted ones.
+        let got = r2.get("h8").unwrap().persist_source().unwrap();
+        assert_eq!(faust_fingerprint(&got), faust_fingerprint(&f8));
+        // Epochs moved strictly past the snapshot.
+        assert!(r2.epoch() > snap_epoch);
+        assert!(r2.epoch_of("h8").unwrap() > snap_epoch);
+
+        // Warm restore over a live registry upgrades in place (swap).
+        let restore2 = r
+            .load_store(&dir, |_, f| Arc::new(engine.op(f)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(restore2.loaded.len(), 2);
+        assert_eq!(r.len(), 3, "in-place restore must not duplicate names");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_store_skips_corrupt_files_and_loads_the_rest() {
+        use crate::engine::ApplyEngine;
+        use crate::transforms::hadamard_faust;
+        let dir = tmp_store_dir("corrupt");
+        let engine = ApplyEngine::with_threads(1);
+        let r = Registry::new(None);
+        r.register("good", Arc::new(engine.op(&hadamard_faust(8))) as Arc<dyn BatchOp>)
+            .unwrap();
+        r.persist_all(&dir).unwrap();
+        // A torn neighbor: half a valid file.
+        let good = std::fs::read(crate::store::op_path(&dir, "good")).unwrap();
+        std::fs::write(dir.join("torn.fstore"), &good[..good.len() / 2]).unwrap();
+        let r2 = Registry::new(None);
+        let restore = r2
+            .load_store(&dir, |_, f| Arc::new(engine.op(f)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(restore.loaded, vec!["good".to_string()]);
+        assert_eq!(restore.corrupt.len(), 1, "torn file must be reported");
+        assert!(r2.get("good").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn persisted_f32_bound_restores_without_a_reprobe() {
+        use crate::engine::ApplyEngine;
+        use crate::transforms::hadamard_faust;
+        let dir = tmp_store_dir("bound");
+        let engine = ApplyEngine::with_threads(1);
+        // Publish under an f32 policy so a calibrated bound exists.
+        let r = Registry::with_precision(None, Precision::F32);
+        r.register("h", Arc::new(engine.op(&hadamard_faust(16))) as Arc<dyn BatchOp>)
+            .unwrap();
+        let want_err = r.precision_report()[0].2.unwrap();
+        r.persist_all(&dir).unwrap();
+        let r2 = Registry::with_precision(None, Precision::F32);
+        r2.load_store(&dir, |_, f| Arc::new(f.clone()) as Arc<dyn BatchOp>)
+            .unwrap();
+        // The restored generation serves f32 with the *stored* probe
+        // measurement, bit for bit — no fresh calibration ran.
+        assert_eq!(r2.serving_of("h"), Some(ServedPrecision::F32));
+        let got_err = r2.precision_report()[0].2.unwrap();
+        assert_eq!(got_err.to_bits(), want_err.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

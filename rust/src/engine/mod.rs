@@ -59,6 +59,7 @@ pub mod fleet;
 pub mod kernel;
 pub mod plan;
 pub mod pool;
+pub mod shard;
 
 pub use arena::{footprint_for_elem, Arena};
 pub use ctx::ExecCtx;
@@ -69,6 +70,7 @@ pub use pool::{
     par_gemm_into, par_gemv_into, par_gemv_t_into, par_map_jobs, par_spmm_into,
     par_spmv_into, ThreadPool,
 };
+pub use shard::ShardSet;
 
 use crate::faust::Faust;
 use crate::linalg::Mat;
@@ -229,14 +231,20 @@ impl ApplyEngine {
         with_thread_arena(|a| {
             a.acquire(plan.scratch_len(batch_hint));
         });
-        EngineOp { plan, pool: self.pool.clone(), metrics: self.metrics.clone() }
+        EngineOp {
+            plan,
+            source: Some(Arc::new(faust.clone())),
+            pool: self.pool.clone(),
+            metrics: self.metrics.clone(),
+        }
     }
 
     /// Wrap an already-compiled plan as a servable op on this engine's
     /// pool (no recompilation — for plans cached elsewhere, e.g.
-    /// [`Faust::plan`]).
+    /// [`Faust::plan`]). Carries no source factors, so it is not
+    /// persistable (see [`EngineOp::source`]).
     pub fn op_from_plan(&self, plan: Arc<ApplyPlan>) -> EngineOp {
-        EngineOp { plan, pool: self.pool.clone(), metrics: self.metrics.clone() }
+        EngineOp { plan, source: None, pool: self.pool.clone(), metrics: self.metrics.clone() }
     }
 
     /// Wrap an already-quantized f32 plan and its calibrated bound as a
@@ -256,6 +264,10 @@ impl ApplyEngine {
 /// per-thread arena, so concurrent callers run fully in parallel.
 pub struct EngineOp {
     plan: Arc<ApplyPlan>,
+    /// The factors this plan was compiled from, when the op was built
+    /// through [`ApplyEngine::op`]/[`ApplyEngine::op_batch_hint`] — what
+    /// `Registry::persist_all` snapshots to disk.
+    source: Option<Arc<Faust>>,
     pool: Arc<ThreadPool>,
     metrics: Arc<EngineMetrics>,
 }
@@ -263,6 +275,25 @@ pub struct EngineOp {
 impl EngineOp {
     pub fn plan(&self) -> &ApplyPlan {
         &self.plan
+    }
+
+    /// The learned FAμST behind this op, if it retains one (built from
+    /// factors rather than a bare plan) — the durable-store source.
+    pub fn source(&self) -> Option<&Arc<Faust>> {
+        self.source.as_ref()
+    }
+
+    /// The same compiled plan, served from a different pool — the shard
+    /// placement path ([`ShardSet`]). Every kernel is bitwise
+    /// thread-invariant, so results are identical on any pool; only
+    /// *which threads* do the work changes.
+    pub fn on_pool(&self, pool: Arc<ThreadPool>) -> EngineOp {
+        EngineOp {
+            plan: self.plan.clone(),
+            source: self.source.clone(),
+            pool,
+            metrics: self.metrics.clone(),
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -371,6 +402,18 @@ impl EngineOp {
             metrics: self.metrics.clone(),
         }
     }
+
+    /// Like [`EngineOp::to_f32`] but installing a previously-measured
+    /// bound instead of re-probing — the warm-restart path
+    /// ([`crate::store`] persists the bound alongside the factors).
+    pub fn to_f32_with_stored_bound(&self, bound: F32Bound) -> EngineOpF32 {
+        EngineOpF32 {
+            plan: Arc::new(self.plan.to_f32()),
+            bound,
+            pool: self.pool.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
 }
 
 /// The f32 serving tier of an [`EngineOp`]: a quantized plan plus its
@@ -403,6 +446,18 @@ impl EngineOpF32 {
     /// a generation is registered or swapped in).
     pub fn bound(&self) -> F32Bound {
         self.bound
+    }
+
+    /// The same quantized plan + bound, served from a different pool —
+    /// the f32 twin of [`EngineOp::on_pool`] (bitwise-invariant kernels,
+    /// so shard placement never changes results).
+    pub fn on_pool(&self, pool: Arc<ThreadPool>) -> EngineOpF32 {
+        EngineOpF32 {
+            plan: self.plan.clone(),
+            bound: self.bound,
+            pool,
+            metrics: self.metrics.clone(),
+        }
     }
 
     /// Batch apply with f64 edges: quantize → f32 chain → widen.

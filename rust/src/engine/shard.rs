@@ -1,0 +1,137 @@
+//! [`ShardSet`] — N independent worker pools behind one serving process
+//! (ROADMAP item l).
+//!
+//! One [`ThreadPool`](super::ThreadPool) is the scaling ceiling of a
+//! single coordinator: every operator's kernels contend for the same
+//! workers. A `ShardSet` splits the process into N independent pools;
+//! the coordinator's [`Registry`](crate::coordinator::Registry) pins
+//! each operator to one shard at register time (cost-model balanced by
+//! its plan's [`CostProfile`](super::CostProfile), rebalanced on
+//! retire), the router dispatches each `(operator, class)` batch to its
+//! owning shard's job queue, and idle shards steal whole flush jobs
+//! from busy ones (work donation — see `coordinator`).
+//!
+//! **Why donation can never change results:** every engine kernel is
+//! bitwise thread-invariant — a batch executed on shard k with t
+//! threads equals the solo `ExecCtx` result bit-for-bit. Pinning,
+//! rebalancing, and stealing therefore only move *where* the flops run,
+//! never what they produce; the shard-invariance proptests in the
+//! coordinator assert exactly this across shard counts {1, 2, 4}.
+
+use super::ThreadPool;
+use std::sync::Arc;
+
+/// A fixed set of independent engine pools, one per shard.
+pub struct ShardSet {
+    shards: Vec<Arc<ThreadPool>>,
+}
+
+impl ShardSet {
+    /// Build `n_shards` independent pools of `threads_per_shard` threads
+    /// each (both clamped to ≥ 1).
+    pub fn new(n_shards: usize, threads_per_shard: usize) -> Self {
+        let n = n_shards.max(1);
+        ShardSet {
+            shards: (0..n)
+                .map(|_| Arc::new(ThreadPool::new(threads_per_shard.max(1))))
+                .collect(),
+        }
+    }
+
+    /// A one-shard set wrapping an existing pool — the seed path: a
+    /// single-pool coordinator is exactly a `ShardSet` of one, with no
+    /// operator rebinding and no donation.
+    pub fn single(pool: Arc<ThreadPool>) -> Self {
+        ShardSet { shards: vec![pool] }
+    }
+
+    /// Number of shards (≥ 1).
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Never true — a `ShardSet` always has at least one shard.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Shard `k`'s pool.
+    pub fn pool(&self, k: usize) -> &Arc<ThreadPool> {
+        &self.shards[k]
+    }
+
+    /// Total worker threads across all shards.
+    pub fn threads_total(&self) -> usize {
+        self.shards.iter().map(|p| p.n_threads()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ApplyEngine;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::transforms::hadamard_faust;
+
+    #[test]
+    fn construction_clamps_and_counts() {
+        let s = ShardSet::new(0, 0);
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty());
+        assert_eq!(s.pool(0).n_threads(), 1);
+        let s = ShardSet::new(3, 2);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.threads_total(), 6);
+    }
+
+    #[test]
+    fn single_wraps_an_existing_pool() {
+        let eng = ApplyEngine::with_threads(2);
+        let s = ShardSet::single(eng.pool().clone());
+        assert_eq!(s.len(), 1);
+        assert!(Arc::ptr_eq(s.pool(0), eng.pool()));
+    }
+
+    #[test]
+    fn rebound_op_is_bitwise_identical_on_every_shard() {
+        // The contract the coordinator's shard placement relies on:
+        // the same plan executed on any shard's pool (any thread count)
+        // produces identical bits.
+        let f = hadamard_faust(32);
+        let eng = ApplyEngine::with_threads(1);
+        let op = eng.op(&f);
+        let shards = ShardSet::new(3, 2);
+        let mut rng = Rng::new(0x5A4D);
+        let x = Mat::randn(32, 5, &mut rng);
+        let want = op.apply_batch(&x);
+        for k in 0..shards.len() {
+            let moved = op.on_pool(shards.pool(k).clone());
+            let got = moved.apply_batch(&x);
+            for (g, w) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "shard {k} changed bits");
+            }
+            // Source factors ride along, so a rebound op stays persistable.
+            assert!(moved.source().is_some());
+        }
+    }
+
+    #[test]
+    fn rebound_f32_op_keeps_plan_and_bound() {
+        let f = hadamard_faust(16);
+        let eng = ApplyEngine::with_threads(1);
+        let op32 = eng.op(&f).to_f32();
+        let shards = ShardSet::new(2, 2);
+        let moved = op32.on_pool(shards.pool(1).clone());
+        assert_eq!(
+            moved.bound().declared_rel_err.to_bits(),
+            op32.bound().declared_rel_err.to_bits()
+        );
+        let mut rng = Rng::new(0x5A4E);
+        let x = Mat::randn(16, 3, &mut rng);
+        let (a, b) = (op32.apply_batch(&x), moved.apply_batch(&x));
+        for (g, w) in a.data().iter().zip(b.data()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+}

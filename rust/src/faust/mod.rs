@@ -85,6 +85,16 @@ impl Faust {
             .clone()
     }
 
+    /// Install a previously-measured f32 bound (from a [`crate::store`]
+    /// snapshot) so the first f32 serving request never re-probes:
+    /// quantizes the factors now and seeds the [`Faust::plan_f32`] cache
+    /// with `bound`. No-op if the f32 plan was already built. The probe
+    /// itself is deterministic (fixed seed, thread-invariant kernels), so
+    /// a stale bound cannot arise — this only skips the probe work.
+    pub fn preload_f32_bound(&self, bound: F32Bound) {
+        let _ = self.plan_f32.set((Arc::new(self.plan().to_f32()), bound));
+    }
+
     /// Build from dense factors, sparsifying exact zeros.
     pub fn from_dense_factors(factors: &[Mat], lambda: f64) -> Self {
         Self::new(

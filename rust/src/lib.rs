@@ -37,6 +37,11 @@
 //!   traffic-class-aware adaptive batcher (per-operator, per-QoS-class
 //!   batch widths from each plan's flop/byte [`engine::CostProfile`])
 //!   + worker pool turning planned operators into a matvec service.
+//! - **L3-durability ([`store`])**: versioned, CRC-sealed on-disk
+//!   snapshots of learned operators (factors + λ + f32 bound + epoch);
+//!   `Registry::persist_all` / `load_store` make a whole served fleet
+//!   durable so `serve --store DIR` restarts warm in milliseconds
+//!   instead of re-running PALM.
 //! - **L3-ingress ([`server`])**: std-only TCP front end over the
 //!   coordinator — length-prefixed binary wire protocol
 //!   ([`server::wire`]), admission control shedding load *before* the
@@ -83,5 +88,6 @@ pub mod runtime;
 pub mod server;
 pub mod solvers;
 pub mod sparse;
+pub mod store;
 pub mod testutil;
 pub mod transforms;

@@ -358,6 +358,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch: usize = args.get("batch", 32);
     let workers: usize = args.get("workers", 2);
     let threads: usize = args.get("threads", 2);
+    let shards: usize = args.get("shards", 1);
+    let store: Option<std::path::PathBuf> = args.get_str("store").map(Into::into);
     let adaptive = args.flag("adaptive-batch");
     // `--precision f64|f32|auto[:EPS]` picks the serving tier; the
     // default keeps the bitwise-f64 contract of every earlier PR.
@@ -370,7 +372,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let hf = hadamard_faust(n);
     println!(
         "serving {n}x{n} operator: dense + FAuST (RCG={:.1}), engine threads={threads}, \
-         batching={}, precision={precision}",
+         shards={shards}, batching={}, precision={precision}",
         hf.rcg(),
         if adaptive { "adaptive (plan-aware)" } else { "fixed" }
     );
@@ -394,9 +396,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity: 4096,
         adaptive: if adaptive { Some(AdaptiveBatchConfig::default()) } else { None },
         precision,
+        n_shards: shards,
     };
     let coord = Coordinator::start(ops, cfg);
     let registry = coord.registry();
+    // `--store DIR` makes the fleet durable: a directory that already
+    // holds snapshots warm-restores them (hot-swapping over the cold
+    // seeds, zero re-factorization); an empty one gets an initial cold
+    // snapshot so the *next* start is warm.
+    if let Some(dir) = &store {
+        let has_snapshots = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .any(|e| e.path().extension().is_some_and(|x| x == faust::store::EXTENSION))
+            })
+            .unwrap_or(false);
+        let t0 = Instant::now();
+        if has_snapshots {
+            let restore = registry
+                .load_store(dir, |_, f| {
+                    Arc::new(engine.op_batch_hint(f, batch)) as Arc<dyn BatchOp>
+                })
+                .map_err(|e| err(format!("load store {}: {e}", dir.display())))?;
+            println!(
+                "store: warm-restored {} operator(s) from {} in {:.2?} (zero PALM)",
+                restore.loaded.len(),
+                dir.display(),
+                t0.elapsed()
+            );
+            for (path, e) in &restore.corrupt {
+                println!("store: skipped {}: {e}", path.display());
+            }
+        } else {
+            let report = registry
+                .persist_all(dir)
+                .map_err(|e| err(format!("snapshot to {}: {e}", dir.display())))?;
+            println!(
+                "store: cold start — snapshotted {} operator(s) to {} in {:.2?} \
+                 ({} not persistable)",
+                report.persisted.len(),
+                dir.display(),
+                t0.elapsed(),
+                report.skipped.len()
+            );
+        }
+    }
     if adaptive {
         for name in registry.names() {
             if let Some(t) = registry.batch_limit(&name) {
@@ -491,7 +535,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(addr) => {
             let server = Server::start(
                 coord.client(),
-                ServerConfig { addr: addr.to_string(), ..ServerConfig::default() },
+                ServerConfig {
+                    addr: addr.to_string(),
+                    store_dir: store.clone(),
+                    ..ServerConfig::default()
+                },
             )
             .map_err(|e| err(format!("bind {addr}: {e}")))?;
             println!("ingress listening on {}", server.local_addr());
@@ -557,6 +605,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(server) = ingress {
         server.shutdown();
+    }
+    // Final snapshot so the next `serve --store` start is warm; the
+    // ingress shutdown above already wrote one when --listen was active,
+    // and both writes are atomic under the same per-operator names.
+    if let Some(dir) = &store {
+        match registry.persist_all(dir) {
+            Ok(r) => println!(
+                "store: final snapshot — {} persisted, {} skipped",
+                r.persisted.len(),
+                r.skipped.len()
+            ),
+            Err(e) => println!("store: final snapshot to {} failed: {e}", dir.display()),
+        }
     }
     let precision_lines: Vec<String> = registry
         .precision_report()

@@ -40,6 +40,18 @@ use crate::engine::{ExecCtx, FleetCtx};
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use crate::prox::Constraint;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of PALM outer iterations (solo + fleet drivers).
+static ITERATIONS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Total PALM outer iterations this process has ever run, across every
+/// solo and fleet factorization. The crash-recovery tests use the delta
+/// of this counter as the zero-re-factorization witness: a warm restart
+/// from a persisted store ([`crate::store`]) must leave it unchanged.
+pub fn iterations_total() -> u64 {
+    ITERATIONS_TOTAL.load(Ordering::Relaxed)
+}
 
 /// Configuration for one palm4MSA run.
 #[derive(Clone, Debug)]
@@ -353,6 +365,7 @@ pub fn palm4msa_with_ctx(
             st.lambda = a.dot(&a_hat) / denom;
         }
         iters_run += 1;
+        ITERATIONS_TOTAL.fetch_add(1, Ordering::Relaxed);
         let obj = st.objective_with(a, &a_hat);
         product = Some(a_hat);
         trace.push(obj);
@@ -853,6 +866,7 @@ pub fn palm4msa_fleet_with_ctx(
                 let m = &mut members[i];
                 m.st.lambda = lambda;
                 m.iters_run += 1;
+                ITERATIONS_TOTAL.fetch_add(1, Ordering::Relaxed);
                 m.trace.push(obj);
                 m.product = Some(a_hat);
                 let mut stop = m.iters_run >= m.cfg.n_iter;

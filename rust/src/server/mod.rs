@@ -59,8 +59,9 @@ pub mod wire;
 pub use admission::{try_admit, Admission, AdmissionConfig, Overloaded, Permit};
 pub use client::{ServeConn, ServeReceiver, ServeSender};
 
-use crate::coordinator::Client;
+use crate::coordinator::{Client, Registry};
 use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -81,6 +82,13 @@ pub struct ServerConfig {
     /// Socket read timeout — how often an idle reader polls the stop
     /// flag; latency of graceful shutdown, not of requests.
     pub read_timeout: Duration,
+    /// Durable operator store ([`crate::store`]). When set,
+    /// [`Server::shutdown`] writes a final
+    /// [`Registry::persist_all`] snapshot *after* the drain, so the
+    /// learned fleet survives the process — a restart with
+    /// `Registry::load_store` comes back warm. `None` (the default)
+    /// keeps the pre-durability behavior.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +98,7 @@ impl Default for ServerConfig {
             admission: AdmissionConfig::default(),
             conn_queue: 256,
             read_timeout: Duration::from_millis(50),
+            store_dir: None,
         }
     }
 }
@@ -99,6 +108,10 @@ pub struct Server {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    /// Kept for the final shutdown snapshot (the accept loop owns the
+    /// `Client`; the registry must outlive it to persist after drain).
+    registry: Arc<Registry>,
+    store_dir: Option<PathBuf>,
 }
 
 impl Server {
@@ -112,11 +125,13 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let admission = Arc::new(Admission::new(cfg.admission.clone(), client.metrics_handle()));
         let a_stop = stop.clone();
+        let registry = client.registry().clone();
+        let store_dir = cfg.store_dir.clone();
         let accept = std::thread::Builder::new()
             .name("faust-accept".into())
             .spawn(move || accept_loop(listener, client, admission, cfg, a_stop))
             .expect("spawn accept loop");
-        Ok(Server { local_addr, stop, accept: Some(accept) })
+        Ok(Server { local_addr, stop, accept: Some(accept), registry, store_dir })
     }
 
     /// The bound address (resolves the ephemeral port of `addr:0`).
@@ -126,11 +141,23 @@ impl Server {
 
     /// Graceful shutdown: stop accepting, signal every connection
     /// reader, drain in-flight responses to their clients, join all
-    /// threads.
+    /// threads — then, if a [`ServerConfig::store_dir`] was configured,
+    /// write a final registry snapshot. The snapshot runs *after* the
+    /// drain, so it captures every swap the served traffic observed
+    /// (the pre-durability server drained responses but dropped all
+    /// registry state on the floor).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Release);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
+        }
+        if let Some(dir) = &self.store_dir {
+            if let Err(e) = self.registry.persist_all(dir) {
+                // Shutdown must stay infallible for callers; a failed
+                // final snapshot is loud but non-fatal (the previous
+                // snapshot, if any, stays intact — saves are atomic).
+                eprintln!("faust-server: final snapshot to {} failed: {e}", dir.display());
+            }
         }
     }
 }
@@ -322,6 +349,63 @@ mod tests {
         }
         server.shutdown();
         coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_writes_a_loadable_complete_final_snapshot() {
+        // Regression: the pre-durability shutdown drained responses but
+        // dropped every learned operator. With a store_dir, the final
+        // snapshot must be present, loadable, and cover the whole
+        // persistable fleet — including a generation swapped in
+        // mid-serve.
+        use crate::coordinator::Registry;
+        use crate::engine::ApplyEngine;
+        use crate::transforms::hadamard_faust;
+        let dir = std::env::temp_dir()
+            .join(format!("faust_server_snap_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let n = 16;
+        let engine = ApplyEngine::with_threads(1);
+        let coord = Coordinator::start(
+            vec![
+                (
+                    "h".to_string(),
+                    Arc::new(engine.op(&hadamard_faust(n))) as Arc<dyn BatchOp>,
+                ),
+                (
+                    "g".to_string(),
+                    Arc::new(engine.op(&hadamard_faust(8))) as Arc<dyn BatchOp>,
+                ),
+            ],
+            CoordinatorConfig::default(),
+        );
+        let cfg = ServerConfig { store_dir: Some(dir.clone()), ..ServerConfig::default() };
+        let server = Server::start(coord.client(), cfg).unwrap();
+        let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+        conn.apply("h", QosClass::Standard, vec![1.0; n]).unwrap();
+        // A mid-serve swap must land in the final snapshot's epochs.
+        let swapped_epoch = coord
+            .registry()
+            .swap_epoch(
+                "h",
+                Arc::new(engine.op(&hadamard_faust(n))) as Arc<dyn BatchOp>,
+            )
+            .unwrap();
+        server.shutdown();
+        // The snapshot is loadable and complete: both operators, and
+        // "h" at (or past) its swapped epoch.
+        let restored = Registry::new(None);
+        let report = restored
+            .load_store(&dir, |_, f| Arc::new(engine.op(f)) as Arc<dyn BatchOp>)
+            .unwrap();
+        assert_eq!(report.loaded, vec!["g".to_string(), "h".to_string()]);
+        assert!(report.corrupt.is_empty() && report.rejected.is_empty());
+        assert_eq!(restored.get("h").unwrap().rows(), n);
+        assert_eq!(restored.get("g").unwrap().rows(), 8);
+        assert!(restored.epoch() >= swapped_epoch);
+        let snap = coord.shutdown();
+        assert_eq!(snap.store_persisted, 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

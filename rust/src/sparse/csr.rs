@@ -89,6 +89,43 @@ impl<S: Scalar> Csr<S> {
     pub fn flops_per_matvec(&self) -> usize {
         2 * self.nnz()
     }
+
+    /// Reassemble a CSR from its raw arrays **bitwise-verbatim** — the
+    /// [`store`](crate::store) load path. Unlike [`Csr::from_coo`] this
+    /// never re-sorts or merges, so a persisted factor round-trips with
+    /// identical bits; in exchange every structural invariant is checked
+    /// (a corrupt file must surface as `Err`, never as UB or a panic in
+    /// the apply kernels):
+    /// `indptr.len() == rows + 1`, `indptr[0] == 0`, `indptr`
+    /// monotonically non-decreasing, `indptr[rows] == nnz`, and every
+    /// column index `< cols`.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<u32>,
+        indices: Vec<u32>,
+        vals: Vec<S>,
+    ) -> Result<Csr<S>, String> {
+        if indptr.len() != rows + 1 {
+            return Err(format!("indptr len {} != rows+1 {}", indptr.len(), rows + 1));
+        }
+        if indptr[0] != 0 {
+            return Err(format!("indptr[0] = {} != 0", indptr[0]));
+        }
+        if indptr.windows(2).any(|w| w[1] < w[0]) {
+            return Err("indptr not monotonically non-decreasing".to_string());
+        }
+        if indices.len() != vals.len() {
+            return Err(format!("indices len {} != vals len {}", indices.len(), vals.len()));
+        }
+        if indptr[rows] as usize != vals.len() {
+            return Err(format!("indptr[rows] = {} != nnz {}", indptr[rows], vals.len()));
+        }
+        if let Some(&bad) = indices.iter().find(|&&c| c as usize >= cols) {
+            return Err(format!("column index {bad} out of range (cols = {cols})"));
+        }
+        Ok(Csr { rows, cols, indptr, indices, vals })
+    }
 }
 
 impl Csr {

@@ -1,0 +1,750 @@
+//! Durable operator store: versioned, checksummed on-disk snapshots of
+//! learned FAμST operators (ROADMAP item l).
+//!
+//! A factorization is expensive to *learn* (PALM/hierarchical runs) and
+//! cheap to *apply* — so the learned factors are the asset worth keeping.
+//! This module serializes a [`Faust`] (CSR factors + λ) together with its
+//! registry identity (name, epoch) and the probe-calibrated
+//! [`F32Bound`] from the mixed-precision tier, so a restarted
+//! `serve --store DIR` is warm in milliseconds instead of re-running
+//! PALM. [`crate::coordinator::Registry::persist_all`] and
+//! [`crate::coordinator::Registry::load_store`] drive it fleet-wide.
+//!
+//! # On-disk format (`.fstore`, version 1)
+//!
+//! One operator per file, all integers little-endian, in the spirit of
+//! the wire protocol ([`crate::server::wire`]): length-prefixed,
+//! magic-tagged, versioned — and, because files (unlike sockets) can be
+//! torn by a crash mid-write, additionally CRC-sealed:
+//!
+//! ```text
+//! file  := u32 body_len | body | u32 crc32(body)      (CRC-32/IEEE)
+//! body  := u16 magic (0xFA5D)
+//!        | u8  version (1)
+//!        | u8  flags (bit0: f32 bound present)
+//!        | u8  name_len | name_len × u8 name          (see below)
+//!        | u64 epoch                                  (registry epoch at persist)
+//!        | f64 λ                                      (bit pattern)
+//!        | u32 n_factors (≥ 1)
+//!        | [ f64 measured_rel_err | f64 declared_rel_err ]   (iff flags bit0)
+//!        | n_factors × factor                         (rightmost first: S_1 first)
+//! factor := u32 rows | u32 cols | u32 nnz
+//!        | (rows+1) × u32 indptr | nnz × u32 indices | nnz × f64 vals
+//! ```
+//!
+//! Operator names double as file stems (`<name>.fstore`), so they are
+//! restricted to 1–64 bytes of `[A-Za-z0-9._-]` not starting with a dot
+//! — anything else is a typed [`StoreError::BadName`], never a path
+//! traversal.
+//!
+//! # Integrity contract
+//!
+//! - **Bitwise round-trip.** Factors are written verbatim from the CSR
+//!   arrays and reassembled with [`Csr::from_raw_parts`] (no re-sort, no
+//!   zero-dropping), so `persist → load` preserves every value bit and
+//!   therefore the compiled plan's [`CostProfile`] and all downstream
+//!   results — proptested in this module via `faust_fingerprint`.
+//! - **Torn and corrupt files are typed errors, never panics and never
+//!   silently wrong data.** The length prefix is checked against the
+//!   actual file size, the CRC seals the body (every single-bit flip is
+//!   caught), and every structural invariant that the checksum cannot
+//!   express (indptr monotonicity, column bounds, factor chain
+//!   dimensions) is re-validated on load. [`load_dir`] skips bad files
+//!   with a [`StoreError`] per file and loads the rest.
+//! - **Atomic replace.** [`save_op`] writes to a dotfile in the same
+//!   directory and `rename`s over the target, so a crash mid-persist
+//!   leaves either the old snapshot or the new one, never a torn file
+//!   under the live name (the tmp dotfile is ignored by [`load_dir`]).
+
+use crate::engine::F32Bound;
+use crate::faust::Faust;
+use crate::sparse::Csr;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// File magic: `0xFA5D` ("FAuST Durable") — deliberately distinct from
+/// the wire protocol's `0xFA57` so a store file fed to a socket (or vice
+/// versa) fails loudly on the first two bytes.
+pub const MAGIC: u16 = 0xFA5D;
+/// Current format version.
+pub const VERSION: u8 = 1;
+/// Oldest version this build still reads.
+pub const MIN_VERSION: u8 = 1;
+/// Hard cap on `body_len` (checked before any allocation, like the wire
+/// protocol's `MAX_FRAME`): 256 MiB comfortably holds MEG-scale fleets
+/// while bounding what a corrupt length prefix can make us allocate.
+pub const MAX_BODY: usize = 256 << 20;
+/// Extension of live snapshot files in a store directory.
+pub const EXTENSION: &str = "fstore";
+
+const FLAG_F32_BOUND: u8 = 1;
+const MAX_NAME: usize = 64;
+const MAX_FACTORS: u32 = 65_536;
+
+/// Everything the registry needs to resurrect one served operator.
+#[derive(Clone, Debug)]
+pub struct StoredOp {
+    /// Registry name (also the file stem).
+    pub name: String,
+    /// Registry epoch at persist time — `load_store` advances the
+    /// restored registry's epoch counter past the max of these, so
+    /// post-restart generations always sort after the snapshot.
+    pub epoch: u64,
+    /// The operator itself, bitwise identical to the persisted one.
+    pub faust: Faust,
+    /// The measured f32 quantization bound, if the operator had an f32
+    /// serving generation when persisted (reinstalled on load so the
+    /// warm server never re-probes).
+    pub f32_bound: Option<F32Bound>,
+}
+
+/// Typed failure taxonomy for the store. Everything a torn, corrupt, or
+/// hostile file can do surfaces here — never a panic, never silent
+/// wrong data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoreError {
+    /// Filesystem-level failure (open/read/write/rename), with context.
+    Io(std::io::ErrorKind, String),
+    /// File ends before the declared content does (torn write).
+    Truncated { need: usize, have: usize },
+    /// Declared body length exceeds [`MAX_BODY`] (corrupt prefix or a
+    /// file from a much bigger deployment — refused before allocating).
+    Oversized { len: usize, cap: usize },
+    /// File is longer than `4 + body_len + 4` (trailing garbage —
+    /// a snapshot never has any).
+    TrailingGarbage { declared: usize, actual: usize },
+    /// First two body bytes are not [`MAGIC`].
+    BadMagic(u16),
+    /// Version outside `[MIN_VERSION, VERSION]`.
+    BadVersion(u8),
+    /// CRC-32 seal does not match the body (bit rot / torn write that
+    /// kept the length intact).
+    ChecksumMismatch { want: u32, got: u32 },
+    /// Operator name is empty, too long, or not `[A-Za-z0-9._-]`
+    /// (or starts with `.` — reserved for tmp files).
+    BadName(String),
+    /// Body passed the checksum but violates a structural invariant
+    /// (encoder bug or a deliberately crafted file) — e.g. indptr
+    /// non-monotone, column index out of range, factor chain dimension
+    /// mismatch.
+    Malformed(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(kind, ctx) => write!(f, "store io error ({kind:?}): {ctx}"),
+            StoreError::Truncated { need, have } => {
+                write!(f, "store file truncated: need {need} bytes, have {have}")
+            }
+            StoreError::Oversized { len, cap } => {
+                write!(f, "store body length {len} exceeds cap {cap}")
+            }
+            StoreError::TrailingGarbage { declared, actual } => write!(
+                f,
+                "store file has trailing garbage: declared {declared} bytes, file has {actual}"
+            ),
+            StoreError::BadMagic(m) => write!(f, "bad store magic {m:#06x}"),
+            StoreError::BadVersion(v) => write!(
+                f,
+                "unsupported store version {v} (this build reads {MIN_VERSION}..={VERSION})"
+            ),
+            StoreError::ChecksumMismatch { want, got } => {
+                write!(f, "store checksum mismatch: sealed {want:#010x}, computed {got:#010x}")
+            }
+            StoreError::BadName(n) => write!(f, "invalid operator name {n:?}"),
+            StoreError::Malformed(why) => write!(f, "malformed store body: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+fn io_err(ctx: &str, e: std::io::Error) -> StoreError {
+    StoreError::Io(e.kind(), format!("{ctx}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected 0xEDB88320) — std-only, table built at
+// compile time. Detects all single-bit and burst-≤32 errors, which is
+// exactly the torn-write/bit-rot class the bit-flip proptest exercises.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32/IEEE of `bytes` (the seal over the body section).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Encode
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Is `name` usable as both a registry key and a file stem?
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= MAX_NAME
+        && !name.starts_with('.')
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-')
+}
+
+/// Serialize one operator to the full file image (length prefix + body +
+/// CRC seal). Pure function of the input — the round-trip proptests run
+/// against this and [`decode_op`] without touching a filesystem.
+pub fn encode_op(op: &StoredOp) -> Result<Vec<u8>, StoreError> {
+    if !valid_name(&op.name) {
+        return Err(StoreError::BadName(op.name.clone()));
+    }
+    let n_factors = op.faust.n_factors();
+    if n_factors as u64 > MAX_FACTORS as u64 {
+        return Err(StoreError::Malformed(format!("{n_factors} factors exceeds cap")));
+    }
+    let mut body = Vec::new();
+    put_u16(&mut body, MAGIC);
+    body.push(VERSION);
+    body.push(if op.f32_bound.is_some() { FLAG_F32_BOUND } else { 0 });
+    body.push(op.name.len() as u8);
+    body.extend_from_slice(op.name.as_bytes());
+    put_u64(&mut body, op.epoch);
+    put_f64(&mut body, op.faust.lambda());
+    put_u32(&mut body, n_factors as u32);
+    if let Some(b) = op.f32_bound {
+        put_f64(&mut body, b.measured_rel_err);
+        put_f64(&mut body, b.declared_rel_err);
+    }
+    for fac in op.faust.factors() {
+        let (rows, cols, nnz) = (fac.rows(), fac.cols(), fac.nnz());
+        if rows > u32::MAX as usize || cols > u32::MAX as usize || nnz > u32::MAX as usize {
+            return Err(StoreError::Malformed(format!(
+                "factor {rows}×{cols} (nnz {nnz}) exceeds u32 index space"
+            )));
+        }
+        put_u32(&mut body, rows as u32);
+        put_u32(&mut body, cols as u32);
+        put_u32(&mut body, nnz as u32);
+        for &p in &fac.indptr {
+            put_u32(&mut body, p);
+        }
+        for &j in &fac.indices {
+            put_u32(&mut body, j);
+        }
+        for &v in &fac.vals {
+            put_f64(&mut body, v);
+        }
+    }
+    if body.len() > MAX_BODY {
+        return Err(StoreError::Oversized { len: body.len(), cap: MAX_BODY });
+    }
+    let mut out = Vec::with_capacity(body.len() + 8);
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    put_u32(&mut out, crc32(&body));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+
+/// Bounds-checked little-endian cursor over a CRC-validated body. A read
+/// past the end means the (checksum-correct) body is internally
+/// inconsistent, so overruns surface as [`StoreError::Malformed`].
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], StoreError> {
+        let end = self
+            .off
+            .checked_add(n)
+            .ok_or_else(|| StoreError::Malformed(format!("{what}: length overflow")))?;
+        if end > self.b.len() {
+            return Err(StoreError::Malformed(format!(
+                "{what}: body overrun at offset {} (need {n}, have {})",
+                self.off,
+                self.b.len() - self.off
+            )));
+        }
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8, StoreError> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &str) -> Result<u16, StoreError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &str) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64, StoreError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+    fn u32_vec(&mut self, n: usize, what: &str) -> Result<Vec<u32>, StoreError> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            StoreError::Malformed(format!("{what}: count overflow"))
+        })?, what)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn f64_vec(&mut self, n: usize, what: &str) -> Result<Vec<f64>, StoreError> {
+        let raw = self.take(n.checked_mul(8).ok_or_else(|| {
+            StoreError::Malformed(format!("{what}: count overflow"))
+        })?, what)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// Parse a full file image produced by [`encode_op`]. Every corruption
+/// mode returns a typed [`StoreError`]; this function never panics on
+/// any input (proptested with truncation, bit-flip, and random-bytes
+/// corpora below).
+pub fn decode_op(bytes: &[u8]) -> Result<StoredOp, StoreError> {
+    if bytes.len() < 4 {
+        return Err(StoreError::Truncated { need: 4, have: bytes.len() });
+    }
+    let body_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    if body_len > MAX_BODY {
+        return Err(StoreError::Oversized { len: body_len, cap: MAX_BODY });
+    }
+    let total = 4 + body_len + 4;
+    if bytes.len() < total {
+        return Err(StoreError::Truncated { need: total, have: bytes.len() });
+    }
+    if bytes.len() > total {
+        return Err(StoreError::TrailingGarbage { declared: total, actual: bytes.len() });
+    }
+    let body = &bytes[4..4 + body_len];
+    let want = u32::from_le_bytes(bytes[4 + body_len..].try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        return Err(StoreError::ChecksumMismatch { want, got });
+    }
+
+    let mut c = Cur { b: body, off: 0 };
+    let magic = c.u16("magic")?;
+    if magic != MAGIC {
+        return Err(StoreError::BadMagic(magic));
+    }
+    let version = c.u8("version")?;
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(StoreError::BadVersion(version));
+    }
+    let flags = c.u8("flags")?;
+    if flags & !FLAG_F32_BOUND != 0 {
+        return Err(StoreError::Malformed(format!("unknown flag bits {flags:#04x}")));
+    }
+    let name_len = c.u8("name_len")? as usize;
+    let name_raw = c.take(name_len, "name")?;
+    let name = std::str::from_utf8(name_raw)
+        .map_err(|_| StoreError::BadName(format!("{name_raw:?}")))?
+        .to_string();
+    if !valid_name(&name) {
+        return Err(StoreError::BadName(name));
+    }
+    let epoch = c.u64("epoch")?;
+    let lambda = c.f64("lambda")?;
+    let n_factors = c.u32("n_factors")?;
+    if n_factors == 0 || n_factors > MAX_FACTORS {
+        return Err(StoreError::Malformed(format!("factor count {n_factors} out of range")));
+    }
+    let f32_bound = if flags & FLAG_F32_BOUND != 0 {
+        Some(F32Bound {
+            measured_rel_err: c.f64("measured_rel_err")?,
+            declared_rel_err: c.f64("declared_rel_err")?,
+        })
+    } else {
+        None
+    };
+    let mut factors: Vec<std::sync::Arc<Csr>> = Vec::with_capacity(n_factors as usize);
+    for k in 0..n_factors {
+        let rows = c.u32("rows")? as usize;
+        let cols = c.u32("cols")? as usize;
+        let nnz = c.u32("nnz")? as usize;
+        let indptr = c.u32_vec(rows + 1, "indptr")?;
+        let indices = c.u32_vec(nnz, "indices")?;
+        let vals = c.f64_vec(nnz, "vals")?;
+        // from_raw_parts re-checks every CSR invariant (monotone indptr,
+        // in-range columns, nnz accounting) — a checksum-valid but
+        // crafted body still cannot reach the apply kernels malformed.
+        let fac = Csr::from_raw_parts(rows, cols, indptr, indices, vals)
+            .map_err(|e| StoreError::Malformed(format!("factor {k}: {e}")))?;
+        if let Some(prev) = factors.last() {
+            if fac.cols() != prev.rows() {
+                return Err(StoreError::Malformed(format!(
+                    "factor chain mismatch at {k}: {}×{} after output dim {}",
+                    fac.rows(),
+                    fac.cols(),
+                    prev.rows()
+                )));
+            }
+        }
+        factors.push(std::sync::Arc::new(fac));
+    }
+    if c.off != body.len() {
+        return Err(StoreError::Malformed(format!(
+            "{} unread bytes after last factor",
+            body.len() - c.off
+        )));
+    }
+    Ok(StoredOp { name, epoch, faust: Faust::from_shared(factors, lambda), f32_bound })
+}
+
+// ---------------------------------------------------------------------------
+// Filesystem layer
+
+/// Path of `name`'s live snapshot inside `dir`.
+pub fn op_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.{EXTENSION}"))
+}
+
+/// Persist one operator into `dir` atomically: encode, write to a
+/// same-directory dotfile, fsync, rename over `<name>.fstore`. Returns
+/// the final path.
+pub fn save_op(dir: &Path, op: &StoredOp) -> Result<PathBuf, StoreError> {
+    let bytes = encode_op(op)?;
+    std::fs::create_dir_all(dir).map_err(|e| io_err("create store dir", e))?;
+    let tmp = dir.join(format!(".{}.{EXTENSION}.tmp", op.name));
+    let path = op_path(dir, &op.name);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp).map_err(|e| io_err("create tmp snapshot", e))?;
+        f.write_all(&bytes).map_err(|e| io_err("write snapshot", e))?;
+        f.sync_all().map_err(|e| io_err("sync snapshot", e))?;
+    }
+    std::fs::rename(&tmp, &path).map_err(|e| io_err("publish snapshot", e))?;
+    Ok(path)
+}
+
+/// Load one snapshot file (size-capped before reading, then
+/// [`decode_op`]).
+pub fn load_op(path: &Path) -> Result<StoredOp, StoreError> {
+    let meta = std::fs::metadata(path).map_err(|e| io_err("stat snapshot", e))?;
+    if meta.len() > (MAX_BODY + 8) as u64 {
+        return Err(StoreError::Oversized { len: meta.len() as usize, cap: MAX_BODY });
+    }
+    let bytes = std::fs::read(path).map_err(|e| io_err("read snapshot", e))?;
+    decode_op(&bytes)
+}
+
+/// Result of scanning a store directory: everything loadable, plus a
+/// typed reason for every file that was not.
+#[derive(Debug, Default)]
+pub struct LoadedStore {
+    /// Successfully decoded operators, sorted by name.
+    pub ops: Vec<StoredOp>,
+    /// Files that failed to load and why (torn writes, bit rot, foreign
+    /// files) — reported, skipped, never fatal to the rest of the fleet.
+    pub skipped: Vec<(PathBuf, StoreError)>,
+}
+
+/// Scan `dir` for `*.fstore` snapshots. Corrupt files land in
+/// [`LoadedStore::skipped`]; only a missing/unreadable directory is an
+/// `Err`. An existing-but-empty directory yields an empty `ops` (the
+/// cold-start signal for `serve --store`).
+pub fn load_dir(dir: &Path) -> Result<LoadedStore, StoreError> {
+    let rd = std::fs::read_dir(dir).map_err(|e| io_err("open store dir", e))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for ent in rd {
+        let ent = ent.map_err(|e| io_err("scan store dir", e))?;
+        let p = ent.path();
+        let hidden = match p.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.starts_with('.'),
+            None => true,
+        };
+        if !hidden && p.extension().and_then(|e| e.to_str()) == Some(EXTENSION) {
+            paths.push(p);
+        }
+    }
+    paths.sort();
+    let mut out = LoadedStore::default();
+    for p in paths {
+        match load_op(&p) {
+            Ok(op) => out.ops.push(op),
+            Err(e) => out.skipped.push((p, e)),
+        }
+    }
+    out.ops.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::testutil::{check, ensure, faust_fingerprint, gen, PropConfig};
+
+    /// Random valid fleet member: 1–4 factors with random chain dims,
+    /// random sparsity (possibly fully dense, possibly a zero factor),
+    /// random λ (occasionally negative or subnormal-ish tiny).
+    fn arb_stored_op(rng: &mut Rng, tag: usize) -> StoredOp {
+        let j = 1 + rng.below(4);
+        let mut dims: Vec<usize> = (0..=j).map(|_| 1 + rng.below(12)).collect();
+        if rng.below(4) == 0 {
+            dims[0] = dims[j]; // occasionally square end to end
+        }
+        let mut factors = Vec::with_capacity(j);
+        for k in 0..j {
+            // chain: factors[k] maps dims[k] -> dims[k+1]
+            let (r, c) = (dims[k + 1], dims[k]);
+            let nnz = rng.below(r * c + 1);
+            let m = gen::sparse_mat(rng, r, c, nnz);
+            factors.push(Csr::from_dense(&m, 0.0));
+        }
+        let lambda = match rng.below(8) {
+            0 => -rng.gauss() * 1e3,
+            1 => rng.gauss() * 1e-12,
+            _ => 1.0 + rng.uniform(),
+        };
+        let f32_bound = if rng.below(2) == 0 {
+            Some(F32Bound {
+                measured_rel_err: rng.uniform() * 1e-6,
+                declared_rel_err: rng.uniform() * 1e-4,
+            })
+        } else {
+            None
+        };
+        StoredOp {
+            name: format!("op{tag}_{}", rng.below(1000)),
+            epoch: rng.below(1 << 20) as u64,
+            faust: Faust::new(factors, lambda),
+            f32_bound,
+        }
+    }
+
+    fn canonical_op() -> StoredOp {
+        let mut rng = Rng::new(0x57_0BE);
+        let s1 = gen::sparse_mat(&mut rng, 4, 6, 9);
+        let s2 = gen::sparse_mat(&mut rng, 5, 4, 8);
+        StoredOp {
+            name: "canon".into(),
+            epoch: 42,
+            faust: Faust::new(vec![Csr::from_dense(&s1, 0.0), Csr::from_dense(&s2, 0.0)], 1.25),
+            f32_bound: Some(F32Bound { measured_rel_err: 3e-8, declared_rel_err: 2e-6 }),
+        }
+    }
+
+    fn tmp_store_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("faust_store_{}_{tag}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn round_trip_is_bitwise_and_profile_preserving() {
+        check("store round-trip identity", &PropConfig::default(), |rng| {
+            let op = arb_stored_op(rng, 0);
+            let bytes = encode_op(&op).map_err(|e| e.to_string())?;
+            let back = decode_op(&bytes).map_err(|e| e.to_string())?;
+            ensure(back.name == op.name, "name changed")?;
+            ensure(back.epoch == op.epoch, "epoch changed")?;
+            ensure(
+                faust_fingerprint(&back.faust) == faust_fingerprint(&op.faust),
+                "factor/λ bits changed across persist→load",
+            )?;
+            // Same bits ⇒ same compiled plan cost profile. This is the
+            // contract that makes shard placement and adaptive batching
+            // identical before and after a restart.
+            ensure(
+                back.faust.plan().profile() == op.faust.plan().profile(),
+                "CostProfile changed across persist→load",
+            )?;
+            match (op.f32_bound, back.f32_bound) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => ensure(
+                    a.measured_rel_err.to_bits() == b.measured_rel_err.to_bits()
+                        && a.declared_rel_err.to_bits() == b.declared_rel_err.to_bits(),
+                    "f32 bound bits changed",
+                ),
+                _ => Err("f32 bound presence flipped".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let bytes = encode_op(&canonical_op()).unwrap();
+        for cut in 0..bytes.len() {
+            let r = decode_op(&bytes[..cut]);
+            assert!(r.is_err(), "prefix of {cut}/{} bytes decoded Ok", bytes.len());
+        }
+        // And one past the end: appended garbage is typed too.
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(matches!(decode_op(&longer), Err(StoreError::TrailingGarbage { .. })));
+        assert!(decode_op(&bytes).is_ok());
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_a_typed_error() {
+        let bytes = encode_op(&canonical_op()).unwrap();
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 1 << (i % 8);
+            let r = decode_op(&m);
+            assert!(
+                r.is_err(),
+                "bit flip at byte {i} (of {}) decoded Ok — silent corruption",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn random_byte_soup_never_panics() {
+        check(
+            "store decode total on garbage",
+            &PropConfig { cases: 256, base_seed: 0x50FA }, // cheap cases, go wide
+            |rng| {
+                let n = rng.below(200);
+                let soup: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                // Typed Err expected; Ok would be a miracle but is not wrong.
+                let _ = decode_op(&soup);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn checksum_valid_but_inconsistent_body_is_malformed_not_a_panic() {
+        // Rebuild the canonical op's file with a corrupted factor header
+        // and a RE-SEALED checksum: the CRC is fine, the structure lies.
+        let op = canonical_op();
+        let bytes = encode_op(&op).unwrap();
+        // body offset of first factor's `cols` field:
+        // 4 (len prefix) + 2 magic + 1 ver + 1 flags + 1 name_len + name
+        // + 8 epoch + 8 λ + 4 n_factors + 16 bound + 4 rows
+        let off = 4 + 2 + 1 + 1 + 1 + op.name.len() + 8 + 8 + 4 + 16 + 4;
+        let mut m = bytes.clone();
+        m[off..off + 4].copy_from_slice(&999u32.to_le_bytes()); // cols := 999
+        let body_len = m.len() - 8;
+        let seal = crc32(&m[4..4 + body_len]);
+        let at = 4 + body_len;
+        m[at..at + 4].copy_from_slice(&seal.to_le_bytes());
+        match decode_op(&m) {
+            Err(StoreError::Malformed(_)) => {}
+            other => panic!("crafted body gave {other:?}, wanted Malformed"),
+        }
+    }
+
+    #[test]
+    fn bad_names_are_rejected_on_both_sides() {
+        let long = "x".repeat(65);
+        for bad in ["", "a/b", "../up", ".hidden", long.as_str(), "sp ace"] {
+            let mut op = canonical_op();
+            op.name = bad.to_string();
+            assert!(
+                matches!(encode_op(&op), Err(StoreError::BadName(_))),
+                "encode accepted name {bad:?}"
+            );
+        }
+        assert!(valid_name("ok-name_1.2"));
+    }
+
+    #[test]
+    fn save_load_dir_skips_corrupt_files_and_loads_the_rest() {
+        let dir = tmp_store_dir("dirscan");
+        let mut a = canonical_op();
+        a.name = "alpha".into();
+        let mut b = canonical_op();
+        b.name = "beta".into();
+        b.f32_bound = None;
+        save_op(&dir, &a).unwrap();
+        let b_path = save_op(&dir, &b).unwrap();
+
+        // A torn copy of a valid file and a foreign garbage file.
+        let valid = std::fs::read(&b_path).unwrap();
+        std::fs::write(dir.join("torn.fstore"), &valid[..valid.len() / 2]).unwrap();
+        std::fs::write(dir.join("garbage.fstore"), b"not a snapshot").unwrap();
+        // Stray tmp dotfile from a crashed persist: ignored entirely.
+        std::fs::write(dir.join(".gamma.fstore.tmp"), b"half-written").unwrap();
+
+        let loaded = load_dir(&dir).unwrap();
+        let names: Vec<&str> = loaded.ops.iter().map(|o| o.name.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"]);
+        assert_eq!(loaded.skipped.len(), 2, "torn + garbage must both be reported");
+        for (_, err) in &loaded.skipped {
+            assert!(matches!(
+                err,
+                StoreError::Truncated { .. } | StoreError::ChecksumMismatch { .. }
+            ));
+        }
+        assert_eq!(
+            faust_fingerprint(&loaded.ops[0].faust),
+            faust_fingerprint(&a.faust)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_overwrites_atomically_under_the_same_name() {
+        let dir = tmp_store_dir("overwrite");
+        let mut op = canonical_op();
+        save_op(&dir, &op).unwrap();
+        op.epoch = 43;
+        op.faust = Faust::from_dense(&Mat::eye(3, 3));
+        save_op(&dir, &op).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.ops.len(), 1);
+        assert_eq!(loaded.ops[0].epoch, 43);
+        assert_eq!(loaded.ops[0].faust.rows(), 3);
+        assert!(loaded.skipped.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wire_and_store_magics_differ() {
+        // A store file fed to the wire decoder (or vice versa) must die
+        // on the first two bytes, not limp along.
+        assert_ne!(MAGIC, crate::server::wire::MAGIC);
+    }
+
+    #[test]
+    fn oversized_declared_length_is_refused_before_allocation() {
+        let mut bytes = encode_op(&canonical_op()).unwrap();
+        bytes[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode_op(&bytes), Err(StoreError::Oversized { .. })));
+    }
+}

@@ -1,0 +1,176 @@
+//! ISSUE 8 integration: crash/recovery over the durable operator store.
+//!
+//! Phase 1 (cold) pays the full factorization price: PALM learns a
+//! FAμST, a sharded coordinator serves it over loopback TCP with a
+//! store directory, and a snapshot is taken **mid-traffic**. The server
+//! is then dropped — simulating a crash/restart boundary — and phase 2
+//! (warm) stands a fresh service up purely from the store. The
+//! contract asserted here:
+//!
+//! - the warm server answers the *same* payload bits for the same input
+//!   (factors survived persist → load bitwise);
+//! - responses carry an epoch at or past the snapshot generation;
+//! - **zero re-factorization**: the process-wide PALM iteration counter
+//!   does not move at all during the warm phase — restart cost is plan
+//!   compilation, not learning.
+
+use faust::coordinator::{BatchOp, Coordinator, CoordinatorConfig, QosClass};
+use faust::engine::ApplyEngine;
+use faust::hierarchical::{factorize, HierarchicalConfig};
+use faust::palm::iterations_total;
+use faust::server::wire::WireResponse;
+use faust::server::{ServeConn, Server, ServerConfig};
+use faust::transforms::{hadamard, hadamard_faust};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn store_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("faust_recovery_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn ok_payload(resp: WireResponse) -> (u64, Vec<f64>) {
+    match resp {
+        WireResponse::Ok { epoch, data, .. } => (epoch, data),
+        other => panic!("expected OK response, got {other:?}"),
+    }
+}
+
+#[test]
+fn warm_restart_from_store_serves_identical_bits_without_palm() {
+    let n = 16;
+    let dir = store_dir("warm");
+    let h = hadamard(n);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+
+    // ---- Phase 1: cold start — learn, serve, snapshot mid-traffic. ----
+    let iters_before_cold = iterations_total();
+    let learned = factorize(&h, &HierarchicalConfig::hadamard(n));
+    assert!(learned.relative_error_fro(&h) < 1e-6);
+    assert!(iterations_total() > iters_before_cold, "cold start must actually run PALM");
+
+    let engine = ApplyEngine::with_threads(2);
+    let coord = Coordinator::start(
+        vec![("h".to_string(), Arc::new(engine.op(&learned)) as Arc<dyn BatchOp>)],
+        CoordinatorConfig { n_shards: 2, ..CoordinatorConfig::default() },
+    );
+    let server = Server::start(
+        coord.client(),
+        ServerConfig { store_dir: Some(dir.clone()), ..ServerConfig::default() },
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    let mut conn = ServeConn::connect(&addr).unwrap();
+    // Pipeline traffic and snapshot while requests are in flight.
+    for _ in 0..4 {
+        conn.send("h", QosClass::Standard, 0, n, 1, x.clone()).unwrap();
+    }
+    let report = coord.registry().persist_all(&dir).expect("mid-traffic snapshot");
+    assert_eq!(report.persisted, vec!["h".to_string()]);
+    let mut cold_epoch = 0;
+    let mut cold_data = Vec::new();
+    for _ in 0..4 {
+        let (epoch, data) = ok_payload(conn.recv().unwrap());
+        cold_epoch = epoch;
+        cold_data = data;
+    }
+    let want = h.matvec(&x);
+    for i in 0..n {
+        assert!((cold_data[i] - want[i]).abs() < 1e-6, "cold response wrong");
+    }
+
+    // Drop the server (crash/restart boundary). Its shutdown also
+    // re-snapshots — both writes are atomic under the same names.
+    drop(conn);
+    server.shutdown();
+    coord.shutdown();
+
+    // ---- Phase 2: warm start — restore from the store alone. ----
+    let iters_before_warm = iterations_total();
+    let engine2 = ApplyEngine::with_threads(2);
+    let coord2 = Coordinator::start(
+        vec![],
+        CoordinatorConfig { n_shards: 2, ..CoordinatorConfig::default() },
+    );
+    let restore = coord2
+        .registry()
+        .load_store(&dir, |_, f| Arc::new(engine2.op(f)) as Arc<dyn BatchOp>)
+        .expect("store readable");
+    assert_eq!(restore.loaded, vec!["h".to_string()]);
+    assert!(restore.corrupt.is_empty(), "no corruption was injected");
+    let server2 = Server::start(coord2.client(), ServerConfig::default()).expect("rebind");
+
+    let mut conn2 = ServeConn::connect(&server2.local_addr().to_string()).unwrap();
+    let (warm_epoch, warm_data) =
+        ok_payload(conn2.apply("h", QosClass::Standard, x.clone()).unwrap());
+    // Same input, same factors ⇒ same bits (f64 wire frames are exact).
+    assert_eq!(warm_data.len(), cold_data.len());
+    for i in 0..n {
+        assert_eq!(
+            warm_data[i].to_bits(),
+            cold_data[i].to_bits(),
+            "warm restart changed served bits at row {i}"
+        );
+    }
+    // The restored generation publishes at or past the snapshot epoch.
+    assert!(
+        warm_epoch >= cold_epoch,
+        "warm epoch {warm_epoch} regressed below snapshot epoch {cold_epoch}"
+    );
+    drop(conn2);
+    server2.shutdown();
+    let snap = coord2.shutdown();
+    assert_eq!(snap.store_loaded, 1);
+    // The zero-re-factorization witness: not one PALM iteration ran
+    // during the entire warm phase.
+    assert_eq!(iterations_total(), iters_before_warm, "warm restart re-ran PALM");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_restart_skips_a_torn_snapshot_and_still_serves_the_rest() {
+    // Crash during a snapshot write: one file is torn. The warm server
+    // must come up with every intact operator, report the torn file as
+    // a typed skip, and never panic or serve garbage.
+    let n = 8;
+    let dir = store_dir("torn");
+    let engine = ApplyEngine::with_threads(1);
+    // The exact butterfly, not a learned operator: this test must not
+    // touch PALM, so it can't perturb the other test's process-global
+    // zero-iteration witness when the harness runs them in parallel.
+    let butterfly = hadamard_faust(n);
+    let registry = faust::coordinator::Registry::new(None);
+    registry
+        .register("keep", Arc::new(engine.op(&butterfly)) as Arc<dyn BatchOp>)
+        .unwrap();
+    registry.persist_all(&dir).unwrap();
+    // Fabricate the torn neighbor from the good file's first half.
+    let good = std::fs::read(faust::store::op_path(&dir, "keep")).unwrap();
+    std::fs::write(dir.join("torn.fstore"), &good[..good.len() / 2]).unwrap();
+
+    let coord = Coordinator::start(vec![], CoordinatorConfig::default());
+    let restore = coord
+        .registry()
+        .load_store(&dir, |_, f| Arc::new(engine.op(f)) as Arc<dyn BatchOp>)
+        .expect("directory itself is readable");
+    assert_eq!(restore.loaded, vec!["keep".to_string()]);
+    assert_eq!(restore.corrupt.len(), 1, "torn file must surface, typed");
+    let server = Server::start(coord.client(), ServerConfig::default()).unwrap();
+    let mut conn = ServeConn::connect(&server.local_addr().to_string()).unwrap();
+    let x = vec![1.0; n];
+    let (_, data) = match conn.apply("keep", QosClass::Standard, x.clone()).unwrap() {
+        WireResponse::Ok { epoch, data, .. } => (epoch, data),
+        other => panic!("intact operator must serve: {other:?}"),
+    };
+    let want = hadamard(n).matvec(&x);
+    for i in 0..n {
+        assert!((data[i] - want[i]).abs() < 1e-6);
+    }
+    drop(conn);
+    server.shutdown();
+    let snap = coord.shutdown();
+    assert_eq!((snap.store_loaded, snap.store_skipped), (1, 1));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -199,6 +199,33 @@ def self_check():
          result("prec_bench", {"f32_apply_speedup": 1.6, "f64_mini_p99_us": 900.0,
                                "gemm512_tiled_speedup": 1.4, "speedup_f32": 1.6}), 1),
     ]
+    # Warm-startup ceiling (ISSUE 8 recovery gate): the warm path has a
+    # hard wall-clock ceiling AND an exact zero on re-factorization work.
+    # A max-0 rule must treat any positive count as a failure (the gate's
+    # "max" comparison has no tolerance), and blowing the ceiling or
+    # running even one PALM iteration during restore must each trip
+    # independently.
+    recovery_baseline = {
+        "recovery": {
+            "warm_start_ms": {"max": 100.0},
+            "warm_palm_iters": {"max": 0.0},
+            "cold_palm_iters": {"min": 1.0},
+        },
+    }
+    recovery_scenarios = [
+        ("warm start under ceiling, zero palm iterations",
+         result("recovery", {"warm_start_ms": 4.2, "warm_palm_iters": 0.0,
+                             "cold_palm_iters": 600.0}), 0),
+        ("warm start over the ceiling",
+         result("recovery", {"warm_start_ms": 350.0, "warm_palm_iters": 0.0,
+                             "cold_palm_iters": 600.0}), 1),
+        ("warm restore re-ran the solver (one iteration is one too many)",
+         result("recovery", {"warm_start_ms": 4.2, "warm_palm_iters": 1.0,
+                             "cold_palm_iters": 600.0}), 1),
+        ("degenerate cold run never factorized, warm gates vacuous",
+         result("recovery", {"warm_start_ms": 4.2, "warm_palm_iters": 0.0,
+                             "cold_palm_iters": 0.0}), 1),
+    ]
     assert not PRECISION_METRIC.search("gemm512_tiled_speedup")
     assert PRECISION_METRIC.search("f32_apply_speedup")
     assert PRECISION_METRIC.search("speedup_f64")
@@ -236,6 +263,17 @@ def self_check():
             with open(res_path, "w") as f:
                 json.dump(res, f)
             got = main(["bench_gate.py", prec_path, res_path])
+            assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
+            ran += 1
+
+        recovery_path = os.path.join(td, "recovery_baseline.json")
+        with open(recovery_path, "w") as f:
+            json.dump(recovery_baseline, f)
+        for desc, res, want in recovery_scenarios:
+            res_path = os.path.join(td, "BENCH_recovery.json")
+            with open(res_path, "w") as f:
+                json.dump(res, f)
+            got = main(["bench_gate.py", recovery_path, res_path])
             assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
             ran += 1
 
