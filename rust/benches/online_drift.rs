@@ -1,0 +1,278 @@
+//! Online tracking of a drifting operator vs periodic batch
+//! refactorization, at an equal flop budget (ISSUE 9, ROADMAP item i).
+//!
+//! The true operator drifts slowly: every pass, adjacent row pairs of
+//! the Hadamard transform rotate by a small Givens angle, so after `t`
+//! passes the target is `Rᵗ·H`. The drifted operator stays *exactly*
+//! representable under the bench's constraint profile (the rotation
+//! folds into the leftmost butterfly factor, doubling its per-row/col
+//! budget to 4), which makes the comparison about *tracking*, not
+//! model capacity. Two learners watch the same drift:
+//!
+//! - **online** — an [`OnlineLearner`] warm-started from the butterfly
+//!   factors streams every pass's columns through weighted mini-batch
+//!   PALM sweeps with forgetting, epoch-swapping improved generations
+//!   through a live [`Registry`].
+//! - **periodic** — every `refresh_every` passes, a full batch
+//!   [`palm4msa`] refit from the same butterfly prior on a snapshot of
+//!   the current operator. Its per-refresh iteration count is set so
+//!   both paths spend the *same number of PALM sweeps* overall
+//!   (verified via [`iterations_total`] deltas — one sweep is one
+//!   counter tick on both paths), so the only difference is streaming
+//!   vs burst refresh.
+//!
+//! The gated claims (`BENCH_online.json` vs `benches/baseline.json`):
+//! the online path tracks the moving operator to a small relative
+//! error while the periodic path — fresh fits notwithstanding — goes
+//! stale between refreshes; online keeps publishing generations
+//! (≥ 3 swaps); warm-starting converges far faster than a cold
+//! default init on the same stream; and the whole online run is
+//! bitwise identical across ctx thread counts.
+//!
+//! CI runs `-- --json` and gates every metric; all keys are
+//! `online_`-prefixed so `scripts/bench_gate.py` refuses any future
+//! unbaselined addition loudly.
+//!
+//! [`palm4msa`]: faust::palm::palm4msa
+//! [`iterations_total`]: faust::palm::iterations_total
+
+use faust::bench_util::{fmt, BenchReport, Table};
+use faust::cli::Args;
+use faust::coordinator::{
+    BatchOp, Metrics, OnlineLearnConfig, OnlineLearner, Registry,
+};
+use faust::engine::ExecCtx;
+use faust::faust::Faust;
+use faust::linalg::Mat;
+use faust::palm::online::{OnlineConfig, OnlinePalm};
+use faust::palm::{iterations_total, palm4msa_with_ctx, FactorState, PalmConfig};
+use faust::prox::Constraint;
+use faust::transforms::{hadamard, hadamard_faust};
+use std::sync::Arc;
+
+/// Rotate adjacent row pairs of `a` by `theta` in place (a block-Givens
+/// drift step). Composing `t` steps rotates each pair by `t·theta`, so
+/// the drifted operator is `Rᵗ·H` and the staleness of a generation fit
+/// `k` passes ago is exactly `2·sin(k·theta/2)` in relative Frobenius
+/// error — the geometry the gates below lean on.
+fn rotate_rows(a: &mut Mat, theta: f64) {
+    let (s, c) = theta.sin_cos();
+    let (rows, cols) = a.shape();
+    let mut i = 0;
+    while i + 1 < rows {
+        for j in 0..cols {
+            let (u, v) = (a.at(i, j), a.at(i + 1, j));
+            a.set(i, j, c * u - s * v);
+            a.set(i + 1, j, s * u + c * v);
+        }
+        i += 2;
+    }
+}
+
+/// The butterfly prior both paths start from: the exact Hadamard
+/// factorization as dense PALM factors (rightmost first).
+fn butterfly_init(n: usize) -> FactorState {
+    let hf = hadamard_faust(n);
+    FactorState {
+        mats: hf.factors().iter().map(|f| f.to_dense()).collect(),
+        lambda: hf.lambda(),
+    }
+}
+
+/// 2-sparse butterflies everywhere except the leftmost factor, which
+/// gets a 4-per-row/col budget so it can absorb the pair rotation
+/// (`R·S` has ≤ 4 nonzeros per row and per column when `S` has 2).
+fn drift_constraints(nfac: usize) -> Vec<Constraint> {
+    let mut cons = vec![Constraint::SpRowCol(2); nfac];
+    cons[nfac - 1] = Constraint::SpRowCol(4);
+    cons
+}
+
+struct OnlineRun {
+    swaps: u64,
+    sweeps: u64,
+    rel_err: f64,
+    state: FactorState,
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let n: usize = args.get("n", 32);
+    let passes: usize = args.get("passes", 48);
+    let theta: f64 = args.get("theta", 0.02);
+    let batch_cols: usize = args.get("batch-cols", 4).max(1);
+    let refresh_every: usize = args.get("refresh-every", 16).max(1);
+    let rho: f64 = args.get("rho", 0.7);
+    assert!(n.is_power_of_two() && n >= 4, "--n must be a power of two ≥ 4");
+    assert!(passes % refresh_every == 0, "--passes must be a multiple of --refresh-every");
+    let nfac = n.trailing_zeros() as usize;
+
+    println!(
+        "# online drift — streaming vs periodic refit at equal flops \
+         (n={n}, passes={passes}, θ={theta} rad/pass, ρ={rho})\n"
+    );
+
+    // The drift sequence: a_seq[t] is the true operator during pass t.
+    let mut a = hadamard(n);
+    let mut a_seq = Vec::with_capacity(passes);
+    for _ in 0..passes {
+        a_seq.push(a.clone());
+        rotate_rows(&mut a, theta);
+    }
+    let a_final = a_seq.last().expect("passes ≥ 1");
+
+    // ---- Online path: stream every pass's columns, publish through a
+    // live registry under the coordinator's cadence policy. ----
+    let run_online = |threads: usize| -> OnlineRun {
+        let registry = Arc::new(Registry::new(None));
+        registry
+            .register("drift", Arc::new(hadamard(n)) as Arc<dyn BatchOp>)
+            .expect("fresh registry");
+        let cfg = OnlineConfig::new(PalmConfig::new(drift_constraints(nfac), 1))
+            .with_forgetting(rho);
+        let mut learner = OnlineLearner::new(
+            "drift",
+            registry.clone(),
+            Arc::new(Metrics::new()),
+            OnlinePalm::warm(butterfly_init(n), cfg),
+            OnlineLearnConfig { batch_cols, swap_every: 4, min_gain: 0.0 },
+        );
+        let ctx = ExecCtx::new(threads);
+        let publish = |f: &Faust| Arc::new(f.clone()) as Arc<dyn BatchOp>;
+        let i0 = iterations_total();
+        for a_t in &a_seq {
+            for col in 0..n {
+                learner.observe(col, a_t.col(col));
+                while learner.try_step(&ctx, &publish).is_some() {}
+            }
+        }
+        OnlineRun {
+            swaps: learner.swaps(),
+            sweeps: iterations_total() - i0,
+            rel_err: learner.palm().to_faust().relative_error_fro(a_final),
+            state: learner.palm().state().clone(),
+        }
+    };
+    let online = run_online(2);
+
+    // ---- Periodic path: batch refit from the same butterfly prior
+    // every refresh_every passes, with the whole online sweep budget
+    // split evenly across the refits. ----
+    let refreshes = passes / refresh_every;
+    let per_refresh = (online.sweeps as usize / refreshes).max(1);
+    let ctx = ExecCtx::new(2);
+    let i0 = iterations_total();
+    let mut fresh_errs = Vec::with_capacity(refreshes);
+    let mut current: Option<Faust> = None;
+    for (t, a_t) in a_seq.iter().enumerate() {
+        if t % refresh_every == 0 {
+            let res = palm4msa_with_ctx(
+                &ctx,
+                a_t,
+                butterfly_init(n),
+                &PalmConfig::new(drift_constraints(nfac), per_refresh),
+            );
+            let f = res.state.into_faust();
+            fresh_errs.push(f.relative_error_fro(a_t));
+            current = Some(f);
+        }
+    }
+    let periodic_iters = iterations_total() - i0;
+    let periodic_fresh =
+        fresh_errs.iter().cloned().fold(0.0f64, f64::max);
+    // Staleness at the end of the run: the last refit is refresh_every
+    // passes old by the time the final operator is measured.
+    let periodic_stale = current
+        .expect("at least one refresh")
+        .relative_error_fro(a_final);
+    let flop_parity = periodic_iters as f64 / online.sweeps as f64;
+
+    // ---- Warm vs cold convergence on a static (already-drifted)
+    // target: same stream, same budget, only the init differs. ----
+    let mut target = hadamard(n);
+    rotate_rows(&mut target, 0.1);
+    let static_batches = 12;
+    let run_static = |init: FactorState| -> f64 {
+        let mut ol = OnlinePalm::warm(
+            init,
+            OnlineConfig::new(PalmConfig::new(drift_constraints(nfac), 1)),
+        );
+        for _ in 0..static_batches {
+            let batch: Vec<(usize, Vec<f64>)> =
+                (0..n).map(|c| (c, target.col(c))).collect();
+            ol.step(&ctx, &batch);
+        }
+        ol.to_faust().relative_error_fro(&target)
+    };
+    let warm_err = run_static(butterfly_init(n));
+    let dims: Vec<(usize, usize)> = vec![(n, n); nfac];
+    let cold_err = run_static(FactorState::default_init(&dims));
+
+    // ---- Determinism: the full online run, bit for bit, at another
+    // thread count. ----
+    let online_t1 = run_online(1);
+    let mut bitwise = (online_t1.swaps == online.swaps
+        && online_t1.state.lambda.to_bits() == online.state.lambda.to_bits())
+        as u64;
+    for (p, q) in online_t1.state.mats.iter().zip(&online.state.mats) {
+        if p.data() != q.data() {
+            bitwise = 0;
+        }
+    }
+
+    let mut table = Table::new(&["path", "rel_err_final", "palm_sweeps", "swaps/refits"]);
+    table.row(&[
+        "online".to_string(),
+        fmt(online.rel_err),
+        online.sweeps.to_string(),
+        online.swaps.to_string(),
+    ]);
+    table.row(&[
+        "periodic".to_string(),
+        fmt(periodic_stale),
+        periodic_iters.to_string(),
+        refreshes.to_string(),
+    ]);
+    table.print();
+    println!(
+        "\n# periodic refits land at {} fresh but go {} stale; online tracks at {} \
+         ({}x better) on the same {} sweeps; warm start {} vs cold {} after {} batches",
+        fmt(periodic_fresh),
+        fmt(periodic_stale),
+        fmt(online.rel_err),
+        fmt(periodic_stale / online.rel_err.max(1e-12)),
+        online.sweeps,
+        fmt(warm_err),
+        fmt(cold_err),
+        static_batches,
+    );
+
+    // The bench is its own smoke test: fail loudly here, not just in
+    // the baseline gate.
+    assert!(online.rel_err < periodic_stale, "online must beat the stale periodic refit");
+    assert!(online.swaps >= 3, "online must keep publishing under drift");
+    assert!(warm_err < cold_err, "warm start must beat cold on the same stream");
+    assert_eq!(bitwise, 1, "online run must be bitwise thread-invariant");
+
+    if args.flag("json") {
+        let mut rep = BenchReport::new("online");
+        rep.push("online_tracking_rel_err", online.rel_err);
+        rep.push("online_periodic_fresh_rel_err", periodic_fresh);
+        rep.push("online_periodic_stale_rel_err", periodic_stale);
+        rep.push(
+            "online_vs_periodic_err_ratio",
+            online.rel_err / periodic_stale.max(1e-12),
+        );
+        rep.push("online_sweeps", online.sweeps as f64);
+        rep.push("online_flop_parity", flop_parity);
+        rep.push("online_swaps", online.swaps as f64);
+        rep.push("online_warm_rel_err", warm_err);
+        rep.push("online_cold_start_rel_err", cold_err);
+        rep.push("online_warm_vs_cold_gain", cold_err / warm_err.max(1e-12));
+        rep.push("online_bitwise_identical", bitwise as f64);
+        match rep.write(args.get_str("json-dir").unwrap_or(".")) {
+            Ok(p) => println!("# wrote {p}"),
+            Err(e) => eprintln!("# json write failed: {e}"),
+        }
+    }
+}

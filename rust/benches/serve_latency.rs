@@ -123,6 +123,7 @@ fn main() {
             adaptive: Some(AdaptiveBatchConfig::default()),
             precision: args.precision,
             n_shards: 1,
+            online: None,
         },
     );
     let server = Server::start(coord.client(), ServerConfig::default()).expect("bind loopback");

@@ -100,7 +100,8 @@ SUBCOMMANDS:
   serve       --n 64 [--requests 10000] [--batch 32] [--workers 2]
               [--threads 2] [--shards 1] [--store DIR] [--adaptive-batch]
               [--factorize] [--factorize-fleet N] [--listen HOST:PORT]
-              [--repl] [--precision f64|f32|auto[:EPS]]
+              [--repl] [--precision f64|f32|auto[:EPS]] [--online-learn]
+              [--online-passes 24] [--online-drift 0.01]
               run the operator-serving coordinator on a Hadamard FAuST,
               planned + parallelized by the apply engine.
               --adaptive-batch sizes each operator's batches from its
@@ -127,7 +128,16 @@ SUBCOMMANDS:
               serves N operators op0..op{N-1} and refactorizes them all
               *concurrently* on the serving engine (cross-operator
               batched sweeps), epoch-swapping each one the moment its
-              own factorization finishes; --listen puts the TCP ingress
+              own factorization finishes; --online-learn turns on
+              streaming factorization (palm::online): a learner
+              warm-started from the served generation's factors and λ
+              ingests observed columns of a slowly rotating true
+              operator (--online-drift rad/pass, --online-passes full
+              passes), updates the sparse factors by weighted
+              mini-batch PALM sweeps on a running surrogate, and
+              epoch-swaps each improved generation into the live
+              registry (stats grows online batch/column/swap counters
+              and a drift gauge); --listen puts the TCP ingress
               front end (length-prefixed wire protocol, admission
               control, QoS deadline classes — see server::wire) in
               front of the coordinator so remote `faust client` traffic

@@ -34,6 +34,10 @@ pub struct Metrics {
     store_persisted: AtomicU64,
     store_loaded: AtomicU64,
     store_skipped: AtomicU64,
+    online_batches: AtomicU64,
+    online_cols: AtomicU64,
+    online_swaps: AtomicU64,
+    online_rel_err_bits: AtomicU64,
 }
 
 /// Point-in-time copy of the metrics.
@@ -79,6 +83,16 @@ pub struct MetricsSnapshot {
     pub store_loaded: u64,
     /// Store files skipped as torn/corrupt during a restore.
     pub store_skipped: u64,
+    /// Mini-batches ingested by the online learner.
+    pub online_batches: u64,
+    /// Observed columns ingested by the online learner.
+    pub online_cols: u64,
+    /// Improved generations the online learner published via
+    /// `Registry::swap_epoch` (a subset of `swaps`).
+    pub online_swaps: u64,
+    /// Latest relative approximation error reported by the online
+    /// learner's sweep (the drift gauge; 0.0 before the first sweep).
+    pub online_rel_err: f64,
 }
 
 impl MetricsSnapshot {
@@ -153,6 +167,10 @@ impl Metrics {
             store_persisted: AtomicU64::new(0),
             store_loaded: AtomicU64::new(0),
             store_skipped: AtomicU64::new(0),
+            online_batches: AtomicU64::new(0),
+            online_cols: AtomicU64::new(0),
+            online_swaps: AtomicU64::new(0),
+            online_rel_err_bits: AtomicU64::new(0),
         }
     }
 
@@ -231,6 +249,24 @@ impl Metrics {
         self.store_skipped.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One online mini-batch ingested, carrying `cols` observed columns.
+    pub fn record_online_batch(&self, cols: u64) {
+        self.online_batches.fetch_add(1, Ordering::Relaxed);
+        self.online_cols.fetch_add(cols, Ordering::Relaxed);
+    }
+
+    /// One improved generation published by the online learner.
+    pub fn record_online_swap(&self) {
+        self.online_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latest relative error from the online learner's sweep (a gauge,
+    /// not a counter: each call overwrites the previous value).
+    pub fn record_online_rel_err(&self, rel_err: f64) {
+        self.online_rel_err_bits
+            .store(rel_err.to_bits(), Ordering::Relaxed);
+    }
+
     /// Count `n` requests executed at `precision` (one call per batch).
     pub fn record_precision_applies(&self, precision: ServedPrecision, n: u64) {
         match precision {
@@ -269,6 +305,10 @@ impl Metrics {
             store_persisted: self.store_persisted.load(Ordering::Relaxed),
             store_loaded: self.store_loaded.load(Ordering::Relaxed),
             store_skipped: self.store_skipped.load(Ordering::Relaxed),
+            online_batches: self.online_batches.load(Ordering::Relaxed),
+            online_cols: self.online_cols.load(Ordering::Relaxed),
+            online_swaps: self.online_swaps.load(Ordering::Relaxed),
+            online_rel_err: f64::from_bits(self.online_rel_err_bits.load(Ordering::Relaxed)),
         }
     }
 }
@@ -357,6 +397,21 @@ mod tests {
             (s.store_persisted, s.store_loaded, s.store_skipped),
             (1, 3, 1)
         );
+    }
+
+    #[test]
+    fn online_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_online_batch(8);
+        m.record_online_batch(4);
+        m.record_online_swap();
+        m.record_online_rel_err(0.25);
+        m.record_online_rel_err(0.125); // gauge: latest value wins
+        let s = m.snapshot();
+        assert_eq!((s.online_batches, s.online_cols, s.online_swaps), (2, 12, 1));
+        assert_eq!(s.online_rel_err, 0.125);
+        // Before the first sweep the gauge reads an exact 0.0, not NaN.
+        assert_eq!(Metrics::new().snapshot().online_rel_err, 0.0);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! The paper's motivating workload (§V, the fig8/fig9 MEG experiments) is
 //! an iterative solver issuing many matvec requests against an operator.
 //! This module provides the deployment shape for that, the tail of the
-//! repo's serving pipeline **plan → kernel → pool → arena → batcher →
-//! registry**:
+//! repo's serving pipeline **plan → kernel → pool → shard → arena →
+//! batcher → registry → admission → wire → store → online** (the
+//! layer-by-layer map, with paper and PR cross-references, lives in
+//! `docs/ARCHITECTURE.md`):
 //!
 //! - a live [`Registry`] mapping names to operators, supporting
 //!   [`register`](Registry::register) / [`swap_epoch`](Registry::swap_epoch)
@@ -61,6 +63,21 @@
 //! directory; [`Registry::load_store`] restores a whole fleet — warm
 //! restarts re-plan in milliseconds instead of re-running PALM.
 //!
+//! **Online learning (ROADMAP item i, [`crate::palm::online`]).** With
+//! [`CoordinatorConfig::online`]` = Some(_)` the deployment can attach
+//! an [`OnlineLearner`] per operator: a streaming Mairal-style
+//! factorization that ingests observed columns, updates the sparse
+//! factors by weighted mini-batch PALM sweeps on a running surrogate,
+//! and — on the configured [`OnlineLearnConfig::swap_every`] cadence,
+//! gated on measured improvement — publishes each better generation via
+//! [`Registry::swap_epoch`] while traffic flows. [`OnlineLearnerTask`]
+//! runs the learner on its own thread behind a bounded observation
+//! channel, so a sweep never stalls a request; drift is observable as
+//! the `online_*` counters and the `online_rel_err` gauge in
+//! [`MetricsSnapshot`]. The default (`online: None`) spawns nothing and
+//! keeps the f64 serving path bitwise identical to the pre-online
+//! coordinator.
+//!
 //! Operators are best registered as [`EngineOp`]s (see [`engine_ops`]):
 //! the batch a worker executes then runs through the engine's cost-modeled
 //! plan, row-parallel pooled spmm, and zero-alloc arena. A deployment
@@ -101,12 +118,14 @@
 
 mod batcher;
 mod metrics;
+mod online;
 mod registry;
 
 pub use batcher::{
     target_batch, target_batch_for_class, AdaptiveBatchConfig, BatchPolicy, Batcher,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use online::{OnlineLearnConfig, OnlineLearner, OnlineLearnerReport, OnlineLearnerTask};
 pub use registry::{
     FleetRefactorization, PersistReport, Registry, RegistryError, StoreRestore,
 };
@@ -178,7 +197,13 @@ impl std::str::FromStr for Precision {
 /// Which element type actually executed a request's batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServedPrecision {
+    /// The f64 master generation ran the batch (always the case for
+    /// factorization-path outputs and for operators without a published
+    /// f32 generation).
     F64,
+    /// The quantized f32 serving generation ran the batch — chosen by
+    /// the [`Precision`] policy against the generation's probe-measured
+    /// error (see [`F32Serving`]).
     F32,
 }
 
@@ -408,6 +433,11 @@ pub struct CoordinatorConfig {
     /// shards steal whole jobs from busy ones (work donation). Results
     /// are bitwise independent of the shard count.
     pub n_shards: usize,
+    /// Online-learning cadence policy. `Some(_)` lets the deployment
+    /// attach [`OnlineLearner`]s via [`Coordinator::online_learner`];
+    /// `None` — the default — spawns nothing and keeps the f64 serving
+    /// path bitwise identical to the pre-online coordinator.
+    pub online: Option<OnlineLearnConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -420,6 +450,7 @@ impl Default for CoordinatorConfig {
             adaptive: None,
             precision: Precision::F64,
             n_shards: 1,
+            online: None,
         }
     }
 }
@@ -428,6 +459,12 @@ impl CoordinatorConfig {
     /// Default config with plan-aware adaptive batching enabled.
     pub fn adaptive() -> Self {
         CoordinatorConfig { adaptive: Some(AdaptiveBatchConfig::default()), ..Self::default() }
+    }
+
+    /// Default config with online learning enabled at the default
+    /// cadence ([`OnlineLearnConfig::default`]).
+    pub fn online_learning() -> Self {
+        CoordinatorConfig { online: Some(OnlineLearnConfig::default()), ..Self::default() }
     }
 }
 
@@ -722,6 +759,7 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     shards: Arc<Vec<ShardRuntime>>,
     stop: Arc<AtomicBool>,
+    online: Option<OnlineLearnConfig>,
 }
 
 impl Coordinator {
@@ -804,7 +842,8 @@ impl Coordinator {
         }
 
         let client = Client { tx, registry, metrics };
-        Coordinator { client, router: Some(router), workers, shards, stop }
+        let online = cfg.online.clone();
+        Coordinator { client, router: Some(router), workers, shards, stop, online }
     }
 
     /// Get a submission handle.
@@ -821,6 +860,34 @@ impl Coordinator {
     /// Number of shards this coordinator runs (≥ 1).
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The online-learning cadence policy this coordinator was started
+    /// with (`None` when online learning is off).
+    pub fn online_config(&self) -> Option<OnlineLearnConfig> {
+        self.online.clone()
+    }
+
+    /// Build an [`OnlineLearner`] for registry operator `name`, wired to
+    /// this coordinator's registry, metrics, and configured
+    /// [`CoordinatorConfig::online`] cadence. `None` when online
+    /// learning is off. `palm` carries the warm/cold start and the
+    /// constraint set — warm-start it from the serving generation's
+    /// factors via [`crate::palm::online::OnlinePalm::warm`]. Run it
+    /// inline or hand it to [`OnlineLearnerTask::spawn`].
+    pub fn online_learner(
+        &self,
+        name: impl Into<String>,
+        palm: crate::palm::online::OnlinePalm,
+    ) -> Option<OnlineLearner> {
+        let cfg = self.online.clone()?;
+        Some(OnlineLearner::new(
+            name,
+            self.client.registry.clone(),
+            self.client.metrics.clone(),
+            palm,
+            cfg,
+        ))
     }
 
     /// Test hook: wedge (or un-wedge) shard `shard`'s workers so its

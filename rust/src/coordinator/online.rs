@@ -1,0 +1,567 @@
+//! Online learning inside the serving loop (ROADMAP item i): an
+//! [`OnlineLearner`] feeds observed columns into a streaming
+//! [`OnlinePalm`] factorization and continuously publishes improved
+//! generations through the live [`Registry`] — the serving system keeps
+//! learning while it serves.
+//!
+//! The split of responsibilities:
+//!
+//! - [`crate::palm::online`] owns the *math*: the per-column surrogate,
+//!   the forgetting factor, the weighted mini-batch sweep, and its
+//!   bitwise online/batch boundary contract.
+//! - This module owns the *policy*: mini-batch assembly from a raw
+//!   observation stream ([`OnlineLearnConfig::batch_cols`]), the swap
+//!   cadence ([`OnlineLearnConfig::swap_every`] with an
+//!   improvement-gated publish that re-scores the incumbent generation
+//!   against the current surrogate, so a *worse* candidate is never
+//!   swapped in yet a stale incumbent never blocks tracking), and the
+//!   drift metrics
+//!   ([`MetricsSnapshot::online_batches`] / `online_cols` /
+//!   `online_swaps` / `online_rel_err`).
+//! - [`OnlineLearnerTask`] is the deployment shape: a dedicated thread
+//!   consuming a bounded observation channel, so learning shares the
+//!   machine with serving without ever stalling a request — swaps go
+//!   through [`Registry::swap_epoch`], which drains old generations on
+//!   their `Arc`s exactly like every other swap.
+//!
+//! # Determinism
+//!
+//! Observations are folded in channel/arrival order, mini-batches cut at
+//! fixed [`OnlineLearnConfig::batch_cols`] boundaries, and every sweep
+//! runs thread-invariant ctx kernels — so a fixed observation stream
+//! reproduces bitwise-identical factors, swap decisions and epochs at
+//! any thread count. With [`CoordinatorConfig::online`] `None` (the
+//! default) none of this code runs and the f64 serving path is bitwise
+//! identical to the pre-online coordinator.
+//!
+//! [`CoordinatorConfig::online`]: super::CoordinatorConfig::online
+//! [`MetricsSnapshot::online_batches`]: super::MetricsSnapshot::online_batches
+
+use super::{BatchOp, Metrics, Registry};
+use crate::engine::ExecCtx;
+use crate::faust::Faust;
+use crate::palm::online::{OnlinePalm, OnlineStep};
+use crate::palm::FactorState;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Swap-cadence policy for an [`OnlineLearner`] (the coordinator-level
+/// half of online learning; the PALM-level half is
+/// [`crate::palm::online::OnlineConfig`]).
+#[derive(Clone, Debug)]
+pub struct OnlineLearnConfig {
+    /// Observed columns per mini-batch: the learner buffers incoming
+    /// observations and runs one weighted sweep per full mini-batch.
+    pub batch_cols: usize,
+    /// Publish cadence: every `swap_every` mini-batches the learner
+    /// considers an epoch swap (clamped to ≥ 1).
+    pub swap_every: u64,
+    /// Improvement gate: publish only when the sweep's relative error
+    /// beats the last published generation's by more than this margin
+    /// (`0.0` publishes on any strict improvement). The published
+    /// generation is re-scored against the *current* surrogate at every
+    /// cadence point ([`OnlinePalm::rel_err_of`]): under drift a
+    /// generation that was excellent when it shipped goes stale, and a
+    /// gate frozen at its error-at-publish would block every future
+    /// swap. Keeps worse generations out of the registry while still
+    /// tracking a moving operator.
+    pub min_gain: f64,
+}
+
+impl Default for OnlineLearnConfig {
+    fn default() -> Self {
+        OnlineLearnConfig { batch_cols: 8, swap_every: 4, min_gain: 0.0 }
+    }
+}
+
+/// Final accounting of one learner (returned by
+/// [`OnlineLearnerTask::finish`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineLearnerReport {
+    /// Mini-batches swept.
+    pub batches: u64,
+    /// Columns observed (with repetition).
+    pub cols: u64,
+    /// Generations published via [`Registry::swap_epoch`].
+    pub swaps: u64,
+    /// Relative error after the last sweep (`NaN` if none ran).
+    pub rel_err: f64,
+}
+
+/// Streams observed columns into an [`OnlinePalm`] learner and
+/// epoch-swaps improved generations into the [`Registry`] under the
+/// [`OnlineLearnConfig`] cadence policy. Synchronous — drive it from
+/// your own loop, or wrap it in an [`OnlineLearnerTask`] thread.
+pub struct OnlineLearner {
+    name: String,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    palm: OnlinePalm,
+    cfg: OnlineLearnConfig,
+    pending: Vec<(usize, Vec<f64>)>,
+    batches: u64,
+    swaps: u64,
+    last_step: Option<OnlineStep>,
+    /// The last published generation's factors (`None` until the first
+    /// publish, so the first cadence hit always publishes). Kept so the
+    /// gate can re-score it against the current surrogate.
+    published: Option<FactorState>,
+}
+
+impl OnlineLearner {
+    /// Learner for registry operator `name`, from an explicitly built
+    /// [`OnlinePalm`] (cold, warm, or resumed from a store snapshot via
+    /// [`OnlinePalm::from_parts`]). Prefer
+    /// [`Coordinator::online_learner`](super::Coordinator::online_learner)
+    /// on a running coordinator — it wires the registry, metrics and
+    /// configured cadence for you.
+    pub fn new(
+        name: impl Into<String>,
+        registry: Arc<Registry>,
+        metrics: Arc<Metrics>,
+        palm: OnlinePalm,
+        cfg: OnlineLearnConfig,
+    ) -> OnlineLearner {
+        OnlineLearner {
+            name: name.into(),
+            registry,
+            metrics,
+            palm,
+            cfg,
+            pending: Vec::new(),
+            batches: 0,
+            swaps: 0,
+            last_step: None,
+            published: None,
+        }
+    }
+
+    /// Buffer one observed column (`j`, payload). Sweeps run when a full
+    /// mini-batch has accumulated — call [`OnlineLearner::try_step`].
+    pub fn observe(&mut self, j: usize, col: Vec<f64>) {
+        self.pending.push((j, col));
+    }
+
+    /// Columns buffered toward the next mini-batch.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// A full mini-batch is buffered.
+    pub fn ready(&self) -> bool {
+        self.pending.len() >= self.cfg.batch_cols.max(1)
+    }
+
+    /// If a full mini-batch is buffered, run one sweep (and possibly an
+    /// epoch swap, per the cadence policy). `publish` turns the learned
+    /// factors into a servable operator — e.g.
+    /// `|f| Arc::new(engine.op_batch_hint(f, batch)) as Arc<dyn BatchOp>`,
+    /// the same shape as [`Registry::load_store`]'s publish hook.
+    pub fn try_step(
+        &mut self,
+        ctx: &ExecCtx,
+        publish: &dyn Fn(&Faust) -> Arc<dyn BatchOp>,
+    ) -> Option<OnlineStep> {
+        if !self.ready() {
+            return None;
+        }
+        let take = self.cfg.batch_cols.max(1).min(self.pending.len());
+        let rest = self.pending.split_off(take);
+        let batch = std::mem::replace(&mut self.pending, rest);
+        Some(self.step_batch(ctx, publish, batch))
+    }
+
+    /// Sweep whatever is buffered, full mini-batch or not (stream-end
+    /// tail). `None` if nothing is buffered.
+    pub fn flush(
+        &mut self,
+        ctx: &ExecCtx,
+        publish: &dyn Fn(&Faust) -> Arc<dyn BatchOp>,
+    ) -> Option<OnlineStep> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let batch = std::mem::take(&mut self.pending);
+        Some(self.step_batch(ctx, publish, batch))
+    }
+
+    fn step_batch(
+        &mut self,
+        ctx: &ExecCtx,
+        publish: &dyn Fn(&Faust) -> Arc<dyn BatchOp>,
+        batch: Vec<(usize, Vec<f64>)>,
+    ) -> OnlineStep {
+        let step = self.palm.step(ctx, &batch);
+        self.batches += 1;
+        self.metrics.record_online_batch(batch.len() as u64);
+        self.metrics.record_online_rel_err(step.rel_err);
+        self.last_step = Some(step);
+        if self.batches % self.cfg.swap_every.max(1) == 0 {
+            self.publish_if_improved(ctx, publish);
+        }
+        step
+    }
+
+    /// Publish the current factors now iff they beat the last published
+    /// generation by the configured margin (cadence-independent — the
+    /// stream-end path). The bar is the published generation re-scored
+    /// against the *current* surrogate, so under drift the gate tracks
+    /// staleness instead of freezing at the old error-at-publish.
+    /// Returns the new epoch on publish.
+    pub fn publish_if_improved(
+        &mut self,
+        ctx: &ExecCtx,
+        publish: &dyn Fn(&Faust) -> Arc<dyn BatchOp>,
+    ) -> Option<u64> {
+        let rel_err = self.last_step?.rel_err;
+        let bar = self
+            .published
+            .as_ref()
+            .map_or(f64::INFINITY, |st| self.palm.rel_err_of(ctx, st));
+        if !(rel_err + self.cfg.min_gain < bar) {
+            return None;
+        }
+        let f = self.palm.to_faust();
+        match self.registry.swap_epoch(&self.name, publish(&f)) {
+            Ok(epoch) => {
+                self.metrics.record_online_swap();
+                self.swaps += 1;
+                self.published = Some(self.palm.state().clone());
+                Some(epoch)
+            }
+            // Operator retired (or re-registered with another shape) out
+            // from under the learner: keep learning, publish nothing.
+            Err(_) => None,
+        }
+    }
+
+    /// Operator this learner publishes to.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Generations published so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Relative error after the last sweep (`NaN` before the first).
+    pub fn rel_err(&self) -> f64 {
+        self.last_step.map_or(f64::NAN, |s| s.rel_err)
+    }
+
+    /// The underlying streaming learner — surrogate, weights and
+    /// counters for store snapshots ([`crate::store::StoredLearner`]).
+    pub fn palm(&self) -> &OnlinePalm {
+        &self.palm
+    }
+
+    fn report(&self) -> OnlineLearnerReport {
+        OnlineLearnerReport {
+            batches: self.batches,
+            cols: self.palm.cols_seen(),
+            swaps: self.swaps,
+            rel_err: self.rel_err(),
+        }
+    }
+}
+
+/// A background online-learning thread: feeds an [`OnlineLearner`] from
+/// a bounded observation channel so the serving path never blocks on a
+/// sweep. Observations are processed strictly in send order (one
+/// consumer), preserving the determinism contract.
+pub struct OnlineLearnerTask {
+    tx: Option<SyncSender<(usize, Vec<f64>)>>,
+    handle: Option<JoinHandle<OnlineLearnerReport>>,
+}
+
+impl OnlineLearnerTask {
+    /// Spawn the learner thread (`faust-online-<op>`). `ctx` is the
+    /// execution context sweeps run on — pass the serving engine's
+    /// (`ApplyEngine::ctx()`) so learning shares the deployment's pool.
+    /// `queue` bounds the observation channel (backpressure on the
+    /// feeder, never on serving).
+    pub fn spawn(
+        mut learner: OnlineLearner,
+        ctx: ExecCtx,
+        publish: impl Fn(&Faust) -> Arc<dyn BatchOp> + Send + 'static,
+        queue: usize,
+    ) -> OnlineLearnerTask {
+        let (tx, rx) = sync_channel::<(usize, Vec<f64>)>(queue.max(1));
+        let handle = std::thread::Builder::new()
+            .name(format!("faust-online-{}", learner.name()))
+            .spawn(move || {
+                while let Ok((j, col)) = rx.recv() {
+                    learner.observe(j, col);
+                    while learner.try_step(&ctx, &publish).is_some() {}
+                }
+                // Stream closed: sweep the tail, then give the final
+                // generation one last (improvement-gated) publish.
+                learner.flush(&ctx, &publish);
+                learner.publish_if_improved(&ctx, &publish);
+                learner.report()
+            })
+            .expect("spawn online learner");
+        OnlineLearnerTask { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Feed one observed column. Blocks only when the observation queue
+    /// is full (the learner is behind); `false` once the task is gone.
+    pub fn observe(&self, j: usize, col: Vec<f64>) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send((j, col)).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Close the stream, drain the tail, join the thread.
+    pub fn finish(mut self) -> OnlineLearnerReport {
+        drop(self.tx.take());
+        match self.handle.take() {
+            Some(h) => h.join().expect("online learner panicked"),
+            None => OnlineLearnerReport::default(),
+        }
+    }
+}
+
+impl Drop for OnlineLearnerTask {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Coordinator, CoordinatorConfig};
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::palm::online::OnlineConfig;
+    use crate::palm::PalmConfig;
+    use crate::prox::Constraint;
+    use crate::rng::Rng;
+
+    fn publish_plain() -> impl Fn(&Faust) -> Arc<dyn BatchOp> + Send + 'static {
+        |f: &Faust| Arc::new(f.clone()) as Arc<dyn BatchOp>
+    }
+
+    fn hadamard_stream(n: usize, passes: usize) -> Vec<(usize, Vec<f64>)> {
+        let a = crate::transforms::hadamard(n);
+        let mut s = Vec::with_capacity(n * passes);
+        for _ in 0..passes {
+            for j in 0..n {
+                s.push((j, a.col(j)));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn learner_converges_and_swaps_through_a_live_coordinator() {
+        let n = 8;
+        let a = crate::transforms::hadamard(n);
+        let coord = Coordinator::start(
+            vec![("h".to_string(), Arc::new(a.clone()) as Arc<dyn BatchOp>)],
+            CoordinatorConfig::online_learning(),
+        );
+        assert!(coord.online_config().is_some());
+        let learner = coord
+            .online_learner(
+                "h",
+                OnlinePalm::cold(
+                    &[(n, n); 3],
+                    OnlineConfig::new(PalmConfig::new(vec![Constraint::SpRowCol(2); 3], 1)),
+                ),
+            )
+            .expect("online learning is on");
+        let ctx = ExecCtx::new(1);
+        let task = OnlineLearnerTask::spawn(learner, ctx, publish_plain(), 256);
+        for (j, col) in hadamard_stream(n, 40) {
+            assert!(task.observe(j, col));
+        }
+        let rep = task.finish();
+        assert!(rep.batches > 0);
+        assert_eq!(rep.cols, (n * 40) as u64);
+        assert!(rep.swaps >= 3, "expected ≥3 online swaps, got {}", rep.swaps);
+        assert!(rep.rel_err < 1e-3, "never converged: rel_err={}", rep.rel_err);
+        // The served generation is now the learned FAμST — and it still
+        // answers correctly.
+        let client = coord.client();
+        let mut rng = Rng::new(5);
+        let x = rng.gauss_vec(n);
+        let y = client.apply("h", x.clone()).unwrap();
+        let want = a.matvec(&x);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-2, "served output drifted");
+        }
+        let snap = coord.shutdown();
+        assert!(snap.swaps >= rep.swaps, "registry swaps must include online swaps");
+        assert_eq!(snap.online_swaps, rep.swaps);
+        assert_eq!(snap.online_cols, rep.cols);
+        assert_eq!(snap.online_rel_err, rep.rel_err, "gauge holds the last sweep's error");
+    }
+
+    #[test]
+    fn publish_is_improvement_gated() {
+        // A learner whose error cannot improve (operator already exact,
+        // min_gain pushed high) publishes exactly once.
+        let n = 4;
+        let a = crate::transforms::hadamard(n);
+        let coord = Coordinator::start(
+            vec![("h".to_string(), Arc::new(a.clone()) as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let metrics = Arc::new(Metrics::new());
+        let mut learner = OnlineLearner::new(
+            "h",
+            coord.registry(),
+            metrics.clone(),
+            OnlinePalm::cold(
+                &[(n, n); 2],
+                OnlineConfig::new(PalmConfig::new(vec![Constraint::SpRowCol(2); 2], 1)),
+            ),
+            OnlineLearnConfig { batch_cols: n, swap_every: 1, min_gain: 10.0 },
+        );
+        let ctx = ExecCtx::new(1);
+        let publish = publish_plain();
+        for (j, col) in hadamard_stream(n, 10) {
+            learner.observe(j, col);
+            while learner.try_step(&ctx, &publish).is_some() {}
+        }
+        // min_gain = 10: only the first publish (vs ∞) can clear the bar.
+        assert_eq!(learner.swaps(), 1);
+        assert_eq!(metrics.snapshot().online_swaps, 1);
+        assert_eq!(metrics.snapshot().online_batches, 10);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fixed_stream_is_bitwise_reproducible() {
+        // Same observation stream, fresh learner ⇒ bitwise-identical
+        // factors, λ, and swap count (the determinism contract).
+        let n = 8;
+        let stream = hadamard_stream(n, 12);
+        let run = |threads: usize| {
+            let coord = Coordinator::start(
+                vec![(
+                    "h".to_string(),
+                    Arc::new(crate::transforms::hadamard(n)) as Arc<dyn BatchOp>,
+                )],
+                CoordinatorConfig::default(),
+            );
+            let mut learner = OnlineLearner::new(
+                "h",
+                coord.registry(),
+                Arc::new(Metrics::new()),
+                OnlinePalm::cold(
+                    &[(n, n); 3],
+                    OnlineConfig::new(PalmConfig::new(vec![Constraint::SpRowCol(2); 3], 1)),
+                ),
+                OnlineLearnConfig::default(),
+            );
+            let ctx = ExecCtx::new(threads);
+            let publish = publish_plain();
+            for (j, col) in &stream {
+                learner.observe(*j, col.clone());
+                while learner.try_step(&ctx, &publish).is_some() {}
+            }
+            let st = learner.palm().state().clone();
+            let swaps = learner.swaps();
+            coord.shutdown();
+            (st, swaps)
+        };
+        let (st1, sw1) = run(1);
+        let (st4, sw4) = run(4);
+        assert_eq!(sw1, sw4, "swap decisions diverged across thread counts");
+        assert_eq!(st1.lambda.to_bits(), st4.lambda.to_bits());
+        for (p, q) in st1.mats.iter().zip(&st4.mats) {
+            assert_eq!(p.data(), q.data(), "factor bits diverged");
+        }
+    }
+
+    #[test]
+    fn retired_operator_never_panics_the_learner() {
+        let n = 4;
+        let a = crate::transforms::hadamard(n);
+        let coord = Coordinator::start(
+            vec![("h".to_string(), Arc::new(a) as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let mut learner = OnlineLearner::new(
+            "h",
+            coord.registry(),
+            Arc::new(Metrics::new()),
+            OnlinePalm::cold(
+                &[(n, n); 2],
+                OnlineConfig::new(PalmConfig::new(vec![Constraint::SpRowCol(2); 2], 1)),
+            ),
+            OnlineLearnConfig { batch_cols: n, swap_every: 1, min_gain: 0.0 },
+        );
+        coord.registry().retire("h");
+        let ctx = ExecCtx::new(1);
+        let publish = publish_plain();
+        for (j, col) in hadamard_stream(n, 3) {
+            learner.observe(j, col);
+            while learner.try_step(&ctx, &publish).is_some() {}
+        }
+        assert_eq!(learner.swaps(), 0, "publish to a retired op must be a quiet no-op");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn drift_is_tracked_under_forgetting() {
+        // The true operator is replaced mid-stream; with forgetting the
+        // published generation re-fits the new one.
+        let mut rng = Rng::new(41);
+        let n = 6;
+        let a0 = Mat::randn(n, n, &mut rng);
+        let a1 = Mat::randn(n, n, &mut rng);
+        let coord = Coordinator::start(
+            vec![("m".to_string(), Arc::new(a0.clone()) as Arc<dyn BatchOp>)],
+            CoordinatorConfig::default(),
+        );
+        let mut learner = OnlineLearner::new(
+            "m",
+            coord.registry(),
+            Arc::new(Metrics::new()),
+            OnlinePalm::cold(
+                &[(n, n); 2],
+                OnlineConfig::new(PalmConfig::new(
+                    vec![Constraint::SpGlobal(n * n); 2],
+                    1,
+                ))
+                .with_forgetting(0.5),
+            ),
+            OnlineLearnConfig { batch_cols: n, swap_every: 2, min_gain: 0.0 },
+        );
+        let ctx = ExecCtx::new(1);
+        let publish = publish_plain();
+        let mut feed = |learner: &mut OnlineLearner, a: &Mat, passes: usize| {
+            for _ in 0..passes {
+                for j in 0..n {
+                    learner.observe(j, a.col(j));
+                    while learner.try_step(&ctx, &publish).is_some() {}
+                }
+            }
+        };
+        feed(&mut learner, &a0, 30);
+        let swaps_before_drift = learner.swaps();
+        feed(&mut learner, &a1, 30);
+        let f = learner.palm().to_faust();
+        let (fresh, stale) = (f.relative_error_fro(&a1), f.relative_error_fro(&a0));
+        assert!(fresh < stale, "learner stuck on the stale operator: {fresh} vs {stale}");
+        // The staleness-aware gate keeps publishing after the operator
+        // moved: the incumbent generation (fit to a0) re-scores badly on
+        // the drifted surrogate, so re-fits to a1 clear the bar.
+        assert!(
+            learner.swaps() > swaps_before_drift,
+            "gate froze after drift: {} swaps before, {} after",
+            swaps_before_drift,
+            learner.swaps()
+        );
+        coord.shutdown();
+    }
+}

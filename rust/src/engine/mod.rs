@@ -33,6 +33,16 @@
 //!   leave the pool idle. Drives `palm4msa_fleet` /
 //!   `hierarchical::factorize_fleet` and the registry's
 //!   `refactorize_fleet` (fleets of operators behind one service).
+//! - [`shard`] — [`ShardSet`], N independent pools behind one
+//!   coordinator (`serve --shards N`): the registry pins each operator
+//!   to a shard by its plan's [`CostProfile`] and idle shards steal
+//!   whole flush jobs; bitwise identical to one pool because every
+//!   kernel here is thread-invariant.
+//!
+//! The plan/kernel/pool/arena stack is generic over the serving scalar
+//! ([`Scalar`]: `f64` master, `f32` tier with doubled SIMD lanes) — the
+//! coordinator's precision policy picks which generation serves, the
+//! engine just compiles and runs both.
 //!
 //! [`ApplyEngine`] owns a pool + config and compiles plans;
 //! [`EngineOp`] bundles plan + pool + metrics into a servable operator
@@ -42,11 +52,14 @@
 //! fixed per-batch operand traffic) that the coordinator's adaptive
 //! batcher sizes per-operator batches from.
 //!
-//! **Architecture** (the serving path end to end):
-//! `plan` → `kernel` → `pool` → `arena` → `coordinator::batcher` →
-//! `coordinator::Registry` — the engine compiles and executes, the
-//! coordinator decides *when* (batch sizing) and *what* (live operator
-//! registry) to execute.
+//! **Architecture** (the deployment end to end): `plan` → `kernel` →
+//! `pool` → `shard` → `arena` → `coordinator::batcher` →
+//! `coordinator::Registry` → `server::admission` → `server::wire` →
+//! `store` → `coordinator::online` — the engine compiles and executes,
+//! the coordinator decides *when* (batch sizing) and *what* (live
+//! operator registry, precision, online learning) to execute. The
+//! layer-by-layer map with paper-section and PR cross-references lives
+//! in `docs/ARCHITECTURE.md`.
 //!
 //! **Paper map:** this layer realizes §II's Relative Complexity Gain as
 //! wall-clock — `faust bench engine_scaling` measures it; the fig6

@@ -4,8 +4,12 @@ use faust::bench_util::{fmt, open_loop_load, OpenLoopConfig, Table};
 use faust::cli::{Args, USAGE};
 use faust::coordinator::{
     engine_ops, AdaptiveBatchConfig, BatchOp, Coordinator, CoordinatorConfig,
-    Precision, QosClass, RegistryError,
+    OnlineLearnConfig, OnlineLearnerTask, Precision, QosClass, RegistryError,
 };
+use faust::faust::Faust;
+use faust::palm::online::{OnlineConfig, OnlinePalm};
+use faust::palm::{FactorState, PalmConfig};
+use faust::prox::Constraint;
 use faust::server::wire::Dtype;
 use faust::server::{Server, ServerConfig};
 use faust::dictlearn::{faust_dictionary_learning_with_ctx, KsvdConfig};
@@ -377,6 +381,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if adaptive { "adaptive (plan-aware)" } else { "fixed" }
     );
     let fleet_n: usize = args.get("factorize-fleet", 0);
+    let online_learn = args.flag("online-learn");
+    // The online demo warm-starts from the generation being served.
+    let hf_warm = if online_learn { Some(hf.clone()) } else { None };
     let mut ops = engine_ops(&engine, vec![("faust".to_string(), hf)], batch);
     ops.push(("dense".to_string(), Arc::new(h.clone()) as Arc<dyn BatchOp>));
     // A fleet of served operators (one per "subject", §V framing): all
@@ -397,6 +404,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         adaptive: if adaptive { Some(AdaptiveBatchConfig::default()) } else { None },
         precision,
         n_shards: shards,
+        online: if online_learn { Some(OnlineLearnConfig::default()) } else { None },
     };
     let coord = Coordinator::start(ops, cfg);
     let registry = coord.registry();
@@ -528,6 +536,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // `--online-learn`: streaming factorization under drift (ROADMAP
+    // item i). A feeder thread observes columns of a slowly *rotating*
+    // true operator; the learner — warm-started from the served
+    // butterfly's factors and λ, sweeping on the serving engine's ctx —
+    // folds each mini-batch into its surrogate and epoch-swaps improved
+    // generations through the live registry, zero stall.
+    let online_demo = hf_warm.map(|warm| {
+        let init = FactorState {
+            mats: warm.factors().iter().map(|csr| csr.to_dense()).collect(),
+            lambda: warm.lambda(),
+        };
+        let palm = OnlinePalm::warm(
+            init,
+            OnlineConfig::new(PalmConfig::new(
+                vec![Constraint::SpRowCol(2); warm.n_factors()],
+                1,
+            ))
+            .with_forgetting(0.8),
+        );
+        let learner = coord
+            .online_learner("faust", palm)
+            .expect("--online-learn sets CoordinatorConfig::online");
+        let publish = {
+            let engine = engine.clone();
+            move |f: &Faust| Arc::new(engine.op_batch_hint(f, batch)) as Arc<dyn BatchOp>
+        };
+        let task = OnlineLearnerTask::spawn(learner, engine.ctx(), publish, 1024);
+        let passes: usize = args.get("online-passes", 24);
+        let theta: f64 = args.get("online-drift", 0.01);
+        let h = h.clone();
+        println!(
+            "online: learning 'faust' from {passes} passes over a drifting operator \
+             (rotation {theta:.3} rad/pass, forgetting 0.8)"
+        );
+        // The feeder hands the task back so the main thread can drain
+        // the tail and collect the final report after the load finishes.
+        std::thread::spawn(move || {
+            let mut a = h;
+            let (s, c) = theta.sin_cos();
+            for _ in 0..passes {
+                for j in 0..n {
+                    if !task.observe(j, a.col(j)) {
+                        return task;
+                    }
+                }
+                // Drift: rotate adjacent row pairs of the true operator
+                // by θ — the slowly rotating operator scenario the
+                // online_drift bench gates.
+                for i in (0..n - 1).step_by(2) {
+                    for j in 0..n {
+                        let (u, v) = (a.at(i, j), a.at(i + 1, j));
+                        a.set(i, j, c * u - s * v);
+                        a.set(i + 1, j, s * u + c * v);
+                    }
+                }
+            }
+            task
+        })
+    });
     // `--listen ADDR` puts the TCP ingress front end (wire protocol +
     // admission control + QoS classes) in front of the coordinator; it
     // serves remote `faust client` traffic alongside the local load.
@@ -548,8 +615,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     if args.flag("repl") {
-        // The swapper (if any) publishes into the same live registry while
-        // the console runs; it finishes on its own.
+        // Settle the online demo first so its swaps are visible to
+        // `stats`; the swapper (if any) publishes into the same live
+        // registry while the console runs and finishes on its own.
+        if let Some(feeder) = online_demo {
+            let task = feeder.join().map_err(|_| err("online feeder panicked"))?;
+            let rep = task.finish();
+            println!(
+                "online: {} mini-batches over {} columns, {} swap(s), final rel err {:.2e}",
+                rep.batches, rep.cols, rep.swaps, rep.rel_err
+            );
+        }
         return serve_repl(coord, ingress, &engine);
     }
     let client = coord.client();
@@ -603,6 +679,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.join()
             .map_err(|_| err("fleet refactorization thread panicked"))?;
     }
+    if let Some(feeder) = online_demo {
+        let task = feeder.join().map_err(|_| err("online feeder panicked"))?;
+        let rep = task.finish();
+        println!(
+            "online: {} mini-batches over {} observed columns, {} generation swap(s), \
+             final rel err {:.2e}",
+            rep.batches, rep.cols, rep.swaps, rep.rel_err
+        );
+    }
     if let Some(server) = ingress {
         server.shutdown();
     }
@@ -641,6 +726,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.f32_apply_frac() * 100.0,
         precision_lines.join(" ")
     );
+    if snap.online_batches > 0 {
+        println!(
+            "online: batches={} cols={} swaps={} rel_err={:.2e}",
+            snap.online_batches, snap.online_cols, snap.online_swaps, snap.online_rel_err
+        );
+    }
     if snap.ingress_connections > 0 {
         println!(
             "ingress: accepted={} shed=[interactive={} standard={} bulk={}] \
@@ -782,6 +873,10 @@ fn serve_repl(
                     s.applies_f64,
                     s.applies_f32,
                     s.f32_apply_frac() * 100.0,
+                );
+                println!(
+                    "  online: batches={} cols={} swaps={} rel_err={:.2e}",
+                    s.online_batches, s.online_cols, s.online_swaps, s.online_rel_err,
                 );
                 for (name, served, err) in registry.precision_report() {
                     match err {

@@ -1,0 +1,670 @@
+//! Online / streaming palm4MSA — mini-batch surrogate factorization
+//! (ROADMAP item i; Mairal et al., *Online Learning for Matrix
+//! Factorization and Sparse Coding*).
+//!
+//! The batch driver ([`super::palm4msa_with_ctx`]) needs the whole target
+//! `A` up front. A *serving* system sees `A` one column at a time — the
+//! request payloads flowing through the coordinator, or a sensor stream
+//! whose underlying operator drifts. This module maintains the sparse
+//! factorization *incrementally* from that stream.
+//!
+//! # State
+//!
+//! An [`OnlinePalm`] learner carries:
+//!
+//! | field        | meaning                                                    |
+//! |--------------|------------------------------------------------------------|
+//! | `state`      | the PALM variables: factors `S_1..S_J` + λ                 |
+//! | `surrogate`  | `Â ∈ R^{m×n}` — per-column running average of observations |
+//! | `weights`    | `w ∈ R^n` — per-column observation mass (0 = never seen)   |
+//!
+//! Observing column `j` with payload `a` folds it into the surrogate:
+//!
+//! ```text
+//! w_j = 0:   â_j ← a,                      w_j ← 1        (first sighting)
+//! w_j > 0:   â_j ← (w_j·â_j + a)/(w_j+1),  w_j ← w_j + 1  (running mean)
+//! ```
+//!
+//! and a forgetting factor `ρ ∈ (0, 1]` ([`OnlineConfig::forgetting`]),
+//! applied once per mini-batch, decays every `w_j` so stale observations
+//! lose mass under drift (`ρ = 1` never forgets — the pure running-mean
+//! regime).
+//!
+//! # Update
+//!
+//! Each [`OnlinePalm::sweep`] runs one Gauss–Seidel pass of projected
+//! gradient steps on the *weighted* surrogate objective
+//!
+//! ```text
+//! f(S, λ) = ½ ‖(Â − λ S_J ⋯ S_1) D‖_F²,   D = diag(√w_1 … √w_n)
+//! ```
+//!
+//! reusing the batch driver's prefix-product sweep cache, its warm-started
+//! power iterations, and its exact kernel sequence. The weighting enters
+//! in precisely four places: the residual's columns are scaled by `w_j`,
+//! the Lipschitz modulus picks up a `max_j w_j` factor (‖R D‖₂² ≤
+//! ‖R‖₂² max w), and the λ and objective accumulations weight their
+//! per-column terms. Because multiplying by `1.0` is bitwise exact, a
+//! fresh learner whose mini-batch covered every column exactly once (all
+//! `w_j = 1`) reproduces one batch PALM iteration **bitwise** — the
+//! online/batch boundary proptest below pins this.
+//!
+//! # Determinism
+//!
+//! Given a fixed observation stream, sweeps are bitwise reproducible at
+//! any thread count (all ctx kernels are thread-invariant), and every
+//! sweep increments the process-wide [`super::iterations_total`] witness.
+//!
+//! # Example: stream columns, watch the error fall
+//!
+//! ```
+//! use faust::engine::ExecCtx;
+//! use faust::palm::online::{OnlineConfig, OnlinePalm};
+//! use faust::palm::PalmConfig;
+//! use faust::prox::Constraint;
+//!
+//! let a = faust::transforms::hadamard(4);
+//! let cfg = OnlineConfig::new(PalmConfig::new(
+//!     vec![Constraint::SpRowCol(2), Constraint::SpRowCol(2)],
+//!     1,
+//! ));
+//! let mut learner = OnlinePalm::cold(&[(4, 4), (4, 4)], cfg);
+//! let ctx = ExecCtx::new(1);
+//! let mut first = f64::NAN;
+//! let mut last = f64::NAN;
+//! for pass in 0..40 {
+//!     // One mini-batch per pass: every column of the (static) target.
+//!     let batch: Vec<(usize, Vec<f64>)> = (0..4).map(|j| (j, a.col(j))).collect();
+//!     let step = learner.step(&ctx, &batch);
+//!     if pass == 0 {
+//!         first = step.rel_err;
+//!     }
+//!     last = step.rel_err;
+//! }
+//! // The weighted relative error falls as the stream accumulates.
+//! assert!(last < 0.5 * first, "rel_err {first} -> {last} never fell");
+//! assert!(last < 0.05, "hadamard should factorize nearly exactly: {last}");
+//! ```
+
+use super::{FactorState, PalmConfig, SweepCache, UpdateOrder, ITERATIONS_TOTAL};
+use crate::engine::ExecCtx;
+use crate::faust::Faust;
+use crate::linalg::Mat;
+use crate::prox::Constraint;
+use std::sync::atomic::Ordering;
+
+/// Configuration of one online learner: the PALM geometry (constraints,
+/// step margin, sweep order — `n_iter` is ignored; the *stream* decides
+/// how many sweeps run) plus the streaming-specific forgetting factor.
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    /// Constraint set, step margin `alpha`, and sweep order. `n_iter`
+    /// and `rel_tol` are unused — sweeps run as mini-batches arrive.
+    pub palm: PalmConfig,
+    /// Per-mini-batch decay `ρ ∈ (0, 1]` of every column's observation
+    /// mass. `1.0` (the default) never forgets: the surrogate is the
+    /// exact running mean of all observations. Under drift, `ρ < 1`
+    /// lets fresh observations outweigh stale ones.
+    pub forgetting: f64,
+}
+
+impl OnlineConfig {
+    /// `palm` geometry with no forgetting (`ρ = 1`).
+    pub fn new(palm: PalmConfig) -> Self {
+        OnlineConfig { palm, forgetting: 1.0 }
+    }
+
+    /// Same geometry with forgetting factor `rho` (clamped to (0, 1]).
+    pub fn with_forgetting(mut self, rho: f64) -> Self {
+        self.forgetting = if rho.is_finite() { rho.clamp(f64::MIN_POSITIVE, 1.0) } else { 1.0 };
+        self
+    }
+}
+
+/// What one [`OnlinePalm::sweep`] reports.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineStep {
+    /// Weighted surrogate objective `½ Σ_j w_j ‖â_j − λ (Π S)_j‖²` after
+    /// the sweep. Grows with accumulated observation mass — compare
+    /// [`OnlineStep::rel_err`] across sweeps, not this.
+    pub objective: f64,
+    /// Scale-invariant weighted relative error
+    /// `‖(Â − λΠS) D‖_F / ‖Â D‖_F` — the drift-tracking signal the
+    /// coordinator's swap cadence and metrics report.
+    pub rel_err: f64,
+    /// λ after the sweep's closed-form update.
+    pub lambda: f64,
+}
+
+/// A streaming palm4MSA learner (see the module docs).
+#[derive(Clone, Debug)]
+pub struct OnlinePalm {
+    cfg: OnlineConfig,
+    st: FactorState,
+    surrogate: Mat,
+    weights: Vec<f64>,
+    l_warm: Vec<Vec<f64>>,
+    r_warm: Vec<Vec<f64>>,
+    cols_seen: u64,
+    batches: u64,
+}
+
+impl OnlinePalm {
+    /// Cold start: paper-default factor init (`S_1 = 0`, rest identity,
+    /// `λ = 1`) for the factor shapes `dims[j] = (rows, cols)`,
+    /// rightmost first (same convention as [`FactorState::default_init`]).
+    pub fn cold(dims: &[(usize, usize)], cfg: OnlineConfig) -> OnlinePalm {
+        OnlinePalm::warm(FactorState::default_init(dims), cfg)
+    }
+
+    /// Warm start from an existing factor state — the serving
+    /// generation's factors and λ, so the stream refines rather than
+    /// relearns (the coordinator's `OnlineLearner` path).
+    pub fn warm(init: FactorState, cfg: OnlineConfig) -> OnlinePalm {
+        let nfac = init.mats.len();
+        assert_eq!(cfg.palm.constraints.len(), nfac, "constraint/factor count mismatch");
+        let rows = init.mats.last().expect("at least one factor").rows();
+        let cols = init.mats[0].cols();
+        OnlinePalm {
+            cfg,
+            st: init,
+            surrogate: Mat::zeros(rows, cols),
+            weights: vec![0.0; cols],
+            l_warm: vec![vec![]; nfac],
+            r_warm: vec![vec![]; nfac],
+            cols_seen: 0,
+            batches: 0,
+        }
+    }
+
+    /// Resume from persisted surrogate state (a store snapshot's online
+    /// section): `warm` plus the surrogate, weights and counters exactly
+    /// as they were at persist time.
+    pub fn from_parts(
+        init: FactorState,
+        cfg: OnlineConfig,
+        surrogate: Mat,
+        weights: Vec<f64>,
+        cols_seen: u64,
+        batches: u64,
+    ) -> OnlinePalm {
+        let mut ol = OnlinePalm::warm(init, cfg);
+        assert_eq!(surrogate.shape(), ol.surrogate.shape(), "surrogate shape mismatch");
+        assert_eq!(weights.len(), ol.weights.len(), "weight count mismatch");
+        ol.surrogate = surrogate;
+        ol.weights = weights;
+        ol.cols_seen = cols_seen;
+        ol.batches = batches;
+        ol
+    }
+
+    /// Fold one observed column into the surrogate (no decay — decay is
+    /// per mini-batch, applied by [`OnlinePalm::step`]).
+    ///
+    /// # Panics
+    /// If `j` is out of range or `col` has the wrong length.
+    pub fn observe(&mut self, j: usize, col: &[f64]) {
+        let (m, n) = self.surrogate.shape();
+        assert!(j < n, "column index {j} out of range (n = {n})");
+        assert_eq!(col.len(), m, "observed column length");
+        let w = self.weights[j];
+        if w == 0.0 {
+            // First sighting: bitwise copy (the running-mean arithmetic
+            // would round, and `0·0 + a` can flip -0.0 signs).
+            for (i, &v) in col.iter().enumerate() {
+                self.surrogate.set(i, j, v);
+            }
+            self.weights[j] = 1.0;
+        } else {
+            let inv = 1.0 / (w + 1.0);
+            for (i, &v) in col.iter().enumerate() {
+                let old = self.surrogate.at(i, j);
+                self.surrogate.set(i, j, (w * old + v) * inv);
+            }
+            self.weights[j] = w + 1.0;
+        }
+        self.cols_seen += 1;
+    }
+
+    /// Decay every column's observation mass by the forgetting factor
+    /// (one mini-batch boundary). A no-op when `ρ = 1`.
+    pub fn decay(&mut self) {
+        let rho = self.cfg.forgetting;
+        if rho < 1.0 {
+            for w in &mut self.weights {
+                *w *= rho;
+            }
+        }
+    }
+
+    /// One mini-batch: decay, fold every `(column, payload)` observation
+    /// into the surrogate, then run one weighted sweep.
+    pub fn step(&mut self, ctx: &ExecCtx, batch: &[(usize, Vec<f64>)]) -> OnlineStep {
+        self.decay();
+        for (j, col) in batch {
+            self.observe(*j, col);
+        }
+        self.batches += 1;
+        self.sweep(ctx)
+    }
+
+    /// One weighted Gauss–Seidel sweep over the factors + λ update —
+    /// the batch driver's exact kernel sequence on the surrogate, with
+    /// the four weighted deviations described in the module docs.
+    pub fn sweep(&mut self, ctx: &ExecCtx) -> OnlineStep {
+        let cfg = &self.cfg.palm;
+        let st = &mut self.st;
+        let a = &self.surrogate;
+        let nfac = cfg.constraints.len();
+        let max_w = self.weights.iter().cloned().fold(0.0f64, f64::max);
+        let order: Vec<usize> = match cfg.update_order {
+            UpdateOrder::RightToLeft => (0..nfac).collect(),
+            UpdateOrder::LeftToRight => (0..nfac).rev().collect(),
+        };
+        let mut cache = SweepCache::build(ctx, &st.mats, cfg.update_order);
+        for &j in &order {
+            let (l, r) = cache.sides(j, cfg.update_order);
+            if !matches!(cfg.constraints[j], Constraint::Frozen) {
+                // Lipschitz modulus of the weighted objective:
+                // λ² ‖L‖₂² ‖R D‖₂² ≤ λ² ‖L‖₂² ‖R‖₂² · max_j w_j.
+                let l_norm =
+                    l.map_or(1.0, |m| ctx.spectral_norm_warm(m, &mut self.l_warm[j], 50, 1e-9));
+                let r_norm =
+                    r.map_or(1.0, |m| ctx.spectral_norm_warm(m, &mut self.r_warm[j], 50, 1e-9));
+                let c = (1.0 + cfg.alpha)
+                    * st.lambda
+                    * st.lambda
+                    * l_norm
+                    * l_norm
+                    * r_norm
+                    * r_norm
+                    * max_w;
+                if c <= 0.0 || !c.is_finite() {
+                    // Degenerate chain or empty surrogate: project only.
+                    st.mats[j] = cfg.constraints[j].project(&st.mats[j]);
+                } else {
+                    // grad = λ Lᵀ ((λ L S R − Â) W) Rᵀ, W = diag(w).
+                    let s = &st.mats[j];
+                    let ls = match l {
+                        None => s.clone(),
+                        Some(lm) => ctx.gemm(lm, s),
+                    };
+                    let lsr = match r {
+                        None => ls,
+                        Some(rm) => ctx.gemm(&ls, rm),
+                    };
+                    let mut err = lsr;
+                    err.scale(st.lambda);
+                    err = err.sub(a);
+                    scale_cols(&mut err, &self.weights);
+                    let lt_err = match l {
+                        None => err,
+                        Some(lm) => ctx.gemm_tn(lm, &err),
+                    };
+                    let mut grad = match r {
+                        None => lt_err,
+                        Some(rm) => ctx.gemm_nt(&lt_err, rm),
+                    };
+                    grad.scale(st.lambda);
+                    let mut stepped = st.mats[j].clone();
+                    stepped.axpy(-1.0 / c, &grad);
+                    st.mats[j] = cfg.constraints[j].project(&stepped);
+                }
+            }
+            cache.fold(ctx, &st.mats[j], cfg.update_order);
+        }
+        // Weighted closed-form λ: Tr(Aᵀ Â W) / Tr(Âᵀ Â W), accumulated
+        // in the batch driver's data order so `w ≡ 1` matches bitwise.
+        let a_hat = cache.into_product();
+        let denom = weighted_dot(&a_hat, &a_hat, &self.weights);
+        if denom > 0.0 {
+            st.lambda = weighted_dot(a, &a_hat, &self.weights) / denom;
+        }
+        ITERATIONS_TOTAL.fetch_add(1, Ordering::Relaxed);
+        let objective = weighted_objective(a, &a_hat, st.lambda, &self.weights);
+        let energy = weighted_dot(a, a, &self.weights);
+        let rel_err = if energy > 0.0 { (2.0 * objective / energy).sqrt() } else { 0.0 };
+        OnlineStep { objective, rel_err, lambda: st.lambda }
+    }
+
+    /// The current factor state (factors + λ).
+    pub fn state(&self) -> &FactorState {
+        &self.st
+    }
+
+    /// Weighted relative error of an *arbitrary* factor state measured
+    /// against the current surrogate — the same metric as
+    /// [`OnlineStep::rel_err`]. This is how a swap policy re-scores a
+    /// previously published generation: under drift the surrogate keeps
+    /// moving, so a generation's error is a function of *now*, not of
+    /// when it shipped.
+    pub fn rel_err_of(&self, ctx: &ExecCtx, st: &FactorState) -> f64 {
+        let a = &self.surrogate;
+        let energy = weighted_dot(a, a, &self.weights);
+        if energy <= 0.0 {
+            return 0.0;
+        }
+        let a_hat = st.product_ctx(ctx);
+        let objective = weighted_objective(a, &a_hat, st.lambda, &self.weights);
+        (2.0 * objective / energy).sqrt()
+    }
+
+    /// The surrogate `Â` (running per-column means).
+    pub fn surrogate(&self) -> &Mat {
+        &self.surrogate
+    }
+
+    /// Per-column observation mass `w` (0 = never observed).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Total columns ever observed (with repetition).
+    pub fn cols_seen(&self) -> u64 {
+        self.cols_seen
+    }
+
+    /// Mini-batches stepped so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Snapshot the current factors as a servable [`Faust`] (the
+    /// generation the coordinator epoch-swaps in).
+    pub fn to_faust(&self) -> Faust {
+        self.st.clone().into_faust()
+    }
+}
+
+/// Scale column `j` of `m` by `w[j]` in place.
+fn scale_cols(m: &mut Mat, w: &[f64]) {
+    let cols = m.cols();
+    for (idx, v) in m.data_mut().iter_mut().enumerate() {
+        *v *= w[idx % cols];
+    }
+}
+
+/// `Σ_{i,j} a[i,j]·b[i,j]·w[j]`, accumulated in row-major data order —
+/// with `w ≡ 1` this is bitwise [`Mat::dot`] / [`Mat::fro2`].
+fn weighted_dot(a: &Mat, b: &Mat, w: &[f64]) -> f64 {
+    let cols = a.cols();
+    a.data()
+        .iter()
+        .zip(b.data())
+        .enumerate()
+        .map(|(idx, (av, bv))| av * bv * w[idx % cols])
+        .sum()
+}
+
+/// `½ Σ_{i,j} w_j (a[i,j] − λ p[i,j])²` in data order — with `w ≡ 1`
+/// this is bitwise `objective_of`.
+fn weighted_objective(a: &Mat, product: &Mat, lambda: f64, w: &[f64]) -> f64 {
+    let cols = a.cols();
+    0.5 * a
+        .data()
+        .iter()
+        .zip(product.data())
+        .enumerate()
+        .map(|(idx, (av, pv))| {
+            let d = av - lambda * pv;
+            d * d * w[idx % cols]
+        })
+        .sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{palm4msa_with_ctx, PalmConfig};
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testutil::{check, ensure, PropConfig};
+
+    fn assert_states_bitwise_eq(a: &FactorState, b: &FactorState, tag: &str) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{tag}: lambda");
+        assert_eq!(a.mats.len(), b.mats.len(), "{tag}: factor count");
+        for (p, q) in a.mats.iter().zip(&b.mats) {
+            assert_eq!(p.data(), q.data(), "{tag}: factor bits");
+        }
+    }
+
+    /// The online/batch boundary contract (ISSUE 9): one cold mini-batch
+    /// covering *all* columns exactly once, warm start disabled, is one
+    /// full batch PALM sweep — bitwise, across shapes, sweep orders,
+    /// constraint budgets and thread counts.
+    #[test]
+    fn cold_full_cover_batch_is_one_palm_sweep_bitwise() {
+        check(
+            "online_full_cover_matches_palm",
+            &PropConfig { cases: 48, ..PropConfig::default() },
+            |rng| {
+                let m = 3 + rng.below(6);
+                let n = 3 + rng.below(6);
+                let k = 2 + rng.below(5);
+                let a = crate::testutil::gen::mat_shaped(rng, m, n);
+                let dims = [(k, n), (m, k)];
+                let budget1 = 1 + rng.below(k * n);
+                let budget2 = 1 + rng.below(m * k);
+                let mut cfg = PalmConfig::new(
+                    vec![Constraint::SpGlobal(budget1), Constraint::SpGlobal(budget2)],
+                    1,
+                );
+                if rng.below(2) == 1 {
+                    cfg.update_order = UpdateOrder::LeftToRight;
+                }
+                let threads = [1usize, 4][rng.below(2)];
+                let ctx = ExecCtx::new(threads);
+                let solo =
+                    palm4msa_with_ctx(&ctx, &a, FactorState::default_init(&dims), &cfg);
+
+                let mut ol = OnlinePalm::cold(&dims, OnlineConfig::new(cfg));
+                // Observe every column exactly once, in a shuffled order
+                // (surrogate assembly is order-independent for first
+                // sightings), then sweep.
+                let mut idx: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut idx);
+                for &j in &idx {
+                    ol.observe(j, &a.col(j));
+                }
+                ensure(ol.weights().iter().all(|&w| w == 1.0), "uniform unit weights")?;
+                ensure(ol.surrogate().data() == a.data(), "surrogate == target bitwise")?;
+                let step = ol.sweep(&ctx);
+
+                ensure(
+                    ol.state().lambda.to_bits() == solo.state.lambda.to_bits(),
+                    format!("lambda {} != {}", ol.state().lambda, solo.state.lambda),
+                )?;
+                for (p, q) in ol.state().mats.iter().zip(&solo.state.mats) {
+                    ensure(p.data() == q.data(), "factor bits diverged")?;
+                }
+                ensure(
+                    step.objective.to_bits() == solo.objective_trace[0].to_bits(),
+                    format!(
+                        "objective {} != {}",
+                        step.objective, solo.objective_trace[0]
+                    ),
+                )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn repeated_stream_converges_like_batch_palm() {
+        // Streaming the same static operator's columns over and over
+        // (uniform weights throughout) follows the batch trajectory:
+        // after T mini-batches the learner is as good as T batch sweeps.
+        let mut rng = Rng::new(71);
+        let a = crate::transforms::hadamard(8);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpRowCol(2); 3],
+            1,
+        );
+        let ctx = ExecCtx::new(2);
+        let dims = [(8, 8), (8, 8), (8, 8)];
+        let mut ol = OnlinePalm::cold(&dims, OnlineConfig::new(cfg));
+        let mut last = f64::INFINITY;
+        for _ in 0..30 {
+            let mut idx: Vec<usize> = (0..8).collect();
+            rng.shuffle(&mut idx);
+            let batch: Vec<(usize, Vec<f64>)> = idx.iter().map(|&j| (j, a.col(j))).collect();
+            last = ol.step(&ctx, &batch).rel_err;
+        }
+        assert!(last < 1e-3, "streamed hadamard never converged: rel_err={last}");
+        let f = ol.to_faust();
+        assert!(f.relative_error_fro(&a) < 1e-3);
+    }
+
+    #[test]
+    fn rel_err_of_scores_states_against_the_current_surrogate() {
+        // The learner's own state scores its last sweep's error, and a
+        // stale snapshot scores *worse* once forgetting has moved the
+        // surrogate on to a different operator — the property the swap
+        // policy's staleness-aware gate relies on.
+        let mut rng = Rng::new(33);
+        let n = 6;
+        let a0 = crate::linalg::Mat::randn(n, n, &mut rng);
+        let a1 = crate::linalg::Mat::randn(n, n, &mut rng);
+        let cfg = OnlineConfig::new(PalmConfig::new(
+            vec![Constraint::SpGlobal(n * n); 2],
+            1,
+        ))
+        .with_forgetting(0.5);
+        let ctx = ExecCtx::new(1);
+        let mut ol = OnlinePalm::cold(&[(n, n); 2], cfg);
+        let feed = |ol: &mut OnlinePalm, a: &crate::linalg::Mat, passes: usize| {
+            let mut last = f64::NAN;
+            for _ in 0..passes {
+                let batch: Vec<(usize, Vec<f64>)> =
+                    (0..n).map(|j| (j, a.col(j))).collect();
+                last = ol.step(&ctx, &batch).rel_err;
+            }
+            last
+        };
+        let r0 = feed(&mut ol, &a0, 20);
+        let st0 = ol.state().clone();
+        let scored = ol.rel_err_of(&ctx, &st0);
+        assert!(
+            (scored - r0).abs() <= 1e-9 * r0.max(1.0),
+            "self-score {scored} far from last sweep's rel_err {r0}"
+        );
+        feed(&mut ol, &a1, 20);
+        let stale = ol.rel_err_of(&ctx, &st0);
+        let fresh = ol.rel_err_of(&ctx, ol.state());
+        assert!(
+            fresh < stale,
+            "stale snapshot must score worse on the moved surrogate: {fresh} vs {stale}"
+        );
+    }
+
+    #[test]
+    fn warm_start_refines_instead_of_relearning() {
+        // A warm learner seeded with an already-good factorization must
+        // start at (and stay near) that error, while a cold learner
+        // starts far worse after the same single mini-batch.
+        let a = crate::transforms::hadamard(8);
+        let cfg = PalmConfig::new(vec![Constraint::SpRowCol(2); 3], 60);
+        let ctx = ExecCtx::new(1);
+        let dims = [(8, 8), (8, 8), (8, 8)];
+        let batch_res =
+            palm4msa_with_ctx(&ctx, &a, FactorState::default_init(&dims), &cfg);
+        let mut one = cfg.clone();
+        one.n_iter = 1;
+        let batch: Vec<(usize, Vec<f64>)> = (0..8).map(|j| (j, a.col(j))).collect();
+
+        let mut warm = OnlinePalm::warm(batch_res.state.clone(), OnlineConfig::new(one.clone()));
+        let warm_err = warm.step(&ctx, &batch).rel_err;
+
+        let mut cold = OnlinePalm::cold(&dims, OnlineConfig::new(one));
+        let cold_err = cold.step(&ctx, &batch).rel_err;
+
+        assert!(
+            warm_err < cold_err * 0.5,
+            "warm start no better than cold: warm={warm_err} cold={cold_err}"
+        );
+    }
+
+    #[test]
+    fn forgetting_tracks_a_replaced_operator() {
+        // The operator changes wholesale mid-stream. With forgetting the
+        // learner re-converges to the new operator; the surrogate's mass
+        // decays so fresh columns dominate.
+        let mut rng = Rng::new(72);
+        let a0 = Mat::randn(6, 6, &mut rng);
+        let a1 = Mat::randn(6, 6, &mut rng);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpGlobal(30), Constraint::SpGlobal(30)],
+            1,
+        );
+        let ctx = ExecCtx::new(1);
+        let dims = [(6, 6), (6, 6)];
+        let mut ol =
+            OnlinePalm::cold(&dims, OnlineConfig::new(cfg).with_forgetting(0.5));
+        let feed = |ol: &mut OnlinePalm, ctx: &ExecCtx, a: &Mat, passes: usize| {
+            let mut last = f64::INFINITY;
+            for _ in 0..passes {
+                let batch: Vec<(usize, Vec<f64>)> =
+                    (0..6).map(|j| (j, a.col(j))).collect();
+                last = ol.step(ctx, &batch).rel_err;
+            }
+            last
+        };
+        let _ = feed(&mut ol, &ctx, &a0, 40);
+        let _ = feed(&mut ol, &ctx, &a1, 40);
+        // Re-converged to the *new* operator, not stuck on the old one.
+        let f = ol.to_faust();
+        let (drifted, stale) = (f.relative_error_fro(&a1), f.relative_error_fro(&a0));
+        assert!(drifted < stale, "learner still fits the stale operator: {drifted} vs {stale}");
+    }
+
+    #[test]
+    fn from_parts_round_trips_learner_state() {
+        let mut rng = Rng::new(73);
+        let a = Mat::randn(5, 5, &mut rng);
+        let cfg = PalmConfig::new(
+            vec![Constraint::SpGlobal(15), Constraint::SpGlobal(15)],
+            1,
+        );
+        let ctx = ExecCtx::new(1);
+        let mut ol = OnlinePalm::cold(&[(5, 5), (5, 5)], OnlineConfig::new(cfg.clone()));
+        for _ in 0..3 {
+            let batch: Vec<(usize, Vec<f64>)> = (0..5).map(|j| (j, a.col(j))).collect();
+            ol.step(&ctx, &batch);
+        }
+        // Two independent resumes from the same persisted parts take
+        // bitwise-identical next steps (no hidden state beyond the
+        // parts; power-iteration warm caches rebuild in one sweep).
+        let resume = || {
+            OnlinePalm::from_parts(
+                ol.state().clone(),
+                OnlineConfig::new(cfg.clone()),
+                ol.surrogate().clone(),
+                ol.weights().to_vec(),
+                ol.cols_seen(),
+                ol.batches(),
+            )
+        };
+        let mut x = resume();
+        let mut y = resume();
+        assert_eq!(x.cols_seen(), 15);
+        assert_eq!(x.batches(), 3);
+        assert_eq!(x.surrogate().data(), ol.surrogate().data());
+        let batch: Vec<(usize, Vec<f64>)> = (0..5).map(|j| (j, a.col(j))).collect();
+        let sx = x.step(&ctx, &batch);
+        let sy = y.step(&ctx, &batch);
+        assert_eq!(sx.objective.to_bits(), sy.objective.to_bits());
+        assert_states_bitwise_eq(x.state(), y.state(), "resumed step");
+    }
+
+    #[test]
+    fn sweeps_count_into_the_global_witness() {
+        let before = crate::palm::iterations_total();
+        let a = crate::transforms::hadamard(4);
+        let cfg = PalmConfig::new(vec![Constraint::SpRowCol(2); 2], 1);
+        let ctx = ExecCtx::new(1);
+        let mut ol = OnlinePalm::cold(&[(4, 4), (4, 4)], OnlineConfig::new(cfg));
+        let batch: Vec<(usize, Vec<f64>)> = (0..4).map(|j| (j, a.col(j))).collect();
+        ol.step(&ctx, &batch);
+        ol.step(&ctx, &batch);
+        assert!(crate::palm::iterations_total() >= before + 2);
+    }
+}

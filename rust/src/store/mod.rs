@@ -55,6 +55,20 @@
 //!   directory and `rename`s over the target, so a crash mid-persist
 //!   leaves either the old snapshot or the new one, never a torn file
 //!   under the live name (the tmp dotfile is ignored by [`load_dir`]).
+//!
+//! # Learner snapshots (`.lstore`, ROADMAP item i)
+//!
+//! The online-learning tier ([`crate::palm::online`]) has *in-progress*
+//! state worth keeping too: the running surrogate Â, the per-column
+//! weights, and the current (dense, mid-optimization) factor iterates —
+//! none of which fit the operator format above. [`StoredLearner`] saves
+//! them in a sibling record with its **own magic** ([`LEARNER_MAGIC`])
+//! and **own extension** ([`LEARNER_EXTENSION`]), under the same
+//! length-prefix + CRC framing. Keeping the namespaces disjoint means
+//! [`load_dir`]'s `*.fstore` scan never sees learner files (and a
+//! learner file renamed to `.fstore` dies on its magic, not silently) —
+//! the v1 operator format is untouched. A warm restart resumes learning
+//! via [`StoredLearner::resume`], bitwise where it left off.
 
 use crate::engine::F32Bound;
 use crate::faust::Faust;
@@ -76,6 +90,13 @@ pub const MIN_VERSION: u8 = 1;
 pub const MAX_BODY: usize = 256 << 20;
 /// Extension of live snapshot files in a store directory.
 pub const EXTENSION: &str = "fstore";
+/// File magic of learner snapshots: `0xFA5E` — distinct from both the
+/// operator store's `0xFA5D` and the wire protocol's `0xFA57`, so a
+/// file fed to the wrong decoder fails on its first two bytes.
+pub const LEARNER_MAGIC: u16 = 0xFA5E;
+/// Extension of in-progress online-learner snapshots. Disjoint from
+/// [`EXTENSION`] so [`load_dir`]'s operator scan never sees them.
+pub const LEARNER_EXTENSION: &str = "lstore";
 
 const FLAG_F32_BOUND: u8 = 1;
 const MAX_NAME: usize = 64;
@@ -509,6 +530,273 @@ pub fn load_dir(dir: &Path) -> Result<LoadedStore, StoreError> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Learner snapshots (.lstore): in-progress online-factorization state.
+
+/// Everything needed to resume a [`crate::palm::online::OnlinePalm`]
+/// bitwise where it left off: the dense factor iterates + λ, the running
+/// surrogate Â, the per-column observation weights, and the stream
+/// counters. The *configuration* (constraints, forgetting, step policy)
+/// is deliberately not stored — the caller that resumes knows it, just
+/// as `serve --store` supplies the publish hook on restore.
+#[derive(Clone, Debug)]
+pub struct StoredLearner {
+    /// Registry operator this learner publishes to (also the file stem;
+    /// same naming rules as [`StoredOp::name`]).
+    pub name: String,
+    /// Dense factor iterates, rightmost first (S_1 first) — mid-descent
+    /// values, so they live here and not in a `.fstore`.
+    pub mats: Vec<crate::linalg::Mat>,
+    /// Current scale λ.
+    pub lambda: f64,
+    /// Running weighted column surrogate Â.
+    pub surrogate: crate::linalg::Mat,
+    /// Per-column observation weights (one per surrogate column).
+    pub weights: Vec<f64>,
+    /// Total columns observed.
+    pub cols_seen: u64,
+    /// Mini-batches swept.
+    pub batches: u64,
+}
+
+impl StoredLearner {
+    /// Snapshot a live learner's resumable state.
+    pub fn from_online(name: impl Into<String>, ol: &crate::palm::online::OnlinePalm) -> Self {
+        StoredLearner {
+            name: name.into(),
+            mats: ol.state().mats.clone(),
+            lambda: ol.state().lambda,
+            surrogate: ol.surrogate().clone(),
+            weights: ol.weights().to_vec(),
+            cols_seen: ol.cols_seen(),
+            batches: ol.batches(),
+        }
+    }
+
+    /// Rebuild the learner under `cfg` (the constraint set and
+    /// forgetting factor the caller knows). Feeding the resumed learner
+    /// the rest of the stream is bitwise identical to never having
+    /// stopped — proptested below.
+    ///
+    /// # Panics
+    /// If `cfg`'s factor dimensions disagree with the snapshot (a caller
+    /// bug, not file corruption — corruption is caught in
+    /// [`decode_learner`]).
+    pub fn resume(self, cfg: crate::palm::online::OnlineConfig) -> crate::palm::online::OnlinePalm {
+        let init = crate::palm::FactorState { mats: self.mats, lambda: self.lambda };
+        crate::palm::online::OnlinePalm::from_parts(
+            init,
+            cfg,
+            self.surrogate,
+            self.weights,
+            self.cols_seen,
+            self.batches,
+        )
+    }
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &crate::linalg::Mat) -> Result<(), StoreError> {
+    if m.rows() > u32::MAX as usize || m.cols() > u32::MAX as usize {
+        return Err(StoreError::Malformed(format!(
+            "matrix {}×{} exceeds u32 index space",
+            m.rows(),
+            m.cols()
+        )));
+    }
+    put_u32(out, m.rows() as u32);
+    put_u32(out, m.cols() as u32);
+    for &v in m.data() {
+        put_f64(out, v);
+    }
+    Ok(())
+}
+
+fn read_mat(c: &mut Cur<'_>, what: &str) -> Result<crate::linalg::Mat, StoreError> {
+    let rows = c.u32("rows")? as usize;
+    let cols = c.u32("cols")? as usize;
+    let n = rows.checked_mul(cols).ok_or_else(|| {
+        StoreError::Malformed(format!("{what}: {rows}×{cols} element count overflow"))
+    })?;
+    let data = c.f64_vec(n, what)?;
+    Ok(crate::linalg::Mat::from_vec(rows, cols, data))
+}
+
+/// Serialize a learner snapshot to its full file image (same framing as
+/// [`encode_op`]: `u32 body_len | body | u32 crc32(body)`, body led by
+/// [`LEARNER_MAGIC`]).
+pub fn encode_learner(l: &StoredLearner) -> Result<Vec<u8>, StoreError> {
+    if !valid_name(&l.name) {
+        return Err(StoreError::BadName(l.name.clone()));
+    }
+    if l.mats.is_empty() || l.mats.len() as u64 > MAX_FACTORS as u64 {
+        return Err(StoreError::Malformed(format!(
+            "learner factor count {} out of range",
+            l.mats.len()
+        )));
+    }
+    let mut body = Vec::new();
+    put_u16(&mut body, LEARNER_MAGIC);
+    body.push(VERSION);
+    body.push(0); // flags: none defined yet, rejected non-zero on load
+    body.push(l.name.len() as u8);
+    body.extend_from_slice(l.name.as_bytes());
+    put_u64(&mut body, l.cols_seen);
+    put_u64(&mut body, l.batches);
+    put_f64(&mut body, l.lambda);
+    put_u32(&mut body, l.mats.len() as u32);
+    for m in &l.mats {
+        put_mat(&mut body, m)?;
+    }
+    put_mat(&mut body, &l.surrogate)?;
+    put_u32(
+        &mut body,
+        u32::try_from(l.weights.len())
+            .map_err(|_| StoreError::Malformed("weight count exceeds u32".into()))?,
+    );
+    for &w in &l.weights {
+        put_f64(&mut body, w);
+    }
+    if body.len() > MAX_BODY {
+        return Err(StoreError::Oversized { len: body.len(), cap: MAX_BODY });
+    }
+    let mut out = Vec::with_capacity(body.len() + 8);
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    put_u32(&mut out, crc32(&body));
+    Ok(out)
+}
+
+/// Parse a learner snapshot produced by [`encode_learner`]. Same totality
+/// contract as [`decode_op`]: every corruption mode is a typed
+/// [`StoreError`], never a panic.
+pub fn decode_learner(bytes: &[u8]) -> Result<StoredLearner, StoreError> {
+    if bytes.len() < 4 {
+        return Err(StoreError::Truncated { need: 4, have: bytes.len() });
+    }
+    let body_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    if body_len > MAX_BODY {
+        return Err(StoreError::Oversized { len: body_len, cap: MAX_BODY });
+    }
+    let total = 4 + body_len + 4;
+    if bytes.len() < total {
+        return Err(StoreError::Truncated { need: total, have: bytes.len() });
+    }
+    if bytes.len() > total {
+        return Err(StoreError::TrailingGarbage { declared: total, actual: bytes.len() });
+    }
+    let body = &bytes[4..4 + body_len];
+    let want = u32::from_le_bytes(bytes[4 + body_len..].try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        return Err(StoreError::ChecksumMismatch { want, got });
+    }
+
+    let mut c = Cur { b: body, off: 0 };
+    let magic = c.u16("magic")?;
+    if magic != LEARNER_MAGIC {
+        return Err(StoreError::BadMagic(magic));
+    }
+    let version = c.u8("version")?;
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(StoreError::BadVersion(version));
+    }
+    let flags = c.u8("flags")?;
+    if flags != 0 {
+        return Err(StoreError::Malformed(format!("unknown learner flag bits {flags:#04x}")));
+    }
+    let name_len = c.u8("name_len")? as usize;
+    let name_raw = c.take(name_len, "name")?;
+    let name = std::str::from_utf8(name_raw)
+        .map_err(|_| StoreError::BadName(format!("{name_raw:?}")))?
+        .to_string();
+    if !valid_name(&name) {
+        return Err(StoreError::BadName(name));
+    }
+    let cols_seen = c.u64("cols_seen")?;
+    let batches = c.u64("batches")?;
+    let lambda = c.f64("lambda")?;
+    let n_factors = c.u32("n_factors")?;
+    if n_factors == 0 || n_factors > MAX_FACTORS {
+        return Err(StoreError::Malformed(format!(
+            "learner factor count {n_factors} out of range"
+        )));
+    }
+    let mut mats: Vec<crate::linalg::Mat> = Vec::with_capacity(n_factors as usize);
+    for k in 0..n_factors {
+        let m = read_mat(&mut c, "factor")?;
+        if let Some(prev) = mats.last() {
+            // Rightmost first: the next (left) factor consumes the
+            // previous one's output dimension.
+            if m.cols() != prev.rows() {
+                return Err(StoreError::Malformed(format!(
+                    "learner factor chain mismatch at {k}: {}×{} after output dim {}",
+                    m.rows(),
+                    m.cols(),
+                    prev.rows()
+                )));
+            }
+        }
+        mats.push(m);
+    }
+    let surrogate = read_mat(&mut c, "surrogate")?;
+    let (prod_rows, prod_cols) = (mats[mats.len() - 1].rows(), mats[0].cols());
+    if surrogate.rows() != prod_rows || surrogate.cols() != prod_cols {
+        return Err(StoreError::Malformed(format!(
+            "surrogate {}×{} does not match factor product {prod_rows}×{prod_cols}",
+            surrogate.rows(),
+            surrogate.cols()
+        )));
+    }
+    let n_weights = c.u32("n_weights")? as usize;
+    if n_weights != surrogate.cols() {
+        return Err(StoreError::Malformed(format!(
+            "{n_weights} weights for {} surrogate columns",
+            surrogate.cols()
+        )));
+    }
+    let weights = c.f64_vec(n_weights, "weights")?;
+    if c.off != body.len() {
+        return Err(StoreError::Malformed(format!(
+            "{} unread bytes after weights",
+            body.len() - c.off
+        )));
+    }
+    Ok(StoredLearner { name, mats, lambda, surrogate, weights, cols_seen, batches })
+}
+
+/// Path of `name`'s learner snapshot inside `dir`.
+pub fn learner_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.{LEARNER_EXTENSION}"))
+}
+
+/// Persist one learner snapshot atomically (same dotfile + fsync +
+/// rename discipline as [`save_op`]). Returns the final path.
+pub fn save_learner(dir: &Path, l: &StoredLearner) -> Result<PathBuf, StoreError> {
+    let bytes = encode_learner(l)?;
+    std::fs::create_dir_all(dir).map_err(|e| io_err("create store dir", e))?;
+    let tmp = dir.join(format!(".{}.{LEARNER_EXTENSION}.tmp", l.name));
+    let path = learner_path(dir, &l.name);
+    {
+        use std::io::Write;
+        let mut f =
+            std::fs::File::create(&tmp).map_err(|e| io_err("create tmp learner snapshot", e))?;
+        f.write_all(&bytes).map_err(|e| io_err("write learner snapshot", e))?;
+        f.sync_all().map_err(|e| io_err("sync learner snapshot", e))?;
+    }
+    std::fs::rename(&tmp, &path).map_err(|e| io_err("publish learner snapshot", e))?;
+    Ok(path)
+}
+
+/// Load one learner snapshot (size-capped, then [`decode_learner`]).
+pub fn load_learner(path: &Path) -> Result<StoredLearner, StoreError> {
+    let meta = std::fs::metadata(path).map_err(|e| io_err("stat learner snapshot", e))?;
+    if meta.len() > (MAX_BODY + 8) as u64 {
+        return Err(StoreError::Oversized { len: meta.len() as usize, cap: MAX_BODY });
+    }
+    let bytes = std::fs::read(path).map_err(|e| io_err("read learner snapshot", e))?;
+    decode_learner(&bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -746,5 +1034,130 @@ mod tests {
         let mut bytes = encode_op(&canonical_op()).unwrap();
         bytes[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(decode_op(&bytes), Err(StoreError::Oversized { .. })));
+    }
+
+    // -- learner snapshots (.lstore) ------------------------------------
+
+    use crate::engine::ExecCtx;
+    use crate::palm::online::{OnlineConfig, OnlinePalm};
+    use crate::palm::PalmConfig;
+    use crate::prox::Constraint;
+
+    fn learner_cfg(j: usize) -> OnlineConfig {
+        OnlineConfig::new(PalmConfig::new(vec![Constraint::SpRowCol(2); j], 1))
+            .with_forgetting(0.75)
+    }
+
+    /// A learner mid-stream: n=8 Hadamard columns, two mini-batches in.
+    fn canonical_learner() -> StoredLearner {
+        let n = 8;
+        let a = crate::transforms::hadamard(n);
+        let mut ol = OnlinePalm::cold(&[(n, n); 3], learner_cfg(3));
+        let ctx = ExecCtx::new(1);
+        for _ in 0..2 {
+            let batch: Vec<(usize, Vec<f64>)> = (0..n).map(|j| (j, a.col(j))).collect();
+            ol.step(&ctx, &batch);
+        }
+        StoredLearner::from_online("learner1", &ol)
+    }
+
+    fn mats_bits(mats: &[Mat]) -> Vec<u64> {
+        mats.iter().flat_map(|m| m.data().iter().map(|v| v.to_bits())).collect()
+    }
+
+    #[test]
+    fn learner_round_trip_is_bitwise() {
+        let l = canonical_learner();
+        let back = decode_learner(&encode_learner(&l).unwrap()).unwrap();
+        assert_eq!(back.name, l.name);
+        assert_eq!((back.cols_seen, back.batches), (l.cols_seen, l.batches));
+        assert_eq!(back.lambda.to_bits(), l.lambda.to_bits());
+        assert_eq!(mats_bits(&back.mats), mats_bits(&l.mats));
+        assert_eq!(
+            mats_bits(std::slice::from_ref(&back.surrogate)),
+            mats_bits(std::slice::from_ref(&l.surrogate))
+        );
+        let wb: Vec<u64> = back.weights.iter().map(|w| w.to_bits()).collect();
+        let wl: Vec<u64> = l.weights.iter().map(|w| w.to_bits()).collect();
+        assert_eq!(wb, wl);
+    }
+
+    #[test]
+    fn learner_resume_is_bitwise_identical_to_uninterrupted() {
+        // Run A straight through 4 mini-batches; run B for 2, snapshot
+        // through the full disk encoding, resume, and finish. Same bits.
+        let n = 8;
+        let a = crate::transforms::hadamard(n);
+        let ctx = ExecCtx::new(1);
+        let batch = |p: usize| -> Vec<(usize, Vec<f64>)> {
+            // Vary the stream a little so later batches aren't clones.
+            (0..n).map(|j| ((j + p) % n, a.col((j + p) % n))).collect()
+        };
+        let mut full = OnlinePalm::cold(&[(n, n); 3], learner_cfg(3));
+        for p in 0..4 {
+            full.step(&ctx, &batch(p));
+        }
+        let mut half = OnlinePalm::cold(&[(n, n); 3], learner_cfg(3));
+        for p in 0..2 {
+            half.step(&ctx, &batch(p));
+        }
+        let snap = StoredLearner::from_online("resume-me", &half);
+        let restored = decode_learner(&encode_learner(&snap).unwrap()).unwrap();
+        let mut resumed = restored.resume(learner_cfg(3));
+        for p in 2..4 {
+            resumed.step(&ctx, &batch(p));
+        }
+        assert_eq!(resumed.cols_seen(), full.cols_seen());
+        assert_eq!(resumed.batches(), full.batches());
+        assert_eq!(
+            resumed.state().lambda.to_bits(),
+            full.state().lambda.to_bits(),
+            "λ diverged across snapshot/resume"
+        );
+        assert_eq!(
+            mats_bits(&resumed.state().mats),
+            mats_bits(&full.state().mats),
+            "factor bits diverged across snapshot/resume"
+        );
+    }
+
+    #[test]
+    fn learner_corruption_is_typed_never_a_panic() {
+        let bytes = encode_learner(&canonical_learner()).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(decode_learner(&bytes[..cut]).is_err(), "prefix {cut} decoded Ok");
+        }
+        // Sampled bit flips (the image is dense-f64 heavy, so the full
+        // per-byte sweep the .fstore test runs would be slow here).
+        for i in (0..bytes.len()).step_by(7) {
+            let mut m = bytes.clone();
+            m[i] ^= 1 << (i % 8);
+            assert!(decode_learner(&m).is_err(), "bit flip at byte {i} decoded Ok");
+        }
+        assert!(decode_learner(&bytes).is_ok());
+    }
+
+    #[test]
+    fn learner_and_operator_namespaces_are_disjoint() {
+        assert_ne!(LEARNER_MAGIC, MAGIC);
+        assert_ne!(LEARNER_MAGIC, crate::server::wire::MAGIC);
+        // Cross-fed images die on the magic, not deeper.
+        let lbytes = encode_learner(&canonical_learner()).unwrap();
+        assert!(matches!(decode_op(&lbytes), Err(StoreError::BadMagic(m)) if m == LEARNER_MAGIC));
+        let obytes = encode_op(&canonical_op()).unwrap();
+        assert!(matches!(decode_learner(&obytes), Err(StoreError::BadMagic(m)) if m == MAGIC));
+        // An operator-store scan neither loads nor reports learner files.
+        let dir = tmp_store_dir("lstore_disjoint");
+        let mut op = canonical_op();
+        op.name = "alpha".into();
+        save_op(&dir, &op).unwrap();
+        let lpath = save_learner(&dir, &canonical_learner()).unwrap();
+        assert_eq!(lpath.extension().and_then(|e| e.to_str()), Some(LEARNER_EXTENSION));
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.ops.len(), 1);
+        assert!(loaded.skipped.is_empty(), "learner files must be invisible to load_dir");
+        // And the learner file itself loads back through its own path.
+        assert_eq!(load_learner(&lpath).unwrap().name, "learner1");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,106 @@
+//! ISSUE 9 integration: `serve --online-learn` under the loopback soak.
+//!
+//! An open-loop Poisson stream drives loopback TCP through the full
+//! `wire → admission → batcher → registry → engine` path while an
+//! online learner — fed the served operator's columns from a parallel
+//! observation stream — epoch-swaps improved generations into the live
+//! registry. The contract under test: across ≥ 3 online swaps, zero
+//! requests are misrouted, zero protocol errors, and every request is
+//! answered (verified-OK or typed shed). Payloads are not checked
+//! against the dense reference here: the learner's early generations
+//! are *approximations* by design, and which generation a request hits
+//! depends on arrival timing — routing integrity, not approximation
+//! error, is this test's subject (the error trajectory is gated by
+//! `cargo bench --bench online_drift`).
+
+use faust::bench_util::{open_loop_load, OpenLoopConfig};
+use faust::coordinator::{
+    BatchOp, Coordinator, CoordinatorConfig, OnlineLearnerTask, QosClass,
+};
+use faust::engine::ExecCtx;
+use faust::faust::Faust;
+use faust::palm::online::{OnlineConfig, OnlinePalm};
+use faust::palm::PalmConfig;
+use faust::prox::Constraint;
+use faust::server::wire::Dtype;
+use faust::server::{Server, ServerConfig};
+use faust::transforms::hadamard;
+use std::sync::Arc;
+
+#[test]
+fn online_swaps_misroute_nothing_under_loopback_soak() {
+    let n = 16;
+    let dense = hadamard(n);
+    let coord = Coordinator::start(
+        vec![("h".to_string(), Arc::new(dense.clone()) as Arc<dyn BatchOp>)],
+        CoordinatorConfig::online_learning(),
+    );
+    let server = Server::start(coord.client(), ServerConfig::default()).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    // Cold learner: every early sweep improves, so the default cadence
+    // (swap_every = 4 mini-batches of 8 columns) publishes repeatedly
+    // while the load below is in flight.
+    let learner = coord
+        .online_learner(
+            "h",
+            OnlinePalm::cold(
+                &[(n, n); 4],
+                OnlineConfig::new(PalmConfig::new(vec![Constraint::SpRowCol(2); 4], 1)),
+            ),
+        )
+        .expect("online learning is on");
+    let task = OnlineLearnerTask::spawn(
+        learner,
+        ExecCtx::new(1),
+        |f: &Faust| Arc::new(f.clone()) as Arc<dyn BatchOp>,
+        256,
+    );
+
+    // The request stream and the observation stream run concurrently.
+    let cfg = OpenLoopConfig {
+        addr,
+        op: "h".to_string(),
+        class: QosClass::Standard,
+        rate_hz: 3000.0,
+        requests: 1500,
+        dim: n,
+        seed: 0x0911,
+        dtype: Dtype::F64,
+        verify_tol: 1e-6, // unused: payload verification is off (None)
+    };
+    let load = std::thread::spawn(move || open_loop_load(&cfg, None));
+    for _ in 0..60 {
+        for j in 0..n {
+            assert!(task.observe(j, dense.col(j)), "learner died mid-stream");
+        }
+    }
+    let rep = task.finish();
+    let r = load.join().expect("load thread").expect("stream ran");
+    server.shutdown();
+    let snap = coord.shutdown();
+
+    assert!(
+        rep.swaps >= 3,
+        "needed ≥3 online swaps under traffic, got {} ({} batches, rel err {:.2e})",
+        rep.swaps,
+        rep.batches,
+        rep.rel_err
+    );
+    assert_eq!(r.sent, 1500, "open loop sent everything");
+    assert_eq!(r.misrouted, 0, "misrouted/corrupted responses across online swaps");
+    assert_eq!(r.protocol_errors, 0, "protocol errors across online swaps");
+    assert_eq!(r.other_errors, 0, "unexpected typed errors");
+    assert_eq!(r.ok + r.shed, r.sent, "every request answered");
+    // The learner's swaps are the registry's swaps, and the drift
+    // metrics surfaced in the final snapshot.
+    assert_eq!(snap.swaps, rep.swaps, "all swaps came from the online learner");
+    assert_eq!(snap.online_swaps, rep.swaps);
+    assert_eq!(snap.online_cols, rep.cols);
+    assert_eq!(
+        snap.online_rel_err.to_bits(),
+        rep.rel_err.to_bits(),
+        "drift gauge must hold the last sweep's relative error"
+    );
+    assert_eq!(snap.ingress_active_connections, 0, "connections drained");
+}

@@ -29,6 +29,9 @@ disarm itself is a loud failure instead:
     component, e.g. f32_apply_speedup or f64_mini_p99_us) that has no
     baseline rule — the mixed-precision serving tier must never grow an
     ungated metric;
+  - a result emitting an online-learning metric (online_* prefix, e.g.
+    online_tracking_rel_err) that has no baseline rule — the streaming
+    factorization tier must never grow an ungated metric either;
   - a run in which nothing was checked at all.
 
 `--self-check` runs a built-in pytest-free scenario suite (temp files,
@@ -46,6 +49,12 @@ import tempfile
 # mixed-precision serving tier and MUST be gated (matches f32_apply_speedup,
 # f64_mini_p99_us, foo_f32 — not gemm512_tiled_speedup).
 PRECISION_METRIC = re.compile(r"(^|_)f(32|64)(_|$)")
+
+# A metric from the streaming-factorization tier (benches/online_drift.rs
+# and friends emit only online_*-prefixed keys) MUST likewise be gated —
+# an unbaselined online metric would let a drift-tracking regression ship
+# silently.
+ONLINE_METRIC = re.compile(r"^online_")
 
 
 def check_metric(name, key, value, rule):
@@ -119,6 +128,10 @@ def main(argv):
         for key in sorted(metrics):
             if PRECISION_METRIC.search(key) and key not in rules:
                 msg = f"{name}.{key}: precision-tier metric has no baseline rule"
+                failures.append(msg)
+                print(f"[gate] FAIL {msg}")
+            elif ONLINE_METRIC.match(key) and key not in rules:
+                msg = f"{name}.{key}: online-learning metric has no baseline rule"
                 failures.append(msg)
                 print(f"[gate] FAIL {msg}")
     if checked == 0 and not failures:
@@ -226,9 +239,33 @@ def self_check():
          result("recovery", {"warm_start_ms": 4.2, "warm_palm_iters": 0.0,
                              "cold_palm_iters": 0.0}), 1),
     ]
+    # Online-learning metrics (ISSUE 9): any emitted online_*-prefixed
+    # metric must have a baseline rule — an unbaselined drift metric must
+    # fail loudly, and the prefix must anchor at the start (a metric
+    # merely *containing* "online" is not in the tier).
+    online_baseline = {
+        "online": {
+            "online_tracking_rel_err": {"max": 0.25},
+            "online_swaps": {"min": 3.0},
+            "went_online_ms": {"max": 1e9},
+        },
+    }
+    online_scenarios = [
+        ("every online metric ruled",
+         result("online", {"online_tracking_rel_err": 0.04, "online_swaps": 9.0,
+                           "went_online_ms": 12.0}), 0),
+        ("online metric emitted with no baseline rule",
+         result("online", {"online_tracking_rel_err": 0.04, "online_swaps": 9.0,
+                           "went_online_ms": 12.0, "online_flop_parity": 1.0}), 1),
+        ("non-prefix 'online' substring is not in the tier",
+         result("online", {"online_tracking_rel_err": 0.04, "online_swaps": 9.0,
+                           "went_online_ms": 12.0, "extra_metric": 1.0}), 0),
+    ]
     assert not PRECISION_METRIC.search("gemm512_tiled_speedup")
     assert PRECISION_METRIC.search("f32_apply_speedup")
     assert PRECISION_METRIC.search("speedup_f64")
+    assert ONLINE_METRIC.match("online_tracking_rel_err")
+    assert not ONLINE_METRIC.match("went_online_ms")
     # A rule whose bound key is misspelled must fail, not silently pass.
     typo_baseline = {"bench_a": {"ratio": {"mn": 1.25}}}
     ran = 0
@@ -263,6 +300,17 @@ def self_check():
             with open(res_path, "w") as f:
                 json.dump(res, f)
             got = main(["bench_gate.py", prec_path, res_path])
+            assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
+            ran += 1
+
+        online_path = os.path.join(td, "online_baseline.json")
+        with open(online_path, "w") as f:
+            json.dump(online_baseline, f)
+        for desc, res, want in online_scenarios:
+            res_path = os.path.join(td, "BENCH_online.json")
+            with open(res_path, "w") as f:
+                json.dump(res, f)
+            got = main(["bench_gate.py", online_path, res_path])
             assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
             ran += 1
 
