@@ -6,6 +6,8 @@
 //! `benches/baseline.json` (see `scripts/bench_gate.py`) — the perf
 //! trajectory is enforced, not just printed.
 
+#![forbid(unsafe_code)]
+
 use std::time::{Duration, Instant};
 
 /// Timing statistics over repeated runs (nanoseconds).

@@ -1,6 +1,8 @@
 //! Tiny hand-rolled CLI argument parser (clap is not in the offline vendor
 //! set). Supports `faust <subcommand> [--key value ...] [--flag]`.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 /// Parsed command line.

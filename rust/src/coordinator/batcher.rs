@@ -17,11 +17,21 @@
 //! wait for company ([`Batcher::add_with_timeout`]). The router keys
 //! batches by `(operator, class)`, so an interactive request never waits
 //! behind a bulk batch filling up.
+//!
+//! **Flush order is deterministic.** Pending batches live in an
+//! insertion-ordered list, not a hash map: [`Batcher::take_expired`] and
+//! [`Batcher::drain`] emit batches oldest-key-first (the order the keys
+//! first went pending), identically on every run. The pre-PR 10 `HashMap`
+//! storage iterated in `RandomState` order, so timeout/shutdown flushes
+//! dispatched in a different order each process — harmless for payload
+//! correctness but a per-run perturbation of dispatch timing, and exactly
+//! the pattern `scripts/lint_invariants.py` now rejects in serving
+//! modules. Lookups are a linear scan, which is fine at router scale: the
+//! live key set is (operators × 3 QoS classes) and flushing removes keys
+//! continuously.
 
 use super::QosClass;
 use crate::engine::{footprint_for_elem, CostProfile};
-use std::collections::HashMap;
-use std::hash::Hash;
 use std::time::{Duration, Instant};
 
 /// When to flush a partial batch.
@@ -127,15 +137,17 @@ struct PendingEntry<R> {
 
 /// Accumulates requests per key; generic over the key (the coordinator
 /// router keys by `(operator, QosClass)`) and the request type so it is
-/// unit-testable without spinning up the full coordinator.
+/// unit-testable without spinning up the full coordinator. Keys are held
+/// in first-insertion order — see the module docs on deterministic flush
+/// order.
 pub struct Batcher<K, R> {
     policy: BatchPolicy,
-    pending: HashMap<K, PendingEntry<R>>,
+    pending: Vec<(K, PendingEntry<R>)>,
 }
 
-impl<K: Eq + Hash + Clone, R> Batcher<K, R> {
+impl<K: Eq + Clone, R> Batcher<K, R> {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, pending: HashMap::new() }
+        Batcher { policy, pending: Vec::new() }
     }
 
     /// Add a request under `key`; returns the key's batch once `limit`
@@ -172,15 +184,22 @@ impl<K: Eq + Hash + Clone, R> Batcher<K, R> {
         timeout: Duration,
     ) -> Option<(K, Vec<R>)> {
         let limit = limit.max(1);
-        let entry = self.pending.entry(key.clone()).or_insert_with(|| PendingEntry {
-            reqs: Vec::new(),
-            t0: Instant::now(),
-            timeout,
-        });
+        let idx = match self.pending.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                self.pending.push((
+                    key.clone(),
+                    PendingEntry { reqs: Vec::new(), t0: Instant::now(), timeout },
+                ));
+                self.pending.len() - 1
+            }
+        };
+        let entry = &mut self.pending[idx].1;
         entry.timeout = entry.timeout.min(timeout);
         entry.reqs.push(r);
         if entry.reqs.len() >= limit {
-            let entry = self.pending.remove(&key).expect("entry just inserted");
+            // `Vec::remove` keeps the survivors' insertion order intact.
+            let (key, entry) = self.pending.remove(idx);
             Some((key, entry.reqs))
         } else {
             None
@@ -196,36 +215,38 @@ impl<K: Eq + Hash + Clone, R> Batcher<K, R> {
     /// Time until the earliest pending batch expires (None if idle).
     pub fn next_deadline_in(&self) -> Option<Duration> {
         self.pending
-            .values()
-            .map(|e| e.timeout.saturating_sub(e.t0.elapsed()))
+            .iter()
+            .map(|(_, e)| e.timeout.saturating_sub(e.t0.elapsed()))
             .min()
     }
 
-    /// Remove and return every batch older than its flush timeout.
+    /// Remove and return every batch older than its flush timeout, in
+    /// key-insertion order (deterministic run to run).
     pub fn take_expired(&mut self) -> Vec<(K, Vec<R>)> {
-        let expired: Vec<K> = self
-            .pending
-            .iter()
-            .filter(|(_, e)| e.t0.elapsed() >= e.timeout)
-            .map(|(k, _)| k.clone())
-            .collect();
-        expired
-            .into_iter()
-            .map(|k| {
-                let entry = self.pending.remove(&k).unwrap();
-                (k, entry.reqs)
-            })
-            .collect()
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].1.t0.elapsed() >= self.pending[i].1.timeout {
+                let (k, e) = self.pending.remove(i);
+                out.push((k, e.reqs));
+            } else {
+                i += 1;
+            }
+        }
+        out
     }
 
-    /// Flush everything (shutdown).
+    /// Flush everything (shutdown), in key-insertion order.
     pub fn drain(&mut self) -> Vec<(K, Vec<R>)> {
-        self.pending.drain().map(|(k, e)| (k, e.reqs)).collect()
+        std::mem::take(&mut self.pending)
+            .into_iter()
+            .map(|(k, e)| (k, e.reqs))
+            .collect()
     }
 
     /// Number of pending (unflushed) requests.
     pub fn pending_len(&self) -> usize {
-        self.pending.values().map(|e| e.reqs.len()).sum()
+        self.pending.iter().map(|(_, e)| e.reqs.len()).sum()
     }
 }
 
@@ -355,6 +376,35 @@ mod tests {
         let mut all = b.drain();
         all.sort_by(|x, y| x.0.cmp(&y.0));
         assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn flush_order_is_key_insertion_order_and_deterministic() {
+        // PR 10 regression: `pending` used to be a HashMap, so timeout
+        // and shutdown flushes walked the keys in RandomState order —
+        // different every process. Pin the contract: `drain` and
+        // `take_expired` emit batches in first-insertion key order, and a
+        // mid-stream full-batch flush does not disturb the survivors'
+        // order.
+        let keys = ["gamma", "alpha", "beta", "delta"];
+        let mut b: Batcher<String, u32> = Batcher::new(policy(100, 1000));
+        for (i, k) in keys.iter().enumerate() {
+            b.add_default((*k).into(), i as u32);
+        }
+        let drained: Vec<String> = b.drain().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(drained, keys.map(String::from).to_vec());
+
+        // take_expired: same order, and flushing "alpha" at its limit
+        // first must leave gamma/beta/delta in insertion order.
+        let mut b: Batcher<String, u32> = Batcher::new(policy(100, 0));
+        for (i, k) in keys.iter().enumerate() {
+            b.add((*k).into(), i as u32, 10);
+        }
+        let flushed = b.add("alpha".into(), 9, 2).expect("alpha at its limit");
+        assert_eq!(flushed.0, "alpha");
+        let expired: Vec<String> = b.take_expired().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(expired, vec!["gamma", "beta", "delta"]);
         assert_eq!(b.pending_len(), 0);
     }
 

@@ -565,3 +565,96 @@ mod tests {
         coord.shutdown();
     }
 }
+
+/// Loom model of the learner's observe/finish channel protocol
+/// (`cargo test --features loom-model --release loom_`). `std::sync::mpsc`
+/// has no loom twin, so the model rebuilds the same bounded-queue
+/// protocol — blocking bounded send, close-then-drain shutdown — on the
+/// `engine::sync` primitives and proves the properties the production
+/// channel is trusted for: no observation is lost or reordered across
+/// `finish`, and neither side can hang on a lost wakeup.
+#[cfg(all(test, feature = "loom-model"))]
+mod loom_tests {
+    use crate::engine::sync::{Condvar, Mutex};
+    use loom::sync::Arc;
+    use loom::thread;
+
+    /// Bounded observe queue: capacity-1 ring + closed flag, one condvar
+    /// on each side — the same shape `sync_channel(queue)` gives the
+    /// learner task.
+    struct ObserveQueue {
+        buf: Mutex<(Vec<u32>, bool)>,
+        can_send: Condvar,
+        can_recv: Condvar,
+    }
+
+    impl ObserveQueue {
+        fn new() -> Self {
+            ObserveQueue {
+                buf: Mutex::new((Vec::new(), false)),
+                can_send: Condvar::new(),
+                can_recv: Condvar::new(),
+            }
+        }
+
+        /// Blocking bounded send (capacity 1) — backpressure on the
+        /// feeder, exactly like `SyncSender::send`.
+        fn observe(&self, v: u32) {
+            let mut g = self.buf.lock().unwrap();
+            while !g.0.is_empty() {
+                g = self.can_send.wait(g).unwrap();
+            }
+            g.0.push(v);
+            self.can_recv.notify_one();
+        }
+
+        /// Close the stream (the `finish` / drop-the-sender half).
+        fn close(&self) {
+            let mut g = self.buf.lock().unwrap();
+            g.1 = true;
+            self.can_recv.notify_one();
+        }
+
+        /// Blocking receive; `None` only once closed *and* drained — the
+        /// learner's drain-the-tail-before-report contract.
+        fn recv(&self) -> Option<u32> {
+            let mut g = self.buf.lock().unwrap();
+            loop {
+                if let Some(v) = g.0.pop() {
+                    self.can_send.notify_one();
+                    return Some(v);
+                }
+                if g.1 {
+                    return None;
+                }
+                g = self.can_recv.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Two observations through a full-at-one queue racing `close`: the
+    /// learner must see both, in send order, then terminate. Loom flags
+    /// any interleaving that hangs (lost wakeup) or drops the tail
+    /// observation (close outrunning the drain).
+    #[test]
+    fn loom_observe_finish_loses_no_observations() {
+        loom::model(|| {
+            let q = Arc::new(ObserveQueue::new());
+            let learner = {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    while let Some(v) = q.recv() {
+                        seen.push(v);
+                    }
+                    seen
+                })
+            };
+            q.observe(1);
+            q.observe(2);
+            q.close();
+            let seen = learner.join().unwrap();
+            assert_eq!(seen, vec![1, 2], "observation lost or reordered across finish");
+        });
+    }
+}

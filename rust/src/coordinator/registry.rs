@@ -215,8 +215,14 @@ impl Registry {
         if self.shards.len() <= 1 {
             return 0;
         }
+        // Accumulate per-shard loads in sorted-name order, not map order:
+        // float addition is order-sensitive, so summing in `RandomState`
+        // iteration order made near-tie placements flip run to run (the
+        // registry sibling of the Batcher flush-order bug fixed in PR 10).
+        let mut named: Vec<(&String, &Entry)> = g.iter().collect(); // det-ok: sorted below
+        named.sort_by(|a, b| a.0.cmp(b.0));
         let mut loads = vec![0.0f64; self.shards.len()];
-        for e in g.values() {
+        for (_, e) in named {
             loads[e.shard] += e.cost;
         }
         let mut best = 0;
@@ -238,7 +244,7 @@ impl Registry {
             return;
         }
         let mut items: Vec<(String, f64)> =
-            g.iter().map(|(n, e)| (n.clone(), e.cost)).collect();
+            g.iter().map(|(n, e)| (n.clone(), e.cost)).collect(); // det-ok: sorted below
         items.sort_by(|a, b| {
             b.1.partial_cmp(&a.1)
                 .unwrap_or(std::cmp::Ordering::Equal)
@@ -381,7 +387,7 @@ impl Registry {
     pub fn precision_report(&self) -> Vec<(String, ServedPrecision, Option<f64>)> {
         let g = self.ops.read().unwrap();
         let mut v: Vec<(String, ServedPrecision, Option<f64>)> = g
-            .iter()
+            .iter() // det-ok: sorted below
             .map(|(n, e)| {
                 (
                     n.clone(),
@@ -424,6 +430,7 @@ impl Registry {
 
     /// Names currently live, sorted.
     pub fn names(&self) -> Vec<String> {
+        // det-ok: sorted below
         let mut v: Vec<String> = self.ops.read().unwrap().keys().cloned().collect();
         v.sort();
         v
@@ -519,7 +526,7 @@ impl Registry {
     pub fn persist_all(&self, dir: &Path) -> Result<PersistReport, StoreError> {
         let mut snaps: Vec<(String, u64, Arc<dyn BatchOp>, Option<F32Bound>)> = {
             let g = self.ops.read().unwrap();
-            g.iter()
+            g.iter() // det-ok: sorted below
                 .map(|(n, e)| {
                     let bound = e.f32_gen.as_ref().map(|s| F32Bound {
                         measured_rel_err: s.measured_rel_err,

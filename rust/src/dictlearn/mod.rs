@@ -10,6 +10,8 @@
 //! use the process-default ctx, the `_with_ctx` variants pin an explicit
 //! one so training shares a serving engine's pool.
 
+#![forbid(unsafe_code)]
+
 use crate::engine::ExecCtx;
 use crate::faust::Faust;
 use crate::hierarchical::{factorize_dict_with_ctx, HierarchicalConfig};

@@ -12,6 +12,8 @@
 //! hardcoded 8 (an f32 batch would otherwise be priced 2× too large by
 //! the adaptive batcher and undersized).
 
+#![forbid(unsafe_code)]
+
 use super::kernel::Scalar;
 
 /// Two reusable scratch buffers plus reuse accounting.
@@ -160,5 +162,38 @@ mod tests {
         q[0] = 2.0;
         assert_eq!(p[0], 1.0);
         assert_eq!(q[0], 2.0);
+    }
+
+    /// Part of the miri-scoped suite (`cargo miri test miri_`): exercises
+    /// the ping/pong `&mut` pair across grow, reuse, and shrink so the
+    /// borrow pattern every apply leans on is checked under the aliasing
+    /// model, not just the borrow checker.
+    #[test]
+    fn miri_arena_ping_pong_aliasing() {
+        let mut a = Arena::<f64>::new();
+        {
+            let (p, q) = a.acquire(8);
+            for i in 0..8 {
+                p[i] = i as f64;
+                q[i] = -(i as f64);
+            }
+            // Writes through one half must never show through the other.
+            assert!(p.iter().zip(q.iter()).all(|(x, y)| *x == -*y));
+        }
+        // A shrinking acquire hands back prefixes of the same blocks.
+        {
+            let (p, q) = a.acquire(3);
+            assert_eq!(p, &[0.0, 1.0, 2.0]);
+            assert_eq!(q, &[-0.0, -1.0, -2.0]);
+            std::mem::swap(&mut p[0], &mut q[0]);
+        }
+        // A growing acquire reallocates; old contents beyond the resize
+        // boundary are preserved by `Vec::resize` semantics.
+        let (p, q) = a.acquire(16);
+        assert_eq!(p[1], 1.0);
+        assert_eq!(q[1], -1.0);
+        assert_eq!(p[8], 0.0);
+        assert_eq!(q[15], 0.0);
+        assert_eq!(a.allocs(), 2);
     }
 }

@@ -46,6 +46,8 @@
 //! serving engine's pool); a coordinator deployment reuses its engine for
 //! on-line refactorization via [`super::ApplyEngine::ctx`].
 
+#![forbid(unsafe_code)]
+
 use super::kernel::{self, SimdLevel};
 use super::plan::PlanConfig;
 use super::pool::{par_gemm_into, par_gemv_into, par_gemv_t_into, ThreadPool};

@@ -45,6 +45,8 @@
 //! inside a pool task (nested dispatch can deadlock the pool — see
 //! [`pool::par_map_jobs`]).
 
+#![forbid(unsafe_code)]
+
 use super::ctx::ExecCtx;
 use super::pool::{self, par_gemm_into, par_map_jobs};
 use crate::linalg::{spectral_norm_with, Mat};

@@ -103,6 +103,13 @@ impl SimdLevel {
 }
 
 fn detect() -> SimdLevel {
+    // Miri interprets MIR and cannot execute `#[target_feature]` code, so
+    // under `cargo miri test` every dispatch takes the portable scalar
+    // path — same math (identical accumulation order by the bitwise
+    // contract), no SIMD intrinsics for the interpreter to reject.
+    if cfg!(miri) {
+        return SimdLevel::Portable;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         // Both width-specialized builds are compiled under `avx2`, so
@@ -252,6 +259,7 @@ impl Scalar for f64 {
             // implies avx2 on every shipping CPU and in the detection
             // order).
             SimdLevel::Avx512 => unsafe { gemm_panel_range_w8(a, panel, bcols, rs, re, out) },
+            // SAFETY: avx2 verified present by `detect()`.
             SimdLevel::Avx2 => unsafe { gemm_panel_range_w4(a, panel, bcols, rs, re, out) },
             SimdLevel::Portable => gemm_panel_range::<f64, 4>(a, panel, bcols, rs, re, out),
         }
@@ -265,6 +273,7 @@ impl Scalar for f64 {
             // SAFETY: avx2 verified present by `detect()` for both
             // non-portable levels.
             SimdLevel::Avx512 => unsafe { gemv_t_range_w8(a, x, s, e, chunk) },
+            // SAFETY: avx2 verified present by `detect()`.
             SimdLevel::Avx2 => unsafe { gemv_t_range_w4(a, x, s, e, chunk) },
             SimdLevel::Portable => gemv_t_range::<f64, 4>(a, x, s, e, chunk),
         }
@@ -317,6 +326,7 @@ impl Scalar for f32 {
             // SAFETY: avx2 verified present by `detect()` (see the f64
             // dispatch above).
             SimdLevel::Avx512 => unsafe { gemm_panel_range_f32_w16(a, panel, bcols, rs, re, out) },
+            // SAFETY: avx2 verified present by `detect()`.
             SimdLevel::Avx2 => unsafe { gemm_panel_range_f32_w8(a, panel, bcols, rs, re, out) },
             SimdLevel::Portable => gemm_panel_range::<f32, 8>(a, panel, bcols, rs, re, out),
         }
@@ -329,6 +339,7 @@ impl Scalar for f32 {
         match simd_level() {
             // SAFETY: as above.
             SimdLevel::Avx512 => unsafe { gemv_t_range_f32_w16(a, x, s, e, chunk) },
+            // SAFETY: avx2 verified present by `detect()`.
             SimdLevel::Avx2 => unsafe { gemv_t_range_f32_w8(a, x, s, e, chunk) },
             SimdLevel::Portable => gemv_t_range::<f32, 8>(a, x, s, e, chunk),
         }
@@ -940,5 +951,27 @@ mod tests {
         }
         let cap_after_reuse = PACK_BUF.with(|c| c.borrow().capacity());
         assert_eq!(cap_after_warm, cap_after_reuse, "pack buffer must not regrow");
+    }
+
+    /// Miri-scoped aliasing check (also a normal test): reusing the
+    /// thread-local pack buffer across panels of different shapes must be
+    /// sound — the second pack overwrites a live-capacity buffer sized for
+    /// the first, which is exactly where a stale-length or provenance bug
+    /// would surface under the interpreter. Kept tiny because Miri runs
+    /// ~100× slower than native (`cargo +nightly miri test miri_`).
+    #[test]
+    fn miri_packed_panel_reuse_is_alias_clean() {
+        let mut rng = Rng::new(908);
+        for &(m, k, n) in &[(8usize, 6usize, 5usize), (5, 9, 3)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let mut want = vec![0.0; m * n];
+            gemm_scalar_rows(&a, b.data(), n, 0, m, &mut want);
+            let mut got = vec![0.0; m * n];
+            gemm_tiled_rows(&a, b.data(), n, 0, m, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{k},{n})");
+            }
+        }
     }
 }

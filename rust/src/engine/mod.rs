@@ -73,6 +73,7 @@ pub mod kernel;
 pub mod plan;
 pub mod pool;
 pub mod shard;
+pub(crate) mod sync;
 
 pub use arena::{footprint_for_elem, Arena};
 pub use ctx::ExecCtx;

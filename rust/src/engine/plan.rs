@@ -33,6 +33,8 @@
 //! deterministic probe batch plus the declared (headroom-padded) bound
 //! the registry's accuracy budget and the proptests check against.
 
+#![forbid(unsafe_code)]
+
 use super::arena::Arena;
 use super::kernel::Scalar;
 use super::pool::{par_gemm_into, par_spmm_into, ThreadPool};

@@ -17,12 +17,12 @@
 
 use super::kernel;
 use super::kernel::Scalar;
+use super::sync::{AtomicBool, Condvar, Mutex, Ordering};
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Target amount of work (flops) per dispatched chunk; below this,
@@ -216,7 +216,12 @@ fn worker_loop(queue: Arc<TaskQueue>) {
 /// Raw output pointer that may cross thread boundaries; every user hands
 /// each thread a disjoint row range, so aliased writes cannot occur.
 struct SendPtr<S>(*mut S);
+// SAFETY: the pointer targets a caller-owned output buffer that outlives
+// the `par_ranges` call, and every user hands each thread a disjoint row
+// range of it, so no two threads ever touch the same element.
 unsafe impl<S> Send for SendPtr<S> {}
+// SAFETY: shared references to the wrapper only copy the address; all
+// writes through it go to the disjoint per-thread ranges above.
 unsafe impl<S> Sync for SendPtr<S> {}
 impl<S> Clone for SendPtr<S> {
     fn clone(&self) -> Self {
@@ -383,7 +388,12 @@ pub(crate) fn gemv_t_cols<S: Scalar>(a: &Mat<S>, x: &[S], s: usize, e: usize, ch
 
 /// Raw cell pointer for job-granular fan-out; tasks index disjoint slots.
 struct SendCell<T>(*mut T);
+// SAFETY: the pointer targets the caller's slot vectors, which outlive
+// the `par_ranges` call; `par_map_jobs` indexes them by job id and the
+// pool partitions job ids disjointly, so each cell has a single writer.
 unsafe impl<T> Send for SendCell<T> {}
+// SAFETY: shared references only copy the address; every dereference is
+// at a job index owned by exactly one task (see `Send` above).
 unsafe impl<T> Sync for SendCell<T> {}
 impl<T> Clone for SendCell<T> {
     fn clone(&self) -> Self {
@@ -431,13 +441,20 @@ where
     let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
     let sp = SendCell(slots.as_mut_ptr());
     let op = SendCell(out.as_mut_ptr());
-    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    // Deliberately `std::sync::Mutex`, not the `engine::sync` shim: the
+    // payload capture is not part of the modeled settlement protocol (the
+    // loom model below rebuilds it on shim types), and `into_inner` is a
+    // std-only API.
+    let panic_payload: std::sync::Mutex<Option<Box<dyn std::any::Any + Send>>> =
+        std::sync::Mutex::new(None);
     pool.par_ranges(n, 1, |s, e| {
         for i in s..e {
             // SAFETY: par_ranges partitions [0, n) into disjoint index
             // ranges, so each slot / output cell is touched exactly once.
             let job = unsafe { (*sp.0.add(i)).take().expect("fleet job taken once") };
             match catch_unwind(AssertUnwindSafe(|| f(job))) {
+                // SAFETY: same disjoint partition as the slot take above —
+                // output cell `i` has exactly one writer.
                 Ok(r) => unsafe { *op.0.add(i) = Some(r) },
                 Err(p) => {
                     let mut slot = panic_payload.lock().unwrap();
@@ -698,6 +715,39 @@ mod tests {
     }
 
     #[test]
+    fn sync_shim_std_build_keeps_pool_bitwise_thread_invariant() {
+        // Regression pin for the `engine::sync` shim: in the default
+        // (std) build the shim re-exports are the std types, so routing
+        // the pool's Latch / task queue through them must leave every
+        // pooled kernel bitwise identical to the serial reference. A
+        // behavioural change here means the shim stopped being a pure
+        // re-export.
+        let mut rng = Rng::new(307);
+        for &(m, k, n) in &[(23usize, 17usize, 11usize), (64, 64, 8), (5, 80, 3)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let mut base = vec![0.0; m * n];
+            kernel::gemm_tiled_rows(&a, b.data(), n, 0, m, &mut base);
+            let x = rng.gauss_vec(m);
+            let mut base_t = vec![0.0; k];
+            gemv_t_cols(&a, &x, 0, k, &mut base_t);
+            for threads in [1usize, 2, 8] {
+                let pool = ThreadPool::new(threads);
+                let mut got = vec![0.0; m * n];
+                par_gemm_into(&pool, &a, b.data(), n, &mut got);
+                for (g, w) in got.iter().zip(&base) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "gemm threads={threads}");
+                }
+                let mut got_t = vec![0.0; k];
+                par_gemv_t_into(&pool, &a, &x, &mut got_t);
+                for (g, w) in got_t.iter().zip(&base_t) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "gemv_t threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn concurrent_callers_share_pool() {
         let pool = Arc::new(ThreadPool::new(4));
         let mut handles = vec![];
@@ -721,5 +771,144 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+}
+
+/// Exhaustive interleaving checks for the pool's synchronization
+/// protocols, run under [`loom`](https://docs.rs/loom) via the
+/// `loom-model` feature (`cargo test --features loom-model --release
+/// loom_`). Each test wraps a protocol in `loom::model`, which executes
+/// the body under *every* reachable thread interleaving instead of the
+/// handful a runtime test samples.
+#[cfg(all(test, feature = "loom-model"))]
+mod loom_tests {
+    use super::{Latch, Ordering, Task, TaskQueue};
+    use loom::sync::atomic::AtomicUsize;
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    /// Latch countdown has no lost wakeup: whatever order the workers
+    /// decrement in, `wait` always returns (loom flags any interleaving
+    /// where the main thread blocks forever as a deadlock).
+    #[test]
+    fn loom_latch_counts_down_without_lost_wakeups() {
+        loom::model(|| {
+            let latch = Arc::new(Latch::new(2));
+            for _ in 0..2 {
+                let l = latch.clone();
+                thread::spawn(move || l.count_down());
+            }
+            latch.wait();
+            assert_eq!(*latch.remaining.lock().unwrap(), 0);
+        });
+    }
+
+    /// A worker's panic flag (Release store before `count_down`) is
+    /// visible to the waiter after `wait` under every interleaving —
+    /// the pool's "panics are never swallowed" contract.
+    #[test]
+    fn loom_latch_panic_flag_visible_after_wait() {
+        loom::model(|| {
+            let latch = Arc::new(Latch::new(1));
+            let l = latch.clone();
+            thread::spawn(move || {
+                l.panicked.store(true, Ordering::Release);
+                l.count_down();
+            });
+            latch.wait();
+            assert!(latch.panicked.load(Ordering::Acquire));
+        });
+    }
+
+    /// Tasks pushed before `close` are all delivered exactly once, and
+    /// `pop` terminates (returns `None`) after close — the Drop-path
+    /// protocol. Covers the push/close vs. pop race in every order.
+    #[test]
+    fn loom_task_queue_close_loses_no_tasks_and_terminates() {
+        loom::model(|| {
+            let q = Arc::new(TaskQueue::new());
+            // `Task.latch` is a production field: it stays `std::sync::Arc`
+            // (deliberately unshimmed — refcounting, not a protocol).
+            let latch = std::sync::Arc::new(Latch::new(0));
+            let f: &'static (dyn Fn(usize, usize) + Sync) = &|_, _| {};
+            for i in 0..2 {
+                q.push(Task { f, start: i, end: i + 1, latch: latch.clone() });
+            }
+            let qc = q.clone();
+            let worker = thread::spawn(move || {
+                let mut starts = Vec::new();
+                while let Some(t) = qc.pop() {
+                    starts.push(t.start);
+                }
+                starts
+            });
+            q.close();
+            let starts = worker.join().unwrap();
+            assert_eq!(starts, vec![0, 1], "tasks lost, duplicated, or reordered");
+        });
+    }
+
+    /// Protocol model of `par_map_jobs` settlement: each output slot has
+    /// exactly one writer, a panicking job records its payload and still
+    /// settles, and after the latch opens the caller observes every
+    /// non-panicking slot written. Slots are `loom::cell::UnsafeCell`, so
+    /// loom itself proves the latch synchronizes the unsynchronized slot
+    /// writes (an aliased or unordered access fails the model).
+    #[test]
+    fn loom_job_settlement_settles_each_slot_exactly_once_under_panic() {
+        loom::model(|| {
+            let slots: Arc<Vec<loom::cell::UnsafeCell<Option<usize>>>> =
+                Arc::new((0..2).map(|_| loom::cell::UnsafeCell::new(None)).collect());
+            let payload: Arc<Mutex<Option<&'static str>>> = Arc::new(Mutex::new(None));
+            let latch = Arc::new(Latch::new(2));
+            // Job 0 succeeds and writes its slot.
+            {
+                let (s, l) = (slots.clone(), latch.clone());
+                thread::spawn(move || {
+                    // SAFETY: slot 0 has this task as its only writer, and
+                    // the main thread reads it only after `latch.wait()`.
+                    s[0].with_mut(|p| unsafe { *p = Some(10) });
+                    l.count_down();
+                });
+            }
+            // Job 1 "panics": records a payload, settles without writing.
+            {
+                let (pl, l) = (payload.clone(), latch.clone());
+                thread::spawn(move || {
+                    pl.lock().unwrap().get_or_insert("job boom");
+                    l.count_down();
+                });
+            }
+            latch.wait();
+            assert_eq!(*payload.lock().unwrap(), Some("job boom"));
+            // SAFETY: both writers settled above; the latch orders their
+            // writes before this read.
+            let v = slots[0].with(|p| unsafe { *p });
+            assert_eq!(v, Some(10), "settled job's slot must be visible");
+            // SAFETY: same argument — slot 1's only (would-be) writer has
+            // settled, and the latch orders that before this read.
+            let empty = slots[1].with(|p| unsafe { (*p).is_none() });
+            assert!(empty, "panicked job must not write its slot");
+        });
+    }
+
+    /// The counter type the production settlement uses for metrics-style
+    /// flags stays coherent across the latch: increments before
+    /// `count_down` are all visible after `wait`.
+    #[test]
+    fn loom_latch_orders_relaxed_counters_for_the_waiter() {
+        loom::model(|| {
+            let hits = Arc::new(AtomicUsize::new(0));
+            let latch = Arc::new(Latch::new(2));
+            for _ in 0..2 {
+                let (h, l) = (hits.clone(), latch.clone());
+                thread::spawn(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                    l.count_down();
+                });
+            }
+            latch.wait();
+            assert_eq!(hits.load(Ordering::Relaxed), 2);
+        });
     }
 }

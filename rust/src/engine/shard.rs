@@ -18,6 +18,8 @@
 //! never what they produce; the shard-invariance proptests in the
 //! coordinator assert exactly this across shard counts {1, 2, 4}.
 
+#![forbid(unsafe_code)]
+
 use super::ThreadPool;
 use std::sync::Arc;
 

@@ -1,0 +1,42 @@
+//! Synchronization shim: `std::sync` by default, `loom::sync` under the
+//! `loom-model` feature.
+//!
+//! Every hand-rolled concurrency protocol in the crate — the pool's
+//! [`Latch`](super::pool) and task queue, the coordinator's `JobQueue`
+//! (work donation), and the server's shutdown stop-flag — imports its
+//! `Mutex` / `Condvar` / atomics from here instead of `std::sync`. In the
+//! default build these re-exports *are* the std types, so the production
+//! binary is bitwise identical to a direct-std build (pinned by the
+//! `sync_shim_*` regression tests). Under `--features loom-model` they
+//! become the [loom](https://docs.rs/loom) versions, which lets the
+//! `loom_*` tests exhaustively enumerate thread interleavings of those
+//! protocols instead of sampling a handful at runtime.
+//!
+//! Two deliberate scope limits:
+//!
+//! - `std::thread` and `std::sync::Arc` are *not* shimmed. Threads in the
+//!   loom tests come from `loom::thread` directly, and `Arc` is only used
+//!   for reference counting (never as a synchronization protocol), so the
+//!   production structs keep the std type under every build.
+//! - `std::sync::mpsc` has no loom equivalent. The bounded channels in
+//!   `coordinator::online` (observe/finish) and `server::conn` (FIFO
+//!   response tickets) are therefore checked via loom *protocol models*:
+//!   the same bounded-queue protocol rebuilt on the shim `Mutex`/`Condvar`
+//!   in their `loom_tests` modules, rather than a type swap in production
+//!   code.
+//!
+//! The `loom` dependency itself stays commented out in `Cargo.toml` so the
+//! default build remains offline/zero-dependency; the CI `loom-model` job
+//! uncomments it before testing (see `docs/OPERATIONS.md`).
+
+#![forbid(unsafe_code)]
+
+#[cfg(feature = "loom-model")]
+pub(crate) use loom::sync::atomic::{AtomicBool, Ordering};
+#[cfg(feature = "loom-model")]
+pub(crate) use loom::sync::{Condvar, Mutex};
+
+#[cfg(not(feature = "loom-model"))]
+pub(crate) use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(not(feature = "loom-model"))]
+pub(crate) use std::sync::{Condvar, Mutex};

@@ -18,6 +18,8 @@
 //! (§V, served through [`crate::coordinator`]), and the fig12 denoising
 //! dictionary (§VI, via [`crate::dictlearn`]).
 
+#![forbid(unsafe_code)]
+
 use crate::engine::{self, ApplyPlan, F32Bound, PlanConfig};
 use crate::linalg::{spectral_norm_iter, Mat};
 use crate::rng::Rng;

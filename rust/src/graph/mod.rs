@@ -10,6 +10,8 @@
 //! factorizes: Laplacians of ring / grid / random-geometric / Erdős–Rényi
 //! graphs and their eigenbases via a symmetric Jacobi eigensolver.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::Mat;
 use crate::rng::Rng;
 

@@ -34,6 +34,8 @@
 //! factorization completes (`Registry::refactorize_fleet`). Fleet
 //! results are bitwise identical to the same jobs run one at a time.
 
+#![forbid(unsafe_code)]
+
 use crate::engine::{ExecCtx, FleetCtx};
 use crate::faust::Faust;
 use crate::linalg::Mat;

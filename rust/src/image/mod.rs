@@ -7,6 +7,8 @@
 //! what drives the σ-dependent FAμST-vs-DDL trade-off of Fig. 12 (see
 //! DESIGN.md §6). Grayscale images are `Mat`s with values in `[0, 255]`.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::solvers::{omp, LinOp};

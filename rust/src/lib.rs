@@ -68,6 +68,14 @@
 // Numeric-kernel idiom: index-heavy loops mirror the paper's math and the
 // CSR layout; the lint's iterator rewrites obscure them.
 #![allow(clippy::needless_range_loop)]
+// Memory-safety invariant gate (PR 10): unsafe code is confined to
+// `engine::{kernel,pool}` — every other module carries
+// `#![forbid(unsafe_code)]` — and what remains is audited: operations
+// inside `unsafe fn` bodies need their own blocks, and every block
+// carries a `// SAFETY:` justification (enforced by clippy in CI with
+// `-D warnings`; see `docs/ARCHITECTURE.md` § verification layers).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod bench_util;
 pub mod cli;

@@ -1,5 +1,7 @@
 //! Dense linear-algebra substrate: matrices, QR, SVD, spectral norms.
 
+#![forbid(unsafe_code)]
+
 mod mat;
 pub mod qr;
 pub mod svd;

@@ -1,5 +1,7 @@
 //! `faust` CLI — drive every subsystem of the reproduction from one binary.
 
+#![forbid(unsafe_code)]
+
 use faust::bench_util::{fmt, open_loop_load, OpenLoopConfig, Table};
 use faust::cli::{Args, USAGE};
 use faust::coordinator::{

@@ -12,6 +12,8 @@
 //! capture, no spatial grid (so analytic compression à la FMM/wavelets does
 //! not apply — the paper's own argument for data-driven factorization).
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::solvers::{omp, LinOp};

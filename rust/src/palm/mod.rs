@@ -36,6 +36,8 @@
 //! [`FleetCtx`] dispatches, with per-member convergence: results are
 //! bitwise identical to N separate [`palm4msa_with_ctx`] runs.
 
+#![forbid(unsafe_code)]
+
 pub mod online;
 
 use crate::engine::{ExecCtx, FleetCtx};

@@ -12,6 +12,8 @@
 //! skipped when nothing survives the support selection), which keeps PALM
 //! iterations well-defined from the paper's all-zeros `S₁⁰` init.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::Mat;
 
 mod piecewise;

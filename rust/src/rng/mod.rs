@@ -5,6 +5,8 @@
 //! SplitMix64. Every experiment in the repo takes an explicit seed so that
 //! paper-reproduction runs are bit-stable across machines.
 
+#![forbid(unsafe_code)]
+
 /// SplitMix64 step — used to expand a single `u64` seed into xoshiro state.
 #[inline]
 fn splitmix64(state: &mut u64) -> u64 {

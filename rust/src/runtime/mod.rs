@@ -12,6 +12,8 @@
 //! environments without the vendored crate. Errors use a local
 //! dependency-free type — `anyhow` is no longer required.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// Runtime error: a message with optional nested context.

@@ -19,9 +19,9 @@
 use super::admission::{self, Admission, Permit};
 use super::wire::{self, Dtype, ErrorCode, WireError, WireRequest, WireResponse};
 use crate::coordinator::{Client, ServeError};
+use crate::engine::sync::{AtomicBool, Ordering};
 use std::io::Read;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;

@@ -51,6 +51,10 @@
 //! coord.shutdown();
 //! ```
 
+// Ingress is safe-Rust protocols over sockets and the `engine::sync`
+// shim; raw pointers stay confined to `engine::{kernel,pool}`.
+#![forbid(unsafe_code)]
+
 pub mod admission;
 mod client;
 mod conn;
@@ -60,9 +64,9 @@ pub use admission::{try_admit, Admission, AdmissionConfig, Overloaded, Permit};
 pub use client::{ServeConn, ServeReceiver, ServeSender};
 
 use crate::coordinator::{Client, Registry};
+use crate::engine::sync::{AtomicBool, Ordering};
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -430,5 +434,110 @@ mod tests {
             }
         }
         coord.shutdown();
+    }
+}
+
+/// Loom model of the connection FIFO-ticket / shutdown-drain protocol
+/// (`cargo test --features loom-model --release loom_`). `std::sync::mpsc`
+/// has no loom twin, so — like `coordinator::online` — the model rebuilds
+/// the bounded reader→writer ticket queue on the `engine::sync`
+/// primitives and proves the two contracts `serve_conn` is trusted for:
+/// responses leave in request order (FIFO), and raising `stop` never
+/// drops a ticket the reader already enqueued (drain-before-join).
+#[cfg(all(test, feature = "loom-model"))]
+mod loom_tests {
+    use crate::engine::sync::{AtomicBool, Condvar, Mutex, Ordering};
+    use loom::sync::Arc;
+    use loom::thread;
+    use std::collections::VecDeque;
+
+    /// Bounded FIFO ticket queue: capacity 1 (worst-case backpressure),
+    /// closed flag, a condvar per direction — the shape
+    /// `sync_channel(conn_queue)` gives each connection.
+    struct TicketQueue {
+        q: Mutex<(VecDeque<u32>, bool)>,
+        can_send: Condvar,
+        can_recv: Condvar,
+    }
+
+    impl TicketQueue {
+        fn new() -> Self {
+            TicketQueue {
+                q: Mutex::new((VecDeque::new(), false)),
+                can_send: Condvar::new(),
+                can_recv: Condvar::new(),
+            }
+        }
+
+        /// Blocking bounded send — the reader pushing a ticket.
+        fn send(&self, t: u32) {
+            let mut g = self.q.lock().unwrap();
+            while !g.0.is_empty() {
+                g = self.can_send.wait(g).unwrap();
+            }
+            g.0.push_back(t);
+            self.can_recv.notify_one();
+        }
+
+        /// Close (the reader dropping its sender after observing stop).
+        fn close(&self) {
+            let mut g = self.q.lock().unwrap();
+            g.1 = true;
+            self.can_recv.notify_one();
+        }
+
+        /// Writer receive: FIFO, `None` only once closed *and* drained.
+        fn recv(&self) -> Option<u32> {
+            let mut g = self.q.lock().unwrap();
+            loop {
+                if let Some(t) = g.0.pop_front() {
+                    self.can_send.notify_one();
+                    return Some(t);
+                }
+                if g.1 {
+                    return None;
+                }
+                g = self.can_recv.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// A reader pipelining tickets races `Server::shutdown` raising the
+    /// stop flag: whatever the interleaving, the writer drains exactly
+    /// the tickets the reader enqueued, in order, and every thread
+    /// terminates (loom flags a lost wakeup as a deadlock).
+    #[test]
+    fn loom_shutdown_never_drops_an_enqueued_ticket() {
+        loom::model(|| {
+            let q = Arc::new(TicketQueue::new());
+            let stop = Arc::new(AtomicBool::new(false));
+            let writer = {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut written = Vec::new();
+                    while let Some(t) = q.recv() {
+                        written.push(t);
+                    }
+                    written
+                })
+            };
+            {
+                let stop = stop.clone();
+                thread::spawn(move || stop.store(true, Ordering::Release));
+            }
+            // Main thread is the reader: pipeline tickets until the stop
+            // flag is observed, then close the queue (drop the sender).
+            let mut sent = Vec::new();
+            for t in 1..=2u32 {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                q.send(t);
+                sent.push(t);
+            }
+            q.close();
+            let written = writer.join().unwrap();
+            assert_eq!(written, sent, "shutdown dropped or reordered an in-flight response");
+        });
     }
 }

@@ -6,6 +6,8 @@
 //! [`LinOp`] trait so dense matrices, FAμSTs, and PJRT-compiled operators
 //! are interchangeable.
 
+#![forbid(unsafe_code)]
+
 mod fista;
 mod iht;
 mod omp;

@@ -5,6 +5,8 @@
 //! CSR whose `spmv`/`spmm` make the `O(s_tot)` multiplication cost of a
 //! FAμST concrete.
 
+#![forbid(unsafe_code)]
+
 mod coo;
 mod csr;
 
@@ -243,5 +245,29 @@ mod tests {
         let mut out = Mat::zeros(6, 3);
         s.spmm_into(&b, &mut out);
         assert!(out.rel_fro_err(&d.matmul(&b)) < 1e-13);
+    }
+
+    /// Part of the miri-scoped suite (`cargo miri test miri_`): one small
+    /// end-to-end construction chain (dense → COO → CSR → transpose →
+    /// dense, plus an spmv) sized so the interpreter walks every indexing
+    /// path in seconds, not minutes.
+    #[test]
+    fn miri_csr_construction_round_trip() {
+        let d = Mat::from_vec(
+            3,
+            4,
+            vec![1.0, 0.0, -2.0, 0.0, 0.0, 3.0, 0.0, 0.5, 4.0, 0.0, 0.0, 0.0],
+        );
+        let coo = Coo::from_dense(&d, 0.0);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.nnz(), 5);
+        assert!(csr.to_dense().rel_fro_err(&d) < 1e-15);
+        assert!(csr.transpose().to_dense().rel_fro_err(&d.t()) < 1e-15);
+        let y = csr.spmv(&[1.0, 1.0, 1.0, 1.0]);
+        let want = d.matvec(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(y, want);
+        let mut pruned = Csr::from_dense(&d, 0.0);
+        pruned.prune(2.5);
+        assert_eq!(pruned.nnz(), 2);
     }
 }

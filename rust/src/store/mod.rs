@@ -70,6 +70,8 @@
 //! the v1 operator format is untouched. A warm restart resumes learning
 //! via [`StoredLearner::resume`], bitwise where it left off.
 
+#![forbid(unsafe_code)]
+
 use crate::engine::F32Bound;
 use crate::faust::Faust;
 use crate::sparse::Csr;
@@ -1159,5 +1161,39 @@ mod tests {
         // And the learner file itself loads back through its own path.
         assert_eq!(load_learner(&lpath).unwrap().name, "learner1");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Part of the miri-scoped suite (`cargo miri test miri_`): both
+    /// codecs round-tripped fully in memory — no filesystem, so the test
+    /// runs under Miri's default isolation. The byte-twiddling here
+    /// (checksum seal, little-endian field packing, length-prefixed
+    /// sections) is exactly the code most worth running under an
+    /// interpreter that checks every slice index and integer cast.
+    #[test]
+    fn miri_store_codec_round_trip() {
+        let op = canonical_op();
+        let bytes = encode_op(&op).unwrap();
+        let back = decode_op(&bytes).unwrap();
+        assert_eq!(back.name, op.name);
+        assert_eq!(back.epoch, op.epoch);
+        assert_eq!(faust_fingerprint(&back.faust), faust_fingerprint(&op.faust));
+        // Learner codec, with a hand-built snapshot: cheap enough for the
+        // interpreter (no PALM steps, no thread pool).
+        let l = StoredLearner {
+            name: "miri_l".into(),
+            mats: vec![Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0])],
+            lambda: 0.5,
+            surrogate: Mat::from_vec(2, 2, vec![0.1, 0.2, 0.3, 0.4]),
+            weights: vec![1.0, 2.0],
+            cols_seen: 7,
+            batches: 3,
+        };
+        let lback = decode_learner(&encode_learner(&l).unwrap()).unwrap();
+        assert_eq!(lback.name, l.name);
+        assert_eq!(mats_bits(&lback.mats), mats_bits(&l.mats));
+        assert_eq!(lback.lambda.to_bits(), l.lambda.to_bits());
+        assert_eq!(mats_bits(&[lback.surrogate]), mats_bits(&[l.surrogate]));
+        assert_eq!(lback.weights, l.weights);
+        assert_eq!((lback.cols_seen, lback.batches), (7, 3));
     }
 }

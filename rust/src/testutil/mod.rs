@@ -2,6 +2,8 @@
 //! set). Seeded generators + a runner that reports the failing case's seed
 //! so any counterexample is reproducible.
 
+#![forbid(unsafe_code)]
+
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use crate::rng::Rng;

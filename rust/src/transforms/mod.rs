@@ -6,6 +6,8 @@
 //! hierarchical algorithm must reverse-engineer (§IV-C) and the analytic
 //! dictionary baseline of the denoising experiment (§VI-C).
 
+#![forbid(unsafe_code)]
+
 use crate::faust::Faust;
 use crate::linalg::Mat;
 use crate::sparse::Csr;

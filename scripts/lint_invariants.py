@@ -1,0 +1,422 @@
+#!/usr/bin/env python3
+"""Repo-invariant lint gate: determinism hazards the compiler cannot see.
+
+Usage:
+    lint_invariants.py [--root REPO_ROOT]
+    lint_invariants.py --self-check
+
+Two rules, both downstream of the crate's determinism contract (bitwise
+identical serving results across thread counts, restarts, and machines —
+see docs/ARCHITECTURE.md, "verification layers"):
+
+Rule A — no nondeterministic hash iteration in serving/dispatch code
+    (`rust/src/coordinator/`, `rust/src/server/`). `HashMap`/`HashSet`
+    iteration order is randomized per process (`RandomState`), so any
+    `.iter()/.keys()/.values()/.drain()/.into_iter()` or `for .. in` over
+    a hash container in those modules makes batch flush order, shard
+    placement, float accumulation order, or wire responses depend on the
+    seed of the process that happens to serve the request. Point lookups
+    (`get`/`insert`/`remove`) are fine — only *iteration* is flagged.
+    The checker tracks hash-typed names through field/param/let
+    declarations, through `RwLock<HashMap<..>>`-style wrappers, and
+    through lock guards bound from `.read()`/`.write()`/`.lock()` on a
+    hash-typed field, and it follows method chains across a line break.
+    A site that is genuinely order-insensitive (e.g. collect-then-sort)
+    is waived with a `// det-ok: <why>` comment on the same line or the
+    line directly above.
+
+Rule B — no wall-clock reads in kernel code (`rust/src/engine/kernel.rs`).
+    `Instant::now` / `SystemTime` inside the microkernel layer would mean
+    math dispatch or tiling decisions can depend on timing, which breaks
+    the bitwise thread-invariance contract the kernel proptests pin.
+    Not waivable: timing belongs in the callers (pool, benches, metrics).
+
+`--self-check` runs a built-in pytest-free scenario suite (temp trees,
+exit-code assertions) so CI can verify the gate itself still gates.
+Exits non-zero on any violation.
+"""
+
+import os
+import re
+import sys
+import tempfile
+
+# Directories (relative to the repo root) under Rule A's scope.
+SCOPED_DIRS = [
+    os.path.join("rust", "src", "coordinator"),
+    os.path.join("rust", "src", "server"),
+]
+
+# File under Rule B's scope.
+KERNEL_FILE = os.path.join("rust", "src", "engine", "kernel.rs")
+
+# A declaration that gives a name a hash-container type. Three shapes:
+# `let x = HashMap::new()` / `let x: HashMap<..> = ..` / `field: HashMap<..>`
+# (the last also catches fn params and `RwLock<HashMap<..>>` wrappers,
+# since the type text merely has to *contain* the token).
+LET_FROM_CTOR = re.compile(
+    r"\blet\s+(?:mut\s+)?(\w+)\s*(?::[^=;]*)?=\s*[\w:]*\b(?:HashMap|HashSet)\b"
+)
+LET_WITH_TYPE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*:\s*[^=;]*\b(?:HashMap|HashSet)\b")
+FIELD_OR_PARAM = re.compile(r"\b(\w+)\s*:\s*&?[\w:<>,'\s]*\b(?:HashMap|HashSet)\b")
+
+# A lock guard bound from a hash-typed field inherits the hash type:
+# `let g = self.ops.read().unwrap();`
+GUARD_BIND = re.compile(
+    r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*(?:self\s*\.\s*)?(\w+)\s*\.\s*(?:read|write|lock)\s*\("
+)
+
+ITER_METHODS = r"(?:iter|iter_mut|keys|values|values_mut|drain|into_iter)"
+
+WALL_CLOCK = re.compile(r"\bInstant\s*::\s*now\b|\bSystemTime\b")
+
+WAIVER = "det-ok"
+
+
+def strip_comments(line):
+    """Drop `// ...` so doc text mentioning HashMap never declares one."""
+    cut = line.find("//")
+    return line if cut < 0 else line[:cut]
+
+
+def hash_names_of(lines):
+    """Names declared hash-typed in this file (incl. lock guards of them)."""
+    names = set()
+    for raw in lines:
+        code = strip_comments(raw)
+        for pat in (LET_FROM_CTOR, LET_WITH_TYPE, FIELD_OR_PARAM):
+            for m in pat.finditer(code):
+                names.add(m.group(1))
+    # Guard binding is a second pass so a guard of a field declared later
+    # in the file (impl above struct) is still caught.
+    for raw in lines:
+        m = GUARD_BIND.search(strip_comments(raw))
+        if m and m.group(2) in names:
+            names.add(m.group(1))
+    return names
+
+
+def waived(lines, first, last):
+    """`// det-ok:` anywhere on the flagged lines or the line above.
+
+    A chain split across lines (`map\\n    .iter()`) spans `first..last`;
+    the waiver may sit on any of them (typically the `.iter()` line).
+    """
+    for ln in range(first - 1, last + 1):
+        if 1 <= ln <= len(lines) and WAIVER in lines[ln - 1]:
+            return True
+    return False
+
+
+def check_hash_iteration(path, text):
+    """Rule A violations in one file: list of (lineno, description)."""
+    lines = text.splitlines()
+    names = hash_names_of(lines)
+    if not names:
+        return []
+    # Scan comment-stripped text as one string: `\s` crosses the newline,
+    # so a chain split as `map\n    .iter()` is still one match.
+    clean = "\n".join(strip_comments(l) for l in lines)
+    alt = "|".join(re.escape(n) for n in sorted(names))
+    # A tracked name counts only as a plain binding or a `self.` field —
+    # `other.ops` is some *other* type's field that merely shares the
+    # name, so it must not inherit the hash classification.
+    recv = r"(?:\bself\s*\.\s*|(?<![.\w]))"
+    method_use = re.compile(recv + r"(" + alt + r")\b\s*\.\s*" + ITER_METHODS + r"\s*\(")
+    for_use = re.compile(
+        r"\bfor\s+[\w\s,()&]+?\bin\s+&?(?:mut\s+)?" + recv + r"(" + alt + r")\b(?!\s*\.)"
+    )
+    out = []
+    for pat, what in ((method_use, "iterated"), (for_use, "looped over")):
+        for m in pat.finditer(clean):
+            lineno = clean.count("\n", 0, m.start(1)) + 1
+            endline = clean.count("\n", 0, m.end()) + 1
+            if waived(lines, lineno, endline):
+                continue
+            out.append(
+                (
+                    lineno,
+                    f"hash container `{m.group(1)}` {what} in serving code "
+                    "(RandomState order; sort first or waive with `// det-ok:`)",
+                )
+            )
+    return sorted(set(out))
+
+
+def check_wall_clock(path, text):
+    """Rule B violations in the kernel file: list of (lineno, description)."""
+    out = []
+    for i, raw in enumerate(text.splitlines(), 1):
+        if WALL_CLOCK.search(strip_comments(raw)):
+            out.append((i, "wall-clock read in kernel code (not waivable)"))
+    return out
+
+
+def scoped_files(root):
+    for d in SCOPED_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, _, files in os.walk(base):
+            for f in sorted(files):
+                if f.endswith(".rs"):
+                    yield os.path.join(dirpath, f)
+
+
+def main(argv):
+    if "--self-check" in argv[1:]:
+        return self_check()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if "--root" in argv[1:]:
+        root = argv[argv.index("--root") + 1]
+    violations = []
+    checked = 0
+    for path in scoped_files(root):
+        rel = os.path.relpath(path, root)
+        try:
+            with open(path) as f:
+                text = f.read()
+        except OSError as e:
+            violations.append(f"{rel}: unreadable ({e})")
+            continue
+        checked += 1
+        for lineno, desc in check_hash_iteration(rel, text):
+            violations.append(f"{rel}:{lineno}: {desc}")
+    kpath = os.path.join(root, KERNEL_FILE)
+    try:
+        with open(kpath) as f:
+            ktext = f.read()
+        checked += 1
+        for lineno, desc in check_wall_clock(KERNEL_FILE, ktext):
+            violations.append(f"{KERNEL_FILE}:{lineno}: {desc}")
+    except OSError as e:
+        violations.append(f"{KERNEL_FILE}: unreadable ({e})")
+    if checked == 0:
+        # An empty scope means the gate is pointed at the wrong tree.
+        print("[lint] nothing was checked — wrong --root?", file=sys.stderr)
+        return 1
+    if violations:
+        print(f"[lint] {len(violations)} invariant violation(s):", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print(f"[lint] {checked} files clean (hash-iteration + wall-clock invariants)")
+    return 0
+
+
+def self_check():
+    """Pytest-free scenario suite: every hazard shape must be caught."""
+    coord = os.path.join("rust", "src", "coordinator")
+    engine = os.path.join("rust", "src", "engine")
+
+    # Each scenario: (description, {relpath: contents}, wanted exit code).
+    scenarios = [
+        (
+            "Vec iteration and hash point-lookups are clean",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "struct B { pending: Vec<(K, E)>, idx: HashMap<String, usize> }\n"
+                    "fn f(b: &B) {\n"
+                    "    for (k, e) in b.pending.iter() { use_(k, e); }\n"
+                    "    let one = b.idx.get(\"x\");\n"
+                    "    b.idx.insert(\"y\".into(), 1);\n"
+                    "}\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "hash field iterated through self",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "struct R { ops: HashMap<String, Entry> }\n"
+                    "impl R { fn all(&self) { for (k, v) in self.ops.iter() { go(k, v); } } }\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "let-bound HashMap keys() flagged",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "fn f() {\n"
+                    "    let m = HashMap::new();\n"
+                    "    for k in m.keys() { go(k); }\n"
+                    "}\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "chain split across a line break still flagged",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "fn f(m: &HashMap<String, f64>) {\n"
+                    "    let total: f64 = m\n"
+                    "        .values()\n"
+                    "        .sum();\n"
+                    "}\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "det-ok waiver on the same line",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "fn f(m: &HashMap<String, f64>) {\n"
+                    "    let mut v: Vec<_> = m.iter().collect(); // det-ok: sorted below\n"
+                    "    v.sort_by(|a, b| a.0.cmp(b.0));\n"
+                    "}\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "det-ok waiver on the line above",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "fn f(m: &HashMap<String, f64>) {\n"
+                    "    // det-ok: sorted below\n"
+                    "    let mut v: Vec<_> = m.iter().collect();\n"
+                    "    v.sort_by(|a, b| a.0.cmp(b.0));\n"
+                    "}\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "det-ok waiver on the .iter() line of a split chain",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "fn f(m: &HashMap<String, f64>) {\n"
+                    "    let mut v: Vec<_> = m\n"
+                    "        .iter() // det-ok: sorted below\n"
+                    "        .collect();\n"
+                    "    v.sort_by(|a, b| a.0.cmp(b.0));\n"
+                    "}\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "another struct's same-named Vec field is not the hash field",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "struct R { ops: RwLock<HashMap<String, Entry>> }\n"
+                    "struct Loaded { ops: Vec<StoredOp> }\n"
+                    "fn f(loaded: &Loaded) -> u64 {\n"
+                    "    loaded.ops.iter().map(|s| s.epoch).max().unwrap_or(0)\n"
+                    "}\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "RwLock guard of a hash field iterated",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "struct R { ops: RwLock<HashMap<String, Entry>> }\n"
+                    "impl R {\n"
+                    "    fn place(&self) {\n"
+                    "        let g = self.ops.read().unwrap();\n"
+                    "        for (k, v) in g.iter() { go(k, v); }\n"
+                    "    }\n"
+                    "}\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "`for .. in &map` without an iter() call flagged",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "fn f(seen: HashSet<u64>) {\n"
+                    "    for s in &seen { go(s); }\n"
+                    "}\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "hash iteration outside the scoped dirs is not Rule A's business",
+            {
+                os.path.join(engine, "plan.rs"): (
+                    "fn f(m: &HashMap<String, f64>) {\n"
+                    "    for k in m.keys() { go(k); }\n"
+                    "}\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "doc comment mentioning HashMap declares nothing",
+            {
+                os.path.join(coord, "a.rs"): (
+                    "/// Unlike a HashMap, flush order here is insertion order.\n"
+                    "struct B { pending: Vec<(K, E)> }\n"
+                    "fn f(b: &B) { for e in b.pending.iter() { go(e); } }\n"
+                ),
+            },
+            0,
+        ),
+        (
+            "wall-clock read in kernel code flagged",
+            {
+                os.path.join(engine, "kernel.rs"): (
+                    "fn detect() -> SimdLevel {\n"
+                    "    let t0 = Instant::now();\n"
+                    "    SimdLevel::Portable\n"
+                    "}\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "SystemTime in kernel code flagged even in cfg'd code",
+            {
+                os.path.join(engine, "kernel.rs"): (
+                    "#[cfg(feature = \"x\")]\n"
+                    "fn stamp() -> std::time::SystemTime { std::time::SystemTime::now() }\n"
+                ),
+            },
+            1,
+        ),
+        (
+            "kernel mentioning Instant only in a comment is clean",
+            {
+                os.path.join(engine, "kernel.rs"): (
+                    "// Timing (Instant::now) belongs in the pool, never here.\n"
+                    "pub fn lane_width() -> usize { 4 }\n"
+                ),
+            },
+            0,
+        ),
+    ]
+
+    ran = 0
+    for desc, files, want in scenarios:
+        with tempfile.TemporaryDirectory() as td:
+            # Every scenario tree carries a clean kernel file unless the
+            # scenario supplies its own (the real run always checks it).
+            defaults = {os.path.join(engine, "kernel.rs"): "pub fn lane_width() -> usize { 4 }\n"}
+            defaults.update(files)
+            for rel, contents in defaults.items():
+                path = os.path.join(td, rel)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "w") as f:
+                    f.write(contents)
+            got = main(["lint_invariants.py", "--root", td])
+            assert got == want, f"self-check '{desc}': exit {got}, wanted {want}"
+            ran += 1
+
+    # An empty tree must fail loudly, not vacuously pass.
+    with tempfile.TemporaryDirectory() as td:
+        got = main(["lint_invariants.py", "--root", td])
+        assert got == 1, f"self-check 'empty tree': exit {got}, wanted 1"
+        ran += 1
+
+    print(f"\n[lint] self-check: all {ran} scenarios behaved")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
